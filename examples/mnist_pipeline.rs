@@ -1,0 +1,73 @@
+//! End-to-end validation driver (DESIGN.md "End-to-end validation"):
+//! evaluates the full stack on the synthetic MNIST test set —
+//! accuracy, throughput, per-layer statistics — and cross-checks the
+//! cycle-level simulator against BOTH the Rust dense reference and the
+//! AOT-lowered JAX/Pallas golden model via PJRT.
+//!
+//! Run with: `cargo run --release --example mnist_pipeline [n_images]`
+
+use anyhow::Result;
+use sacsnn::cost::power::PowerModel;
+use sacsnn::cost::CLOCK_HZ;
+use sacsnn::report;
+use sacsnn::sim::dense_ref::DenseRef;
+use sacsnn::sim::{AccelConfig, Accelerator};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let (net, ds, meta) = report::env("mnist", 8)?;
+    let n = n.min(ds.n_test());
+
+    println!("== 1. accuracy + throughput over {n} synthetic MNIST test images ==");
+    let mut accel = Accelerator::new(
+        Arc::clone(&net),
+        AccelConfig { lanes: 8, ..Default::default() },
+    );
+    let t0 = Instant::now();
+    let mut correct = 0usize;
+    let mut cycles = 0u64;
+    let mut busy = 0u64;
+    let mut unit = 0u64;
+    for i in 0..n {
+        let r = accel.infer(ds.test_image(i));
+        correct += (r.pred == ds.test_y[i] as usize) as usize;
+        cycles += r.stats.total_cycles;
+        for l in &r.stats.layers {
+            busy += l.pe_busy;
+            unit += l.conv_cycles + l.thresh_cycles;
+        }
+    }
+    let wall = t0.elapsed();
+    let avg = cycles as f64 / n as f64;
+    let util = busy as f64 / unit as f64;
+    let watts = PowerModel::new(8, 8).watts(util);
+    println!("accuracy        : {}/{} = {:.2}%", correct, n, 100.0 * correct as f64 / n as f64);
+    println!("  (build-time python: SNN q8 {:.2}%, ANN {:.2}%)",
+        meta.accuracy("mnist").snn_q8 * 100.0, meta.accuracy("mnist").ann * 100.0);
+    println!("avg cycles/frame: {avg:.0} → {:.0} FPS @333 MHz, {:.3} ms latency",
+        CLOCK_HZ / avg, avg / CLOCK_HZ * 1e3);
+    println!("PE utilization  : {:.1}%   power model: {watts:.2} W → {:.0} FPS/W",
+        util * 100.0, CLOCK_HZ / avg / watts);
+    println!("host simulation : {:.1} img/s", n as f64 / wall.as_secs_f64());
+
+    println!("\n== 2. simulator vs Rust dense reference (spike-exact) ==");
+    let m = n.min(25);
+    for i in 0..m {
+        let want = DenseRef::new(&net).infer(ds.test_image(i));
+        let (got, per_t) = accel.infer_traced(ds.test_image(i));
+        assert_eq!(got.logits, want.logits, "logits diverged at image {i}");
+        assert_eq!(per_t, want.spike_counts, "spike counts diverged at image {i}");
+    }
+    println!("{m}/{m} images match the dense reference exactly");
+
+    println!("\n== 3. simulator vs AOT JAX/Pallas golden model (PJRT) ==");
+    print!("{}", report::golden_check(m.min(10))?);
+
+    println!("\nall layers compose: kernel (L1) == model (L2) == simulator (L3).");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: load the quantized network + dataset artifacts, run one
+//! image through the simulated accelerator, and print what happened —
+//! prediction, cycle breakdown, sparsity, PE utilization, and the
+//! Fig. 2-style m-TTFS membrane trace.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first).
+
+use anyhow::Result;
+use sacsnn::report;
+use sacsnn::sim::{AccelConfig, Accelerator};
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let (net, ds, meta) = report::env("mnist", 8)?;
+    println!(
+        "loaded: paper network 28x28-32C3-32C3-P3-10C3-F10, q8 (scales from meta.json), T = {}",
+        meta.t_steps
+    );
+
+    let mut accel = Accelerator::new(
+        Arc::clone(&net),
+        AccelConfig { lanes: 8, ..Default::default() },
+    );
+    let img = ds.test_image(0);
+    let res = accel.infer(img);
+    println!("\nimage #0 (label {}):", ds.test_y[0]);
+    println!("  prediction      : {}", res.pred);
+    println!("  logits          : {:?}", res.logits);
+    println!("  total cycles    : {}", res.stats.total_cycles);
+    println!("  FPS @ 333 MHz   : {:.0}", res.stats.fps(333e6));
+    println!("  latency         : {:.3} ms", res.stats.latency_s(333e6) * 1e3);
+    for (i, l) in res.stats.layers.iter().enumerate() {
+        println!(
+            "  layer {}: {} events, sparsity {:.1}%, PE utilization {:.1}%, {} stalls",
+            i + 1,
+            l.events,
+            l.input_sparsity * 100.0,
+            l.pe_utilization() * 100.0,
+            l.stalls
+        );
+    }
+
+    println!("\n{}", report::trace_neuron(0)?);
+    Ok(())
+}

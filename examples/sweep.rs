@@ -1,0 +1,38 @@
+//! Parallelization sweep (the Table-I experiment as an example binary):
+//! runs the simulator at ×1 … ×16, prints FPS / power / FPS-per-watt next
+//! to the paper's published values, and verifies the qualitative shape
+//! (monotone FPS, efficiency peak at ×8).
+//!
+//! Run with: `cargo run --release --example sweep [n_images]`
+
+use anyhow::Result;
+use sacsnn::cost::power::TABLE1_PAPER;
+use sacsnn::report::{self, measure};
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+    let (net, ds, _) = report::env("mnist", 8)?;
+    println!("{:<6} {:>12} {:>9} {:>9} {:>10} | {:>12} {:>12}",
+        "par", "FPS(sim)", "util", "W", "FPS/W", "FPS(paper)", "FPS/W(paper)");
+    let mut effs = Vec::new();
+    let mut fpss = Vec::new();
+    for (lanes, pf, pe) in TABLE1_PAPER {
+        let p = measure(&net, &ds, lanes, n);
+        println!("x{:<5} {:>12.0} {:>8.1}% {:>9.2} {:>10.0} | {:>12.0} {:>12.0}",
+            lanes, p.fps, p.utilization * 100.0, p.watts, p.eff, pf, pe);
+        effs.push(p.eff);
+        fpss.push(p.fps);
+    }
+    assert!(fpss.windows(2).all(|w| w[1] > w[0]), "FPS must be monotone in P");
+    let peak = effs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    println!("\nefficiency peak at ×{} (paper: ×8)", [1, 2, 4, 8, 16][peak]);
+    Ok(())
+}

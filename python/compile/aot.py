@@ -1,0 +1,201 @@
+"""AOT entry point: `python -m compile.aot --out ../artifacts`.
+
+Runs ONCE at `make artifacts` and produces everything the Rust binary
+needs at runtime (python never appears on the request path):
+
+  model_q8.hlo.txt / model_q16.hlo.txt
+      quantized golden CSNN, frames (T,28,28,1) -> (logits, spike_counts);
+      lowered THROUGH the L1 Pallas kernel path so the exported HLO is the
+      kernel's lowering. Interchange is HLO *text* (xla_extension 0.5.1
+      rejects jax>=0.5 serialized protos — see /opt/xla-example/README.md).
+  layer_step.hlo.txt
+      single L1-geometry layer step with explicit (x, wm, b, vm, fired)
+      args for fine-grained Rust<->JAX cross-checking on random inputs.
+  weights_f32.bin, weights_q8.bin, weights_q16.bin
+      tensor archives (see archive.py) with the converted SNN parameters.
+  mnist.bin, fashion.bin
+      synthetic datasets (train/test x/y).
+  meta.json
+      geometry, thresholds, quantization scales, saturation bounds and the
+      build-time accuracy measurements.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import archive, data, train
+from . import model as M
+
+N_TRAIN = 3000
+N_TEST = 1000
+N_EVAL = 500          # images scored at build time (kept small for speed)
+SEED = 7
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides large constants as `{...}`,
+    # which the HLO text parser silently reads back as ZEROS — the model
+    # weights are baked-in constants, so they must be printed in full.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8 emits `source_end_line` etc. metadata that xla_extension
+    # 0.5.1's parser rejects; strip metadata from the interchange text.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_model(params: M.CsnnParams, use_pallas: bool) -> str:
+    def fwd(frames):
+        logits, counts = M.csnn_forward(params, frames, use_pallas=use_pallas)
+        return logits, counts
+
+    spec = jax.ShapeDtypeStruct((M.T_STEPS, 28, 28, 1), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def lower_layer_step(vt: float, sat: float) -> str:
+    from .kernels.csnn_step import if_layer_step_pallas
+
+    def step(x, wm, b, vm, fired):
+        return if_layer_step_pallas(
+            x, wm, b, vm, fired, vt=vt, sat_min=-sat, sat_max=sat, block_cout=8
+        )
+
+    specs = [
+        jax.ShapeDtypeStruct((28, 28, 1), jnp.float32),    # x
+        jax.ShapeDtypeStruct((9, 32), jnp.float32),        # wm
+        jax.ShapeDtypeStruct((32,), jnp.float32),          # b
+        jax.ShapeDtypeStruct((26, 26, 32), jnp.float32),   # vm
+        jax.ShapeDtypeStruct((26, 26, 32), jnp.float32),   # fired
+    ]
+    return to_hlo_text(jax.jit(step).lower(*specs))
+
+
+def export_params(path: str, params: M.CsnnParams, as_int: bool):
+    t = {}
+    for i, layer in enumerate(params.conv):
+        dt = np.int32 if as_int else np.float32
+        t[f"conv{i}_w"] = np.asarray(layer.w).astype(dt)
+        t[f"conv{i}_b"] = np.asarray(layer.b).astype(dt)
+        t[f"conv{i}_vt"] = np.asarray([layer.vt]).astype(dt)
+    t["fc_w"] = np.asarray(params.fc.w).astype(np.int32 if as_int else np.float32)
+    t["fc_b"] = np.asarray(params.fc.b).astype(np.int32 if as_int else np.float32)
+    t["thresholds"] = np.asarray(params.thresholds, np.float32)
+    archive.write_archive(path, t)
+
+
+def export_dataset(path: str, xs_tr, ys_tr, xs_te, ys_te):
+    archive.write_archive(path, {
+        "train_x": xs_tr, "train_y": ys_tr, "test_x": xs_te, "test_y": ys_te,
+    })
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--epochs", type=int, default=4)
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    print("[aot] generating synthetic datasets ...")
+    mn_tr_x, mn_tr_y = data.synth_mnist(N_TRAIN, SEED)
+    mn_te_x, mn_te_y = data.synth_mnist(N_TEST, SEED + 1)
+    fa_tr_x, fa_tr_y = data.synth_fashion(N_TRAIN, SEED + 2)
+    fa_te_x, fa_te_y = data.synth_fashion(N_TEST, SEED + 3)
+    export_dataset(os.path.join(out, "mnist.bin"), mn_tr_x, mn_tr_y, mn_te_x, mn_te_y)
+    export_dataset(os.path.join(out, "fashion.bin"), fa_tr_x, fa_tr_y, fa_te_x, fa_te_y)
+
+    meta = {"t_steps": M.T_STEPS, "thresholds": list(train.INPUT_THRESHOLDS),
+            "shapes": {k: list(v) if isinstance(v, tuple) else v
+                       for k, v in M.SHAPES.items()},
+            "datasets": {"n_train": N_TRAIN, "n_test": N_TEST},
+            "accuracy": {}, "quant": {}}
+
+    cache = os.path.join(out, "train_cache.npz")
+    for ds_name, (tr_x, tr_y, te_x, te_y) in {
+        "mnist": (mn_tr_x, mn_tr_y, mn_te_x, mn_te_y),
+        "fashion": (fa_tr_x, fa_tr_y, fa_te_x, fa_te_y),
+    }.items():
+        ckey = f"{ds_name}_weights"
+        cached = None
+        if not args.retrain and os.path.exists(cache):
+            z = np.load(cache, allow_pickle=True)
+            if ckey in z:
+                cached = list(z[ckey])
+        if cached is None:
+            print(f"[aot] training clamped-ReLU CNN on synthetic {ds_name} ...")
+            weights = train.train_cnn(tr_x, tr_y, epochs=args.epochs, seed=SEED)
+            flat = []
+            for (w, b) in weights:
+                flat.extend([np.asarray(w), np.asarray(b)])
+            existing = {}
+            if os.path.exists(cache):
+                existing = dict(np.load(cache, allow_pickle=True))
+            existing[ckey] = np.asarray(flat, dtype=object)
+            np.savez(cache, **existing)
+        else:
+            print(f"[aot] using cached CNN weights for {ds_name}")
+            flat = cached
+            weights = [(jnp.asarray(flat[2 * i]), jnp.asarray(flat[2 * i + 1]))
+                       for i in range(4)]
+
+        ann_acc = train.evaluate_ann(weights, te_x[:N_EVAL], te_y[:N_EVAL])
+        print(f"[aot] {ds_name}: ANN accuracy = {ann_acc:.4f}")
+        snn = train.convert_to_snn(weights, tr_x[:256])
+        snn = train.calibrate_vt(snn, tr_x[:200], tr_y[:200])
+        snn_acc = train.evaluate_snn(snn, te_x[:N_EVAL], te_y[:N_EVAL])
+        print(f"[aot] {ds_name}: SNN(float) accuracy = {snn_acc:.4f}")
+        meta["accuracy"][ds_name] = {"ann": ann_acc, "snn_float": snn_acc}
+
+        for bits in (8, 16):
+            q, qi = quantize_and_record(snn, bits, meta, ds_name)
+            qacc = train.evaluate_snn(q, te_x[:N_EVAL], te_y[:N_EVAL])
+            meta["accuracy"][ds_name][f"snn_q{bits}"] = qacc
+            print(f"[aot] {ds_name}: SNN(q{bits}) accuracy = {qacc:.4f}")
+            suffix = "" if ds_name == "mnist" else "_fashion"
+            export_params(os.path.join(out, f"weights_q{bits}{suffix}.bin"), q, True)
+            if ds_name == "mnist":
+                print(f"[aot] lowering quantized golden model (q{bits}) ...")
+                hlo = lower_model(q, use_pallas=(bits == 8))
+                with open(os.path.join(out, f"model_q{bits}.hlo.txt"), "w") as f:
+                    f.write(hlo)
+                if bits == 8:
+                    sat = float(2 ** (qi.acc_bits - 1) - 1)
+                    with open(os.path.join(out, "layer_step.hlo.txt"), "w") as f:
+                        f.write(lower_layer_step(qi.vt_q[0], sat))
+        suffix = "" if ds_name == "mnist" else "_fashion"
+        export_params(os.path.join(out, f"weights_f32{suffix}.bin"), snn, False)
+
+    with open(os.path.join(out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print("[aot] done.")
+
+
+def quantize_and_record(snn, bits, meta, ds_name):
+    q, qi = train.quantize_snn(snn, bits)
+    meta["quant"][f"{ds_name}_q{bits}"] = {
+        "bits": qi.bits, "acc_bits": qi.acc_bits,
+        "scales": [float(s) for s in qi.scales],
+        "fc_scale": float(qi.fc_scale),
+        "vt_q": [float(v) for v in qi.vt_q],
+        "sat_max": float(2 ** (qi.acc_bits - 1) - 1),
+    }
+    return q, qi
+
+
+if __name__ == "__main__":
+    main()

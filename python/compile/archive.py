@@ -1,0 +1,70 @@
+"""Tensor-archive writer: the Python->Rust weight/dataset interchange.
+
+No serde is available on the Rust side offline, so the interchange is a
+tiny self-describing little-endian binary format (reader:
+`rust/src/artifact/archive.rs`):
+
+    u32  magic   = 0x53414354  ("SACT")
+    u32  version = 1
+    u32  n_tensors
+    per tensor:
+        u32  name_len, name_len bytes of UTF-8
+        u8   dtype  (0=f32, 1=i32, 2=i16, 3=i8, 4=u8)
+        u32  ndim
+        u32  dims[ndim]
+        u64  byte_len
+        raw little-endian data
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x53414354
+VERSION = 1
+
+_DTYPES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int32): 1,
+    np.dtype(np.int16): 2,
+    np.dtype(np.int8): 3,
+    np.dtype(np.uint8): 4,
+}
+
+
+def write_archive(path: str, tensors: dict) -> None:
+    """tensors: name -> np.ndarray (f32/i32/i16/i8/u8)."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", MAGIC, VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BI", _DTYPES[arr.dtype], arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def read_archive(path: str) -> dict:
+    """Round-trip reader (used by pytest to validate the writer)."""
+    inv = {v: k for k, v in _DTYPES.items()}
+    out = {}
+    with open(path, "rb") as f:
+        magic, version, count = struct.unpack("<III", f.read(12))
+        assert magic == MAGIC and version == VERSION
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            dt, ndim = struct.unpack("<BI", f.read(5))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            (blen,) = struct.unpack("<Q", f.read(8))
+            arr = np.frombuffer(f.read(blen), dtype=inv[dt]).reshape(dims)
+            out[name] = arr
+    return out

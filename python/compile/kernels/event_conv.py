@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: event-driven convolution (the AEQ processing model).
+
+This is the *direct software analogue* of the paper's convolution unit:
+spikes arrive as a queue of address events, and each event scatters the
+180-degree-rotated 3x3 kernel into the membrane-potential neighbourhood
+(Morales et al. / paper §V-B). The number of inner-loop iterations scales
+with the number of events, exactly like the hardware's one-cycle-per-event
+schedule — this kernel is what the Rust cycle-level simulator's datapath
+computes, expressed in Pallas.
+
+VALID-convolution geometry (DESIGN.md §6): an input event at position
+p = (px, py) updates the output positions o in [p-2, p] x [p-2, p]
+(clipped to the output fmap) with weight w[p - o]; over the 3x3 window
+that is the kernel rotated by 180 degrees.
+
+Implementation notes:
+  * The membrane fmap is padded by 2 on every side so the scatter window
+    never leaves the buffer; out-of-fmap contributions land in the pad
+    margin and are cropped by the wrapper — the software analogue of the
+    hardware's under/overflow-based out-of-bounds detection.
+  * Events are passed as an (N, 2) int32 array padded with (-1, -1);
+    invalid rows contribute zero (the AEQ's `valid` bit).
+  * `interpret=True` only; see csnn_step.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["event_conv_scatter", "events_from_fmap"]
+
+
+def events_from_fmap(fmap, max_events: int):
+    """Compress a binary (H, W) fmap into an (N, 2) address-event queue.
+
+    Row-major scan order (the order the hardware's thresholding unit emits
+    events). Pads with (-1, -1) up to `max_events`. Pure-jnp utility used
+    by tests and by the AOT pipeline to build event traces for Rust.
+    """
+    h, w = fmap.shape
+    ys, xs = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
+    flat = fmap.reshape(-1) > 0
+    order = jnp.argsort(~flat, stable=True)  # spikes first, stable scan order
+    ev = jnp.stack([ys.reshape(-1)[order], xs.reshape(-1)[order]], axis=-1)
+    valid = flat[order][:, None]
+    ev = jnp.where(valid, ev, -1)
+    return ev[:max_events].astype(jnp.int32)
+
+
+def _kernel(ev_ref, w_ref, vm_ref, vm_out, *, n_events: int):
+    """Sequential event scatter — one 3x3 saturating update per event."""
+    w_rot = w_ref[...][::-1, ::-1]  # 180-degree rotation (paper Fig. 4)
+    vm_out[...] = vm_ref[...]
+
+    def body(k, _):
+        px = pl.load(ev_ref, (k, 0))
+        py = pl.load(ev_ref, (k, 1))
+        valid = (px >= 0).astype(jnp.float32)
+        # Window top-left in padded coordinates: (px - 2) + pad(2) = px.
+        sx = jnp.maximum(px, 0)  # keep indices non-negative for invalid rows
+        sy = jnp.maximum(py, 0)
+        idx = (pl.dslice(sx, 3), pl.dslice(sy, 3))
+        cur = pl.load(vm_out, idx)
+        pl.store(vm_out, idx, cur + w_rot * valid)
+        return 0
+
+    jax.lax.fori_loop(0, n_events, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def event_conv_scatter(events, w, vm, *, interpret: bool = True):
+    """Event-driven VALID 3x3 convolution accumulation.
+
+    Args:
+      events: (N, 2) int32 address events (row, col) in INPUT coordinates,
+              padded with (-1, -1).
+      w:      (3, 3) float32 kernel (un-rotated; rotation happens inside).
+      vm:     (Ho, Wo) float32 membrane potentials to accumulate into.
+
+    Returns vm' = vm + event_conv(events, w), identical to
+    `ref.valid_conv3` of the event image — the property pytest asserts.
+    """
+    ho, wo = vm.shape
+    n = events.shape[0]
+    # Pad by 2: the window start in padded coords is (px - 2) + 2 = px, with
+    # px in [0, Ho+1]; the window end px+2 <= Ho+3 stays inside (Ho+4).
+    vm_pad = jnp.pad(vm, 2)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_events=n),
+        out_shape=jax.ShapeDtypeStruct(vm_pad.shape, jnp.float32),
+        interpret=interpret,
+    )(events, w, vm_pad)
+    return out[2 : 2 + ho, 2 : 2 + wo]

@@ -1,0 +1,126 @@
+"""Pure-jnp reference oracle for the CSNN layer computations.
+
+This module is the *semantics definition* of the reproduction. Everything
+else — the Pallas kernels (L1), the full JAX model (L2) and, transitively,
+the Rust cycle-level simulator (L3, checked against the AOT-lowered golden
+model) — is validated against the functions in this file.
+
+Conventions (normative, see DESIGN.md §6):
+  * fmaps are (H, W, C) float32 with binary values {0.0, 1.0},
+  * convolutions are VALID 3x3 (28 -> 26 -> 24 -> pool3 -> 8 -> 6),
+  * m-TTFS: a neuron that has crossed V_t keeps firing every subsequent
+    timestep until the sample is reset (spike-indicator bit `fired`),
+  * the bias is added to every membrane potential once per timestep by the
+    thresholding unit (not per input spike),
+  * all arithmetic saturates to the accumulator range [sat_min, sat_max]
+    (the hardware's saturation arithmetic). For the float model the range
+    is +/- inf; for the quantized model it is the Q-format range.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "valid_conv3",
+    "saturate",
+    "if_layer_step",
+    "or_maxpool3",
+    "encode_mttfs",
+    "fc_accumulate",
+]
+
+
+def valid_conv3(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """VALID 3x3 convolution. x: (H, W, Cin), w: (3, 3, Cin, Cout).
+
+    Returns (H-2, W-2, Cout). This is the frame-based formulation; the
+    hardware performs the event-based equivalent (scatter the 180-degree
+    rotated kernel at each address event), which produces identical results
+    — a property the Rust test-suite checks exhaustively.
+    """
+    lhs = x[None, ...]  # NHWC
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out[0]
+
+
+def saturate(v: jnp.ndarray, sat_min: float, sat_max: float) -> jnp.ndarray:
+    """Saturation arithmetic: clamp to the representable accumulator range."""
+    return jnp.clip(v, sat_min, sat_max)
+
+
+def if_layer_step(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    vm: jnp.ndarray,
+    fired: jnp.ndarray,
+    vt: float,
+    sat_min: float = -jnp.inf,
+    sat_max: float = jnp.inf,
+):
+    """One timestep of an m-TTFS IF convolutional layer.
+
+    Mirrors the hardware schedule of one (layer, c_out, t) unit of work:
+      1. convolution unit: vm += conv(x)         (event-based in HW)
+      2. thresholding unit: vm += b; spike if vm > vt or already fired.
+
+    Args:
+      x:      (H, W, Cin) binary input spikes at timestep t.
+      w:      (3, 3, Cin, Cout) kernel.
+      b:      (Cout,) bias, added once per timestep.
+      vm:     (H-2, W-2, Cout) membrane potentials (state).
+      fired:  (H-2, W-2, Cout) bool spike-indicator bits (state).
+      vt:     firing threshold.
+
+    Returns (spikes, vm', fired') with spikes binary float32.
+    """
+    u = valid_conv3(x, w)
+    vm = saturate(vm + u, sat_min, sat_max)
+    vm = saturate(vm + b[None, None, :], sat_min, sat_max)
+    fired = jnp.logical_or(fired, vm > vt)
+    spikes = fired.astype(jnp.float32)
+    return spikes, vm, fired
+
+
+def or_maxpool3(x: jnp.ndarray) -> jnp.ndarray:
+    """3x3/stride-3 max-pool on a binary fmap == OR over each window.
+
+    x: (H, W, C) with H, W divisible by 3 -> (H/3, W/3, C).
+    """
+    h, w, c = x.shape
+    assert h % 3 == 0 and w % 3 == 0, f"pool dims must divide 3, got {x.shape}"
+    xr = x.reshape(h // 3, 3, w // 3, 3, c)
+    return jnp.max(xr, axis=(1, 3))
+
+
+def encode_mttfs(img: jnp.ndarray, thresholds: jnp.ndarray) -> jnp.ndarray:
+    """Binarize an input frame into T timesteps of m-TTFS spikes.
+
+    `thresholds` is the paper's strictly increasing set P = (p_1..p_T)
+    (one per timestep here). It is applied in DECREASING order over time so
+    that a bright pixel spikes early *and keeps spiking* (the m-TTFS
+    property): step 0 uses the largest threshold.
+
+    img: (H, W) float in [0, 1].  Returns (T, H, W, 1) binary float32.
+    """
+    desc = thresholds[::-1]  # largest first
+    spikes = (img[None, :, :] > desc[:, None, None]).astype(jnp.float32)
+    return spikes[..., None]
+
+
+def fc_accumulate(acc: jnp.ndarray, spikes: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Classification unit: accumulate FC potentials from binary spikes.
+
+    acc: (n_out,), spikes: (H, W, C) binary, w: (H*W*C, n_out), b: (n_out,).
+    The hardware implements this as event-driven adds of weight rows.
+    """
+    flat = spikes.reshape(-1)
+    return acc + flat @ w + b

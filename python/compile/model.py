@@ -1,0 +1,161 @@
+"""L2: the full CSNN as a JAX computation (build-time only).
+
+Network (paper §VII, valid-conv interpretation, DESIGN.md §6):
+
+    28x28x1 -> 32C3 -> 26x26x32 -> 32C3 -> 24x24x32 -> P3 -> 8x8x32
+            -> 10C3 -> 6x6x10 -> F10
+
+m-TTFS over T=5 timesteps; biases applied once per timestep by the
+thresholding unit; OR max-pool; classification by accumulated FC
+potentials. The same function doubles as
+
+  * the float golden model (sat bounds = +/-inf) used to score accuracy,
+  * the QUANTIZED golden model (integral weights, finite saturation) that
+    is AOT-lowered to HLO text and executed from Rust via PJRT — the
+    cycle-level simulator must match it spike-for-spike.
+
+`use_pallas=True` routes every layer step through the L1 Pallas kernel
+(interpret mode) so the exported HLO exercises the kernel path.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.csnn_step import if_layer_step_pallas, weights_to_matrix
+
+
+class ConvLayer(NamedTuple):
+    w: jnp.ndarray   # (3, 3, Cin, Cout)
+    b: jnp.ndarray   # (Cout,)
+    vt: float
+
+
+class FcLayer(NamedTuple):
+    w: jnp.ndarray   # (n_in, n_out)
+    b: jnp.ndarray   # (n_out,)
+
+
+class CsnnParams(NamedTuple):
+    conv: Sequence[ConvLayer]     # exactly 3 layers for the paper net
+    fc: FcLayer
+    thresholds: jnp.ndarray       # (T,) strictly increasing input thresholds
+    sat_min: float
+    sat_max: float
+
+
+# Layer geometry of the paper network (input 28x28).
+SHAPES = {
+    "input": (28, 28, 1),
+    "l1": (26, 26, 32),
+    "l2": (24, 24, 32),
+    "l2_pool": (8, 8, 32),
+    "l3": (6, 6, 10),
+    "fc_in": 6 * 6 * 10,
+    "n_classes": 10,
+}
+T_STEPS = 5
+
+
+def init_state(params: CsnnParams):
+    """Zeroed membrane potentials, spike indicators and FC accumulator."""
+    vms, fireds = [], []
+    for name in ("l1", "l2", "l3"):
+        h, w, c = SHAPES[name]
+        vms.append(jnp.zeros((h, w, c), jnp.float32))
+        fireds.append(jnp.zeros((h, w, c), jnp.float32))
+    acc = jnp.zeros((SHAPES["n_classes"],), jnp.float32)
+    return tuple(vms), tuple(fireds), acc
+
+
+def _layer_step(x, layer: ConvLayer, vm, fired, sat_min, sat_max, use_pallas):
+    if use_pallas:
+        cout = layer.w.shape[-1]
+        block = 2 if cout % 8 else 8  # 10-channel layer blocks by 2
+        return if_layer_step_pallas(
+            x, weights_to_matrix(layer.w), layer.b, vm, fired,
+            vt=float(layer.vt), sat_min=float(sat_min), sat_max=float(sat_max),
+            block_cout=block,
+        )
+    s, vm2, f2 = ref.if_layer_step(
+        x, layer.w, layer.b, vm, fired > 0.5, float(layer.vt),
+        sat_min=sat_min, sat_max=sat_max,
+    )
+    return s, vm2, f2.astype(jnp.float32)
+
+
+def csnn_step(params: CsnnParams, state, frame, use_pallas: bool = False):
+    """One network timestep: all three conv layers + pooling + FC unit.
+
+    frame: (28, 28, 1) binary spikes. Returns (state', per-layer spikes).
+    """
+    (vm1, vm2, vm3), (f1, f2, f3), acc = state
+    l1, l2, l3 = params.conv
+    sat = (params.sat_min, params.sat_max)
+
+    s1, vm1, f1 = _layer_step(frame, l1, vm1, f1, *sat, use_pallas)
+    s2, vm2, f2 = _layer_step(s1, l2, vm2, f2, *sat, use_pallas)
+    s2p = ref.or_maxpool3(s2)
+    s3, vm3, f3 = _layer_step(s2p, l3, vm3, f3, *sat, use_pallas)
+    acc = ref.fc_accumulate(acc, s3, params.fc.w, params.fc.b)
+
+    state = ((vm1, vm2, vm3), (f1, f2, f3), acc)
+    return state, (s1, s2p, s3)
+
+
+def csnn_forward(params: CsnnParams, frames, use_pallas: bool = False):
+    """Run T timesteps. frames: (T, 28, 28, 1) binary.
+
+    Returns (logits (10,), spike_counts (T, 3)) — the per-layer, per-step
+    spike counts are the cross-check signal for the Rust simulator.
+    """
+    state = init_state(params)
+
+    def step(state, frame):
+        state, (s1, s2p, s3) = csnn_step(params, state, frame, use_pallas)
+        counts = jnp.stack([jnp.sum(s1), jnp.sum(s2p), jnp.sum(s3)])
+        return state, counts
+
+    if use_pallas:
+        # pallas_call inside scan is fine, but unrolling keeps the lowered
+        # HLO free of while-loops, which the PJRT-side profiler likes.
+        counts = []
+        for t in range(frames.shape[0]):
+            state, c = step(state, frames[t])
+            counts.append(c)
+        spike_counts = jnp.stack(counts)
+    else:
+        state, spike_counts = jax.lax.scan(step, state, frames)
+
+    _, _, acc = state
+    return acc, spike_counts
+
+
+def classify(params: CsnnParams, img) -> jnp.ndarray:
+    """End-to-end: encode a (28, 28) [0,1] frame, run T steps, argmax."""
+    frames = ref.encode_mttfs(img, params.thresholds)
+    logits, _ = csnn_forward(params, frames)
+    return jnp.argmax(logits)
+
+
+# ---------------------------------------------------------------------------
+# The ANN used for training (clamped ReLU, conversion source — paper §VII).
+# ---------------------------------------------------------------------------
+
+def ann_forward(weights, img):
+    """Clamped-ReLU CNN with the same topology; img: (28, 28, 1) in [0,1]."""
+    (w1, b1), (w2, b2), (w3, b3), (wf, bf) = weights
+
+    def clamped_relu(v):
+        return jnp.clip(v, 0.0, 1.0)
+
+    a1 = clamped_relu(ref.valid_conv3(img, w1) + b1)
+    a2 = clamped_relu(ref.valid_conv3(a1, w2) + b2)
+    a2p = jax.lax.reduce_window(a2, -jnp.inf, jax.lax.max, (3, 3, 1), (3, 3, 1), "VALID")
+    a3 = clamped_relu(ref.valid_conv3(a2p, w3) + b3)
+    logits = a3.reshape(-1) @ wf + bf
+    return logits, (a1, a2, a2p, a3)

@@ -1,0 +1,258 @@
+"""Training + ANN->SNN conversion + quantization (build-time only).
+
+Pipeline (paper §VII):
+  1. train a clamped-ReLU CNN (Tensorflow-Keras in the paper; JAX here)
+     on the (synthetic) dataset,
+  2. convert to an m-TTFS IF-SNN with Rueckauer-style data-based
+     threshold balancing (the SNN-Toolbox step in the paper),
+  3. post-training quantization to 8/16-bit integer weights with
+     per-layer scales and a saturating accumulator (the paper's
+     quantization-aware step is approximated by quantize + finetune-free
+     calibration, which suffices at these model sizes),
+  4. export everything as tensor archives for the Rust side.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels import ref
+
+# m-TTFS input binarization thresholds (strictly increasing, paper §VII).
+INPUT_THRESHOLDS = (0.15, 0.30, 0.45, 0.60, 0.75)
+
+
+def mttfs_quantize(imgs: np.ndarray) -> np.ndarray:
+    """Project [0,1] frames onto the m-TTFS input domain.
+
+    The SNN's effective input drive over T steps is the *count* of
+    thresholds each pixel exceeds (each binarized frame is integrated
+    once), so the ANN is trained on exactly that quantized intensity —
+    this keeps the ANN->SNN conversion input-consistent (paper §VII's
+    "set of thresholds" binarization).
+    """
+    th = np.asarray(INPUT_THRESHOLDS, np.float32)
+    counts = (imgs[..., None] > th).sum(-1).astype(np.float32)
+    return counts / len(INPUT_THRESHOLDS)
+
+
+# ---------------------------------------------------------------------------
+# ANN training (clamped ReLU CNN, Adam, softmax cross-entropy)
+# ---------------------------------------------------------------------------
+
+def init_weights(seed: int):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+
+    def conv_init(key, cin, cout):
+        std = float(np.sqrt(2.0 / (9 * cin)))
+        return (jax.random.normal(key, (3, 3, cin, cout)) * std,
+                jnp.zeros((cout,)))
+
+    w1 = conv_init(k1, 1, 32)
+    w2 = conv_init(k2, 32, 32)
+    w3 = conv_init(k3, 32, 10)
+    wf = (jax.random.normal(k4, (M.SHAPES["fc_in"], 10))
+          * float(np.sqrt(2.0 / M.SHAPES["fc_in"])), jnp.zeros((10,)))
+    return [w1, w2, w3, wf]
+
+
+def _loss(weights, imgs, labels):
+    logits, _ = jax.vmap(lambda im: M.ann_forward(weights, im))(imgs)
+    logits = logits[0] if isinstance(logits, tuple) else logits
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    return nll
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def _adam_step(weights, mstate, vstate, t, imgs, labels, lr=1e-3):
+    grads = jax.grad(_loss)(weights, imgs, labels)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    new_w, new_m, new_v = [], [], []
+    for w, m, v, g in zip(weights, mstate, vstate, grads):
+        layer_w, layer_m, layer_v = [], [], []
+        for wi, mi, vi, gi in zip(w, m, v, g):
+            mi = b1 * mi + (1 - b1) * gi
+            vi = b2 * vi + (1 - b2) * gi * gi
+            mhat = mi / (1 - b1 ** t)
+            vhat = vi / (1 - b2 ** t)
+            layer_w.append(wi - lr * mhat / (jnp.sqrt(vhat) + eps))
+            layer_m.append(mi)
+            layer_v.append(vi)
+        new_w.append(tuple(layer_w))
+        new_m.append(tuple(layer_m))
+        new_v.append(tuple(layer_v))
+    return new_w, new_m, new_v
+
+
+def train_cnn(xs: np.ndarray, ys: np.ndarray, *, epochs: int = 4,
+              batch: int = 64, seed: int = 0, lr: float = 1e-3,
+              verbose: bool = True):
+    """xs: (N, 28, 28) u8, ys: (N,) u8. Returns float weights list."""
+    weights = init_weights(seed)
+    mstate = [tuple(jnp.zeros_like(p) for p in w) for w in weights]
+    vstate = [tuple(jnp.zeros_like(p) for p in w) for w in weights]
+    imgs = mttfs_quantize(xs.astype(np.float32) / 255.0)[..., None]
+    labels = ys.astype(np.int32)
+    rng = np.random.default_rng(seed)
+    n = len(xs)
+    t = 0
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i : i + batch]
+            t += 1
+            weights, mstate, vstate = _adam_step(
+                weights, mstate, vstate, t,
+                jnp.asarray(imgs[idx]), jnp.asarray(labels[idx]), lr=lr)
+        if verbose:
+            acc = evaluate_ann(weights, xs[:512], ys[:512])
+            print(f"  epoch {ep + 1}/{epochs}: train-acc(512)={acc:.3f}")
+    return weights
+
+
+def evaluate_ann(weights, xs, ys, batch: int = 256) -> float:
+    imgs = mttfs_quantize(xs.astype(np.float32) / 255.0)[..., None]
+    correct = 0
+    fwd = jax.jit(jax.vmap(lambda im: M.ann_forward(weights, im)[0]))
+    for i in range(0, len(xs), batch):
+        logits = fwd(jnp.asarray(imgs[i : i + batch]))
+        correct += int((np.argmax(np.asarray(logits), -1) == ys[i : i + batch]).sum())
+    return correct / len(xs)
+
+
+# ---------------------------------------------------------------------------
+# ANN -> SNN conversion (data-based threshold balancing, Rueckauer et al.)
+# ---------------------------------------------------------------------------
+
+def convert_to_snn(weights, xs_calib: np.ndarray, *, percentile: float = 99.9,
+                   thresholds=INPUT_THRESHOLDS) -> M.CsnnParams:
+    """Normalize per-layer so that V_t = 1.0 everywhere.
+
+    lambda_l = percentile of layer-l activations over the calibration set;
+    w_l <- w_l * lambda_{l-1} / lambda_l, b_l <- b_l / lambda_l.
+    """
+    imgs = mttfs_quantize(xs_calib.astype(np.float32) / 255.0)[..., None]
+    fwd = jax.jit(jax.vmap(lambda im: M.ann_forward(weights, im)[1]))
+    acts = fwd(jnp.asarray(imgs))
+    a1, a2, _a2p, a3 = (np.asarray(a) for a in acts)
+    lams = [1.0]
+    for a in (a1, a2, a3):
+        lam = float(np.percentile(a, percentile))
+        lams.append(max(lam, 1e-3))
+
+    conv = []
+    for li, (w, b) in enumerate(weights[:3]):
+        lam_prev, lam = lams[li], lams[li + 1]
+        conv.append(M.ConvLayer(
+            w=jnp.asarray(np.asarray(w) * lam_prev / lam),
+            b=jnp.asarray(np.asarray(b) / lam),
+            vt=1.0,
+        ))
+    wf, bf = weights[3]
+    fc = M.FcLayer(w=jnp.asarray(np.asarray(wf) * lams[3]),
+                   b=jnp.asarray(np.asarray(bf)))
+    params = M.CsnnParams(
+        conv=tuple(conv), fc=fc,
+        thresholds=jnp.asarray(thresholds, jnp.float32),
+        sat_min=-float("inf"), sat_max=float("inf"),
+    )
+    return params
+
+
+def calibrate_vt(params: M.CsnnParams, xs: np.ndarray, ys: np.ndarray,
+                 factors=(0.4, 0.55, 0.7, 0.85, 1.0)) -> M.CsnnParams:
+    """Global V_t balancing: the m-TTFS spike-count nonlinearity shifts the
+    best operating point below the rate-coding V_t = 1.0; sweep a small set
+    of global multipliers on a calibration split and keep the best (the
+    empirical step SNN-Toolbox performs as 'threshold balancing')."""
+    best, best_acc = params, -1.0
+    for f in factors:
+        cand = params._replace(conv=tuple(
+            layer._replace(vt=layer.vt * f) for layer in params.conv))
+        acc = evaluate_snn(cand, xs, ys)
+        if acc > best_acc:
+            best, best_acc = cand, acc
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Quantization to integer weights with saturating accumulators
+# ---------------------------------------------------------------------------
+
+class QuantInfo(NamedTuple):
+    bits: int
+    acc_bits: int
+    scales: list      # per conv layer weight scale
+    fc_scale: float
+    vt_q: list        # per conv layer integer threshold
+
+
+def quantize_snn(params: M.CsnnParams, bits: int) -> tuple[M.CsnnParams, QuantInfo]:
+    """Symmetric per-layer quantization; membrane unit = 1/S_l.
+
+    Returns a params pytree whose values are INTEGRAL float32 (so the same
+    JAX model runs them exactly — f32 holds integers < 2^24 exactly) plus
+    the scales needed by the Rust integer datapath.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    # Accumulator width: wide enough that saturation never engages for the
+    # paper network's actual dynamic range (so the f32 golden model and the
+    # integer simulator agree bit-exactly; see DESIGN.md). The saturating
+    # datapath itself is still implemented and unit-tested at narrow widths
+    # in rust/src/snn/sat.rs.
+    acc_bits = 20 if bits == 8 else 24
+    sat_max = float(2 ** (acc_bits - 1) - 1)
+
+    conv_q, scales, vts = [], [], []
+    for layer in params.conv:
+        wmax = float(max(np.abs(np.asarray(layer.w)).max(),
+                         np.abs(np.asarray(layer.b)).max(), 1e-6))
+        s = qmax / wmax
+        wq = np.round(np.asarray(layer.w) * s)
+        bq = np.round(np.asarray(layer.b) * s)
+        vt_q = float(np.round(layer.vt * s))
+        conv_q.append(M.ConvLayer(w=jnp.asarray(wq), b=jnp.asarray(bq), vt=vt_q))
+        scales.append(s)
+        vts.append(vt_q)
+
+    wf = np.asarray(params.fc.w)
+    sf = qmax / float(max(np.abs(wf).max(), 1e-6))
+    fc_q = M.FcLayer(w=jnp.asarray(np.round(wf * sf)),
+                     b=jnp.asarray(np.round(np.asarray(params.fc.b) * sf)))
+
+    qparams = M.CsnnParams(
+        conv=tuple(conv_q), fc=fc_q, thresholds=params.thresholds,
+        sat_min=-sat_max, sat_max=sat_max,
+    )
+    return qparams, QuantInfo(bits, acc_bits, scales, sf, vts)
+
+
+# ---------------------------------------------------------------------------
+# SNN evaluation
+# ---------------------------------------------------------------------------
+
+def evaluate_snn(params: M.CsnnParams, xs: np.ndarray, ys: np.ndarray,
+                 batch: int = 128) -> float:
+    imgs = xs.astype(np.float32) / 255.0
+
+    @jax.jit
+    def fwd(ims):
+        def one(im):
+            frames = ref.encode_mttfs(im, params.thresholds)
+            logits, _ = M.csnn_forward(params, frames)
+            return jnp.argmax(logits)
+        return jax.vmap(one)(ims)
+
+    correct = 0
+    for i in range(0, len(xs), batch):
+        pred = np.asarray(fwd(jnp.asarray(imgs[i : i + batch])))
+        correct += int((pred == ys[i : i + batch]).sum())
+    return correct / len(xs)

@@ -1,0 +1,49 @@
+"""Interchange-format tests: the tensor archive writer/reader round trip
+(the Rust reader is tested against the same spec on its side)."""
+
+import numpy as np
+import pytest
+
+from compile import archive
+
+
+def test_roundtrip_all_dtypes(tmp_path):
+    path = str(tmp_path / "t.bin")
+    tensors = {
+        "f": np.linspace(-1, 1, 24, dtype=np.float32).reshape(2, 3, 4),
+        "i": np.arange(-5, 5, dtype=np.int32),
+        "s": np.asarray([-300, 300], np.int16),
+        "b": np.asarray([-8, 7], np.int8),
+        "u": np.arange(10, dtype=np.uint8).reshape(2, 5),
+    }
+    archive.write_archive(path, tensors)
+    back = archive.read_archive(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(TypeError):
+        archive.write_archive(str(tmp_path / "x.bin"), {"d": np.zeros(2, np.float64)})
+
+
+def test_empty_archive(tmp_path):
+    path = str(tmp_path / "e.bin")
+    archive.write_archive(path, {})
+    assert archive.read_archive(path) == {}
+
+
+def test_scalarish_shapes(tmp_path):
+    path = str(tmp_path / "s.bin")
+    archive.write_archive(path, {"one": np.asarray([42.0], np.float32)})
+    back = archive.read_archive(path)
+    assert back["one"].shape == (1,)
+    assert back["one"][0] == 42.0
+
+
+def test_unicode_names(tmp_path):
+    path = str(tmp_path / "u.bin")
+    archive.write_archive(path, {"poids_couche_été": np.zeros(3, np.float32)})
+    assert "poids_couche_été" in archive.read_archive(path)

@@ -1,0 +1,84 @@
+"""Build-output sanity: if `artifacts/` exists, its contents must be
+mutually consistent (these are what the Rust binary consumes)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import archive
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "meta.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def meta():
+    with open(os.path.join(ART, "meta.json")) as f:
+        return json.load(f)
+
+
+def test_meta_schema(meta):
+    assert meta["t_steps"] == 5
+    assert len(meta["thresholds"]) == 5
+    assert sorted(meta["thresholds"]) == meta["thresholds"], "strictly increasing"
+    for ds in ("mnist", "fashion"):
+        for bits in (8, 16):
+            q = meta["quant"][f"{ds}_q{bits}"]
+            assert q["bits"] == bits
+            assert len(q["scales"]) == 3
+            assert len(q["vt_q"]) == 3
+            assert q["sat_max"] == 2 ** (q["acc_bits"] - 1) - 1
+
+
+@pytest.mark.parametrize("name", ["weights_q8.bin", "weights_q16.bin",
+                                  "weights_q8_fashion.bin", "weights_f32.bin"])
+def test_weight_archives_consistent(name, meta):
+    ar = archive.read_archive(os.path.join(ART, name))
+    assert ar["conv0_w"].shape == (3, 3, 1, 32)
+    assert ar["conv1_w"].shape == (3, 3, 32, 32)
+    assert ar["conv2_w"].shape == (3, 3, 32, 10)
+    assert ar["fc_w"].shape == (360, 10)
+    assert ar["thresholds"].shape == (5,)
+    if "q8" in name:
+        assert ar["conv0_w"].dtype == np.int32
+        assert np.abs(ar["conv0_w"]).max() <= 127
+    if "q16" in name:
+        assert np.abs(ar["conv0_w"]).max() <= 2**15 - 1
+
+
+def test_vt_matches_meta(meta):
+    ar = archive.read_archive(os.path.join(ART, "weights_q8.bin"))
+    for i in range(3):
+        assert float(ar[f"conv{i}_vt"][0]) == meta["quant"]["mnist_q8"]["vt_q"][i]
+
+
+@pytest.mark.parametrize("name", ["mnist.bin", "fashion.bin"])
+def test_datasets(name, meta):
+    ds = archive.read_archive(os.path.join(ART, name))
+    n_train = meta["datasets"]["n_train"]
+    n_test = meta["datasets"]["n_test"]
+    assert ds["train_x"].shape == (n_train, 28, 28)
+    assert ds["test_x"].shape == (n_test, 28, 28)
+    assert ds["train_y"].shape == (n_train,)
+    assert len(np.unique(ds["test_y"])) == 10
+
+
+def test_hlo_artifacts_have_full_constants():
+    # the regression that broke the golden check: elided `{...}` constants
+    for name in ("model_q8.hlo.txt", "model_q16.hlo.txt", "layer_step.hlo.txt"):
+        text = open(os.path.join(ART, name)).read()
+        assert "{...}" not in text, f"{name} has elided constants"
+        assert "ENTRY" in text
+
+
+def test_build_accuracy_recorded(meta):
+    acc = meta["accuracy"]["mnist"]
+    # the model must have actually learned something at build time
+    assert acc["ann"] > 0.9
+    assert acc["snn_q8"] > 0.85

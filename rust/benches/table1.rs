@@ -1,0 +1,20 @@
+//! Regenerates paper Table I: throughput (FPS) and efficiency (FPS/W)
+//! for parallelization ×1, ×2, ×4, ×8, ×16 (8-bit), printed next to the
+//! paper's published rows. Requires `make artifacts`.
+
+mod common;
+
+fn main() {
+    common::header("Table I — performance vs degree of parallelism");
+    let n = std::env::var("SACSNN_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+    match sacsnn::report::table1(n) {
+        Ok(t) => println!("{t}"),
+        Err(e) => {
+            eprintln!("SKIP (artifacts missing?): {e:#}");
+            std::process::exit(0);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Table II: FPGA synthesis/resource results (8/16-bit)
+//! from the structural resource model, next to the paper's values and the
+//! related-work rows.
+
+mod common;
+
+fn main() {
+    common::header("Table II — FPGA synthesis results");
+    println!("{}", sacsnn::report::table2());
+}

@@ -1,0 +1,15 @@
+//! Regenerates paper Table III: per-layer input activation sparsity vs
+//! PE utilization for the first validation sample.
+
+mod common;
+
+fn main() {
+    common::header("Table III — sparsity vs PE utilization");
+    match sacsnn::report::table3() {
+        Ok(t) => println!("{t}"),
+        Err(e) => {
+            eprintln!("SKIP (artifacts missing?): {e:#}");
+            std::process::exit(0);
+        }
+    }
+}

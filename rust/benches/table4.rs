@@ -1,0 +1,35 @@
+//! Regenerates paper Table IV: Fashion-MNIST accuracy vs related work
+//! (ours measured on the synthetic Fashion-like set at build time, plus a
+//! live re-measurement on the simulator).
+
+mod common;
+
+use sacsnn::report;
+use sacsnn::sim::{AccelConfig, Accelerator};
+use std::sync::Arc;
+
+fn main() {
+    common::header("Table IV — Fashion-MNIST accuracy");
+    match report::table4() {
+        Ok(t) => println!("{t}"),
+        Err(e) => {
+            eprintln!("SKIP (artifacts missing?): {e:#}");
+            std::process::exit(0);
+        }
+    }
+    // live re-measurement on the simulated accelerator (16-bit)
+    if let Ok((net, ds, _)) = report::env("fashion", 16) {
+        let n = 100.min(ds.n_test());
+        let mut accel = Accelerator::new(
+            Arc::clone(&net),
+            AccelConfig { lanes: 8, ..Default::default() },
+        );
+        let correct = (0..n)
+            .filter(|&i| accel.infer(ds.test_image(i)).pred == ds.test_y[i] as usize)
+            .count();
+        println!(
+            "live simulator re-measurement (q16, {n} images): {:.1}%",
+            100.0 * correct as f64 / n as f64
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Regenerates paper Table V: the MNIST platform comparison — our
+//! simulated design (8/16-bit), the simulated architectural baselines
+//! (SIES-like systolic, ASIE-like AER array, dense sliding window) and
+//! the cited platform rows.
+
+mod common;
+
+fn main() {
+    common::header("Table V — MNIST platform comparison");
+    let n = std::env::var("SACSNN_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+    match sacsnn::report::table5(n) {
+        Ok(t) => println!("{t}"),
+        Err(e) => {
+            eprintln!("SKIP (artifacts missing?): {e:#}");
+            std::process::exit(0);
+        }
+    }
+}

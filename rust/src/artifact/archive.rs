@@ -1,0 +1,274 @@
+//! Tensor-archive reader — the Python->Rust interchange format.
+//!
+//! Format (written by `python/compile/archive.py`, all little-endian):
+//!
+//! ```text
+//! u32 magic = 0x53414354 ("SACT"), u32 version = 1, u32 n_tensors
+//! per tensor:
+//!   u32 name_len, name bytes (utf-8)
+//!   u8  dtype (0=f32, 1=i32, 2=i16, 3=i8, 4=u8)
+//!   u32 ndim, u32 dims[ndim]
+//!   u64 byte_len, raw data
+//! ```
+
+use anyhow::{bail, ensure, Context};
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+const MAGIC: u32 = 0x5341_4354;
+
+/// Element type of a stored tensor.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I16,
+    I8,
+    U8,
+}
+
+impl DType {
+    fn from_tag(t: u8) -> anyhow::Result<Self> {
+        Ok(match t {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::I16,
+            3 => DType::I8,
+            4 => DType::U8,
+            _ => bail!("unknown dtype tag {t}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I16 => 2,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+}
+
+/// One tensor: shape + raw little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode as f32 values (accepts F32 only).
+    pub fn as_f32(&self) -> anyhow::Result<Vec<f32>> {
+        ensure!(self.dtype == DType::F32, "tensor is {:?}, not F32", self.dtype);
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Decode as i32 values (accepts I32/I16/I8/U8 with widening).
+    pub fn as_i32(&self) -> anyhow::Result<Vec<i32>> {
+        Ok(match self.dtype {
+            DType::I32 => self
+                .data
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+            DType::I16 => self
+                .data
+                .chunks_exact(2)
+                .map(|c| i16::from_le_bytes([c[0], c[1]]) as i32)
+                .collect(),
+            DType::I8 => self.data.iter().map(|&b| b as i8 as i32).collect(),
+            DType::U8 => self.data.iter().map(|&b| b as i32).collect(),
+            DType::F32 => bail!("tensor is F32, not integer"),
+        })
+    }
+
+    /// Decode as u8 (accepts U8 only) — used for image datasets.
+    pub fn as_u8(&self) -> anyhow::Result<&[u8]> {
+        ensure!(self.dtype == DType::U8, "tensor is {:?}, not U8", self.dtype);
+        Ok(&self.data)
+    }
+}
+
+/// A named collection of tensors.
+#[derive(Clone, Debug, Default)]
+pub struct Archive {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Archive {
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading archive {}", path.display()))?;
+        Self::parse(&bytes).with_context(|| format!("parsing archive {}", path.display()))
+    }
+
+    pub fn parse(bytes: &[u8]) -> anyhow::Result<Self> {
+        let mut r = Cursor { buf: bytes, pos: 0 };
+        let magic = r.u32()?;
+        ensure!(magic == MAGIC, "bad magic {magic:#x}");
+        let version = r.u32()?;
+        ensure!(version == 1, "unsupported version {version}");
+        let count = r.u32()? as usize;
+        ensure!(count < 1_000_000, "implausible tensor count {count}");
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = r.u32()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .context("tensor name is not utf-8")?;
+            let dtype = DType::from_tag(r.u8()?)?;
+            let ndim = r.u32()? as usize;
+            ensure!(ndim <= 8, "implausible ndim {ndim}");
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            let byte_len = r.u64()? as usize;
+            let expect = dims.iter().product::<usize>() * dtype.size();
+            ensure!(
+                byte_len == expect,
+                "tensor '{name}': byte_len {byte_len} != dims {dims:?} * {}",
+                dtype.size()
+            );
+            let data = r.take(byte_len)?.to_vec();
+            tensors.insert(name, Tensor { dtype, dims, data });
+        }
+        ensure!(r.pos == bytes.len(), "trailing bytes in archive");
+        Ok(Archive { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("archive has no tensor '{name}'"))
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "archive truncated");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+// Unused import guard: Read is pulled in for future streaming use.
+#[allow(unused)]
+fn _assert_read_available<R: Read>(_r: R) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-encode a tiny archive to validate the reader against the spec.
+    fn encode(tensors: &[(&str, DType, &[usize], Vec<u8>)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, dt, dims, data) in tensors {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            let tag = match dt {
+                DType::F32 => 0u8,
+                DType::I32 => 1,
+                DType::I16 => 2,
+                DType::I8 => 3,
+                DType::U8 => 4,
+            };
+            out.push(tag);
+            out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for d in *dims {
+                out.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+            out.extend_from_slice(data);
+        }
+        out
+    }
+
+    #[test]
+    fn parse_f32_and_i32() {
+        let f = 1.5f32.to_le_bytes();
+        let i = (-7i32).to_le_bytes();
+        let bytes = encode(&[
+            ("a", DType::F32, &[1], f.to_vec()),
+            ("b", DType::I32, &[1], i.to_vec()),
+        ]);
+        let a = Archive::parse(&bytes).unwrap();
+        assert_eq!(a.get("a").unwrap().as_f32().unwrap(), vec![1.5]);
+        assert_eq!(a.get("b").unwrap().as_i32().unwrap(), vec![-7]);
+    }
+
+    #[test]
+    fn widening_reads() {
+        let bytes = encode(&[
+            ("i8", DType::I8, &[2], vec![0xFF, 0x7F]), // -1, 127
+            ("u8", DType::U8, &[2], vec![0xFF, 0x01]), // 255, 1
+            ("i16", DType::I16, &[1], (-300i16).to_le_bytes().to_vec()),
+        ]);
+        let a = Archive::parse(&bytes).unwrap();
+        assert_eq!(a.get("i8").unwrap().as_i32().unwrap(), vec![-1, 127]);
+        assert_eq!(a.get("u8").unwrap().as_i32().unwrap(), vec![255, 1]);
+        assert_eq!(a.get("i16").unwrap().as_i32().unwrap(), vec![-300]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        // dims say 2 elements of f32 (8 bytes) but only 4 provided
+        let bytes = encode(&[("x", DType::F32, &[2], vec![0, 0, 0, 0])]);
+        assert!(Archive::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = encode(&[]);
+        bytes[0] ^= 0xFF;
+        assert!(Archive::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let f = 1.5f32.to_le_bytes();
+        let bytes = encode(&[("a", DType::F32, &[1], f.to_vec())]);
+        assert!(Archive::parse(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error() {
+        let a = Archive::parse(&encode(&[])).unwrap();
+        assert!(a.get("nope").is_err());
+    }
+}

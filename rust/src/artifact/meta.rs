@@ -1,0 +1,151 @@
+//! Typed view of `artifacts/meta.json` (geometry, encoding thresholds,
+//! quantization metadata and the build-time accuracy measurements).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Per-variant quantization metadata (`quant.<dataset>_q<bits>`).
+#[derive(Clone, Debug)]
+pub struct QuantMeta {
+    pub bits: u32,
+    pub acc_bits: u32,
+    pub scales: Vec<f64>,
+    pub fc_scale: f64,
+    pub vt_q: Vec<i32>,
+    pub sat_max: i32,
+}
+
+/// Build-time accuracy record for one dataset.
+#[derive(Clone, Debug, Default)]
+pub struct AccuracyMeta {
+    pub ann: f64,
+    pub snn_float: f64,
+    pub snn_q8: f64,
+    pub snn_q16: f64,
+}
+
+/// Parsed `meta.json`.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub t_steps: usize,
+    pub thresholds: Vec<f32>,
+    pub raw: Json,
+}
+
+impl Meta {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let raw = Json::parse(&text).context("parsing meta.json")?;
+        let t_steps = raw
+            .get(&["t_steps"])
+            .and_then(Json::as_usize)
+            .context("meta.json: missing t_steps")?;
+        let thresholds = raw
+            .get(&["thresholds"])
+            .and_then(Json::as_arr)
+            .context("meta.json: missing thresholds")?
+            .iter()
+            .filter_map(|v| v.as_f64().map(|f| f as f32))
+            .collect();
+        Ok(Meta { t_steps, thresholds, raw })
+    }
+
+    /// Quantization metadata for e.g. ("mnist", 8).
+    pub fn quant(&self, dataset: &str, bits: u32) -> Result<QuantMeta> {
+        let key = format!("{dataset}_q{bits}");
+        let q = self
+            .raw
+            .get(&["quant", &key])
+            .with_context(|| format!("meta.json: no quant entry '{key}'"))?;
+        let getf = |k: &str| -> Result<f64> {
+            q.get(&[k])
+                .and_then(Json::as_f64)
+                .with_context(|| format!("quant.{key}: missing {k}"))
+        };
+        let scales = q
+            .get(&["scales"])
+            .and_then(Json::as_arr)
+            .context("missing scales")?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        let vt_q = q
+            .get(&["vt_q"])
+            .and_then(Json::as_arr)
+            .context("missing vt_q")?
+            .iter()
+            .filter_map(|v| v.as_f64().map(|f| f as i32))
+            .collect();
+        Ok(QuantMeta {
+            bits: getf("bits")? as u32,
+            acc_bits: getf("acc_bits")? as u32,
+            scales,
+            fc_scale: getf("fc_scale")?,
+            vt_q,
+            sat_max: getf("sat_max")? as i32,
+        })
+    }
+
+    /// Build-time accuracies for a dataset ("mnist" / "fashion").
+    pub fn accuracy(&self, dataset: &str) -> AccuracyMeta {
+        let g = |k: &str| {
+            self.raw
+                .get(&["accuracy", dataset, k])
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0)
+        };
+        AccuracyMeta {
+            ann: g("ann"),
+            snn_float: g("snn_float"),
+            snn_q8: g("snn_q8"),
+            snn_q16: g("snn_q16"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Meta {
+        let src = r#"{
+            "t_steps": 5,
+            "thresholds": [0.15, 0.3, 0.45],
+            "accuracy": {"mnist": {"ann": 0.97, "snn_float": 0.95,
+                                    "snn_q8": 0.94, "snn_q16": 0.95}},
+            "quant": {"mnist_q8": {"bits": 8, "acc_bits": 20,
+                "scales": [97.6, 378.3, 360.6], "fc_scale": 355.8,
+                "vt_q": [68.0, 265.0, 252.0], "sat_max": 524287.0}}
+        }"#;
+        Meta {
+            t_steps: 5,
+            thresholds: vec![0.15, 0.3, 0.45],
+            raw: Json::parse(src).unwrap(),
+        }
+    }
+
+    #[test]
+    fn quant_lookup() {
+        let m = sample();
+        let q = m.quant("mnist", 8).unwrap();
+        assert_eq!(q.bits, 8);
+        assert_eq!(q.acc_bits, 20);
+        assert_eq!(q.vt_q, vec![68, 265, 252]);
+        assert_eq!(q.sat_max, 524287);
+        assert_eq!(q.scales.len(), 3);
+    }
+
+    #[test]
+    fn missing_quant_err() {
+        assert!(sample().quant("mnist", 4).is_err());
+    }
+
+    #[test]
+    fn accuracy_lookup() {
+        let a = sample().accuracy("mnist");
+        assert!((a.ann - 0.97).abs() < 1e-9);
+        assert!((a.snn_q8 - 0.94).abs() < 1e-9);
+    }
+}

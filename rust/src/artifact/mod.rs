@@ -1,0 +1,26 @@
+//! Readers for the build-time artifacts produced by `make artifacts`
+//! (`python -m compile.aot`): tensor archives (weights, datasets),
+//! `meta.json` (geometry + quantization metadata) and the AOT HLO text
+//! files consumed by [`crate::runtime`].
+
+pub mod archive;
+pub mod meta;
+
+pub use archive::{Archive, Tensor};
+pub use meta::Meta;
+
+use std::path::{Path, PathBuf};
+
+/// Resolve the artifacts directory: `$SACSNN_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("SACSNN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True if the directory looks like a complete artifact set.
+pub fn is_complete(dir: &Path) -> bool {
+    ["meta.json", "weights_q8.bin", "mnist.bin", "model_q8.hlo.txt"]
+        .iter()
+        .all(|f| dir.join(f).exists())
+}

@@ -1,0 +1,42 @@
+//! Cycle models of the architectures the paper compares against
+//! (§III related work, Table V). All baselines share the functional core
+//! ([`crate::sim::dense_ref`]) — they compute the same network — and
+//! differ in their *cycle accounting*, which models each architecture's
+//! published dataflow:
+//!
+//! * [`dense`] — a frame-based sliding-window accelerator with a 3×3 MAC
+//!   array: cycles ∝ fmap area, sparsity-blind (the "standard CNN
+//!   accelerator" strawman the paper's Fig. 4 contrasts against).
+//! * [`systolic`] — SIES-like (Wang et al.): a parallel 2D systolic array
+//!   computes the membrane update U fast, but the update is merged into
+//!   the membrane potentials *sequentially* — the bottleneck the paper
+//!   calls out.
+//! * [`aer_array`] — ASIE-like (Kang et al.): a PE per neuron (fmap-sized
+//!   array), event-driven, but only the 9 PEs under the kernel do useful
+//!   work per event — massive under-utilization.
+
+pub mod aer_array;
+pub mod dense;
+pub mod systolic;
+
+use crate::sim::dense_ref::DenseResult;
+
+/// Common result of a baseline run: functional output + cycle estimate.
+#[derive(Clone, Debug)]
+pub struct BaselineResult {
+    pub result: DenseResult,
+    pub cycles: u64,
+    /// Average fraction of PEs doing useful work.
+    pub pe_utilization: f64,
+    /// Number of PEs the architecture instantiates.
+    pub n_pes: usize,
+}
+
+impl BaselineResult {
+    pub fn fps(&self, clock_hz: f64) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        clock_hz / self.cycles as f64
+    }
+}

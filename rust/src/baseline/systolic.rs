@@ -1,0 +1,83 @@
+//! SIES-like systolic-array baseline (Wang et al. [18], paper §III).
+//!
+//! SIES computes the membrane-potential *update* U(t) = X(t) ∗ K with a
+//! highly parallel 2D systolic array, then adds the increment to each
+//! neuron's membrane potential **sequentially** — "which appears to be a
+//! major bottleneck" (paper §III). The array is also sparsity-blind.
+//!
+//! Cycle model (per layer, per timestep):
+//! * systolic conv: `ho·wo·ci / array_cols + pipeline fill` per c_out
+//!   (the array streams one output column set per cycle),
+//! * sequential membrane merge: `ho·wo` cycles per c_out — the bottleneck,
+//! * threshold pass folded into the merge (1 cycle/neuron).
+
+use crate::baseline::BaselineResult;
+use crate::sim::dense_ref::DenseRef;
+use crate::snn::network::Network;
+
+/// Systolic array geometry (SIES uses a large 2D array; 16×16 here,
+/// scaled to the small benchmark network like the original).
+pub const ARRAY_ROWS: usize = 16;
+pub const ARRAY_COLS: usize = 16;
+
+pub fn run(net: &Network, img: &[u8]) -> BaselineResult {
+    let result = DenseRef::new(net).infer(img);
+    let t = net.t_steps as u64;
+    let mut cycles = 0u64;
+    let mut busy_pe_cycles = 0u64;
+    let n_pes = ARRAY_ROWS * ARRAY_COLS;
+    for layer in &net.conv {
+        let (ho, wo, co) = layer.out_shape;
+        let (_, _, ci) = layer.in_shape;
+        let npix = (ho * wo) as u64;
+        for _cout in 0..co as u64 {
+            // systolic conv of all input channels, ARRAY_COLS outputs/cycle
+            let conv = (npix * ci as u64).div_ceil(ARRAY_COLS as u64)
+                + (ARRAY_ROWS + ARRAY_COLS) as u64; // fill/drain
+            // each conv cycle keeps at most ARRAY_COLS MACs busy per row
+            busy_pe_cycles += npix * ci as u64 * 9 / ARRAY_ROWS as u64;
+            // sequential V_m merge + threshold: THE bottleneck
+            let merge = npix;
+            cycles += (conv + merge) * t;
+        }
+    }
+    // FC on the array: 360×10 MACs per timestep
+    cycles += ((net.fc_w.len() as u64) * t).div_ceil(n_pes as u64);
+    let pe_utilization =
+        (busy_pe_cycles as f64 / (cycles.max(1) as f64 * n_pes as f64)).min(1.0);
+    BaselineResult { result, cycles, pe_utilization, n_pes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::network::testutil::random_network;
+
+    #[test]
+    fn merge_dominates() {
+        // The sequential membrane merge should be a large cycle fraction —
+        // that is the architectural point the paper makes about SIES.
+        let net = random_network(23);
+        let r = run(&net, &vec![128u8; 784]);
+        let t = net.t_steps as u64;
+        let merge_only: u64 = net
+            .conv
+            .iter()
+            .map(|l| (l.out_shape.0 * l.out_shape.1 * l.out_shape.2) as u64 * t)
+            .sum();
+        assert!(r.cycles > merge_only, "total must include merge");
+        assert!(
+            merge_only as f64 / r.cycles as f64 > 0.25,
+            "merge {merge_only} should dominate {}", r.cycles
+        );
+    }
+
+    #[test]
+    fn sparsity_blind() {
+        let net = random_network(24);
+        assert_eq!(
+            run(&net, &vec![0u8; 784]).cycles,
+            run(&net, &vec![255u8; 784]).cycles
+        );
+    }
+}

@@ -1,0 +1,135 @@
+//! Lock-free service metrics (atomics only; no external deps).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Aggregated counters, updated by workers and the router.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    queue_wait_us_sum: AtomicU64,
+    service_us_sum: AtomicU64,
+    sim_cycles_sum: AtomicU64,
+    max_queue_wait_us: AtomicU64,
+    max_service_us: AtomicU64,
+}
+
+/// A point-in-time copy of the metrics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub mean_queue_wait_us: f64,
+    pub mean_service_us: f64,
+    pub mean_sim_cycles: f64,
+    pub max_queue_wait_us: u64,
+    pub max_service_us: u64,
+}
+
+impl Metrics {
+    pub fn submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn batch_formed(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn completed(&self, queue_wait_us: u64, service_us: u64, sim_cycles: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.queue_wait_us_sum.fetch_add(queue_wait_us, Ordering::Relaxed);
+        self.service_us_sum.fetch_add(service_us, Ordering::Relaxed);
+        self.sim_cycles_sum.fetch_add(sim_cycles, Ordering::Relaxed);
+        self.max_queue_wait_us.fetch_max(queue_wait_us, Ordering::Relaxed);
+        self.max_service_us.fetch_max(service_us, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let div = |a: u64, b: u64| if b == 0 { 0.0 } else { a as f64 / b as f64 };
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed,
+            batches,
+            mean_batch: div(self.batched_requests.load(Ordering::Relaxed), batches),
+            mean_queue_wait_us: div(self.queue_wait_us_sum.load(Ordering::Relaxed), completed),
+            mean_service_us: div(self.service_us_sum.load(Ordering::Relaxed), completed),
+            mean_sim_cycles: div(self.sim_cycles_sum.load(Ordering::Relaxed), completed),
+            max_queue_wait_us: self.max_queue_wait_us.load(Ordering::Relaxed),
+            max_service_us: self.max_service_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// JSON rendering (for the CLI's `--json` output).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("submitted".into(), Json::Num(self.submitted as f64));
+        m.insert("rejected".into(), Json::Num(self.rejected as f64));
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("batches".into(), Json::Num(self.batches as f64));
+        m.insert("mean_batch".into(), Json::Num(self.mean_batch));
+        m.insert("mean_queue_wait_us".into(), Json::Num(self.mean_queue_wait_us));
+        m.insert("mean_service_us".into(), Json::Num(self.mean_service_us));
+        m.insert("mean_sim_cycles".into(), Json::Num(self.mean_sim_cycles));
+        m.insert("max_queue_wait_us".into(), Json::Num(self.max_queue_wait_us as f64));
+        m.insert("max_service_us".into(), Json::Num(self.max_service_us as f64));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_aggregate() {
+        let m = Metrics::default();
+        m.submitted();
+        m.submitted();
+        m.rejected();
+        m.batch_formed(2);
+        m.completed(10, 100, 1000);
+        m.completed(30, 300, 3000);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 2);
+        assert!((s.mean_queue_wait_us - 20.0).abs() < 1e-9);
+        assert!((s.mean_service_us - 200.0).abs() < 1e-9);
+        assert!((s.mean_sim_cycles - 2000.0).abs() < 1e-9);
+        assert_eq!(s.max_service_us, 300);
+        assert!((s.mean_batch - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_no_nan() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.mean_batch, 0.0);
+        assert_eq!(s.mean_service_us, 0.0);
+    }
+
+    #[test]
+    fn json_rendering() {
+        let m = Metrics::default();
+        m.completed(1, 2, 3);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get(&["completed"]).unwrap().as_usize(), Some(1));
+    }
+}

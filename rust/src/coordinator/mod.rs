@@ -1,0 +1,302 @@
+//! Inference coordinator: the serving layer around the simulated
+//! accelerator (request router, dynamic batcher, worker pool,
+//! backpressure, metrics).
+//!
+//! The paper's prototype is a single-tenant FPGA; a deployable system
+//! needs the surrounding service. Rust owns the event loop and process
+//! topology (threads — the offline vendor set has no tokio; the
+//! coordinator is synchronous but concurrent):
+//!
+//! ```text
+//!   clients ──▶ bounded queue (backpressure) ──▶ N workers
+//!                                                  │  each owns one
+//!                                                  ▼  simulated ×P accel
+//!                                            per-request reply channel
+//! ```
+//!
+//! Workers drain up to `batch_size` requests at once (dynamic batching:
+//! a batch forms from whatever is queued, never waiting for a full
+//! batch), encode inputs off the accelerator path, then run the
+//! accelerator per frame — mirroring how a host CPU feeds the FPGA.
+
+pub mod metrics;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+
+use crate::sim::{AccelConfig, Accelerator};
+use crate::snn::network::Network;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// An inference request: one 28×28 u8 frame.
+pub struct Request {
+    pub id: u64,
+    pub img: Vec<u8>,
+    pub reply: Sender<Response>,
+    enqueued: Instant,
+}
+
+/// The reply sent to the request's channel.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub pred: usize,
+    pub logits: [i64; 10],
+    /// Simulated accelerator cycles for this frame.
+    pub sim_cycles: u64,
+    /// Wall-clock time spent queued before a worker picked it up.
+    pub queue_wait_us: u64,
+    /// Wall-clock service time (encode + simulate).
+    pub service_us: u64,
+    /// Size of the dynamic batch this request was served in.
+    pub batch_size: usize,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Worker threads (each owns one simulated accelerator).
+    pub workers: usize,
+    /// ×P parallelization of each worker's accelerator.
+    pub lanes: usize,
+    /// Bounded queue depth — the backpressure point.
+    pub queue_depth: usize,
+    /// Max requests a worker drains per batch.
+    pub batch_size: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { workers: 4, lanes: 8, queue_depth: 256, batch_size: 16 }
+    }
+}
+
+/// Error returned when the bounded queue is full (backpressure) or the
+/// server is shutting down.
+#[derive(Debug, thiserror::Error)]
+pub enum SubmitError {
+    #[error("queue full (backpressure)")]
+    Busy,
+    #[error("server is shut down")]
+    Closed,
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    tx: SyncSender<Request>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    next_id: std::sync::atomic::AtomicU64,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    /// Start `cfg.workers` threads serving `net`.
+    pub fn start(net: Arc<Network>, cfg: ServerConfig) -> Self {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for worker_id in 0..cfg.workers {
+            let rx = Arc::clone(&rx);
+            let net = Arc::clone(&net);
+            let metrics = Arc::clone(&metrics);
+            let shutdown = Arc::clone(&shutdown);
+            let accel_cfg = AccelConfig { lanes: cfg.lanes, ..Default::default() };
+            let batch_size = cfg.batch_size;
+            workers.push(std::thread::spawn(move || {
+                worker_loop(worker_id, net, accel_cfg, rx, metrics, shutdown, batch_size);
+            }));
+        }
+        Coordinator {
+            tx,
+            workers,
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(0),
+            shutdown,
+        }
+    }
+
+    /// Submit without blocking; `Err(Busy)` signals backpressure.
+    pub fn try_submit(&self, img: Vec<u8>) -> Result<Receiver<Response>, SubmitError> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, img, reply, enqueued: Instant::now() };
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.metrics.submitted();
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected();
+                Err(SubmitError::Busy)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Submit, blocking while the queue is full.
+    pub fn submit(&self, img: Vec<u8>) -> Result<Receiver<Response>, SubmitError> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, img, reply, enqueued: Instant::now() };
+        self.tx.send(req).map_err(|_| SubmitError::Closed)?;
+        self.metrics.submitted();
+        Ok(rx)
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        drop(self.tx);
+        for h in self.workers {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    _worker_id: usize,
+    net: Arc<Network>,
+    accel_cfg: AccelConfig,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    batch_size: usize,
+) {
+    let mut accel = Accelerator::new(net, accel_cfg);
+    loop {
+        // Dynamic batching: block for one request, then opportunistically
+        // drain whatever else is queued (up to batch_size).
+        let mut batch = Vec::with_capacity(batch_size);
+        {
+            let guard = rx.lock().expect("rx mutex poisoned");
+            match guard.recv() {
+                Ok(req) => batch.push(req),
+                Err(_) => return, // channel closed: shut down
+            }
+            while batch.len() < batch_size {
+                match guard.try_recv() {
+                    Ok(req) => batch.push(req),
+                    Err(_) => break,
+                }
+            }
+        } // release the lock before the (long) simulation
+
+        let n = batch.len();
+        metrics.batch_formed(n);
+        for req in batch {
+            let picked = Instant::now();
+            let queue_wait_us = picked.duration_since(req.enqueued).as_micros() as u64;
+            // encode off the accelerator's critical path (host-side work)
+            let queues = accel.encode_input(&req.img);
+            let result = accel.infer_from_queues(queues);
+            let service_us = picked.elapsed().as_micros() as u64;
+            metrics.completed(queue_wait_us, service_us, result.stats.total_cycles);
+            let _ = req.reply.send(Response {
+                id: req.id,
+                pred: result.pred,
+                logits: result.logits,
+                sim_cycles: result.stats.total_cycles,
+                queue_wait_us,
+                service_us,
+                batch_size: n,
+            });
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            // keep draining until the channel closes; recv() above exits.
+            continue;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::network::testutil::random_network;
+    use crate::util::prng::Pcg;
+
+    fn img(seed: u64) -> Vec<u8> {
+        let mut rng = Pcg::new(seed);
+        (0..784).map(|_| rng.below(256) as u8).collect()
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let net = Arc::new(random_network(31));
+        let coord = Coordinator::start(
+            Arc::clone(&net),
+            ServerConfig { workers: 2, lanes: 4, queue_depth: 16, batch_size: 4 },
+        );
+        let replies: Vec<_> = (0..10)
+            .map(|i| coord.submit(img(i)).unwrap())
+            .collect();
+        for rx in replies {
+            let resp = rx.recv().unwrap();
+            assert!(resp.pred < 10);
+            assert!(resp.sim_cycles > 0);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.completed, 10);
+        assert_eq!(snap.submitted, 10);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn results_match_direct_inference() {
+        let net = Arc::new(random_network(32));
+        let coord = Coordinator::start(
+            Arc::clone(&net),
+            ServerConfig { workers: 3, lanes: 1, queue_depth: 8, batch_size: 2 },
+        );
+        let image = img(99);
+        let mut direct = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want = direct.infer(&image);
+        let got = coord.submit(image).unwrap().recv().unwrap();
+        assert_eq!(got.pred, want.pred);
+        assert_eq!(got.logits, want.logits);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let net = Arc::new(random_network(33));
+        // one slow worker, tiny queue
+        let coord = Coordinator::start(
+            Arc::clone(&net),
+            ServerConfig { workers: 1, lanes: 1, queue_depth: 2, batch_size: 1 },
+        );
+        let mut busy_seen = false;
+        let mut pending = Vec::new();
+        for i in 0..64 {
+            match coord.try_submit(img(i)) {
+                Ok(rx) => pending.push(rx),
+                Err(SubmitError::Busy) => {
+                    busy_seen = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected: {e}"),
+            }
+        }
+        assert!(busy_seen, "bounded queue must reject under load");
+        for rx in pending {
+            let _ = rx.recv();
+        }
+        assert!(coord.metrics.snapshot().rejected >= 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_cleanly() {
+        let net = Arc::new(random_network(34));
+        let coord = Coordinator::start(Arc::clone(&net), ServerConfig::default());
+        let rx = coord.submit(img(1)).unwrap();
+        coord.shutdown();
+        // the in-flight request was served before shutdown completed
+        assert!(rx.recv().is_ok());
+    }
+}

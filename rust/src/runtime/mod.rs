@@ -1,0 +1,124 @@
+//! PJRT runtime: load and execute the AOT-lowered JAX/Pallas artifacts.
+//!
+//! Python lowers the L2 model (which calls the L1 Pallas kernels) to HLO
+//! **text** at build time (`python/compile/aot.py`); this module loads the
+//! text with `HloModuleProto::from_text_file`, compiles it ONCE on the
+//! PJRT CPU client, and executes it with concrete inputs. Text is the
+//! interchange format because jax ≥ 0.5 emits serialized protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects (see
+//! /opt/xla-example/README.md).
+//!
+//! Used by the golden-model cross-check (simulator vs JAX, spike-exact)
+//! and available to the coordinator as an alternative functional backend.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it (one compiled executable
+    /// per model variant; compile once, execute many).
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// An f32 input tensor (data + dims).
+pub struct Input<'a> {
+    pub data: &'a [f32],
+    pub dims: &'a [i64],
+}
+
+impl Executable {
+    /// Execute with f32 inputs; returns the flattened f32 outputs of the
+    /// result tuple (jax lowers with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| {
+                let lit = xla::Literal::vec1(inp.data);
+                lit.reshape(inp.dims).context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing PJRT computation")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = result.to_tuple().context("decomposing result tuple")?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::artifacts_dir;
+
+    fn have_artifacts() -> bool {
+        crate::artifact::is_complete(&artifacts_dir())
+    }
+
+    #[test]
+    fn load_and_run_layer_step() {
+        // artifacts are produced by `make artifacts`; skip quietly if the
+        // build hasn't run (CI stages python first).
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo(&artifacts_dir().join("layer_step.hlo.txt")).unwrap();
+        // x (28,28,1), wm (9,32), b (32), vm (26,26,32), fired (26,26,32)
+        let x = vec![0f32; 28 * 28];
+        let wm = vec![1f32; 9 * 32];
+        let b = vec![0f32; 32];
+        let vm = vec![0f32; 26 * 26 * 32];
+        let fired = vec![0f32; 26 * 26 * 32];
+        let out = exe
+            .run_f32(&[
+                Input { data: &x, dims: &[28, 28, 1] },
+                Input { data: &wm, dims: &[9, 32] },
+                Input { data: &b, dims: &[32] },
+                Input { data: &vm, dims: &[26, 26, 32] },
+                Input { data: &fired, dims: &[26, 26, 32] },
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 3, "spikes, vm, fired");
+        // zero input: no spikes, vm unchanged (bias 0)
+        assert!(out[0].iter().all(|&v| v == 0.0));
+        assert!(out[1].iter().all(|&v| v == 0.0));
+    }
+}

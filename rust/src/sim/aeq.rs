@@ -1,0 +1,198 @@
+//! Address Event Queue (paper §VI-A, Fig. 7).
+//!
+//! Spikes of one channel fmap are stored compressed as address events in
+//! 9 interlaced column queues. The write side has 9 independent ports
+//! (the thresholding unit's 9 comparators each write their own column);
+//! the read side is sequential: queues are drained column 0 → 8, one
+//! entry per clock cycle. Every entry carries a `valid` and an
+//! `end-of-queue` bit in hardware; here an **empty** column costs exactly
+//! one wasted read cycle (one invalid entry is read and the
+//! column-select counter increments), and the EoQ bit of non-empty
+//! columns overlaps with the last valid read — both modelled by
+//! [`Aeq::read_slots`].
+
+use crate::sim::interlace::{self, COLUMNS};
+use crate::snn::encode::Event;
+
+/// A stored address event: the cell address within its column queue.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct CellEvent {
+    pub i: u16,
+    pub j: u16,
+}
+
+/// One read-port cycle: a valid event (with its full fmap position) or a
+/// wasted cycle from reading an empty column's invalid entry.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum ReadSlot {
+    /// Valid event: fmap position (x, y) and source column s.
+    Event { x: u16, y: u16, s: u8 },
+    /// Empty-column bubble (valid bit clear): one wasted cycle.
+    Bubble,
+}
+
+/// The per-channel address event queue.
+#[derive(Clone, Debug, Default)]
+pub struct Aeq {
+    pub cols: [Vec<CellEvent>; COLUMNS],
+}
+
+impl Aeq {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write port `s` (one of 9 parallel ports).
+    #[inline]
+    pub fn push(&mut self, s: usize, i: u16, j: u16) {
+        self.cols[s].push(CellEvent { i, j });
+    }
+
+    /// Build from fmap-coordinate events (e.g. the encoded input frame).
+    pub fn from_events(queues: &[Vec<Event>; COLUMNS]) -> Self {
+        let mut aeq = Aeq::new();
+        for (s, q) in queues.iter().enumerate() {
+            for ev in q {
+                let (i, j) = interlace::cell(ev.x as usize, ev.y as usize);
+                aeq.push(s, i as u16, j as u16);
+            }
+        }
+        aeq
+    }
+
+    /// Total number of valid address events.
+    pub fn len(&self) -> usize {
+        self.cols.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cols.iter().all(Vec::is_empty)
+    }
+
+    /// Number of read cycles the queue costs: one per event plus one
+    /// wasted cycle per empty column.
+    pub fn read_cycles(&self) -> usize {
+        self.len() + self.cols.iter().filter(|c| c.is_empty()).count()
+    }
+
+    /// The exact sequence the read logic produces, cycle by cycle.
+    pub fn read_slots(&self) -> impl Iterator<Item = ReadSlot> + '_ {
+        self.cols.iter().enumerate().flat_map(|(s, col)| {
+            let bubble = if col.is_empty() { Some(ReadSlot::Bubble) } else { None };
+            let events = col.iter().map(move |ev| {
+                let (x, y) = interlace::position(ev.i as usize, ev.j as usize, s);
+                ReadSlot::Event { x: x as u16, y: y as u16, s: s as u8 }
+            });
+            bubble.into_iter().chain(events)
+        })
+    }
+
+    /// Decompress to a dense binary fmap (tests / debugging).
+    pub fn to_frame(&self, h: usize, w: usize) -> Vec<bool> {
+        let mut out = vec![false; h * w];
+        for slot in self.read_slots() {
+            if let ReadSlot::Event { x, y, .. } = slot {
+                out[x as usize * w + y as usize] = true;
+            }
+        }
+        out
+    }
+
+    /// Maximum queue depth over the columns — sizes the per-column RAM in
+    /// the cost model.
+    pub fn max_depth(&self) -> usize {
+        self.cols.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::encode::frames_to_events;
+    use crate::util::prng::Pcg;
+    use crate::util::prop;
+
+    fn random_frame(rng: &mut Pcg, h: usize, w: usize, p: f64) -> Vec<bool> {
+        (0..h * w).map(|_| rng.chance(p)).collect()
+    }
+
+    #[test]
+    fn roundtrip_frame_events_frame() {
+        prop::check("aeq frame roundtrip", 50, |rng| {
+            let h = 4 + rng.below(24);
+            let w = 4 + rng.below(24);
+            let frame = random_frame(rng, h, w, 0.15);
+            let aeq = Aeq::from_events(&frames_to_events(&frame, h, w));
+            if aeq.to_frame(h, w) == frame { Ok(()) } else { Err("mismatch".into()) }
+        });
+    }
+
+    #[test]
+    fn read_cycles_counts_bubbles() {
+        let mut aeq = Aeq::new();
+        // all columns empty: 9 wasted cycles
+        assert_eq!(aeq.read_cycles(), 9);
+        aeq.push(0, 0, 0);
+        aeq.push(0, 1, 1);
+        // col 0: 2 events; cols 1..8 empty: 8 bubbles
+        assert_eq!(aeq.read_cycles(), 10);
+        assert_eq!(aeq.len(), 2);
+    }
+
+    #[test]
+    fn read_slots_column_order() {
+        let mut aeq = Aeq::new();
+        aeq.push(3, 0, 0); // position (1*3+?,..): s=3 → (x%3,y%3)=(1,0)
+        aeq.push(0, 1, 1);
+        let slots: Vec<ReadSlot> = aeq.read_slots().collect();
+        // col 0 first (its event), then bubbles for 1, 2, then col 3 event,
+        // then bubbles for 4..8
+        assert_eq!(slots.len(), 2 + 7);
+        assert!(matches!(slots[0], ReadSlot::Event { s: 0, .. }));
+        assert_eq!(slots[1], ReadSlot::Bubble);
+        assert_eq!(slots[2], ReadSlot::Bubble);
+        // col 3 at cell (0,0): fmap position (0*3 + 3/3, 0*3 + 3%3) = (1, 0)
+        assert!(matches!(slots[3], ReadSlot::Event { s: 3, x: 1, y: 0 }));
+    }
+
+    #[test]
+    fn slots_match_read_cycles() {
+        prop::check("slots == read_cycles", 50, |rng| {
+            let h = 4 + rng.below(20);
+            let w = 4 + rng.below(20);
+            let frame = random_frame(rng, h, w, 0.3);
+            let aeq = Aeq::from_events(&frames_to_events(&frame, h, w));
+            let n = aeq.read_slots().count();
+            if n == aeq.read_cycles() { Ok(()) } else { Err(format!("{n}")) }
+        });
+    }
+
+    #[test]
+    fn consecutive_same_column_events_disjoint_windows() {
+        // The property the conv unit's hazard analysis relies on.
+        prop::check("aeq same-col disjoint", 30, |rng| {
+            let h = 6 + rng.below(20);
+            let w = 6 + rng.below(20);
+            let frame = random_frame(rng, h, w, 0.4);
+            let aeq = Aeq::from_events(&frames_to_events(&frame, h, w));
+            let mut prev: Option<(u16, u16, u8)> = None;
+            for slot in aeq.read_slots() {
+                if let ReadSlot::Event { x, y, s } = slot {
+                    if let Some((pux, puy, ps)) = prev {
+                        if ps == s {
+                            let dx = (x as i32 - pux as i32).abs();
+                            let dy = (y as i32 - puy as i32).abs();
+                            if dx < 3 && dy < 3 {
+                                return Err(format!(
+                                    "consecutive same-col events overlap: ({pux},{puy}) ({x},{y})"
+                                ));
+                            }
+                        }
+                    }
+                    prev = Some((x, y, s));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,225 @@
+//! Frame-based integer reference of the full CSNN — the sliding-window
+//! implementation the event-driven accelerator must match **exactly**
+//! (same quantized integer domain, same saturation arithmetic, same
+//! m-TTFS semantics). Used by the test-suite to validate the simulator
+//! end-to-end and by the baseline cycle models as their functional core.
+
+use crate::snn::encode::encode_mttfs;
+use crate::snn::network::Network;
+use crate::snn::sat::Sat;
+
+/// Result of a dense reference inference.
+#[derive(Clone, Debug)]
+pub struct DenseResult {
+    pub logits: [i64; 10],
+    pub pred: usize,
+    /// Spikes per (timestep, layer) — layer 2 counted after pooling.
+    pub spike_counts: Vec<[u64; 3]>,
+    /// Total input events per layer (for sparsity bookkeeping).
+    pub layer_input_events: [u64; 3],
+}
+
+/// Dense per-layer state.
+struct LayerState {
+    vm: Vec<i32>,    // [cout][ho*wo] flattened
+    fired: Vec<bool>,
+}
+
+/// Frame-based reference engine.
+pub struct DenseRef<'a> {
+    net: &'a Network,
+}
+
+impl<'a> DenseRef<'a> {
+    pub fn new(net: &'a Network) -> Self {
+        DenseRef { net }
+    }
+
+    /// VALID 3×3 cross-correlation of one (multi-channel) binary input
+    /// into one output channel, accumulated into `vm` with saturation.
+    fn conv_accumulate(
+        &self,
+        input: &[Vec<bool>], // [cin][h*w]
+        _h: usize,
+        w: usize,
+        layer_idx: usize,
+        cout: usize,
+        vm: &mut [i32],
+        sat: Sat,
+    ) {
+        let layer = &self.net.conv[layer_idx];
+        let (ho, wo, _) = layer.out_shape;
+        for (cin, frame) in input.iter().enumerate() {
+            let kernel = layer.kernel(cout, cin);
+            for ox in 0..ho {
+                for oy in 0..wo {
+                    let mut acc = vm[ox * wo + oy];
+                    for ky in 0..3 {
+                        for kx in 0..3 {
+                            if frame[(ox + ky) * w + (oy + kx)] {
+                                acc = sat.add(acc, kernel[ky * 3 + kx]);
+                            }
+                        }
+                    }
+                    vm[ox * wo + oy] = acc;
+                }
+            }
+        }
+    }
+
+    /// Full inference on a 28×28 u8 image.
+    pub fn infer(&self, img: &[u8]) -> DenseResult {
+        let net = self.net;
+        let sat = net.sat;
+        let frames = encode_mttfs(img, 28, 28, &net.thresholds);
+        let t_steps = net.t_steps;
+
+        let mut states: Vec<LayerState> = net
+            .conv
+            .iter()
+            .map(|l| {
+                let (ho, wo, co) = l.out_shape;
+                LayerState { vm: vec![0; ho * wo * co], fired: vec![false; ho * wo * co] }
+            })
+            .collect();
+        let mut acc = [0i64; 10];
+        let mut spike_counts = Vec::with_capacity(t_steps);
+        let mut layer_input_events = [0u64; 3];
+
+        for frame in frames.iter().take(t_steps) {
+            let mut input: Vec<Vec<bool>> = vec![frame.clone()];
+            let (mut h, mut w) = (28usize, 28usize);
+            let mut counts = [0u64; 3];
+
+            for (li, layer) in net.conv.iter().enumerate() {
+                let (ho, wo, co) = layer.out_shape;
+                layer_input_events[li] +=
+                    input.iter().flatten().filter(|&&b| b).count() as u64;
+                let npix = ho * wo;
+                let mut spikes: Vec<Vec<bool>> = Vec::with_capacity(co);
+                for cout in 0..co {
+                    let st = &mut states[li];
+                    let vm = &mut st.vm[cout * npix..(cout + 1) * npix];
+                    self.conv_accumulate(&input, h, w, li, cout, vm, sat);
+                    let fired = &mut st.fired[cout * npix..(cout + 1) * npix];
+                    let mut ch_spikes = vec![false; npix];
+                    for p in 0..npix {
+                        vm[p] = sat.add(vm[p], layer.b[cout]);
+                        if vm[p] > layer.vt {
+                            fired[p] = true;
+                        }
+                        ch_spikes[p] = fired[p];
+                    }
+                    spikes.push(ch_spikes);
+                }
+                // optional 3×3/3 OR max-pool
+                let (qh, qw, _) = layer.queue_shape();
+                if layer.pool {
+                    spikes = spikes
+                        .iter()
+                        .map(|ch| {
+                            let mut pooled = vec![false; qh * qw];
+                            for px in 0..qh {
+                                for py in 0..qw {
+                                    'win: for dx in 0..3 {
+                                        for dy in 0..3 {
+                                            if ch[(px * 3 + dx) * wo + (py * 3 + dy)] {
+                                                pooled[px * qw + py] = true;
+                                                break 'win;
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                            pooled
+                        })
+                        .collect();
+                }
+                counts[li] = spikes
+                    .iter()
+                    .flatten()
+                    .filter(|&&b| b)
+                    .count() as u64;
+                input = spikes;
+                h = qh;
+                w = qw;
+            }
+
+            // FC classification unit: bias once per timestep + weight rows
+            // for each spike (event-driven adds in hardware).
+            for (k, acc_k) in acc.iter_mut().enumerate() {
+                *acc_k += net.fc_b[k] as i64;
+            }
+            let (qh, qw, qc) = net.conv.last().unwrap().queue_shape();
+            for (c, ch) in input.iter().enumerate() {
+                for x in 0..qh {
+                    for y in 0..qw {
+                        if ch[x * qw + y] {
+                            let flat = net.fc_index(x, y, c);
+                            for k in 0..10 {
+                                acc[k] += net.fc_w[flat * 10 + k] as i64;
+                            }
+                        }
+                    }
+                }
+            }
+            let _ = qc;
+            spike_counts.push(counts);
+        }
+
+        let pred = acc
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| **v)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        DenseResult { logits: acc, pred, spike_counts, layer_input_events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::network::testutil::random_network;
+    use crate::util::prng::Pcg;
+
+    #[test]
+    fn runs_and_is_deterministic() {
+        let net = random_network(7);
+        let mut rng = Pcg::new(1);
+        let img: Vec<u8> = (0..784).map(|_| rng.below(256) as u8).collect();
+        let r1 = DenseRef::new(&net).infer(&img);
+        let r2 = DenseRef::new(&net).infer(&img);
+        assert_eq!(r1.logits, r2.logits);
+        assert_eq!(r1.pred, r2.pred);
+        assert_eq!(r1.spike_counts, r2.spike_counts);
+        assert!(r1.pred < 10);
+    }
+
+    #[test]
+    fn mttfs_spike_counts_monotone_per_layer() {
+        // fired bits are sticky, so per-layer spike counts are
+        // non-decreasing over timesteps.
+        let net = random_network(8);
+        let mut rng = Pcg::new(2);
+        let img: Vec<u8> = (0..784).map(|_| rng.below(256) as u8).collect();
+        let r = DenseRef::new(&net).infer(&img);
+        for l in 0..3 {
+            for t in 1..r.spike_counts.len() {
+                assert!(
+                    r.spike_counts[t][l] >= r.spike_counts[t - 1][l],
+                    "layer {l} at t={t}: {:?}",
+                    r.spike_counts
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blank_image_zero_spikes_at_input() {
+        let net = random_network(9);
+        let img = vec![0u8; 784];
+        let r = DenseRef::new(&net).infer(&img);
+        assert_eq!(r.layer_input_events[0], 0, "no input spikes for blank");
+    }
+}

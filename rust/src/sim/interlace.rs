@@ -1,0 +1,182 @@
+//! Memory interlacing (paper §VI, Fig. 6): distribute a 2D fmap over 9
+//! column RAMs so that **any** 3×3 window touches each column exactly
+//! once, enabling 9 parallel read/write ports out of single dual-port
+//! RAMs, each hard-wired to its PE.
+//!
+//! A neuron at fmap position `(x, y)` lives in column
+//! `s = 3·(x mod 3) + (y mod 3)` at cell address `(i, j) = (x/3, y/3)`.
+
+use crate::util::ceil_div;
+
+/// Number of interlace columns (= 3×3 kernel size = number of PEs).
+pub const COLUMNS: usize = 9;
+
+/// Column index for fmap position (x, y).
+#[inline(always)]
+pub fn column(x: usize, y: usize) -> usize {
+    (x % 3) * 3 + (y % 3)
+}
+
+/// Cell address (i, j) for fmap position (x, y).
+#[inline(always)]
+pub fn cell(x: usize, y: usize) -> (usize, usize) {
+    (x / 3, y / 3)
+}
+
+/// Inverse: fmap position of column `s` at cell `(i, j)`.
+#[inline(always)]
+pub fn position(i: usize, j: usize, s: usize) -> (usize, usize) {
+    (i * 3 + s / 3, j * 3 + s % 3)
+}
+
+/// Cell-grid dimensions for an H×W fmap.
+#[inline]
+pub fn cell_grid(h: usize, w: usize) -> (usize, usize) {
+    (ceil_div(h, 3), ceil_div(w, 3))
+}
+
+/// Window→column address calculation (paper Eqn. 8/9 generalized).
+///
+/// An input event at `p = (px, py)` updates the VALID-conv output window
+/// `[px−2 … px] × [py−2 … py]`. For each target column `s_mem`, there is
+/// exactly ONE window element in that column; this returns, per column:
+/// `(ox, oy, kidx)` where `(ox, oy)` is the affected output position
+/// (possibly out of bounds, checked by the caller) and `kidx = ky*3 + kx`
+/// is the weight index of the **already 180°-rotation-resolved** kernel
+/// element to apply (`w[p − o]`).
+///
+/// The hardware computes this with 4 adders + 9 comparators (paper
+/// Fig. 9); here it is the closed form `m = (r − p + 2) mod 3`.
+#[inline]
+pub fn window_targets(px: usize, py: usize) -> [(i64, i64, usize); COLUMNS] {
+    let mut out = [(0i64, 0i64, 0usize); COLUMNS];
+    let pxm = px % 3;
+    let pym = py % 3;
+    for rx in 0..3 {
+        // offset m such that (px - 2 + m) % 3 == rx
+        let mx = (rx + 3 + 2 - pxm) % 3;
+        let ox = px as i64 - 2 + mx as i64;
+        let kx = 2 - mx; // weight row: w[px - ox]
+        for ry in 0..3 {
+            let my = (ry + 3 + 2 - pym) % 3;
+            let oy = py as i64 - 2 + my as i64;
+            let ky = 2 - my;
+            out[rx * 3 + ry] = (ox, oy, kx * 3 + ky);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn column_cell_roundtrip() {
+        for x in 0..30 {
+            for y in 0..30 {
+                let s = column(x, y);
+                let (i, j) = cell(x, y);
+                assert_eq!(position(i, j, s), (x, y));
+                assert!(s < COLUMNS);
+            }
+        }
+    }
+
+    #[test]
+    fn any_window_covers_all_columns() {
+        // The defining property of the interlacing scheme (paper Fig. 6):
+        // a 3×3 window placed anywhere touches all 9 columns exactly once.
+        for wx in 0..12 {
+            for wy in 0..12 {
+                let mut seen = [false; COLUMNS];
+                for dx in 0..3 {
+                    for dy in 0..3 {
+                        let s = column(wx + dx, wy + dy);
+                        assert!(!seen[s], "column {s} hit twice in window ({wx},{wy})");
+                        seen[s] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&b| b));
+            }
+        }
+    }
+
+    #[test]
+    fn window_targets_match_bruteforce() {
+        // For every event position, the closed-form address calculation
+        // must agree with brute-force enumeration of the 3×3 window.
+        prop::check("window targets vs brute force", 200, |rng| {
+            let px = rng.below(30);
+            let py = rng.below(30);
+            let targets = window_targets(px, py);
+            // brute force: for each window element o = p - 2 + m
+            for mx in 0..3i64 {
+                for my in 0..3i64 {
+                    let ox = px as i64 - 2 + mx;
+                    let oy = py as i64 - 2 + my;
+                    // column of (ox, oy) in output space (may be negative:
+                    // normalize mod 3)
+                    let rx = ((ox % 3) + 3) % 3;
+                    let ry = ((oy % 3) + 3) % 3;
+                    let s = (rx * 3 + ry) as usize;
+                    let (tx, ty, kidx) = targets[s];
+                    if (tx, ty) != (ox, oy) {
+                        return Err(format!(
+                            "event ({px},{py}) col {s}: got ({tx},{ty}) want ({ox},{oy})"
+                        ));
+                    }
+                    let want_k = ((px as i64 - ox) * 3 + (py as i64 - oy)) as usize;
+                    if kidx != want_k {
+                        return Err(format!(
+                            "event ({px},{py}) col {s}: kidx {kidx} want {want_k}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kernel_permutation_is_bijective() {
+        // Per event, the 9 columns receive the 9 distinct kernel indices —
+        // the paper's "9 different permutations of the kernel weights".
+        prop::check("kernel permutation bijective", 100, |rng| {
+            let px = rng.below(28);
+            let py = rng.below(28);
+            let mut seen = [false; 9];
+            for (_, _, kidx) in window_targets(px, py) {
+                if seen[kidx] {
+                    return Err(format!("kidx {kidx} repeated for ({px},{py})"));
+                }
+                seen[kidx] = true;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn only_nine_distinct_permutations() {
+        // The permutation depends only on (px mod 3, py mod 3) — the
+        // hardware precomputes all 9 and muxes (paper §VI-B).
+        let mut perms = std::collections::BTreeSet::new();
+        for px in 0..30 {
+            for py in 0..30 {
+                let perm: Vec<usize> =
+                    window_targets(px, py).iter().map(|t| t.2).collect();
+                perms.insert(perm);
+            }
+        }
+        assert_eq!(perms.len(), 9);
+    }
+
+    #[test]
+    fn cell_grid_dims() {
+        assert_eq!(cell_grid(26, 26), (9, 9));
+        assert_eq!(cell_grid(24, 24), (8, 8));
+        assert_eq!(cell_grid(6, 6), (2, 2));
+        assert_eq!(cell_grid(28, 28), (10, 10));
+    }
+}

@@ -1,0 +1,393 @@
+//! MemPot: the interlaced membrane-potential memory (paper §VI, Fig. 6).
+//!
+//! Nine column RAMs, each hard-wired to one PE of the convolution /
+//! thresholding unit. Each entry stores the membrane potential together
+//! with the m-TTFS spike-indicator bit (paper §VI-C "Thresholding").
+//! Each column is modelled as a dual-port RAM: one read and one write
+//! per clock cycle — the constraint that motivates interlacing in the
+//! first place.
+//!
+//! Perf note (§Perf, EXPERIMENTS.md): membrane potentials and indicator
+//! bits live in SEPARATE flat arrays per column. The convolution unit
+//! only ever touches `vm` (indicator bits are thresholding-unit state),
+//! so its S4 writeback is a single store instead of a read-modify-write
+//! of a packed entry — this is the hardware's separate bit-plane, and it
+//! doubled host simulation throughput.
+
+use crate::sim::interlace::{self, COLUMNS};
+
+/// One neuron entry: membrane potential + spike indicator bit
+/// (convenience view used by tests and the thresholding unit).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct Entry {
+    pub vm: i32,
+    pub fired: bool,
+}
+
+/// Interlaced membrane memory for ONE channel fmap (the paper multiplexes
+/// this memory across channels — Algorithm 1).
+#[derive(Clone, Debug)]
+pub struct MemPot {
+    /// fmap height/width this memory currently represents.
+    pub h: usize,
+    pub w: usize,
+    /// cell grid dims.
+    pub cells_i: usize,
+    pub cells_j: usize,
+    /// Per-column RAM capacity (stride of the flat storage).
+    col_cap: usize,
+    /// 9 column RAMs: membrane potentials, flattened to one allocation
+    /// (`s * col_cap + i * cells_j + j`) — single base pointer on the
+    /// simulator hot path (§Perf).
+    vm: Vec<i32>,
+    /// 9 column RAMs: m-TTFS spike-indicator bit planes (same layout).
+    fired: Vec<bool>,
+}
+
+impl MemPot {
+    /// Allocate for the largest fmap it will ever hold; `reset_for` then
+    /// reshapes without reallocating (the hardware's fixed RAM).
+    pub fn new(max_h: usize, max_w: usize) -> Self {
+        let (ci, cj) = interlace::cell_grid(max_h, max_w);
+        MemPot {
+            h: max_h,
+            w: max_w,
+            cells_i: ci,
+            cells_j: cj,
+            col_cap: ci * cj,
+            vm: vec![0; COLUMNS * ci * cj],
+            fired: vec![false; COLUMNS * ci * cj],
+        }
+    }
+
+    /// Zero all entries and set the geometry for a new channel / layer.
+    /// Panics if the requested fmap exceeds the allocated RAM.
+    pub fn reset_for(&mut self, h: usize, w: usize) {
+        let (ci, cj) = interlace::cell_grid(h, w);
+        let cap = self.col_cap;
+        assert!(
+            ci * cj <= cap,
+            "fmap {h}x{w} needs {} cells/column, RAM has {cap}",
+            ci * cj
+        );
+        self.h = h;
+        self.w = w;
+        self.cells_i = ci;
+        self.cells_j = cj;
+        // zero whole columns (cap-strided) — cheap relative to a pass
+        self.vm.fill(0);
+        self.fired.fill(false);
+    }
+
+    /// Flat column address of cell (i, j).
+    #[inline(always)]
+    pub fn flat(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.cells_i && j < self.cells_j);
+        i * self.cells_j + j
+    }
+
+    /// Membrane read, column `s`, flat address (hot path: conv unit S2).
+    #[inline(always)]
+    pub fn read_vm(&self, s: usize, flat: usize) -> i32 {
+        debug_assert!(s < COLUMNS && flat < self.col_cap);
+        unsafe { *self.vm.get_unchecked(s * self.col_cap + flat) }
+    }
+
+    /// Membrane write, column `s`, flat address (hot path: conv unit S4).
+    #[inline(always)]
+    pub fn write_vm(&mut self, s: usize, flat: usize, v: i32) {
+        debug_assert!(s < COLUMNS && flat < self.col_cap);
+        unsafe {
+            *self.vm.get_unchecked_mut(s * self.col_cap + flat) = v;
+        }
+    }
+
+    #[inline(always)]
+    pub fn read_fired(&self, s: usize, flat: usize) -> bool {
+        self.fired[s * self.col_cap + flat]
+    }
+
+    #[inline(always)]
+    pub fn write_fired(&mut self, s: usize, flat: usize, v: bool) {
+        self.fired[s * self.col_cap + flat] = v;
+    }
+
+    /// Read column `s` at cell `(i, j)` as a packed entry.
+    #[inline]
+    pub fn read(&self, s: usize, i: usize, j: usize) -> Entry {
+        let a = s * self.col_cap + self.flat(i, j);
+        Entry { vm: self.vm[a], fired: self.fired[a] }
+    }
+
+    /// Write column `s` at cell `(i, j)` from a packed entry.
+    #[inline]
+    pub fn write(&mut self, s: usize, i: usize, j: usize, e: Entry) {
+        let a = s * self.col_cap + self.flat(i, j);
+        self.vm[a] = e.vm;
+        self.fired[a] = e.fired;
+    }
+
+    /// Read by fmap position (test/debug convenience).
+    pub fn read_xy(&self, x: usize, y: usize) -> Entry {
+        let s = interlace::column(x, y);
+        let (i, j) = interlace::cell(x, y);
+        self.read(s, i, j)
+    }
+
+    /// Write by fmap position (test/debug convenience).
+    pub fn write_xy(&mut self, x: usize, y: usize, e: Entry) {
+        let s = interlace::column(x, y);
+        let (i, j) = interlace::cell(x, y);
+        self.write(s, i, j, e);
+    }
+
+    /// Dump the fmap as a dense row-major vector (vm only).
+    pub fn to_dense(&self) -> Vec<i32> {
+        let mut out = vec![0i32; self.h * self.w];
+        for x in 0..self.h {
+            for y in 0..self.w {
+                out[x * self.w + y] = self.read_xy(x, y).vm;
+            }
+        }
+        out
+    }
+
+    /// Dump the fired bits as a dense row-major vector.
+    pub fn fired_dense(&self) -> Vec<bool> {
+        let mut out = vec![false; self.h * self.w];
+        for x in 0..self.h {
+            for y in 0..self.w {
+                out[x * self.w + y] = self.read_xy(x, y).fired;
+            }
+        }
+        out
+    }
+
+    /// Bits of storage required per column RAM for the given entry width —
+    /// used by the cost model (paper Fig. 12 "MemPot ... LUT-RAM").
+    pub fn column_bits(&self, entry_bits: usize) -> usize {
+        self.col_cap * entry_bits
+    }
+}
+
+/// Host-side batched view of the per-lane MemPots: all output channels'
+/// membrane planes in one channel-contiguous allocation
+/// (`[(s*cap + flat)*nc + c]`).
+///
+/// This is a SIMULATOR optimization only (§Perf): architecturally each
+/// lane still owns one single-channel MemPot (the cost model and cycle
+/// accounting are unchanged — cycles/stalls per conv pass are identical
+/// for every output channel because they depend only on event
+/// *addresses*). Batching lets the host walk each AEQ once per (t, c_in)
+/// instead of once per (c_out, t, c_in), and the channel-contiguous
+/// layout vectorizes the 9-way scatter across channels.
+#[derive(Clone, Debug)]
+pub struct MultiMem {
+    pub h: usize,
+    pub w: usize,
+    pub cells_i: usize,
+    pub cells_j: usize,
+    pub nc: usize,
+    cap: usize,
+    vm: Vec<i32>,
+    fired: Vec<bool>,
+}
+
+impl MultiMem {
+    pub fn new(max_h: usize, max_w: usize, max_nc: usize) -> Self {
+        let (ci, cj) = interlace::cell_grid(max_h, max_w);
+        let cap = ci * cj;
+        MultiMem {
+            h: max_h,
+            w: max_w,
+            cells_i: ci,
+            cells_j: cj,
+            nc: max_nc,
+            cap,
+            vm: vec![0; COLUMNS * cap * max_nc],
+            fired: vec![false; COLUMNS * cap * max_nc],
+        }
+    }
+
+    /// Reshape for a layer (h, w, channels) and zero (the per-channel
+    /// MemPot multiplexing reset of Algorithm 1, batched).
+    pub fn reset_for(&mut self, h: usize, w: usize, nc: usize) {
+        let (ci, cj) = interlace::cell_grid(h, w);
+        assert!(
+            COLUMNS * ci * cj * nc <= self.vm.len(),
+            "fmap {h}x{w}x{nc} exceeds MultiMem allocation"
+        );
+        self.h = h;
+        self.w = w;
+        self.cells_i = ci;
+        self.cells_j = cj;
+        self.cap = ci * cj;
+        self.nc = nc;
+        self.vm[..COLUMNS * self.cap * nc].fill(0);
+        self.fired[..COLUMNS * self.cap * nc].fill(false);
+    }
+
+    /// Base index of the channel vector at (s, flat).
+    #[inline(always)]
+    pub fn base(&self, s: usize, flat: usize) -> usize {
+        (s * self.cap + flat) * self.nc
+    }
+
+    /// Mutable channel slice at (s, flat) — the scatter target.
+    #[inline(always)]
+    pub fn vm_channels_mut(&mut self, s: usize, flat: usize) -> &mut [i32] {
+        let b = self.base(s, flat);
+        let nc = self.nc;
+        unsafe { self.vm.get_unchecked_mut(b..b + nc) }
+    }
+
+    #[inline(always)]
+    pub fn vm_at(&self, s: usize, flat: usize, c: usize) -> i32 {
+        self.vm[self.base(s, flat) + c]
+    }
+
+    #[inline(always)]
+    pub fn set_vm_at(&mut self, s: usize, flat: usize, c: usize, v: i32) {
+        let b = self.base(s, flat) + c;
+        self.vm[b] = v;
+    }
+
+    #[inline(always)]
+    pub fn fired_at(&self, s: usize, flat: usize, c: usize) -> bool {
+        self.fired[self.base(s, flat) + c]
+    }
+
+    #[inline(always)]
+    pub fn set_fired_at(&mut self, s: usize, flat: usize, c: usize, v: bool) {
+        let b = self.base(s, flat) + c;
+        self.fired[b] = v;
+    }
+
+    /// Dense dump of one channel (tests).
+    pub fn to_dense(&self, c: usize) -> Vec<i32> {
+        let mut out = vec![0i32; self.h * self.w];
+        for x in 0..self.h {
+            for y in 0..self.w {
+                let s = interlace::column(x, y);
+                let (i, j) = interlace::cell(x, y);
+                out[x * self.w + y] = self.vm_at(s, i * self.cells_j + j, c);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+    use crate::util::prop;
+
+    #[test]
+    fn multimem_channel_isolation() {
+        let mut m = MultiMem::new(9, 9, 4);
+        m.reset_for(9, 9, 4);
+        m.set_vm_at(3, 2, 1, 42);
+        assert_eq!(m.vm_at(3, 2, 1), 42);
+        assert_eq!(m.vm_at(3, 2, 0), 0);
+        assert_eq!(m.vm_at(3, 2, 2), 0);
+        let dense = m.to_dense(1);
+        assert_eq!(dense.iter().filter(|&&v| v != 0).count(), 1);
+        assert!(m.to_dense(0).iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn multimem_reset_reshapes() {
+        let mut m = MultiMem::new(26, 26, 32);
+        m.reset_for(26, 26, 32);
+        m.set_vm_at(0, 0, 5, 7);
+        m.reset_for(6, 6, 10);
+        assert_eq!(m.nc, 10);
+        assert!(m.to_dense(5).iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn write_read_roundtrip_xy() {
+        let mut m = MemPot::new(26, 26);
+        m.reset_for(26, 26);
+        m.write_xy(25, 0, Entry { vm: -7, fired: true });
+        let e = m.read_xy(25, 0);
+        assert_eq!(e.vm, -7);
+        assert!(e.fired);
+        // neighbours untouched
+        assert_eq!(m.read_xy(24, 0).vm, 0);
+    }
+
+    #[test]
+    fn vm_and_fired_planes_independent() {
+        let mut m = MemPot::new(9, 9);
+        m.reset_for(9, 9);
+        let s = 4;
+        let a = m.flat(1, 2);
+        m.write_vm(s, a, 77);
+        assert!(!m.read_fired(s, a), "vm write must not touch fired");
+        m.write_fired(s, a, true);
+        assert_eq!(m.read_vm(s, a), 77, "fired write must not touch vm");
+    }
+
+    #[test]
+    fn reset_reshapes_and_zeroes() {
+        let mut m = MemPot::new(26, 26);
+        m.reset_for(26, 26);
+        m.write_xy(10, 10, Entry { vm: 5, fired: true });
+        m.reset_for(6, 6);
+        assert_eq!(m.h, 6);
+        for x in 0..6 {
+            for y in 0..6 {
+                let e = m.read_xy(x, y);
+                assert_eq!(e.vm, 0);
+                assert!(!e.fired);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "needs")]
+    fn reset_too_large_panics() {
+        let mut m = MemPot::new(6, 6);
+        m.reset_for(26, 26);
+    }
+
+    #[test]
+    fn dense_dump_matches_writes() {
+        prop::check("dense dump roundtrip", 20, |rng| {
+            let h = 3 + rng.below(24);
+            let w = 3 + rng.below(24);
+            let mut m = MemPot::new(h, w);
+            m.reset_for(h, w);
+            let mut want = vec![0i32; h * w];
+            for _ in 0..h * w / 2 {
+                let x = rng.below(h);
+                let y = rng.below(w);
+                let v = rng.range_i32(-1000, 1000);
+                m.write_xy(x, y, Entry { vm: v, fired: false });
+                want[x * w + y] = v;
+            }
+            if m.to_dense() == want { Ok(()) } else { Err("mismatch".into()) }
+        });
+    }
+
+    #[test]
+    fn interlaced_cells_isolated() {
+        // writing through one column never aliases another column
+        let mut rng = Pcg::new(11);
+        let mut m = MemPot::new(12, 12);
+        m.reset_for(12, 12);
+        for _ in 0..200 {
+            let x = rng.below(12);
+            let y = rng.below(12);
+            let before = m.to_dense();
+            m.write_xy(x, y, Entry { vm: 99, fired: false });
+            let after = m.to_dense();
+            let changed: Vec<usize> = (0..before.len())
+                .filter(|&i| before[i] != after[i])
+                .collect();
+            assert!(changed.iter().all(|&i| i == x * 12 + y));
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Cycle-level simulator of the paper's accelerator (the L3 contribution).
+//!
+//! Units map 1:1 to the paper's Fig. 3 top level:
+//!
+//! * [`interlace`] — the (x, y) ⇄ (i, j)\[s\] memory-interlacing mapping
+//!   shared by the AEQ and MemPot (paper Fig. 6/7).
+//! * [`aeq`] — Address Event Queue: 9 interlaced column queues with
+//!   valid / end-of-queue semantics, 9-wide parallel write, sequential
+//!   column-ordered read (paper §VI-A).
+//! * [`mempot`] — membrane-potential memory: 9 dual-port column RAMs,
+//!   each hard-wired to one PE, plus the m-TTFS spike-indicator bit
+//!   (paper §VI "memory interlacing").
+//! * [`conv_unit`] — the 4-stage pipelined event-based convolution unit:
+//!   address calculation, kernel permutation, saturating update, RAW
+//!   hazard detection with S2–S4 forwarding and S2–S3 stall (paper §VI-B).
+//! * [`threshold_unit`] — the 5-stage thresholding unit: per-timestep bias,
+//!   m-TTFS threshold, OR-max-pool with the divider-free Algorithm-2
+//!   pooled-address generator, AEQ write-back (paper §VI-C).
+//! * [`scheduler`] — Algorithm 1: layer-by-layer, output-channel-
+//!   multiplexed MemPot reuse, all T timesteps per channel.
+//! * [`core`] — the ×P parallelized accelerator (paper Table I) plus the
+//!   FC classification unit.
+//! * [`stats`] — cycle/stall/utilization counters (paper Table III).
+//! * [`dense_ref`] — frame-based integer reference implementation used to
+//!   validate the event-driven datapath end-to-end.
+
+pub mod aeq;
+pub mod conv_unit;
+pub mod core;
+pub mod dense_ref;
+pub mod interlace;
+pub mod mempot;
+pub mod scheduler;
+pub mod stats;
+pub mod threshold_unit;
+
+pub use self::core::{Accelerator, AccelConfig, InferenceResult};
+pub use stats::{LayerStats, RunStats};

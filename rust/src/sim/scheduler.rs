@@ -1,0 +1,345 @@
+//! The Algorithm-1 scheduler (paper §V-D): channel-multiplexed processing
+//! of one convolutional layer.
+//!
+//! ```text
+//! for c_out in 0..C_l:
+//!     V_m ← 0                      (MemPot reused per output channel)
+//!     for t in 0..T:
+//!         for c_in in 0..C_{l-1}:
+//!             V_m ← ConvUnit(AEQ[c_in, l−1, t], K[c_out, c_in, l], V_m)
+//!         AEQ[c_out, l, t] ← ThreshUnit(b[c_out], V_t, V_m)
+//! ```
+//!
+//! MemPot holds a SINGLE channel fmap — the key memory saving (a layer
+//! with 32 channels needs 1/32 of the naive membrane storage). With ×P
+//! parallelization, P independent unit sets process P output channels
+//! concurrently; channels are assigned round-robin and the layer's wall
+//! time is the slowest lane (this is what rolls Table I's efficiency off
+//! at ×16: layer 3 has only 10 channels).
+
+use crate::sim::aeq::Aeq;
+use crate::sim::conv_unit::ConvUnit;
+use crate::sim::mempot::{MemPot, MultiMem};
+use crate::sim::stats::LayerStats;
+use crate::sim::threshold_unit::ThresholdUnit;
+use crate::snn::network::ConvLayerDef;
+use crate::snn::sat::Sat;
+
+/// All AEQs of one layer boundary: `q[channel][timestep]`.
+#[derive(Clone, Debug, Default)]
+pub struct LayerQueues {
+    pub q: Vec<Vec<Aeq>>,
+}
+
+impl LayerQueues {
+    pub fn new(channels: usize, t_steps: usize) -> Self {
+        LayerQueues {
+            q: (0..channels)
+                .map(|_| (0..t_steps).map(|_| Aeq::new()).collect())
+                .collect(),
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn t_steps(&self) -> usize {
+        self.q.first().map(Vec::len).unwrap_or(0)
+    }
+
+    /// Total events at timestep `t` across channels.
+    pub fn events_at(&self, t: usize) -> u64 {
+        self.q.iter().map(|ch| ch[t].len() as u64).sum()
+    }
+
+    /// Total events across all channels and steps.
+    pub fn total_events(&self) -> u64 {
+        (0..self.t_steps()).map(|t| self.events_at(t)).sum()
+    }
+}
+
+/// Process one layer per Algorithm 1. Returns the output queues and the
+/// layer statistics (wall cycles computed for `lanes` parallel units).
+///
+/// Host evaluation is batched across output channels
+/// ([`crate::sim::mempot::MultiMem`], §Perf): each input AEQ is walked
+/// once per (t, c_in) and applied to all channel membranes at once. The
+/// MODELED schedule is unchanged — Algorithm 1's per-channel MemPot
+/// multiplexing, with per-channel cycle counts that are identical across
+/// channels because conv-pass timing depends only on event addresses
+/// (asserted by `batched_equals_per_channel`).
+pub fn process_layer(
+    layer: &ConvLayerDef,
+    input: &LayerQueues,
+    mem: &mut MultiMem,
+    conv: &ConvUnit,
+    thresh: &ThresholdUnit,
+    sat: Sat,
+    lanes: usize,
+) -> (LayerQueues, LayerStats) {
+    let (ho, wo, cout_n) = layer.out_shape;
+    let (h_in, w_in, cin_n) = layer.in_shape;
+    let t_steps = input.t_steps();
+    assert_eq!(input.channels(), cin_n, "input channels mismatch");
+    assert!(lanes >= 1);
+
+    let mut out = LayerQueues::new(cout_n, t_steps);
+    let mut stats = LayerStats::default();
+    let mut lane_cycles = vec![0u64; lanes];
+
+    // MemPot multiplexing (batched): zero all channel planes.
+    mem.reset_for(ho, wo, cout_n);
+
+    // Kernel banks per input channel: [cin][cout][9].
+    let kernel_bank: Vec<Vec<[i32; 9]>> = (0..cin_n)
+        .map(|cin| (0..cout_n).map(|cout| layer.kernel(cout, cin)).collect())
+        .collect();
+
+    let mut per_cout_cycles = 0u64; // identical for every output channel
+    for t in 0..t_steps {
+        for cin in 0..cin_n {
+            let cs = conv.process_queue_multi(&input.q[cin][t], &kernel_bank[cin], mem, sat);
+            // per-channel stats: every channel's conv unit did this pass
+            let n = cout_n as u64;
+            stats.conv_cycles += cs.cycles * n;
+            stats.events += cs.events * n;
+            stats.bubbles += cs.bubbles * n;
+            stats.stalls += cs.stalls * n;
+            stats.forwards += cs.forwards * n;
+            stats.pe_busy += cs.pe_busy * n;
+            per_cout_cycles += cs.cycles;
+        }
+        for cout in 0..cout_n {
+            let ts = thresh.process_channel(
+                mem,
+                cout,
+                layer.b[cout],
+                layer.vt,
+                sat,
+                layer.pool,
+                &mut out.q[cout][t],
+            );
+            stats.thresh_cycles += ts.cycles;
+            stats.spikes_out += ts.spikes;
+            if cout == 0 {
+                per_cout_cycles += ts.cycles; // cycles identical per channel
+            }
+        }
+    }
+    for cout in 0..cout_n {
+        lane_cycles[cout % lanes] += per_cout_cycles;
+    }
+
+    // Input sparsity (paper Table III): fraction of zero activations over
+    // all input fmaps (channels × timesteps).
+    let total_positions = (h_in * w_in) as u64 * cin_n as u64 * t_steps as u64;
+    let total_spikes = input.total_events();
+    stats.input_sparsity = if total_positions == 0 {
+        1.0
+    } else {
+        1.0 - total_spikes as f64 / total_positions as f64
+    };
+    stats.wall_cycles = lane_cycles.into_iter().max().unwrap_or(0);
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::conv_unit::HazardMode;
+    use crate::snn::encode::{encode_mttfs, frames_to_events};
+    use crate::snn::network::testutil::random_network;
+    use crate::util::prng::Pcg;
+
+    fn input_queues(seed: u64, net: &crate::snn::network::Network) -> LayerQueues {
+        let mut rng = Pcg::new(seed);
+        let img: Vec<u8> = (0..28 * 28).map(|_| rng.below(256) as u8).collect();
+        let frames = encode_mttfs(&img, 28, 28, &net.thresholds);
+        LayerQueues {
+            q: vec![frames
+                .iter()
+                .map(|f| Aeq::from_events(&frames_to_events(f, 28, 28)))
+                .collect()],
+        }
+    }
+
+    #[test]
+    fn layer1_shapes_and_stats() {
+        let net = random_network(42);
+        let input = input_queues(1, &net);
+        let mut mem = MultiMem::new(26, 26, 32);
+        let (out, stats) = process_layer(
+            &net.conv[0],
+            &input,
+            &mut mem,
+            &ConvUnit::default(),
+            &ThresholdUnit,
+            net.sat,
+            1,
+        );
+        assert_eq!(out.channels(), 32);
+        assert_eq!(out.t_steps(), 5);
+        // every (cout, t, cin) queue pass happened
+        let expected_events: u64 = input.total_events() * 32;
+        assert_eq!(stats.events, expected_events);
+        assert!(stats.input_sparsity > 0.0 && stats.input_sparsity < 1.0);
+        assert_eq!(stats.wall_cycles, stats.conv_cycles + stats.thresh_cycles);
+    }
+
+    #[test]
+    fn lanes_reduce_wall_cycles() {
+        let net = random_network(43);
+        let input = input_queues(2, &net);
+        let mem = MultiMem::new(26, 26, 32);
+        let run = |lanes| {
+            let mut m = mem.clone();
+            process_layer(
+                &net.conv[0],
+                &input,
+                &mut m,
+                &ConvUnit::default(),
+                &ThresholdUnit,
+                net.sat,
+                lanes,
+            )
+            .1
+            .wall_cycles
+        };
+        let w1 = run(1);
+        let w8 = run(8);
+        let w16 = run(16);
+        assert!(w8 < w1, "×8 ({w8}) must beat ×1 ({w1})");
+        assert!(w8 <= w1 / 4, "×8 should be near-linear on 32 channels");
+        assert!(w16 <= w8);
+        // 32 channels over 16 lanes: exactly 2 channels per lane
+        assert!(w16 >= w1 / 16);
+    }
+
+    #[test]
+    fn lane_assignment_functionally_invariant() {
+        // Lanes are an accounting construct: outputs must be identical.
+        let net = random_network(44);
+        let input = input_queues(3, &net);
+        let run = |lanes| {
+            let mut mem = MultiMem::new(26, 26, 32);
+            process_layer(
+                &net.conv[0],
+                &input,
+                &mut mem,
+                &ConvUnit::default(),
+                &ThresholdUnit,
+                net.sat,
+                lanes,
+            )
+            .0
+        };
+        let a = run(1);
+        let b = run(8);
+        for c in 0..32 {
+            for t in 0..5 {
+                assert_eq!(a.q[c][t].cols, b.q[c][t].cols, "cout={c} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn hazard_mode_functionally_invariant() {
+        let net = random_network(45);
+        let input = input_queues(4, &net);
+        let run = |mode| {
+            let mut mem = MultiMem::new(26, 26, 32);
+            process_layer(
+                &net.conv[0],
+                &input,
+                &mut mem,
+                &ConvUnit::new(mode),
+                &ThresholdUnit,
+                net.sat,
+                1,
+            )
+        };
+        let (a, sa) = run(HazardMode::ForwardAndStall);
+        let (b, sb) = run(HazardMode::StallOnly);
+        for c in 0..32 {
+            for t in 0..5 {
+                assert_eq!(a.q[c][t].cols, b.q[c][t].cols);
+            }
+        }
+        assert!(sb.conv_cycles >= sa.conv_cycles);
+    }
+
+    /// Per-channel reference implementation of Algorithm 1 (the literal
+    /// schedule, one MemPot) — the batched scheduler must match it on
+    /// outputs AND stats.
+    fn process_layer_per_channel(
+        layer: &ConvLayerDef,
+        input: &LayerQueues,
+        conv: &ConvUnit,
+        sat: Sat,
+    ) -> (LayerQueues, LayerStats) {
+        let (ho, wo, cout_n) = layer.out_shape;
+        let t_steps = input.t_steps();
+        let cin_n = input.channels();
+        let mut out = LayerQueues::new(cout_n, t_steps);
+        let mut stats = LayerStats::default();
+        let mut mem = MemPot::new(ho, wo);
+        let mut lane = 0u64;
+        for cout in 0..cout_n {
+            mem.reset_for(ho, wo);
+            for t in 0..t_steps {
+                for cin in 0..cin_n {
+                    let kernel = layer.kernel(cout, cin);
+                    let cs = conv.process_queue(&input.q[cin][t], &kernel, &mut mem, sat);
+                    stats.conv_cycles += cs.cycles;
+                    stats.events += cs.events;
+                    stats.bubbles += cs.bubbles;
+                    stats.stalls += cs.stalls;
+                    stats.forwards += cs.forwards;
+                    stats.pe_busy += cs.pe_busy;
+                    lane += cs.cycles;
+                }
+                let ts = ThresholdUnit.process(
+                    &mut mem, layer.b[cout], layer.vt, sat, layer.pool,
+                    &mut out.q[cout][t],
+                );
+                stats.thresh_cycles += ts.cycles;
+                stats.spikes_out += ts.spikes;
+                lane += ts.cycles;
+            }
+        }
+        stats.wall_cycles = lane;
+        (out, stats)
+    }
+
+    #[test]
+    fn batched_equals_per_channel() {
+        // The MultiMem host optimization must not change anything
+        // observable: output queues and every counter agree with the
+        // literal Algorithm-1 schedule.
+        for seed in [50u64, 51, 52] {
+            let net = random_network(seed);
+            let input = input_queues(seed + 100, &net);
+            let conv = ConvUnit::default();
+            let mut mem = MultiMem::new(26, 26, 32);
+            let (out_b, st_b) = process_layer(
+                &net.conv[0], &input, &mut mem, &conv, &ThresholdUnit, net.sat, 1,
+            );
+            let (out_r, st_r) =
+                process_layer_per_channel(&net.conv[0], &input, &conv, net.sat);
+            for c in 0..32 {
+                for t in 0..5 {
+                    assert_eq!(out_b.q[c][t].cols, out_r.q[c][t].cols, "cout={c} t={t}");
+                }
+            }
+            assert_eq!(st_b.conv_cycles, st_r.conv_cycles);
+            assert_eq!(st_b.thresh_cycles, st_r.thresh_cycles);
+            assert_eq!(st_b.events, st_r.events);
+            assert_eq!(st_b.stalls, st_r.stalls);
+            assert_eq!(st_b.forwards, st_r.forwards);
+            assert_eq!(st_b.bubbles, st_r.bubbles);
+            assert_eq!(st_b.spikes_out, st_r.spikes_out);
+            assert_eq!(st_b.wall_cycles, st_r.wall_cycles);
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Cycle / utilization / sparsity counters (paper Tables I, III, V).
+
+/// Counters for one convolutional layer of one inference.
+#[derive(Clone, Debug, Default)]
+pub struct LayerStats {
+    /// Conv-unit cycles summed over all (c_out, t, c_in) passes (one lane).
+    pub conv_cycles: u64,
+    /// Thresholding-unit cycles summed over all (c_out, t) passes.
+    pub thresh_cycles: u64,
+    /// Valid address events processed by the conv unit (PE work items).
+    pub events: u64,
+    /// Wasted AEQ read cycles (empty columns).
+    pub bubbles: u64,
+    /// S2–S3 stall cycles.
+    pub stalls: u64,
+    /// S2–S4 hazards resolved by forwarding.
+    pub forwards: u64,
+    /// Cycles the 9 PEs held a valid event.
+    pub pe_busy: u64,
+    /// Spikes written to this layer's output AEQs (pooled count once).
+    pub spikes_out: u64,
+    /// Fraction of ZERO activations in this layer's input fmaps
+    /// (paper Table III "input activation sparsity").
+    pub input_sparsity: f64,
+    /// Wall-clock cycles for this layer given the lane assignment
+    /// (max over lanes; == conv+thresh cycles at ×1).
+    pub wall_cycles: u64,
+}
+
+impl LayerStats {
+    /// PE utilization (paper Table III): cycles with valid events at the
+    /// PEs relative to all cycles spent on this layer (one lane).
+    pub fn pe_utilization(&self) -> f64 {
+        let total = self.conv_cycles + self.thresh_cycles;
+        if total == 0 {
+            return 0.0;
+        }
+        self.pe_busy as f64 / total as f64
+    }
+}
+
+/// Counters for a full single-image inference.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub layers: Vec<LayerStats>,
+    /// Classification-unit (FC) cycles.
+    pub classifier_cycles: u64,
+    /// Serial cycles for input-AEQ loading + inter-layer event
+    /// redistribution (the shared-bus broadcast of each lane's output
+    /// queues to all next-layer lane AEQs; NOT divided by P — this is the
+    /// Amdahl component that rolls Table I's efficiency off at ×16).
+    pub redistribution_cycles: u64,
+    /// End-to-end cycles for the frame (layers sequential + classifier).
+    pub total_cycles: u64,
+    /// Spike counts per (timestep, layer) — the cross-check signal against
+    /// the JAX golden model's `spike_counts` output.
+    pub spike_counts: Vec<[u64; 3]>,
+}
+
+impl RunStats {
+    /// Frames per second at the given clock frequency.
+    pub fn fps(&self, clock_hz: f64) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        clock_hz / self.total_cycles as f64
+    }
+
+    /// Latency in seconds at the given clock frequency.
+    pub fn latency_s(&self, clock_hz: f64) -> f64 {
+        self.total_cycles as f64 / clock_hz
+    }
+
+    /// Merge counters from another run (for dataset-level aggregation).
+    pub fn accumulate(&mut self, other: &RunStats) {
+        if self.layers.len() < other.layers.len() {
+            self.layers.resize(other.layers.len(), LayerStats::default());
+        }
+        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
+            a.conv_cycles += b.conv_cycles;
+            a.thresh_cycles += b.thresh_cycles;
+            a.events += b.events;
+            a.bubbles += b.bubbles;
+            a.stalls += b.stalls;
+            a.forwards += b.forwards;
+            a.pe_busy += b.pe_busy;
+            a.spikes_out += b.spikes_out;
+            a.wall_cycles += b.wall_cycles;
+            // sparsity: running mean weighted equally per frame
+            a.input_sparsity = (a.input_sparsity + b.input_sparsity) / 2.0;
+        }
+        self.classifier_cycles += other.classifier_cycles;
+        self.redistribution_cycles += other.redistribution_cycles;
+        self.total_cycles += other.total_cycles;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_bounds() {
+        let s = LayerStats {
+            conv_cycles: 80,
+            thresh_cycles: 20,
+            pe_busy: 60,
+            ..Default::default()
+        };
+        assert!((s.pe_utilization() - 0.6).abs() < 1e-12);
+        assert_eq!(LayerStats::default().pe_utilization(), 0.0);
+    }
+
+    #[test]
+    fn fps_latency() {
+        let r = RunStats { total_cycles: 333_000, ..Default::default() };
+        let fps = r.fps(333e6);
+        assert!((fps - 1000.0).abs() < 1e-6);
+        assert!((r.latency_s(333e6) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulate_sums() {
+        let mut a = RunStats {
+            layers: vec![LayerStats { conv_cycles: 10, ..Default::default() }],
+            total_cycles: 100,
+            ..Default::default()
+        };
+        let b = RunStats {
+            layers: vec![LayerStats { conv_cycles: 5, ..Default::default() }],
+            total_cycles: 50,
+            ..Default::default()
+        };
+        a.accumulate(&b);
+        assert_eq!(a.layers[0].conv_cycles, 15);
+        assert_eq!(a.total_cycles, 150);
+    }
+}

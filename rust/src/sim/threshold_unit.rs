@@ -1,0 +1,372 @@
+//! The 5-stage pipelined thresholding unit (paper §VI-C, Fig. 10).
+//!
+//! Slides a 3×3 window (= one interlaced cell: all 9 columns at the same
+//! (i, j) address) over MemPot with stride 3, and per window:
+//!
+//!   S1 address calculation (two counters, thanks to interlacing)
+//!   S2 read the 9 membrane potentials (+ pooled-address calc, Alg. 2)
+//!   S3 add the scalar per-timestep bias (9 saturating adders)
+//!   S4 threshold: spike if `vm > vt` OR the m-TTFS spike-indicator bit
+//!      is already set; 9-to-1 OR-gate for max-pooling
+//!   S5 write back vm + indicator, write the AEQ (9 parallel columns, or
+//!      the single pooled event)
+//!
+//! No data hazards can occur: each membrane potential is visited exactly
+//! once per pass. Cycle cost is therefore deterministic:
+//! `cells + pipeline depth`.
+
+use crate::sim::aeq::Aeq;
+use crate::sim::interlace::{self, COLUMNS};
+use crate::sim::mempot::MemPot;
+use crate::snn::sat::Sat;
+
+/// Pipeline depth of the thresholding unit.
+pub const PIPELINE_DEPTH: u64 = 5;
+
+/// Statistics for one thresholding pass.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct ThreshPassStats {
+    /// Total cycles (cells + fill).
+    pub cycles: u64,
+    /// Windows (cells) visited.
+    pub windows: u64,
+    /// Spikes written to the AEQ (pooled events count once).
+    pub spikes: u64,
+    /// Neurons whose indicator bit was newly set this pass.
+    pub new_fires: u64,
+}
+
+/// Divider-free pooled-address generator (paper Algorithm 2).
+///
+/// Runs along the cell scan (row-major: `i` outer, `j` inner) and yields
+/// the AEQ address `(i_out, j_out)[s_out]` of the 3×3-max-pooled event for
+/// the current window, using only increment/wrap counters. Its output is
+/// checked against the closed form (division/modulo) by unit test.
+#[derive(Clone, Debug)]
+pub struct PoolAddrGen {
+    cells_j: usize,
+    /// current counters
+    s_i: u16,   // contributes 0,3,6 (outer/i component of s_out)
+    s_j: u16,   // contributes 0,1,2 (inner/j component)
+    i_out: u16,
+    j_out: u16,
+    j_pos: usize, // position within the row (to detect row wrap)
+}
+
+impl PoolAddrGen {
+    pub fn new(cells_j: usize) -> Self {
+        PoolAddrGen { cells_j, s_i: 0, s_j: 0, i_out: 0, j_out: 0, j_pos: 0 }
+    }
+
+    /// Address for the CURRENT window; call `advance` after each window.
+    pub fn current(&self) -> (u16, u16, u8) {
+        (self.i_out, self.j_out, (self.s_i + self.s_j) as u8)
+    }
+
+    /// Move to the next window in scan order (j inner, i outer).
+    pub fn advance(&mut self) {
+        self.j_pos += 1;
+        if self.j_pos == self.cells_j {
+            // row wrap: reset j counters, step i counters
+            self.j_pos = 0;
+            self.s_j = 0;
+            self.j_out = 0;
+            if self.s_i == 6 {
+                self.s_i = 0;
+                self.i_out += 1;
+            } else {
+                self.s_i += 3;
+            }
+        } else if self.s_j == 2 {
+            self.s_j = 0;
+            self.j_out += 1;
+        } else {
+            self.s_j += 1;
+        }
+    }
+}
+
+/// The thresholding unit.
+#[derive(Clone, Debug, Default)]
+pub struct ThresholdUnit;
+
+impl ThresholdUnit {
+    /// One pass over `mem` for one (layer, c_out, t) unit of work.
+    ///
+    /// Adds `bias` to every neuron (saturating), thresholds with `vt`
+    /// (m-TTFS: OR with the stored indicator bit), writes the resulting
+    /// address events into `out` — either one event per spiking neuron,
+    /// or one pooled event per window when `pool` is set.
+    pub fn process(
+        &self,
+        mem: &mut MemPot,
+        bias: i32,
+        vt: i32,
+        sat: Sat,
+        pool: bool,
+        out: &mut Aeq,
+    ) -> ThreshPassStats {
+        let (h, w) = (mem.h, mem.w);
+        let (cells_i, cells_j) = (mem.cells_i, mem.cells_j);
+        let mut stats = ThreshPassStats::default();
+        let mut pool_gen = PoolAddrGen::new(cells_j);
+
+        for i in 0..cells_i {
+            for j in 0..cells_j {
+                stats.windows += 1;
+                let mut any_spike = false;
+                for s in 0..COLUMNS {
+                    let (x, y) = interlace::position(i, j, s);
+                    if x >= h || y >= w {
+                        continue; // partial window at the fmap edge
+                    }
+                    let mut e = mem.read(s, i, j);
+                    // S3: bias (saturating, like the conv PEs)
+                    e.vm = sat.add(e.vm, bias);
+                    // S4: threshold OR indicator (m-TTFS)
+                    let spike = e.vm > vt || e.fired;
+                    if spike && !e.fired {
+                        stats.new_fires += 1;
+                    }
+                    e.fired = spike;
+                    // S5: write back
+                    mem.write(s, i, j, e);
+                    if spike {
+                        any_spike = true;
+                        if !pool {
+                            out.push(s, i as u16, j as u16);
+                            stats.spikes += 1;
+                        }
+                    }
+                }
+                if pool && any_spike {
+                    // 9-to-1 OR gate fired: emit the pooled event at the
+                    // Algorithm-2 generated address.
+                    let (pi, pj, ps) = pool_gen.current();
+                    out.push(ps as usize, pi, pj);
+                    stats.spikes += 1;
+                }
+                pool_gen.advance();
+            }
+        }
+        stats.cycles = stats.windows + PIPELINE_DEPTH;
+        stats
+    }
+}
+
+impl ThresholdUnit {
+    /// Channel-`c` pass over a batched [`crate::sim::mempot::MultiMem`]
+    /// (host §Perf path; semantics identical to `process` on the
+    /// channel's own MemPot — asserted by `multi_threshold_equals_single`).
+    pub fn process_channel(
+        &self,
+        mem: &mut crate::sim::mempot::MultiMem,
+        c: usize,
+        bias: i32,
+        vt: i32,
+        sat: Sat,
+        pool: bool,
+        out: &mut Aeq,
+    ) -> ThreshPassStats {
+        let (h, w) = (mem.h, mem.w);
+        let (cells_i, cells_j) = (mem.cells_i, mem.cells_j);
+        let mut stats = ThreshPassStats::default();
+        let mut pool_gen = PoolAddrGen::new(cells_j);
+
+        for i in 0..cells_i {
+            for j in 0..cells_j {
+                stats.windows += 1;
+                let flat = i * cells_j + j;
+                let mut any_spike = false;
+                for s in 0..COLUMNS {
+                    let (x, y) = interlace::position(i, j, s);
+                    if x >= h || y >= w {
+                        continue;
+                    }
+                    let vm = sat.add(mem.vm_at(s, flat, c), bias);
+                    mem.set_vm_at(s, flat, c, vm);
+                    let fired = mem.fired_at(s, flat, c);
+                    let spike = vm > vt || fired;
+                    if spike && !fired {
+                        stats.new_fires += 1;
+                        mem.set_fired_at(s, flat, c, true);
+                    }
+                    if spike {
+                        any_spike = true;
+                        if !pool {
+                            out.push(s, i as u16, j as u16);
+                            stats.spikes += 1;
+                        }
+                    }
+                }
+                if pool && any_spike {
+                    let (pi, pj, ps) = pool_gen.current();
+                    out.push(ps as usize, pi, pj);
+                    stats.spikes += 1;
+                }
+                pool_gen.advance();
+            }
+        }
+        stats.cycles = stats.windows + PIPELINE_DEPTH;
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::mempot::Entry;
+    use crate::util::prop;
+
+    #[test]
+    fn pool_addr_gen_matches_closed_form() {
+        // Algorithm 2 (counters only) vs the division-based closed form:
+        // the pooled fmap position of cell (i, j) is (i, j) itself, so its
+        // AEQ address is column(i, j) at cell(i, j).
+        for cells_j in [1usize, 2, 5, 8, 9, 11] {
+            let mut g = PoolAddrGen::new(cells_j);
+            for i in 0..12 {
+                for j in 0..cells_j {
+                    let (gi, gj, gs) = g.current();
+                    let want_s = interlace::column(i, j) as u8;
+                    let (wi, wj) = interlace::cell(i, j);
+                    assert_eq!(
+                        (gi as usize, gj as usize, gs),
+                        (wi, wj, want_s),
+                        "cell ({i},{j}) with cells_j={cells_j}"
+                    );
+                    g.advance();
+                }
+            }
+        }
+    }
+
+    fn fill_mem(mem: &mut MemPot, vals: &[i32]) {
+        for x in 0..mem.h {
+            for y in 0..mem.w {
+                mem.write_xy(x, y, Entry { vm: vals[x * mem.w + y], fired: false });
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_no_pool_emits_correct_events() {
+        let (h, w) = (6, 6);
+        let mut mem = MemPot::new(h, w);
+        mem.reset_for(h, w);
+        let mut vals = vec![0i32; h * w];
+        vals[0] = 100; // (0,0) spikes
+        vals[3 * w + 4] = 100; // (3,4) spikes
+        vals[5 * w + 5] = 10; // below vt after bias
+        fill_mem(&mut mem, &vals);
+        let mut out = Aeq::new();
+        let stats = ThresholdUnit.process(&mut mem, 5, 50, Sat::from_bits(20), false, &mut out);
+        assert_eq!(stats.spikes, 2);
+        assert_eq!(stats.new_fires, 2);
+        let frame = out.to_frame(h, w);
+        assert!(frame[0]);
+        assert!(frame[3 * w + 4]);
+        assert_eq!(frame.iter().filter(|&&b| b).count(), 2);
+        // bias was applied to every neuron
+        assert_eq!(mem.read_xy(5, 5).vm, 15);
+        assert_eq!(mem.read_xy(1, 1).vm, 5);
+        // cycle accounting: ceil(6/3)^2 = 4 windows + depth
+        assert_eq!(stats.windows, 4);
+        assert_eq!(stats.cycles, 4 + PIPELINE_DEPTH);
+    }
+
+    #[test]
+    fn mttfs_indicator_persists() {
+        // A neuron that fired keeps firing on later passes even if its
+        // membrane alone would no longer cross the threshold.
+        let (h, w) = (3, 3);
+        let mut mem = MemPot::new(h, w);
+        mem.reset_for(h, w);
+        let mut vals = vec![0i32; 9];
+        vals[4] = 100;
+        fill_mem(&mut mem, &vals);
+        let sat = Sat::from_bits(20);
+        let mut out1 = Aeq::new();
+        ThresholdUnit.process(&mut mem, 0, 50, sat, false, &mut out1);
+        assert_eq!(out1.len(), 1);
+        // drain the membrane below threshold
+        let e = mem.read_xy(1, 1);
+        mem.write_xy(1, 1, Entry { vm: -1000, ..e });
+        let mut out2 = Aeq::new();
+        let stats = ThresholdUnit.process(&mut mem, 0, 50, sat, false, &mut out2);
+        assert_eq!(out2.len(), 1, "m-TTFS neuron must keep firing");
+        assert_eq!(stats.new_fires, 0);
+    }
+
+    #[test]
+    fn maxpool_or_semantics() {
+        // 6×6 → 2×2 pooled; any spike in a window produces exactly one
+        // pooled event at the window's pooled address.
+        let (h, w) = (6, 6);
+        let mut mem = MemPot::new(h, w);
+        mem.reset_for(h, w);
+        let mut vals = vec![0i32; h * w];
+        // window (0,0): two spikes → ONE pooled event at pooled (0,0)
+        vals[0] = 100;
+        vals[w + 1] = 100;
+        // window (1,1): one spike → pooled event at pooled (1,1)
+        vals[4 * w + 5] = 100;
+        fill_mem(&mut mem, &vals);
+        let mut out = Aeq::new();
+        let stats = ThresholdUnit.process(&mut mem, 0, 50, Sat::from_bits(20), true, &mut out);
+        assert_eq!(stats.spikes, 2);
+        let frame = out.to_frame(2, 2);
+        assert_eq!(frame, vec![true, false, false, true]);
+    }
+
+    #[test]
+    fn partial_edge_windows_handled() {
+        // 26×26 has a partial last cell row/column (26 = 3·8 + 2): out of
+        // bounds neurons must be skipped, in-bounds ones processed.
+        let (h, w) = (26, 26);
+        let mut mem = MemPot::new(h, w);
+        mem.reset_for(h, w);
+        let mut vals = vec![0i32; h * w];
+        vals[25 * w + 25] = 100; // the very corner (in a partial window)
+        fill_mem(&mut mem, &vals);
+        let mut out = Aeq::new();
+        let stats = ThresholdUnit.process(&mut mem, 0, 50, Sat::from_bits(20), false, &mut out);
+        assert_eq!(stats.windows, 9 * 9);
+        let frame = out.to_frame(h, w);
+        assert!(frame[25 * w + 25]);
+        assert_eq!(frame.iter().filter(|&&b| b).count(), 1);
+    }
+
+    #[test]
+    fn threshold_matches_scalar_reference() {
+        // Property: pass == elementwise reference on random membranes.
+        prop::check("threshold pass vs reference", 40, |rng| {
+            let h = 3 + rng.below(24);
+            let w = 3 + rng.below(24);
+            let vt = rng.range_i32(10, 200);
+            let bias = rng.range_i32(-30, 30);
+            let sat = Sat::from_bits(12);
+            let mut mem = MemPot::new(h, w);
+            mem.reset_for(h, w);
+            let vals: Vec<i32> = (0..h * w).map(|_| rng.range_i32(-300, 300)).collect();
+            fill_mem(&mut mem, &vals);
+            let mut out = Aeq::new();
+            ThresholdUnit.process(&mut mem, bias, vt, sat, false, &mut out);
+            let frame = out.to_frame(h, w);
+            for x in 0..h {
+                for y in 0..w {
+                    let want_vm = sat.add(vals[x * w + y], bias);
+                    let want_spike = want_vm > vt;
+                    let e = mem.read_xy(x, y);
+                    if e.vm != want_vm {
+                        return Err(format!("vm mismatch at ({x},{y})"));
+                    }
+                    if frame[x * w + y] != want_spike || e.fired != want_spike {
+                        return Err(format!("spike mismatch at ({x},{y})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,169 @@
+//! m-TTFS input encoding (paper §VII).
+//!
+//! The integer input frame is binarized with a strictly increasing set of
+//! thresholds P = (p_1 … p_T), applied in **decreasing** order over the T
+//! timesteps so a bright pixel spikes early *and keeps spiking* — the
+//! m-TTFS property. Bit-identical to `ref.encode_mttfs` on the Python
+//! side (same u8→f32 normalization, same strict `>`).
+
+use crate::util::ceil_div;
+
+/// Binarize a 28×28 u8 frame into T binary frames (row-major, `Vec<bool>`
+/// of H·W each). `thresholds` is the increasing set P.
+pub fn encode_mttfs(img: &[u8], h: usize, w: usize, thresholds: &[f32]) -> Vec<Vec<bool>> {
+    assert_eq!(img.len(), h * w);
+    let t_steps = thresholds.len();
+    let mut frames = Vec::with_capacity(t_steps);
+    for t in 0..t_steps {
+        // step 0 uses the LARGEST threshold (reversed order)
+        let thr = thresholds[t_steps - 1 - t];
+        let frame = img
+            .iter()
+            .map(|&px| (px as f32 / 255.0) > thr)
+            .collect();
+        frames.push(frame);
+    }
+    frames
+}
+
+/// Address event in fmap coordinates plus its interlace column.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub x: u16,
+    pub y: u16,
+}
+
+/// Convert a binary frame into per-column AER queues, exactly as the
+/// hardware's thresholding unit would emit them: the 3×3 window slides in
+/// cell order (row-major over cells), and within a window each of the 9
+/// comparators writes its own column queue (paper Fig. 7).
+///
+/// Returns 9 queues; queue `s` holds events whose fmap position satisfies
+/// `(x % 3) * 3 + (y % 3) == s`, ordered by cell scan order.
+pub fn frames_to_events(frame: &[bool], h: usize, w: usize) -> [Vec<Event>; 9] {
+    let mut queues: [Vec<Event>; 9] = Default::default();
+    let cells_i = ceil_div(h, 3);
+    let cells_j = ceil_div(w, 3);
+    for ci in 0..cells_i {
+        for cj in 0..cells_j {
+            for s in 0..9 {
+                let x = ci * 3 + s / 3;
+                let y = cj * 3 + s % 3;
+                if x < h && y < w && frame[x * w + y] {
+                    queues[s].push(Event { x: x as u16, y: y as u16 });
+                }
+            }
+        }
+    }
+    queues
+}
+
+/// Count spikes in a set of column queues.
+pub fn event_count(queues: &[Vec<Event>; 9]) -> usize {
+    queues.iter().map(Vec::len).sum()
+}
+
+/// Sparsity of a binary frame: fraction of ZERO activations (paper
+/// Table III's "input activation sparsity" = 1 − spike density).
+pub fn sparsity(frame: &[bool]) -> f64 {
+    if frame.is_empty() {
+        return 1.0;
+    }
+    let ones = frame.iter().filter(|&&b| b).count();
+    1.0 - ones as f64 / frame.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+    use crate::util::prop;
+
+    #[test]
+    fn encode_monotone_in_time() {
+        // m-TTFS: once a pixel spikes at step t it spikes at all t' > t
+        // (thresholds applied in decreasing order).
+        let mut rng = Pcg::new(5);
+        let img: Vec<u8> = (0..28 * 28).map(|_| rng.below(256) as u8).collect();
+        let frames = encode_mttfs(&img, 28, 28, &[0.15, 0.3, 0.45, 0.6, 0.75]);
+        for t in 1..frames.len() {
+            for i in 0..frames[t].len() {
+                assert!(
+                    !frames[t - 1][i] || frames[t][i],
+                    "pixel {i} spiked at {} but not {t}",
+                    t - 1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn encode_extremes() {
+        let img = vec![0u8; 4];
+        let frames = encode_mttfs(&img, 2, 2, &[0.15, 0.3]);
+        assert!(frames.iter().all(|f| f.iter().all(|&b| !b)));
+        let img = vec![255u8; 4];
+        let frames = encode_mttfs(&img, 2, 2, &[0.15, 0.3]);
+        assert!(frames.iter().all(|f| f.iter().all(|&b| b)));
+    }
+
+    #[test]
+    fn events_partition_the_frame() {
+        prop::check("events partition frame", 50, |rng| {
+            let h = 3 + rng.below(27);
+            let w = 3 + rng.below(27);
+            let frame: Vec<bool> = (0..h * w).map(|_| rng.chance(0.2)).collect();
+            let queues = frames_to_events(&frame, h, w);
+            // every spike appears exactly once, in its correct column
+            let mut seen = vec![0u32; h * w];
+            for (s, q) in queues.iter().enumerate() {
+                for ev in q {
+                    let (x, y) = (ev.x as usize, ev.y as usize);
+                    if (x % 3) * 3 + (y % 3) != s {
+                        return Err(format!("event ({x},{y}) in wrong column {s}"));
+                    }
+                    seen[x * w + y] += 1;
+                }
+            }
+            for i in 0..h * w {
+                let want = frame[i] as u32;
+                if seen[i] != want {
+                    return Err(format!("pixel {i}: seen {} want {want}", seen[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn same_column_events_never_overlap() {
+        // The paper's hazard-freedom argument: two events in the same
+        // column are ≥3 apart in x or y, so their 3×3 windows are disjoint.
+        prop::check("same-column windows disjoint", 30, |rng| {
+            let h = 6 + rng.below(20);
+            let w = 6 + rng.below(20);
+            let frame: Vec<bool> = (0..h * w).map(|_| rng.chance(0.3)).collect();
+            let queues = frames_to_events(&frame, h, w);
+            for q in &queues {
+                for i in 0..q.len() {
+                    for j in i + 1..q.len() {
+                        let (a, b) = (&q[i], &q[j]);
+                        let dx = (a.x as i32 - b.x as i32).abs();
+                        let dy = (a.y as i32 - b.y as i32).abs();
+                        if dx < 3 && dy < 3 {
+                            return Err(format!("overlap {a:?} {b:?}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let frame = vec![true, false, false, false];
+        assert!((sparsity(&frame) - 0.75).abs() < 1e-12);
+        assert_eq!(sparsity(&[]), 1.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! SNN data model: network description + quantized parameters, the
+//! hardware's saturating fixed-point arithmetic, and the m-TTFS input
+//! encoding (multi-threshold binarization + AER conversion).
+
+pub mod encode;
+pub mod network;
+pub mod sat;
+
+pub use encode::{encode_mttfs, frames_to_events};
+pub use network::{ConvLayerDef, Network};
+pub use sat::Sat;

@@ -1,0 +1,126 @@
+//! Saturation arithmetic (paper §VI-B "Update calculation").
+//!
+//! The hardware clamps every membrane-potential update to the
+//! representable accumulator range instead of widening data paths:
+//! overflow would wrap a large positive membrane negative, and underflow
+//! would turn a strongly negative membrane into a huge positive one,
+//! generating erroneous spikes. Saturation is safe under m-TTFS coding —
+//! pushing an already-very-negative membrane further down (or an
+//! above-threshold membrane further up) cannot change the neuron output.
+
+/// Saturating accumulator range (inclusive), e.g. 20-bit: ±(2^19 − 1).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Sat {
+    pub min: i32,
+    pub max: i32,
+}
+
+impl Sat {
+    /// Symmetric range for a signed accumulator of `bits` total width.
+    pub fn from_bits(bits: u32) -> Self {
+        assert!((2..=31).contains(&bits), "accumulator width {bits} out of range");
+        let max = (1i32 << (bits - 1)) - 1;
+        Sat { min: -max, max }
+    }
+
+    /// Unbounded (used by float-reference paths).
+    pub fn unbounded() -> Self {
+        Sat { min: i32::MIN, max: i32::MAX }
+    }
+
+    /// Saturating add — the PE datapath operation.
+    #[inline(always)]
+    pub fn add(self, a: i32, b: i32) -> i32 {
+        // i64 intermediate: detection via sign bits in HW, widening here.
+        let v = a as i64 + b as i64;
+        if v > self.max as i64 {
+            self.max
+        } else if v < self.min as i64 {
+            self.min
+        } else {
+            v as i32
+        }
+    }
+
+    /// True if `a + b` would clamp (the hardware's over/underflow detect).
+    #[inline]
+    pub fn would_saturate(self, a: i32, b: i32) -> bool {
+        let v = a as i64 + b as i64;
+        v > self.max as i64 || v < self.min as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn from_bits_ranges() {
+        let s8 = Sat::from_bits(8);
+        assert_eq!(s8.max, 127);
+        assert_eq!(s8.min, -127);
+        let s20 = Sat::from_bits(20);
+        assert_eq!(s20.max, 524_287);
+        assert_eq!(s20.min, -524_287);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_bits_rejects_32() {
+        Sat::from_bits(32);
+    }
+
+    #[test]
+    fn clamps_high_and_low() {
+        let s = Sat::from_bits(8);
+        assert_eq!(s.add(120, 20), 127);
+        assert_eq!(s.add(-120, -20), -127);
+        assert_eq!(s.add(100, 20), 120);
+        assert_eq!(s.add(i32::MAX - 5, 0), 127); // input beyond range clamps too
+    }
+
+    #[test]
+    fn saturation_is_sticky_at_bounds() {
+        // Paper: "a further decrease of an already very negative membrane
+        // has no effect" — adding more in the same direction stays pinned.
+        let s = Sat::from_bits(8);
+        let mut v = 0;
+        for _ in 0..10 {
+            v = s.add(v, 100);
+        }
+        assert_eq!(v, 127);
+        for _ in 0..20 {
+            v = s.add(v, -100);
+        }
+        assert_eq!(v, -127);
+    }
+
+    #[test]
+    fn would_saturate_matches_add() {
+        let s = Sat::from_bits(10);
+        prop::check("would_saturate matches add", 500, |rng| {
+            let a = rng.range_i32(-1024, 1024);
+            let b = rng.range_i32(-1024, 1024);
+            let clamped = s.add(a, b) != (a as i64 + b as i64) as i32
+                || (a as i64 + b as i64) > i32::MAX as i64;
+            if clamped == s.would_saturate(a, b) {
+                Ok(())
+            } else {
+                Err(format!("a={a} b={b}"))
+            }
+        });
+    }
+
+    #[test]
+    fn no_clamp_inside_range_property() {
+        let s = Sat::from_bits(16);
+        prop::check("exact inside range", 500, |rng| {
+            let a = rng.range_i32(-16000, 16000);
+            let b = rng.range_i32(-16000, 16000);
+            let got = s.add(a, b);
+            let want = (a + b).clamp(s.min, s.max);
+            if got == want { Ok(()) } else { Err(format!("a={a} b={b} got={got}")) }
+        });
+    }
+}

@@ -1,0 +1,27 @@
+//! Small self-contained utilities (the offline build has no access to
+//! `serde`, `rand` or `proptest`, so the pieces we need are implemented
+//! here and tested in place).
+
+pub mod json;
+pub mod prng;
+pub mod prop;
+
+/// Ceiling division for usize.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(26, 3), 9);
+        assert_eq!(ceil_div(24, 3), 8);
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(3, 3), 1);
+        assert_eq!(ceil_div(4, 3), 2);
+    }
+}

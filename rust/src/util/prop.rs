@@ -1,0 +1,51 @@
+//! Minimal property-testing harness (no `proptest` in the offline vendor
+//! set). Runs a closure over `n` deterministically-seeded cases and, on
+//! failure, reports the failing seed so the case can be replayed with
+//! `case(seed)`.
+
+use super::prng::Pcg;
+
+/// Run `f` for `n` cases with independent deterministic PRNGs.
+///
+/// Panics with the failing case index + seed if `f` panics or returns an
+/// error string.
+pub fn check<F>(name: &str, n: usize, mut f: F)
+where
+    F: FnMut(&mut Pcg) -> Result<(), String>,
+{
+    for case in 0..n {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let mut rng = Pcg::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single case by seed (for debugging a reported failure).
+pub fn case(seed: u64) -> Pcg {
+    Pcg::new(seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        check("trivial", 50, |rng| {
+            let v = rng.below(100);
+            if v < 100 { Ok(()) } else { Err(format!("{v}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn reports_failure() {
+        let mut count = 0;
+        check("failing", 10, |_rng| {
+            count += 1;
+            if count < 5 { Ok(()) } else { Err("boom".into()) }
+        });
+    }
+}

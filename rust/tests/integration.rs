@@ -1,0 +1,248 @@
+//! Integration tests over the real build artifacts: network loading,
+//! dataset loading, full-system accuracy, simulator-vs-dense-reference
+//! and simulator-vs-JAX-golden (PJRT) equivalence, coordinator E2E.
+//!
+//! All tests skip gracefully when `artifacts/` has not been built yet
+//! (run `make artifacts` first) so `cargo test` stays green in any order.
+
+use sacsnn::artifact::{artifacts_dir, is_complete, Meta};
+use sacsnn::coordinator::{Coordinator, ServerConfig};
+use sacsnn::data::Dataset;
+use sacsnn::report;
+use sacsnn::sim::dense_ref::DenseRef;
+use sacsnn::sim::{AccelConfig, Accelerator};
+use std::sync::Arc;
+
+fn ready() -> bool {
+    let ok = is_complete(&artifacts_dir());
+    if !ok {
+        eprintln!("SKIP: artifacts/ not built");
+    }
+    ok
+}
+
+#[test]
+fn meta_and_weights_load() {
+    if !ready() {
+        return;
+    }
+    let (net, ds, meta) = report::env("mnist", 8).unwrap();
+    assert_eq!(net.conv.len(), 3);
+    assert_eq!(net.t_steps, 5);
+    assert_eq!(net.conv[0].out_shape, (26, 26, 32));
+    assert_eq!(net.conv[1].queue_shape(), (8, 8, 32));
+    assert!(net.conv.iter().all(|l| l.vt > 0));
+    assert!(ds.n_test() >= 100);
+    assert!(meta.quant("mnist", 16).is_ok());
+    // 16-bit variant loads too
+    let (net16, _, _) = report::env("mnist", 16).unwrap();
+    assert_eq!(net16.bits, 16);
+    // fashion variant
+    let (netf, dsf, _) = report::env("fashion", 8).unwrap();
+    assert_eq!(netf.conv.len(), 3);
+    assert!(dsf.n_test() >= 100);
+}
+
+#[test]
+fn accuracy_on_real_weights() {
+    if !ready() {
+        return;
+    }
+    let (net, ds, meta) = report::env("mnist", 8).unwrap();
+    let mut accel = Accelerator::new(net, AccelConfig { lanes: 8, ..Default::default() });
+    let n = 60;
+    let correct = (0..n)
+        .filter(|&i| accel.infer(ds.test_image(i)).pred == ds.test_y[i] as usize)
+        .count();
+    let acc = correct as f64 / n as f64;
+    // within sampling noise of the build-time python accuracy
+    let python_acc = meta.accuracy("mnist").snn_q8;
+    assert!(
+        acc > python_acc - 0.12,
+        "sim accuracy {acc:.3} far below python {python_acc:.3}"
+    );
+}
+
+#[test]
+fn sim_matches_dense_reference_on_real_weights() {
+    if !ready() {
+        return;
+    }
+    let (net, ds, _) = report::env("mnist", 8).unwrap();
+    let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+    for i in 0..15 {
+        let img = ds.test_image(i);
+        let want = DenseRef::new(&net).infer(img);
+        let (got, per_t) = accel.infer_traced(img);
+        assert_eq!(got.logits, want.logits, "image {i}");
+        assert_eq!(per_t, want.spike_counts, "image {i}");
+    }
+}
+
+#[test]
+fn sim_matches_jax_golden_via_pjrt() {
+    if !ready() {
+        return;
+    }
+    // spike-exact equivalence against the AOT-lowered JAX/Pallas model
+    let out = report::golden_check(5).unwrap();
+    assert!(out.contains("5/5"), "{out}");
+}
+
+#[test]
+fn q16_variant_runs_and_is_consistent() {
+    if !ready() {
+        return;
+    }
+    let (net, ds, _) = report::env("mnist", 16).unwrap();
+    let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+    for i in 0..5 {
+        let img = ds.test_image(i);
+        let want = DenseRef::new(&net).infer(img);
+        let got = accel.infer(img);
+        assert_eq!(got.logits, want.logits, "image {i}");
+    }
+}
+
+#[test]
+fn table_iii_shape_high_sparsity_lower_utilization() {
+    if !ready() {
+        return;
+    }
+    let (net, ds, _) = report::env("mnist", 8).unwrap();
+    let mut accel = Accelerator::new(net, AccelConfig::default());
+    let res = accel.infer(ds.test_image(0));
+    let l = &res.stats.layers;
+    // paper Table III reports 93/98/98% on real MNIST; our synthetic set +
+    // m-TTFS repeat-firing yields a denser deep-layer regime — assert the
+    // architectural invariants rather than the dataset-specific values:
+    // encoded input is highly sparse, and sparsity stays substantial.
+    assert!(
+        l[0].input_sparsity > 0.7,
+        "layer 1 input sparsity {:.2} too low",
+        l[0].input_sparsity
+    );
+    for (i, layer) in l.iter().enumerate() {
+        assert!(
+            layer.input_sparsity > 0.5,
+            "layer {} sparsity {:.2} too low",
+            i + 1,
+            layer.input_sparsity
+        );
+    }
+    // ...and PE utilization stays substantial despite the sparsity (the
+    // paper's architectural point: small PE array, kept busy). Our denser
+    // synthetic activations push utilization ABOVE the paper's values —
+    // the qualitative claim (never collapses to the few-percent level of
+    // fmap-sized arrays) is what the architecture guarantees.
+    for (i, layer) in l.iter().enumerate() {
+        let u = layer.pe_utilization();
+        assert!(u > 0.3 && u <= 1.0, "layer {} utilization {u:.2}", i + 1);
+    }
+}
+
+#[test]
+fn parallelization_shape_matches_table1() {
+    if !ready() {
+        return;
+    }
+    let (net, ds, _) = report::env("mnist", 8).unwrap();
+    let fps: Vec<f64> = [1usize, 2, 4, 8, 16]
+        .iter()
+        .map(|&lanes| report::measure(&net, &ds, lanes, 8).fps)
+        .collect();
+    // monotone FPS
+    for w in fps.windows(2) {
+        assert!(w[1] > w[0], "{fps:?}");
+    }
+    // near-linear to x8 (paper: 3077→21446 ≈ 7.0×); sublinear at x16
+    let s8 = fps[3] / fps[0];
+    let s16 = fps[4] / fps[0];
+    assert!(s8 > 5.0, "x8 speedup {s8:.2}");
+    assert!(s16 < 16.0, "x16 must be sublinear, got {s16:.2}");
+    assert!(s16 / s8 < 2.0, "x16/x8 ratio should roll off");
+}
+
+#[test]
+fn coordinator_end_to_end_on_real_network() {
+    if !ready() {
+        return;
+    }
+    let (net, ds, _) = report::env("mnist", 8).unwrap();
+    let coord = Coordinator::start(
+        Arc::clone(&net),
+        ServerConfig { workers: 3, lanes: 8, queue_depth: 64, batch_size: 4 },
+    );
+    let n = 24;
+    let replies: Vec<_> = (0..n)
+        .map(|i| coord.submit(ds.test_image(i).to_vec()).unwrap())
+        .collect();
+    let mut direct = Accelerator::new(Arc::clone(&net), AccelConfig { lanes: 8, ..Default::default() });
+    for (i, rx) in replies.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        let want = direct.infer(ds.test_image(i));
+        assert_eq!(resp.pred, want.pred, "request {i}");
+        assert_eq!(resp.logits, want.logits, "request {i}");
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.completed, n as u64);
+    coord.shutdown();
+}
+
+#[test]
+fn baselines_functionally_agree_and_are_slower() {
+    if !ready() {
+        return;
+    }
+    let (net, ds, _) = report::env("mnist", 8).unwrap();
+    let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+    let img = ds.test_image(0);
+    let ours = accel.infer(img);
+    for (name, result) in [
+        ("systolic", sacsnn::baseline::systolic::run(&net, img)),
+        ("aer", sacsnn::baseline::aer_array::run(&net, img)),
+        ("dense", sacsnn::baseline::dense::run(&net, img)),
+    ] {
+        assert_eq!(result.result.logits, ours.logits, "{name} functional mismatch");
+        // per-PE efficiency: ours uses 9 PEs at high utilization; the
+        // sparsity-blind baselines burn far more PE-cycles per frame
+        let their_pe_cycles = result.cycles as f64 * result.n_pes as f64;
+        let our_pe_cycles = ours.stats.total_cycles as f64 * 9.0;
+        assert!(
+            their_pe_cycles > our_pe_cycles,
+            "{name}: {their_pe_cycles} !> {our_pe_cycles}"
+        );
+    }
+}
+
+#[test]
+fn dataset_sanity() {
+    if !ready() {
+        return;
+    }
+    let ds = Dataset::load(&artifacts_dir(), "mnist").unwrap();
+    assert_eq!(ds.h, 28);
+    assert_eq!(ds.w, 28);
+    // class balance within reason
+    let mut counts = [0usize; 10];
+    for &y in &ds.test_y {
+        counts[y as usize] += 1;
+    }
+    assert!(counts.iter().all(|&c| c > ds.n_test() / 40));
+}
+
+#[test]
+fn meta_quant_consistent_with_loaded_network() {
+    if !ready() {
+        return;
+    }
+    let meta = Meta::load(&artifacts_dir().join("meta.json")).unwrap();
+    let q = meta.quant("mnist", 8).unwrap();
+    let (net, _, _) = report::env("mnist", 8).unwrap();
+    for (i, layer) in net.conv.iter().enumerate() {
+        assert_eq!(layer.vt, q.vt_q[i], "layer {i} vt");
+        let wmax = layer.w.iter().map(|w| w.abs()).max().unwrap();
+        assert!(wmax <= 127, "q8 weights must fit 8 bits, got {wmax}");
+    }
+    assert_eq!(net.sat.max, q.sat_max);
+}
