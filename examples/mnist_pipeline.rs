@@ -2,16 +2,16 @@
 //! evaluates the full stack on the synthetic MNIST test set —
 //! accuracy, throughput, per-layer statistics — and cross-checks the
 //! cycle-level simulator against BOTH the Rust dense reference and the
-//! AOT-lowered JAX/Pallas golden model via PJRT.
+//! AOT-lowered JAX/Pallas golden model via PJRT (skipped without the
+//! `pjrt` feature).
 //!
 //! Run with: `cargo run --release --example mnist_pipeline [n_images]`
 
-use anyhow::Result;
 use sacsnn::cost::power::PowerModel;
 use sacsnn::cost::CLOCK_HZ;
+use sacsnn::engine::{Backend as _, BackendKind, EngineBuilder, EngineError};
 use sacsnn::report;
-use sacsnn::sim::dense_ref::DenseRef;
-use sacsnn::sim::{AccelConfig, Accelerator};
+use sacsnn::Result;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -24,17 +24,15 @@ fn main() -> Result<()> {
     let n = n.min(ds.n_test());
 
     println!("== 1. accuracy + throughput over {n} synthetic MNIST test images ==");
-    let mut accel = Accelerator::new(
-        Arc::clone(&net),
-        AccelConfig { lanes: 8, ..Default::default() },
-    );
+    let builder = EngineBuilder::new(Arc::clone(&net));
+    let mut accel = builder.lanes(8).build(BackendKind::Sim)?;
     let t0 = Instant::now();
     let mut correct = 0usize;
     let mut cycles = 0u64;
     let mut busy = 0u64;
     let mut unit = 0u64;
     for i in 0..n {
-        let r = accel.infer(ds.test_image(i));
+        let r = accel.infer(&report::frame_for(&net, &ds, i)?)?;
         correct += (r.pred == ds.test_y[i] as usize) as usize;
         cycles += r.stats.total_cycles;
         for l in &r.stats.layers {
@@ -56,17 +54,26 @@ fn main() -> Result<()> {
     println!("host simulation : {:.1} img/s", n as f64 / wall.as_secs_f64());
 
     println!("\n== 2. simulator vs Rust dense reference (spike-exact) ==");
+    let mut reference = EngineBuilder::new(Arc::clone(&net)).build(BackendKind::DenseRef)?;
     let m = n.min(25);
     for i in 0..m {
-        let want = DenseRef::new(&net).infer(ds.test_image(i));
-        let (got, per_t) = accel.infer_traced(ds.test_image(i));
+        let frame = report::frame_for(&net, &ds, i)?;
+        let want = reference.infer(&frame)?;
+        let got = accel.infer(&frame)?;
         assert_eq!(got.logits, want.logits, "logits diverged at image {i}");
-        assert_eq!(per_t, want.spike_counts, "spike counts diverged at image {i}");
+        assert_eq!(
+            got.stats.spike_counts, want.stats.spike_counts,
+            "spike counts diverged at image {i}"
+        );
     }
     println!("{m}/{m} images match the dense reference exactly");
 
     println!("\n== 3. simulator vs AOT JAX/Pallas golden model (PJRT) ==");
-    print!("{}", report::golden_check(m.min(10))?);
+    match report::golden_check(m.min(10), BackendKind::Sim) {
+        Ok(out) => print!("{out}"),
+        Err(EngineError::Unavailable(why)) => println!("skipped: {why}"),
+        Err(e) => return Err(e),
+    }
 
     println!("\nall layers compose: kernel (L1) == model (L2) == simulator (L3).");
     Ok(())

@@ -1,35 +1,47 @@
-//! Quickstart: load the quantized network + dataset artifacts, run one
-//! image through the simulated accelerator, and print what happened —
-//! prediction, cycle breakdown, sparsity, PE utilization, and the
-//! Fig. 2-style m-TTFS membrane trace.
+//! Quickstart: load the quantized network + dataset artifacts, pick a
+//! backend from the engine registry (first arg, default `sim`), run one
+//! image through it, and print what happened — prediction, cycle
+//! breakdown, sparsity, PE utilization, and the Fig. 2-style m-TTFS
+//! membrane trace.
 //!
-//! Run with: `cargo run --release --example quickstart`
+//! Run with: `cargo run --release --example quickstart [backend]`
 //! (requires `make artifacts` first).
 
-use anyhow::Result;
+use sacsnn::engine::{Backend as _, BackendKind, EngineBuilder};
 use sacsnn::report;
-use sacsnn::sim::{AccelConfig, Accelerator};
+use sacsnn::Result;
 use std::sync::Arc;
 
 fn main() -> Result<()> {
+    let kind = match std::env::args().nth(1) {
+        Some(name) => BackendKind::parse(&name)?,
+        None => BackendKind::Sim,
+    };
     let (net, ds, meta) = report::env("mnist", 8)?;
     println!(
         "loaded: paper network 28x28-32C3-32C3-P3-10C3-F10, q8 (scales from meta.json), T = {}",
         meta.t_steps
     );
 
-    let mut accel = Accelerator::new(
-        Arc::clone(&net),
-        AccelConfig { lanes: 8, ..Default::default() },
+    let mut backend = EngineBuilder::new(Arc::clone(&net)).lanes(8).build(kind)?;
+    let cm = backend.cycle_model();
+    println!(
+        "backend: {} ({} PEs, {}, {})",
+        backend.name(),
+        cm.n_pes,
+        if cm.event_driven { "event-driven" } else { "frame-based" },
+        if cm.cycle_accurate { "cycle-accurate" } else { "functional golden" },
     );
-    let img = ds.test_image(0);
-    let res = accel.infer(img);
+
+    let res = backend.infer(&report::frame_for(&net, &ds, 0)?)?;
     println!("\nimage #0 (label {}):", ds.test_y[0]);
     println!("  prediction      : {}", res.pred);
     println!("  logits          : {:?}", res.logits);
-    println!("  total cycles    : {}", res.stats.total_cycles);
-    println!("  FPS @ 333 MHz   : {:.0}", res.stats.fps(333e6));
-    println!("  latency         : {:.3} ms", res.stats.latency_s(333e6) * 1e3);
+    if cm.cycle_accurate {
+        println!("  total cycles    : {}", res.stats.total_cycles);
+        println!("  FPS @ {:.0} MHz   : {:.0}", cm.clock_hz / 1e6, res.stats.fps(cm.clock_hz));
+        println!("  latency         : {:.3} ms", res.stats.latency_s(cm.clock_hz) * 1e3);
+    }
     for (i, l) in res.stats.layers.iter().enumerate() {
         println!(
             "  layer {}: {} events, sparsity {:.1}%, PE utilization {:.1}%, {} stalls",

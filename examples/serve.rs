@@ -1,14 +1,18 @@
-//! Serving demo: start the coordinator (router + dynamic batcher +
-//! worker pool, each worker owning a ×8 simulated accelerator), fire a
-//! bursty synthetic request stream at it, and report latency percentiles,
-//! throughput, batching behaviour and backpressure events.
+//! Serving demo: start the coordinator over a **heterogeneous** backend
+//! pool (simulator workers plus one dense-reference shadow worker behind
+//! the same queue), fire a bursty synthetic request stream at it, and
+//! report latency percentiles, throughput, batching behaviour,
+//! backpressure events and which backends served the traffic.
 //!
 //! Run with: `cargo run --release --example serve [n_requests]`
 
-use anyhow::Result;
-use sacsnn::coordinator::{Coordinator, ServerConfig, SubmitError};
+use sacsnn::coordinator::{Coordinator, ServerConfig};
+use sacsnn::engine::{BackendKind, EngineBuilder, EngineError};
 use sacsnn::report;
 use sacsnn::util::prng::Pcg;
+use sacsnn::Result;
+use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() -> Result<()> {
@@ -17,12 +21,17 @@ fn main() -> Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
     let (net, ds, _) = report::env("mnist", 8)?;
-    let cfg = ServerConfig { workers: 4, lanes: 8, queue_depth: 64, batch_size: 8 };
+    let cfg = ServerConfig { lanes: 8, queue_depth: 64, batch_size: 8, ..Default::default() };
+
+    // Heterogeneous pool: three ×8 simulators + one functional shadow.
+    let builder = EngineBuilder::new(Arc::clone(&net)).lanes(cfg.lanes);
+    let mut backends = builder.build_pool(BackendKind::Sim, 3)?;
+    backends.push(builder.build(BackendKind::DenseRef)?);
     println!(
-        "coordinator: {} workers × (accelerator ×{}), queue depth {}, max batch {}",
-        cfg.workers, cfg.lanes, cfg.queue_depth, cfg.batch_size
+        "coordinator: {} workers (3×sim ×{} lanes + 1×dense-ref shadow), queue depth {}, max batch {}",
+        backends.len(), cfg.lanes, cfg.queue_depth, cfg.batch_size
     );
-    let coord = Coordinator::start(net, cfg);
+    let coord = Coordinator::start_pool(backends, cfg)?;
 
     // Bursty open-loop load: Poisson-ish bursts with think time.
     let mut rng = Pcg::new(2024);
@@ -33,30 +42,35 @@ fn main() -> Result<()> {
     while sent < n {
         let burst = 1 + rng.below(12);
         for _ in 0..burst.min(n - sent) {
-            let img = ds.test_image(rng.below(ds.n_test())).to_vec();
-            match coord.try_submit(img) {
+            let frame = report::frame_for(&net, &ds, rng.below(ds.n_test()))?;
+            match coord.try_submit(frame) {
                 Ok(rx) => pending.push(rx),
-                Err(SubmitError::Busy) => rejected += 1,
-                Err(e) => return Err(e.into()),
+                Err(EngineError::Busy) => rejected += 1,
+                Err(e) => return Err(e),
             }
             sent += 1;
         }
         std::thread::sleep(Duration::from_micros(200 + rng.below(800) as u64));
     }
 
-    let mut lat: Vec<u64> = pending
-        .into_iter()
-        .map(|rx| {
-            let r = rx.recv().expect("reply");
-            r.queue_wait_us + r.service_us
-        })
-        .collect();
+    let mut lat = Vec::with_capacity(pending.len());
+    let mut served_by: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for rx in pending {
+        let r = rx.recv().expect("reply")?;
+        *served_by.entry(r.backend).or_insert(0) += 1;
+        lat.push(r.queue_wait_us + r.service_us);
+    }
     let wall = t0.elapsed();
     lat.sort_unstable();
     let pct = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize];
     let snap = coord.metrics.snapshot();
     println!("\nserved {} / {} requests in {:.2} s ({:.0} req/s), {} rejected by backpressure",
         lat.len(), n, wall.as_secs_f64(), lat.len() as f64 / wall.as_secs_f64(), rejected);
+    print!("served by:");
+    for (name, count) in &served_by {
+        print!("  {name} ×{count}");
+    }
+    println!();
     println!("latency (queue+service): p50 {} µs, p90 {} µs, p99 {} µs, max {} µs",
         pct(0.50), pct(0.90), pct(0.99), lat.last().unwrap());
     println!("dynamic batching: {} batches, mean size {:.2}", snap.batches, snap.mean_batch);

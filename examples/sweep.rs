@@ -5,9 +5,9 @@
 //!
 //! Run with: `cargo run --release --example sweep [n_images]`
 
-use anyhow::Result;
 use sacsnn::cost::power::TABLE1_PAPER;
 use sacsnn::report::{self, measure};
+use sacsnn::Result;
 
 fn main() -> Result<()> {
     let n: usize = std::env::args()

@@ -1,6 +1,9 @@
 //! Shared micro-bench harness (criterion is not in the offline vendor
 //! set): measures wall time over repeated runs and prints mean ± spread.
 
+// Each bench target compiles this module but uses a different subset.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Time `f` for `iters` iterations after `warmup` iterations; returns

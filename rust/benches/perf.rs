@@ -24,7 +24,7 @@ fn main() {
     let mut frames = 0u64;
     let (mean, min, max) = common::time_ms(2, 5, || {
         for i in 0..20 {
-            let r = accel.infer(ds.test_image(i));
+            let r = accel.infer_image(ds.test_image(i));
             events += r.stats.layers.iter().map(|l| l.events).sum::<u64>();
             frames += 1;
         }

@@ -25,7 +25,7 @@ fn main() {
             AccelConfig { lanes: 8, ..Default::default() },
         );
         let correct = (0..n)
-            .filter(|&i| accel.infer(ds.test_image(i)).pred == ds.test_y[i] as usize)
+            .filter(|&i| accel.infer_image(ds.test_image(i)).pred == ds.test_y[i] as usize)
             .count();
         println!(
             "live simulator re-measurement (q16, {n} images): {:.1}%",

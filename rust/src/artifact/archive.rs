@@ -11,9 +11,9 @@
 //!   u64 byte_len, raw data
 //! ```
 
-use anyhow::{bail, ensure, Context};
+use crate::engine::error::{bail, ensure, read_file};
+use crate::engine::Context;
 use std::collections::BTreeMap;
-use std::io::Read;
 use std::path::Path;
 
 const MAGIC: u32 = 0x5341_4354;
@@ -29,7 +29,7 @@ pub enum DType {
 }
 
 impl DType {
-    fn from_tag(t: u8) -> anyhow::Result<Self> {
+    fn from_tag(t: u8) -> crate::Result<Self> {
         Ok(match t {
             0 => DType::F32,
             1 => DType::I32,
@@ -67,7 +67,7 @@ impl Tensor {
     }
 
     /// Decode as f32 values (accepts F32 only).
-    pub fn as_f32(&self) -> anyhow::Result<Vec<f32>> {
+    pub fn as_f32(&self) -> crate::Result<Vec<f32>> {
         ensure!(self.dtype == DType::F32, "tensor is {:?}, not F32", self.dtype);
         Ok(self
             .data
@@ -77,7 +77,7 @@ impl Tensor {
     }
 
     /// Decode as i32 values (accepts I32/I16/I8/U8 with widening).
-    pub fn as_i32(&self) -> anyhow::Result<Vec<i32>> {
+    pub fn as_i32(&self) -> crate::Result<Vec<i32>> {
         Ok(match self.dtype {
             DType::I32 => self
                 .data
@@ -96,7 +96,7 @@ impl Tensor {
     }
 
     /// Decode as u8 (accepts U8 only) — used for image datasets.
-    pub fn as_u8(&self) -> anyhow::Result<&[u8]> {
+    pub fn as_u8(&self) -> crate::Result<&[u8]> {
         ensure!(self.dtype == DType::U8, "tensor is {:?}, not U8", self.dtype);
         Ok(&self.data)
     }
@@ -109,13 +109,12 @@ pub struct Archive {
 }
 
 impl Archive {
-    pub fn load(path: &Path) -> anyhow::Result<Self> {
-        let bytes = std::fs::read(path)
-            .with_context(|| format!("reading archive {}", path.display()))?;
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let bytes = read_file(path)?;
         Self::parse(&bytes).with_context(|| format!("parsing archive {}", path.display()))
     }
 
-    pub fn parse(bytes: &[u8]) -> anyhow::Result<Self> {
+    pub fn parse(bytes: &[u8]) -> crate::Result<Self> {
         let mut r = Cursor { buf: bytes, pos: 0 };
         let magic = r.u32()?;
         ensure!(magic == MAGIC, "bad magic {magic:#x}");
@@ -149,7 +148,7 @@ impl Archive {
         Ok(Archive { tensors })
     }
 
-    pub fn get(&self, name: &str) -> anyhow::Result<&Tensor> {
+    pub fn get(&self, name: &str) -> crate::Result<&Tensor> {
         self.tensors
             .get(name)
             .with_context(|| format!("archive has no tensor '{name}'"))
@@ -162,31 +161,27 @@ struct Cursor<'a> {
 }
 
 impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
         ensure!(self.pos + n <= self.buf.len(), "archive truncated");
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    fn u8(&mut self) -> anyhow::Result<u8> {
+    fn u8(&mut self) -> crate::Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> anyhow::Result<u32> {
+    fn u32(&mut self) -> crate::Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn u64(&mut self) -> anyhow::Result<u64> {
+    fn u64(&mut self) -> crate::Result<u64> {
         let b = self.take(8)?;
         Ok(u64::from_le_bytes(b.try_into().unwrap()))
     }
 }
-
-// Unused import guard: Read is pulled in for future streaming use.
-#[allow(unused)]
-fn _assert_read_available<R: Read>(_r: R) {}
 
 #[cfg(test)]
 mod tests {

@@ -1,8 +1,10 @@
 //! Typed view of `artifacts/meta.json` (geometry, encoding thresholds,
 //! quantization metadata and the build-time accuracy measurements).
 
+use crate::engine::error::read_file_text;
+use crate::engine::Context;
 use crate::util::json::Json;
-use anyhow::{Context, Result};
+use crate::Result;
 use std::path::Path;
 
 /// Per-variant quantization metadata (`quant.<dataset>_q<bits>`).
@@ -35,8 +37,7 @@ pub struct Meta {
 
 impl Meta {
     pub fn load(path: &Path) -> Result<Self> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
+        let text = read_file_text(path)?;
         let raw = Json::parse(&text).context("parsing meta.json")?;
         let t_steps = raw
             .get(&["t_steps"])

@@ -17,16 +17,21 @@ use crate::baseline::BaselineResult;
 use crate::sim::dense_ref::DenseRef;
 use crate::snn::network::Network;
 
-pub fn run(net: &Network, img: &[u8]) -> BaselineResult {
-    let result = DenseRef::new(net).infer(img);
-    let t = net.t_steps as u64;
-    // PE array sized for the largest fmap (28×28 input here).
-    let n_pes = net
-        .conv
+/// PE-array size: ASIE instantiates a PE per neuron of the largest
+/// fmap (28×28 input here). Shared with the engine registry's
+/// `cycle_model()` so the two can never drift.
+pub fn n_pes(net: &Network) -> usize {
+    net.conv
         .iter()
         .map(|l| l.in_shape.0 * l.in_shape.1)
         .max()
-        .unwrap_or(784);
+        .unwrap_or(784)
+}
+
+pub fn run(net: &Network, img: &[u8]) -> BaselineResult {
+    let result = DenseRef::new(net).infer(img);
+    let t = net.t_steps as u64;
+    let n_pes = n_pes(net);
     let mut cycles = 0u64;
     let mut useful_pe_cycles = 0u64;
     for (li, layer) in net.conv.iter().enumerate() {

@@ -10,6 +10,7 @@ pub struct Metrics {
     submitted: AtomicU64,
     rejected: AtomicU64,
     completed: AtomicU64,
+    failed: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
     queue_wait_us_sum: AtomicU64,
@@ -25,6 +26,8 @@ pub struct MetricsSnapshot {
     pub submitted: u64,
     pub rejected: u64,
     pub completed: u64,
+    /// Requests whose backend returned a typed error instead of a result.
+    pub failed: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub mean_queue_wait_us: f64,
@@ -41,6 +44,10 @@ impl Metrics {
 
     pub fn rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn batch_formed(&self, n: usize) {
@@ -65,6 +72,7 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             completed,
+            failed: self.failed.load(Ordering::Relaxed),
             batches,
             mean_batch: div(self.batched_requests.load(Ordering::Relaxed), batches),
             mean_queue_wait_us: div(self.queue_wait_us_sum.load(Ordering::Relaxed), completed),
@@ -83,6 +91,7 @@ impl MetricsSnapshot {
         m.insert("submitted".into(), Json::Num(self.submitted as f64));
         m.insert("rejected".into(), Json::Num(self.rejected as f64));
         m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("failed".into(), Json::Num(self.failed as f64));
         m.insert("batches".into(), Json::Num(self.batches as f64));
         m.insert("mean_batch".into(), Json::Num(self.mean_batch));
         m.insert("mean_queue_wait_us".into(), Json::Num(self.mean_queue_wait_us));
@@ -104,12 +113,14 @@ mod tests {
         m.submitted();
         m.submitted();
         m.rejected();
+        m.failed();
         m.batch_formed(2);
         m.completed(10, 100, 1000);
         m.completed(30, 300, 3000);
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.failed, 1);
         assert_eq!(s.completed, 2);
         assert!((s.mean_queue_wait_us - 20.0).abs() < 1e-9);
         assert!((s.mean_service_us - 200.0).abs() < 1e-9);

@@ -1,6 +1,6 @@
-//! Inference coordinator: the serving layer around the simulated
-//! accelerator (request router, dynamic batcher, worker pool,
-//! backpressure, metrics).
+//! Inference coordinator: the serving layer (request router, dynamic
+//! batcher, worker pool, backpressure, metrics) over the unified
+//! [`Backend`] surface.
 //!
 //! The paper's prototype is a single-tenant FPGA; a deployable system
 //! needs the surrounding service. Rust owns the event loop and process
@@ -10,42 +10,56 @@
 //! ```text
 //!   clients ──▶ bounded queue (backpressure) ──▶ N workers
 //!                                                  │  each owns one
-//!                                                  ▼  simulated ×P accel
+//!                                                  ▼  Box<dyn Backend>
 //!                                            per-request reply channel
 //! ```
 //!
 //! Workers drain up to `batch_size` requests at once (dynamic batching:
 //! a batch forms from whatever is queued, never waiting for a full
-//! batch), encode inputs off the accelerator path, then run the
-//! accelerator per frame — mirroring how a host CPU feeds the FPGA.
+//! batch) and run their backend per frame — mirroring how a host CPU
+//! feeds the FPGA.
+//!
+//! Any [`Backend`] can serve, and pools may be **heterogeneous**: e.g.
+//! [`Coordinator::start_pool`] with seven simulator workers plus one
+//! PJRT golden worker gives online cross-checking capacity inside the
+//! same queue, and each [`Response`] names the backend that served it.
 
 pub mod metrics;
 
 pub use metrics::{Metrics, MetricsSnapshot};
 
-use crate::sim::{AccelConfig, Accelerator};
+use crate::engine::{Backend, BackendKind, EngineBuilder, EngineError, Frame, Inference};
 use crate::snn::network::Network;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// An inference request: one 28×28 u8 frame.
+/// An inference request: one shape-checked [`Frame`].
 pub struct Request {
     pub id: u64,
-    pub img: Vec<u8>,
-    pub reply: Sender<Response>,
+    pub frame: Frame,
+    pub reply: Sender<Reply>,
     enqueued: Instant,
 }
+
+/// What a worker sends back: the response, or the typed engine error the
+/// backend raised (e.g. [`EngineError::ShapeMismatch`] for a frame that
+/// does not match the served network).
+pub type Reply = Result<Response, EngineError>;
 
 /// The reply sent to the request's channel.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
     pub pred: usize,
-    pub logits: [i64; 10],
-    /// Simulated accelerator cycles for this frame.
+    /// One logit per class (Vec-backed; no fixed class-count assumption).
+    pub logits: Vec<i64>,
+    /// Name of the backend that served this request (heterogeneous pools
+    /// mix backends behind one queue).
+    pub backend: &'static str,
+    /// Modeled device cycles for this frame (0 for functional-only
+    /// backends — check the backend's `cycle_model()`).
     pub sim_cycles: u64,
     /// Wall-clock time spent queued before a worker picked it up.
     pub queue_wait_us: u64,
@@ -58,9 +72,12 @@ pub struct Response {
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Worker threads (each owns one simulated accelerator).
+    /// Worker threads (each owns one backend instance).
     pub workers: usize,
-    /// ×P parallelization of each worker's accelerator.
+    /// Which backend [`Coordinator::start`] builds for every worker
+    /// (heterogeneous pools use [`Coordinator::start_pool`] instead).
+    pub backend: BackendKind,
+    /// ×P parallelization of each simulated accelerator.
     pub lanes: usize,
     /// Bounded queue depth — the backpressure point.
     pub queue_depth: usize,
@@ -70,18 +87,14 @@ pub struct ServerConfig {
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { workers: 4, lanes: 8, queue_depth: 256, batch_size: 16 }
+        ServerConfig {
+            workers: 4,
+            backend: BackendKind::Sim,
+            lanes: 8,
+            queue_depth: 256,
+            batch_size: 16,
+        }
     }
-}
-
-/// Error returned when the bounded queue is full (backpressure) or the
-/// server is shutting down.
-#[derive(Debug, thiserror::Error)]
-pub enum SubmitError {
-    #[error("queue full (backpressure)")]
-    Busy,
-    #[error("server is shut down")]
-    Closed,
 }
 
 /// The running coordinator.
@@ -90,42 +103,64 @@ pub struct Coordinator {
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     next_id: std::sync::atomic::AtomicU64,
-    shutdown: Arc<AtomicBool>,
 }
 
 impl Coordinator {
-    /// Start `cfg.workers` threads serving `net`.
-    pub fn start(net: Arc<Network>, cfg: ServerConfig) -> Self {
+    /// Start a homogeneous pool: `cfg.workers` instances of
+    /// `cfg.backend` built from `net` through the engine registry.
+    pub fn start(net: Arc<Network>, cfg: ServerConfig) -> Result<Self, EngineError> {
+        let backends = EngineBuilder::new(net)
+            .lanes(cfg.lanes)
+            .build_pool(cfg.backend, cfg.workers)?;
+        Self::start_pool(backends, cfg)
+    }
+
+    /// Start one worker per provided backend. The pool may be
+    /// heterogeneous (e.g. sim workers plus a PJRT shadow worker for
+    /// online golden cross-checks); `cfg.workers` is ignored in favour
+    /// of `backends.len()`. An empty pool is rejected — it would accept
+    /// requests that nothing ever serves.
+    pub fn start_pool(
+        backends: Vec<Box<dyn Backend>>,
+        cfg: ServerConfig,
+    ) -> Result<Self, EngineError> {
+        if backends.is_empty() {
+            return Err(EngineError::msg(
+                "coordinator needs at least one backend worker (got 0)",
+            ));
+        }
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let mut workers = Vec::with_capacity(cfg.workers);
-        for worker_id in 0..cfg.workers {
+        let mut workers = Vec::with_capacity(backends.len());
+        for backend in backends {
             let rx = Arc::clone(&rx);
-            let net = Arc::clone(&net);
             let metrics = Arc::clone(&metrics);
-            let shutdown = Arc::clone(&shutdown);
-            let accel_cfg = AccelConfig { lanes: cfg.lanes, ..Default::default() };
             let batch_size = cfg.batch_size;
             workers.push(std::thread::spawn(move || {
-                worker_loop(worker_id, net, accel_cfg, rx, metrics, shutdown, batch_size);
+                worker_loop(backend, rx, metrics, batch_size);
             }));
         }
-        Coordinator {
+        Ok(Coordinator {
             tx,
             workers,
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(0),
-            shutdown,
-        }
+        })
     }
 
-    /// Submit without blocking; `Err(Busy)` signals backpressure.
-    pub fn try_submit(&self, img: Vec<u8>) -> Result<Receiver<Response>, SubmitError> {
+    fn request(&self, frame: Frame) -> (Request, Receiver<Reply>) {
         let (reply, rx) = std::sync::mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, img, reply, enqueued: Instant::now() };
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        (Request { id, frame, reply, enqueued: Instant::now() }, rx)
+    }
+
+    /// Submit without blocking; `Err(EngineError::Busy)` signals
+    /// backpressure, `Err(EngineError::Closed)` a shut-down pool.
+    pub fn try_submit(&self, frame: Frame) -> Result<Receiver<Reply>, EngineError> {
+        let (req, rx) = self.request(frame);
         match self.tx.try_send(req) {
             Ok(()) => {
                 self.metrics.submitted();
@@ -133,25 +168,29 @@ impl Coordinator {
             }
             Err(TrySendError::Full(_)) => {
                 self.metrics.rejected();
-                Err(SubmitError::Busy)
+                Err(EngineError::Busy)
             }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            Err(TrySendError::Disconnected(_)) => Err(EngineError::Closed),
         }
     }
 
     /// Submit, blocking while the queue is full.
-    pub fn submit(&self, img: Vec<u8>) -> Result<Receiver<Response>, SubmitError> {
-        let (reply, rx) = std::sync::mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, img, reply, enqueued: Instant::now() };
-        self.tx.send(req).map_err(|_| SubmitError::Closed)?;
+    pub fn submit(&self, frame: Frame) -> Result<Receiver<Reply>, EngineError> {
+        let (req, rx) = self.request(frame);
+        self.tx.send(req).map_err(|_| EngineError::Closed)?;
         self.metrics.submitted();
         Ok(rx)
     }
 
     /// Drain and stop all workers.
+    ///
+    /// Drain guarantee: dropping the sender closes the channel, and
+    /// `mpsc` delivers every already-queued request before `recv()`
+    /// reports disconnection — so each worker finishes (and replies to)
+    /// everything submitted before this call, then exits. No flag or
+    /// sentinel is involved; channel closure is the entire shutdown
+    /// protocol.
     pub fn shutdown(self) {
-        self.shutdown.store(true, Ordering::SeqCst);
         drop(self.tx);
         for h in self.workers {
             let _ = h.join();
@@ -160,15 +199,11 @@ impl Coordinator {
 }
 
 fn worker_loop(
-    _worker_id: usize,
-    net: Arc<Network>,
-    accel_cfg: AccelConfig,
+    mut backend: Box<dyn Backend>,
     rx: Arc<Mutex<Receiver<Request>>>,
     metrics: Arc<Metrics>,
-    shutdown: Arc<AtomicBool>,
     batch_size: usize,
 ) {
-    let mut accel = Accelerator::new(net, accel_cfg);
     loop {
         // Dynamic batching: block for one request, then opportunistically
         // drain whatever else is queued (up to batch_size).
@@ -177,7 +212,10 @@ fn worker_loop(
             let guard = rx.lock().expect("rx mutex poisoned");
             match guard.recv() {
                 Ok(req) => batch.push(req),
-                Err(_) => return, // channel closed: shut down
+                // Channel closed; every queued request has already been
+                // received (see `Coordinator::shutdown`), so exiting here
+                // cannot strand work.
+                Err(_) => return,
             }
             while batch.len() < batch_size {
                 match guard.try_recv() {
@@ -192,24 +230,27 @@ fn worker_loop(
         for req in batch {
             let picked = Instant::now();
             let queue_wait_us = picked.duration_since(req.enqueued).as_micros() as u64;
-            // encode off the accelerator's critical path (host-side work)
-            let queues = accel.encode_input(&req.img);
-            let result = accel.infer_from_queues(queues);
-            let service_us = picked.elapsed().as_micros() as u64;
-            metrics.completed(queue_wait_us, service_us, result.stats.total_cycles);
-            let _ = req.reply.send(Response {
-                id: req.id,
-                pred: result.pred,
-                logits: result.logits,
-                sim_cycles: result.stats.total_cycles,
-                queue_wait_us,
-                service_us,
-                batch_size: n,
-            });
-        }
-        if shutdown.load(Ordering::SeqCst) {
-            // keep draining until the channel closes; recv() above exits.
-            continue;
+            let reply = match backend.infer(&req.frame) {
+                Ok(Inference { pred, logits, stats }) => {
+                    let service_us = picked.elapsed().as_micros() as u64;
+                    metrics.completed(queue_wait_us, service_us, stats.total_cycles);
+                    Ok(Response {
+                        id: req.id,
+                        pred,
+                        logits,
+                        backend: backend.name(),
+                        sim_cycles: stats.total_cycles,
+                        queue_wait_us,
+                        service_us,
+                        batch_size: n,
+                    })
+                }
+                Err(e) => {
+                    metrics.failed();
+                    Err(e)
+                }
+            };
+            let _ = req.reply.send(reply);
         }
     }
 }
@@ -217,12 +258,14 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::{AccelConfig, Accelerator};
     use crate::snn::network::testutil::random_network;
     use crate::util::prng::Pcg;
 
-    fn img(seed: u64) -> Vec<u8> {
+    fn frame(seed: u64) -> Frame {
         let mut rng = Pcg::new(seed);
-        (0..784).map(|_| rng.below(256) as u8).collect()
+        let data = (0..784).map(|_| rng.below(256) as u8).collect();
+        Frame::from_u8(28, 28, 1, data).unwrap()
     }
 
     #[test]
@@ -230,19 +273,23 @@ mod tests {
         let net = Arc::new(random_network(31));
         let coord = Coordinator::start(
             Arc::clone(&net),
-            ServerConfig { workers: 2, lanes: 4, queue_depth: 16, batch_size: 4 },
-        );
+            ServerConfig { workers: 2, lanes: 4, queue_depth: 16, batch_size: 4, ..Default::default() },
+        )
+        .unwrap();
         let replies: Vec<_> = (0..10)
-            .map(|i| coord.submit(img(i)).unwrap())
+            .map(|i| coord.submit(frame(i)).unwrap())
             .collect();
         for rx in replies {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             assert!(resp.pred < 10);
             assert!(resp.sim_cycles > 0);
+            assert_eq!(resp.backend, "sim");
+            assert_eq!(resp.logits.len(), net.n_classes);
         }
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.completed, 10);
         assert_eq!(snap.submitted, 10);
+        assert_eq!(snap.failed, 0);
         coord.shutdown();
     }
 
@@ -251,15 +298,71 @@ mod tests {
         let net = Arc::new(random_network(32));
         let coord = Coordinator::start(
             Arc::clone(&net),
-            ServerConfig { workers: 3, lanes: 1, queue_depth: 8, batch_size: 2 },
-        );
-        let image = img(99);
+            ServerConfig { workers: 3, lanes: 1, queue_depth: 8, batch_size: 2, ..Default::default() },
+        )
+        .unwrap();
+        let f = frame(99);
         let mut direct = Accelerator::new(Arc::clone(&net), AccelConfig::default());
-        let want = direct.infer(&image);
-        let got = coord.submit(image).unwrap().recv().unwrap();
+        let want = direct.infer_image(f.as_u8().unwrap());
+        let got = coord.submit(f).unwrap().recv().unwrap().unwrap();
         assert_eq!(got.pred, want.pred);
         assert_eq!(got.logits, want.logits);
         coord.shutdown();
+    }
+
+    #[test]
+    fn heterogeneous_pool_serves_multiple_backend_kinds() {
+        // One queue, two different Backend implementations behind it:
+        // the cycle-level simulator and the dense functional reference.
+        let net = Arc::new(random_network(35));
+        let builder = EngineBuilder::new(Arc::clone(&net)).lanes(2);
+        let backends = vec![
+            builder.build(BackendKind::Sim).unwrap(),
+            builder.build(BackendKind::DenseRef).unwrap(),
+        ];
+        let coord = Coordinator::start_pool(
+            backends,
+            ServerConfig { queue_depth: 32, batch_size: 2, ..Default::default() },
+        )
+        .unwrap();
+        let f = frame(7);
+        let want = crate::sim::dense_ref::DenseRef::new(&net).infer(f.as_u8().unwrap());
+        let replies: Vec<_> = (0..12)
+            .map(|_| coord.submit(f.clone()).unwrap())
+            .collect();
+        for rx in replies {
+            let resp = rx.recv().unwrap().unwrap();
+            // whichever backend served it, the answer is spike-exact
+            assert_eq!(resp.logits, want.logits, "served by {}", resp.backend);
+            assert!(
+                resp.backend == "sim" || resp.backend == "dense-ref",
+                "unexpected backend {}",
+                resp.backend
+            );
+        }
+        assert_eq!(coord.metrics.snapshot().completed, 12);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn malformed_frame_yields_typed_error_reply() {
+        let net = Arc::new(random_network(36));
+        let coord = Coordinator::start(
+            Arc::clone(&net),
+            ServerConfig { workers: 1, lanes: 1, queue_depth: 4, batch_size: 1, ..Default::default() },
+        )
+        .unwrap();
+        let bad = Frame::from_u8(4, 4, 1, vec![0; 16]).unwrap();
+        let err = coord.submit(bad).unwrap().recv().unwrap().unwrap_err();
+        assert!(matches!(err, EngineError::ShapeMismatch { .. }), "{err}");
+        assert_eq!(coord.metrics.snapshot().failed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn empty_pool_is_rejected() {
+        let err = Coordinator::start_pool(Vec::new(), ServerConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("at least one backend"), "{err}");
     }
 
     #[test]
@@ -268,14 +371,15 @@ mod tests {
         // one slow worker, tiny queue
         let coord = Coordinator::start(
             Arc::clone(&net),
-            ServerConfig { workers: 1, lanes: 1, queue_depth: 2, batch_size: 1 },
-        );
+            ServerConfig { workers: 1, lanes: 1, queue_depth: 2, batch_size: 1, ..Default::default() },
+        )
+        .unwrap();
         let mut busy_seen = false;
         let mut pending = Vec::new();
         for i in 0..64 {
-            match coord.try_submit(img(i)) {
+            match coord.try_submit(frame(i)) {
                 Ok(rx) => pending.push(rx),
-                Err(SubmitError::Busy) => {
+                Err(EngineError::Busy) => {
                     busy_seen = true;
                     break;
                 }
@@ -293,10 +397,10 @@ mod tests {
     #[test]
     fn shutdown_drains_cleanly() {
         let net = Arc::new(random_network(34));
-        let coord = Coordinator::start(Arc::clone(&net), ServerConfig::default());
-        let rx = coord.submit(img(1)).unwrap();
+        let coord = Coordinator::start(Arc::clone(&net), ServerConfig::default()).unwrap();
+        let rx = coord.submit(frame(1)).unwrap();
         coord.shutdown();
         // the in-flight request was served before shutdown completed
-        assert!(rx.recv().is_ok());
+        assert!(rx.recv().unwrap().is_ok());
     }
 }

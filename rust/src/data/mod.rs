@@ -2,7 +2,9 @@
 //! at build time by `python/compile/data.py`).
 
 use crate::artifact::Archive;
-use anyhow::{ensure, Context, Result};
+use crate::engine::error::ensure;
+use crate::engine::Context;
+use crate::Result;
 use std::path::Path;
 
 /// A 28×28 u8 image classification dataset.

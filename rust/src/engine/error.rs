@@ -1,0 +1,214 @@
+//! Typed errors for the `engine` boundary.
+//!
+//! The crate used to thread `anyhow::Result` through every layer; the
+//! serving surface now exposes [`EngineError`] so callers can match on
+//! *what* failed (artifacts missing vs unknown backend vs malformed
+//! frame) instead of parsing strings. The crate carries **zero external
+//! dependencies** — the small amount of machinery `anyhow`/`thiserror`
+//! provided (context chaining, `bail!`/`ensure!`) is reimplemented here.
+
+use std::fmt;
+
+/// Error type of the public engine API (and, via [`crate::Result`], of
+/// the whole crate).
+pub enum EngineError {
+    /// Build-time artifacts (`make artifacts`) are missing or unreadable.
+    Artifacts(String),
+    /// An artifact or metadata file exists but failed to parse/validate.
+    Parse(String),
+    /// A backend name did not resolve; `valid` lists every registered kind.
+    UnknownBackend { given: String, valid: Vec<&'static str> },
+    /// A [`super::Frame`] did not match the shape the backend serves.
+    ShapeMismatch {
+        expected: (usize, usize, usize),
+        got: (usize, usize, usize),
+    },
+    /// A [`super::Frame`] carried the wrong element type.
+    DtypeMismatch { expected: super::Dtype, got: super::Dtype },
+    /// The requested capability is not compiled in or not installed
+    /// (e.g. the PJRT runtime without the `pjrt` cargo feature).
+    Unavailable(String),
+    /// Serving: the bounded request queue is full (backpressure).
+    Busy,
+    /// Serving: the coordinator has shut down.
+    Closed,
+    /// A backend failed while executing an inference.
+    Backend(String),
+    /// Filesystem error with the path that caused it.
+    Io { path: String, source: std::io::Error },
+    /// Free-form context wrapper (produced by [`Context`]).
+    Msg(String),
+}
+
+impl EngineError {
+    /// Free-form error, for internal plumbing that has no richer variant.
+    pub fn msg(m: impl Into<String>) -> Self {
+        EngineError::Msg(m.into())
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::Artifacts(m) => write!(f, "artifacts unavailable: {m}"),
+            EngineError::Parse(m) => write!(f, "parse error: {m}"),
+            EngineError::UnknownBackend { given, valid } => write!(
+                f,
+                "unknown backend '{given}' (valid: {})",
+                valid.join(", ")
+            ),
+            EngineError::ShapeMismatch { expected, got } => write!(
+                f,
+                "frame shape {}x{}x{} does not match backend input {}x{}x{}",
+                got.0, got.1, got.2, expected.0, expected.1, expected.2
+            ),
+            EngineError::DtypeMismatch { expected, got } => {
+                write!(f, "frame dtype {got:?} does not match expected {expected:?}")
+            }
+            EngineError::Unavailable(m) => write!(f, "unavailable: {m}"),
+            EngineError::Busy => write!(f, "queue full (backpressure)"),
+            EngineError::Closed => write!(f, "server is shut down"),
+            EngineError::Backend(m) => write!(f, "backend error: {m}"),
+            EngineError::Io { path, source } => write!(f, "{path}: {source}"),
+            EngineError::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+// `fn main() -> Result<..., EngineError>` (the CLI, the examples, the
+// doctests) prints the error through Debug; delegate to Display so
+// users see "unknown backend 'tpu' (valid: …)" instead of a struct
+// dump. The variant is still matchable; only the rendering changes.
+impl fmt::Debug for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::error::Error for EngineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EngineError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::fmt::Error> for EngineError {
+    fn from(e: std::fmt::Error) -> Self {
+        EngineError::Msg(format!("formatting report output: {e}"))
+    }
+}
+
+impl From<crate::util::json::JsonError> for EngineError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        EngineError::Parse(e.to_string())
+    }
+}
+
+/// `anyhow::Context`-style chaining onto [`EngineError`], for `Result`
+/// and `Option` alike. Wrapping flattens to [`EngineError::Msg`]; match
+/// on typed variants *before* adding context where the type matters.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T, EngineError>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T, EngineError>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T, EngineError> {
+        self.map_err(|e| EngineError::Msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T, EngineError> {
+        self.map_err(|e| EngineError::Msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T, EngineError> {
+        self.ok_or_else(|| EngineError::Msg(msg.to_string()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T, EngineError> {
+        self.ok_or_else(|| EngineError::Msg(f()))
+    }
+}
+
+/// Read a file into memory, attributing failures to the path.
+pub fn read_file(path: &std::path::Path) -> Result<Vec<u8>, EngineError> {
+    std::fs::read(path).map_err(|source| EngineError::Io {
+        path: path.display().to_string(),
+        source,
+    })
+}
+
+/// Read a file as UTF-8 text, attributing failures to the path.
+pub fn read_file_text(path: &std::path::Path) -> Result<String, EngineError> {
+    std::fs::read_to_string(path).map_err(|source| EngineError::Io {
+        path: path.display().to_string(),
+        source,
+    })
+}
+
+/// Early-return with an [`EngineError::Msg`] built from a format string.
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::engine::EngineError::msg(format!($($arg)*)))
+    };
+}
+
+/// Check a condition, early-returning an [`EngineError::Msg`] when it
+/// fails (self-contained so call sites need not also import `bail!`).
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::engine::EngineError::msg(format!($($arg)*)));
+        }
+    };
+}
+
+pub(crate) use bail;
+pub(crate) use ensure;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        let e = EngineError::UnknownBackend {
+            given: "gpu".into(),
+            valid: vec!["sim", "dense-ref"],
+        };
+        let s = e.to_string();
+        assert!(s.contains("gpu") && s.contains("sim") && s.contains("dense-ref"));
+        assert!(EngineError::Busy.to_string().contains("backpressure"));
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.context("loading weights").unwrap_err();
+        let s = e.to_string();
+        assert!(s.contains("loading weights") && s.contains("gone"), "{s}");
+        let n: Option<u32> = None;
+        assert!(n.context("missing key").is_err());
+    }
+
+    #[test]
+    fn macros_produce_msg() {
+        fn f(x: u32) -> Result<u32, EngineError> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(12).unwrap_err().to_string().contains("x too big: 12"));
+        assert!(f(3).unwrap_err().to_string().contains("right out"));
+    }
+}

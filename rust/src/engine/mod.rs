@@ -1,0 +1,192 @@
+//! The unified serving surface: one [`Backend`] trait over every
+//! architecture the repo models.
+//!
+//! The cycle-level simulator ([`crate::sim::Accelerator`]), the dense
+//! frame-based reference ([`crate::sim::dense_ref`]), the three related-
+//! work baselines ([`crate::baseline`]) and the PJRT golden model
+//! ([`crate::runtime`]) all compute the same network; this module gives
+//! them one entry point so the coordinator, the CLI, the benchmarks and
+//! the cross-check harnesses can serve, compare and swap them freely:
+//!
+//! * [`Frame`] — a shape-generic input (H×W×C + [`Dtype`]), replacing the
+//!   fixed 784-byte MNIST slices of the old per-backend APIs.
+//! * [`Inference`] — Vec-backed logits and per-layer
+//!   [`crate::sim::LayerStats`], replacing `[i64; 10]` / `[u64; 3]`.
+//! * [`Backend`] — `infer(&mut self, &Frame) -> Result<Inference>` plus
+//!   `name()` / `cycle_model()` metadata.
+//! * [`BackendKind`] / [`EngineBuilder`] — the registry that constructs
+//!   any backend uniformly from a loaded [`crate::snn::network::Network`].
+//! * [`EngineError`] — the typed error at the boundary (no `anyhow`).
+
+pub mod error;
+pub mod registry;
+
+pub use error::{Context, EngineError};
+pub use registry::{BackendKind, EngineBuilder};
+
+use crate::sim::RunStats;
+
+/// Element type of a [`Frame`]. Every current backend consumes U8
+/// intensity frames (the m-TTFS encoder's input domain); the enum
+/// exists so new dtypes extend the API instead of breaking it.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    /// 8-bit unsigned intensity.
+    U8,
+}
+
+impl Dtype {
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::U8 => 1,
+        }
+    }
+}
+
+/// A shape-generic input frame: H×W×C elements of one [`Dtype`], stored
+/// row-major as raw little-endian bytes. Nothing in the serving path
+/// assumes 28×28 any more — the backend validates the frame against the
+/// network it was built for.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    shape: (usize, usize, usize),
+    dtype: Dtype,
+    data: Vec<u8>,
+}
+
+impl Frame {
+    /// Build a U8 frame, validating `data.len() == h*w*c`.
+    pub fn from_u8(h: usize, w: usize, c: usize, data: Vec<u8>) -> Result<Self, EngineError> {
+        if data.len() != h * w * c {
+            return Err(EngineError::msg(format!(
+                "frame data length {} != {h}x{w}x{c}",
+                data.len()
+            )));
+        }
+        Ok(Frame { shape: (h, w, c), dtype: Dtype::U8, data })
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        self.shape
+    }
+
+    pub fn h(&self) -> usize {
+        self.shape.0
+    }
+
+    pub fn w(&self) -> usize {
+        self.shape.1
+    }
+
+    pub fn c(&self) -> usize {
+        self.shape.2
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Raw bytes (layout defined by [`Self::dtype`]).
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// View as u8 intensities; errors unless the dtype is [`Dtype::U8`].
+    pub fn as_u8(&self) -> Result<&[u8], EngineError> {
+        match self.dtype {
+            Dtype::U8 => Ok(&self.data),
+        }
+    }
+}
+
+/// Result of one inference through any [`Backend`].
+///
+/// `logits` is Vec-backed (`net.n_classes` entries) and `stats` carries
+/// per-layer [`crate::sim::LayerStats`] plus `Vec`-shaped spike counts —
+/// no `[i64; 10]` / `[u64; 3]` fixed-workload assumptions survive at
+/// this boundary.
+#[derive(Clone, Debug)]
+pub struct Inference {
+    /// Argmax class.
+    pub pred: usize,
+    /// Accumulated classifier outputs, one per class.
+    pub logits: Vec<i64>,
+    /// Cycle/utilization counters. Functional-only backends (dense
+    /// reference, PJRT) report `total_cycles == 0` and empty `layers`;
+    /// check [`CycleModel::cycle_accurate`] before quoting throughput.
+    pub stats: RunStats,
+}
+
+/// Static metadata describing how a backend accounts time.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct CycleModel {
+    /// Number of processing elements the architecture instantiates.
+    pub n_pes: usize,
+    /// Modeled clock for FPS/latency conversions.
+    pub clock_hz: f64,
+    /// Whether cycle counts scale with input spikes (event-driven) or
+    /// are sparsity-blind (frame-based).
+    pub event_driven: bool,
+    /// Whether `Inference::stats.total_cycles` is meaningful at all;
+    /// false for purely functional golden models.
+    pub cycle_accurate: bool,
+}
+
+/// One inference engine behind the unified serving surface.
+///
+/// `infer` takes `&mut self` because cycle-accurate backends own reusable
+/// device state (membrane memories, queues); implementations must be
+/// `Send` so the coordinator can move them onto worker threads.
+pub trait Backend: Send {
+    /// Stable human-readable name (matches [`BackendKind::name`]).
+    fn name(&self) -> &'static str;
+
+    /// The registry kind this backend was constructed as.
+    fn kind(&self) -> BackendKind;
+
+    /// How this backend accounts cycles.
+    fn cycle_model(&self) -> CycleModel;
+
+    /// The input fmap shape (H, W, C) this backend serves.
+    fn input_shape(&self) -> (usize, usize, usize);
+
+    /// Run one frame end to end.
+    fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError>;
+}
+
+/// Shared frame validation for network-backed backends.
+pub(crate) fn check_frame<'a>(
+    frame: &'a Frame,
+    expected: (usize, usize, usize),
+) -> Result<&'a [u8], EngineError> {
+    if frame.shape() != expected {
+        return Err(EngineError::ShapeMismatch { expected, got: frame.shape() });
+    }
+    frame.as_u8()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_u8_roundtrip() {
+        let f = Frame::from_u8(2, 3, 1, vec![1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(f.shape(), (2, 3, 1));
+        assert_eq!(f.dtype(), Dtype::U8);
+        assert_eq!(f.as_u8().unwrap(), &[1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn frame_length_validated() {
+        assert!(Frame::from_u8(2, 2, 1, vec![0; 3]).is_err());
+    }
+
+    #[test]
+    fn check_frame_shape() {
+        let f = Frame::from_u8(4, 4, 1, vec![0; 16]).unwrap();
+        assert!(check_frame(&f, (4, 4, 1)).is_ok());
+        let err = check_frame(&f, (28, 28, 1)).unwrap_err();
+        assert!(matches!(err, EngineError::ShapeMismatch { .. }));
+    }
+}

@@ -1,0 +1,494 @@
+//! Backend registry: [`BackendKind`] names every architecture the repo
+//! models and [`EngineBuilder`] constructs any of them uniformly from a
+//! loaded [`Network`] — the simulator, the dense reference, the three
+//! related-work baselines, and (behind the `pjrt` cargo feature) the
+//! AOT-lowered JAX/Pallas golden model.
+
+use super::{check_frame, Backend, CycleModel, EngineError, Frame, Inference};
+use crate::baseline::{self, BaselineResult};
+use crate::cost::CLOCK_HZ;
+use crate::sim::conv_unit::HazardMode;
+use crate::sim::dense_ref::{DenseRef, DenseResult};
+use crate::sim::{AccelConfig, Accelerator, LayerStats, RunStats};
+use crate::snn::network::Network;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Every backend the registry can construct.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Cycle-level simulator of the paper's accelerator (×P lanes).
+    Sim,
+    /// Frame-based integer reference (functional golden, no cycle model).
+    DenseRef,
+    /// Sparsity-blind 9-MAC sliding-window baseline.
+    DenseMac,
+    /// SIES-like systolic-array baseline.
+    Systolic,
+    /// ASIE-like fmap-sized AER PE-array baseline.
+    AerArray,
+    /// PJRT execution of the AOT JAX/Pallas model (`pjrt` feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// All registered kinds, in registry order.
+    pub const ALL: [BackendKind; 6] = [
+        BackendKind::Sim,
+        BackendKind::DenseRef,
+        BackendKind::DenseMac,
+        BackendKind::Systolic,
+        BackendKind::AerArray,
+        BackendKind::Pjrt,
+    ];
+
+    /// Canonical CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Sim => "sim",
+            BackendKind::DenseRef => "dense-ref",
+            BackendKind::DenseMac => "dense-mac",
+            BackendKind::Systolic => "systolic",
+            BackendKind::AerArray => "aer-array",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Canonical names of every registered kind (for error messages and
+    /// `--help` text).
+    pub fn valid_names() -> Vec<&'static str> {
+        Self::ALL.iter().map(|k| k.name()).collect()
+    }
+
+    /// Parse a CLI name (canonical names plus a few aliases); the error
+    /// lists every valid kind.
+    pub fn parse(s: &str) -> Result<Self, EngineError> {
+        match s {
+            "sim" | "accel" | "accelerator" => Ok(BackendKind::Sim),
+            "dense-ref" | "ref" | "reference" => Ok(BackendKind::DenseRef),
+            "dense-mac" | "dense" | "mac" => Ok(BackendKind::DenseMac),
+            "systolic" | "sies" => Ok(BackendKind::Systolic),
+            "aer-array" | "aer" | "asie" => Ok(BackendKind::AerArray),
+            "pjrt" | "jax" | "golden" => Ok(BackendKind::Pjrt),
+            _ => Err(EngineError::UnknownBackend {
+                given: s.to_string(),
+                valid: Self::valid_names(),
+            }),
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = EngineError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s)
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Builder-style constructor for any [`Backend`].
+///
+/// ```text
+/// let backend = EngineBuilder::new(net).lanes(8).build(BackendKind::Sim)?;
+/// ```
+#[derive(Clone)]
+pub struct EngineBuilder {
+    net: Arc<Network>,
+    lanes: usize,
+    hazard_mode: HazardMode,
+    clock_hz: f64,
+    // Only the PJRT backend reads this; keep the builder API identical
+    // in both configurations.
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    artifacts: Option<PathBuf>,
+}
+
+impl EngineBuilder {
+    pub fn new(net: Arc<Network>) -> Self {
+        EngineBuilder {
+            net,
+            lanes: 1,
+            hazard_mode: HazardMode::ForwardAndStall,
+            clock_hz: CLOCK_HZ,
+            artifacts: None,
+        }
+    }
+
+    /// ×P parallelization of the simulated accelerator (ignored by the
+    /// other backends).
+    pub fn lanes(mut self, lanes: usize) -> Self {
+        self.lanes = lanes;
+        self
+    }
+
+    /// Hazard handling of the simulated conv unit (ablations).
+    pub fn hazard_mode(mut self, mode: HazardMode) -> Self {
+        self.hazard_mode = mode;
+        self
+    }
+
+    /// Clock used for FPS/latency conversions in [`CycleModel`].
+    pub fn clock_hz(mut self, hz: f64) -> Self {
+        self.clock_hz = hz;
+        self
+    }
+
+    /// Artifacts directory holding the AOT HLO text files (PJRT backend
+    /// only; defaults to [`crate::artifact::artifacts_dir`]).
+    pub fn artifacts_dir(mut self, dir: PathBuf) -> Self {
+        self.artifacts = Some(dir);
+        self
+    }
+
+    /// Construct one backend of the given kind.
+    pub fn build(&self, kind: BackendKind) -> Result<Box<dyn Backend>, EngineError> {
+        Ok(match kind {
+            BackendKind::Sim => Box::new(Accelerator::new(
+                Arc::clone(&self.net),
+                AccelConfig {
+                    lanes: self.lanes,
+                    hazard_mode: self.hazard_mode,
+                    clock_hz: self.clock_hz,
+                },
+            )),
+            BackendKind::DenseRef => Box::new(DenseRefBackend { net: Arc::clone(&self.net) }),
+            BackendKind::DenseMac | BackendKind::Systolic | BackendKind::AerArray => {
+                Box::new(BaselineBackend {
+                    net: Arc::clone(&self.net),
+                    kind,
+                    clock_hz: self.clock_hz,
+                })
+            }
+            BackendKind::Pjrt => Box::new(self.build_pjrt()?),
+        })
+    }
+
+    /// Construct `n` identical backends (a homogeneous worker pool).
+    pub fn build_pool(
+        &self,
+        kind: BackendKind,
+        n: usize,
+    ) -> Result<Vec<Box<dyn Backend>>, EngineError> {
+        (0..n).map(|_| self.build(kind)).collect()
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn build_pjrt(&self) -> Result<PjrtBackend, EngineError> {
+        let dir = self
+            .artifacts
+            .clone()
+            .unwrap_or_else(crate::artifact::artifacts_dir);
+        PjrtBackend::load(Arc::clone(&self.net), &dir)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn build_pjrt(&self) -> Result<PjrtBackend, EngineError> {
+        Err(EngineError::Unavailable(
+            "PJRT backend requires the `pjrt` cargo feature (and the \
+             vendored xla crate; see rust/src/runtime/mod.rs)"
+                .to_string(),
+        ))
+    }
+}
+
+/// Convert a [`DenseResult`] into the uniform [`Inference`] shape.
+/// Functional backends report no cycles; `layers` stays empty.
+fn dense_inference(r: DenseResult) -> Inference {
+    Inference {
+        pred: r.pred,
+        logits: r.logits,
+        stats: RunStats { spike_counts: r.spike_counts, ..Default::default() },
+    }
+}
+
+/// Convert a [`BaselineResult`]: the whole-run cycle estimate becomes a
+/// single aggregate [`LayerStats`] entry so `pe_utilization()` and
+/// `total_cycles` read uniformly across backends.
+fn baseline_inference(r: BaselineResult) -> Inference {
+    let aggregate = LayerStats {
+        conv_cycles: r.cycles,
+        pe_busy: (r.pe_utilization * r.cycles as f64).round() as u64,
+        wall_cycles: r.cycles,
+        ..Default::default()
+    };
+    Inference {
+        pred: r.result.pred,
+        logits: r.result.logits,
+        stats: RunStats {
+            layers: vec![aggregate],
+            total_cycles: r.cycles,
+            spike_counts: r.result.spike_counts,
+            ..Default::default()
+        },
+    }
+}
+
+/// The frame-based integer reference as a [`Backend`].
+struct DenseRefBackend {
+    net: Arc<Network>,
+}
+
+impl Backend for DenseRefBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::DenseRef.name()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::DenseRef
+    }
+
+    fn cycle_model(&self) -> CycleModel {
+        CycleModel {
+            n_pes: 0,
+            clock_hz: CLOCK_HZ,
+            event_driven: false,
+            cycle_accurate: false,
+        }
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.net.input_shape()
+    }
+
+    fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError> {
+        let img = check_frame(frame, self.input_shape())?;
+        Ok(dense_inference(DenseRef::new(&self.net).infer(img)))
+    }
+}
+
+/// One of the three related-work cycle models as a [`Backend`].
+struct BaselineBackend {
+    net: Arc<Network>,
+    kind: BackendKind,
+    clock_hz: f64,
+}
+
+impl BaselineBackend {
+    fn run(&self, img: &[u8]) -> BaselineResult {
+        match self.kind {
+            BackendKind::DenseMac => baseline::dense::run(&self.net, img),
+            BackendKind::Systolic => baseline::systolic::run(&self.net, img),
+            BackendKind::AerArray => baseline::aer_array::run(&self.net, img),
+            _ => unreachable!("BaselineBackend built for {:?}", self.kind),
+        }
+    }
+}
+
+impl Backend for BaselineBackend {
+    fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    fn cycle_model(&self) -> CycleModel {
+        let n_pes = match self.kind {
+            BackendKind::DenseMac => baseline::dense::N_PES,
+            BackendKind::Systolic => {
+                baseline::systolic::ARRAY_ROWS * baseline::systolic::ARRAY_COLS
+            }
+            _ => baseline::aer_array::n_pes(&self.net),
+        };
+        CycleModel {
+            n_pes,
+            clock_hz: self.clock_hz,
+            event_driven: self.kind == BackendKind::AerArray,
+            cycle_accurate: true,
+        }
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.net.input_shape()
+    }
+
+    fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError> {
+        let img = check_frame(frame, self.input_shape())?;
+        Ok(baseline_inference(self.run(img)))
+    }
+}
+
+/// The AOT JAX/Pallas golden model as a [`Backend`] (PJRT execution).
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    net: Arc<Network>,
+    exe: crate::runtime::Executable,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    /// Compile `model_q{bits}.hlo.txt` from the artifacts directory.
+    pub fn load(net: Arc<Network>, dir: &std::path::Path) -> Result<Self, EngineError> {
+        let path = crate::runtime::hlo_path(dir, &format!("model_q{}", net.bits))?;
+        let rt = crate::runtime::Runtime::cpu()?;
+        let exe = rt.load_hlo(&path)?;
+        Ok(PjrtBackend { net, exe })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::Pjrt.name()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn cycle_model(&self) -> CycleModel {
+        CycleModel {
+            n_pes: 0,
+            clock_hz: CLOCK_HZ,
+            event_driven: false,
+            cycle_accurate: false,
+        }
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.net.input_shape()
+    }
+
+    fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError> {
+        use crate::runtime::Input;
+        use crate::snn::encode::encode_mttfs;
+
+        let img = check_frame(frame, self.input_shape())?;
+        let (h, w, _) = self.input_shape();
+        let t_steps = self.net.t_steps;
+        let frames = encode_mttfs(img, h, w, &self.net.thresholds);
+        let mut buf = vec![0f32; t_steps * h * w];
+        for (t, f) in frames.iter().enumerate() {
+            for (p, &b) in f.iter().enumerate() {
+                buf[t * h * w + p] = b as u8 as f32;
+            }
+        }
+        let outputs = self.exe.run_f32(&[Input {
+            data: &buf,
+            dims: &[t_steps as i64, h as i64, w as i64, 1],
+        }])?;
+        let logits: Vec<i64> = outputs[0].iter().map(|&v| v as i64).collect();
+        let n_layers = self.net.conv.len();
+        let counts = &outputs[1]; // (T, n_layers) spike counts
+        let spike_counts: Vec<Vec<u64>> = (0..t_steps)
+            .map(|t| (0..n_layers).map(|l| counts[t * n_layers + l] as u64).collect())
+            .collect();
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| **v)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok(Inference {
+            pred,
+            logits,
+            stats: RunStats { spike_counts, ..Default::default() },
+        })
+    }
+}
+
+/// Stub so the name exists in both configurations (never constructed
+/// without the feature; `build_pjrt` errors first).
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtBackend {
+    _never: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::Pjrt.name()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn cycle_model(&self) -> CycleModel {
+        match self._never {}
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        match self._never {}
+    }
+
+    fn infer(&mut self, _frame: &Frame) -> Result<Inference, EngineError> {
+        match self._never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::network::testutil::random_network;
+
+    #[test]
+    fn parse_names_and_aliases() {
+        for kind in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(BackendKind::parse("aer").unwrap(), BackendKind::AerArray);
+        assert_eq!(BackendKind::parse("dense").unwrap(), BackendKind::DenseMac);
+        assert_eq!("sim".parse::<BackendKind>().unwrap(), BackendKind::Sim);
+    }
+
+    #[test]
+    fn unknown_kind_lists_valid() {
+        let err = BackendKind::parse("tpu").unwrap_err();
+        let msg = err.to_string();
+        for kind in BackendKind::ALL {
+            assert!(msg.contains(kind.name()), "{msg}");
+        }
+    }
+
+    #[test]
+    fn builder_constructs_every_local_backend() {
+        let net = Arc::new(random_network(11));
+        let builder = EngineBuilder::new(Arc::clone(&net)).lanes(4);
+        for kind in [
+            BackendKind::Sim,
+            BackendKind::DenseRef,
+            BackendKind::DenseMac,
+            BackendKind::Systolic,
+            BackendKind::AerArray,
+        ] {
+            let mut b = builder.build(kind).unwrap();
+            assert_eq!(b.kind(), kind);
+            assert_eq!(b.name(), kind.name());
+            assert_eq!(b.input_shape(), (28, 28, 1));
+            let frame = Frame::from_u8(28, 28, 1, vec![128; 28 * 28]).unwrap();
+            let inf = b.infer(&frame).unwrap();
+            assert_eq!(inf.logits.len(), net.n_classes);
+            assert!(inf.pred < net.n_classes);
+            if b.cycle_model().cycle_accurate {
+                assert!(inf.stats.total_cycles > 0, "{}", b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let net = Arc::new(random_network(12));
+        let mut b = EngineBuilder::new(net).build(BackendKind::DenseRef).unwrap();
+        let frame = Frame::from_u8(4, 4, 1, vec![0; 16]).unwrap();
+        assert!(matches!(
+            b.infer(&frame),
+            Err(EngineError::ShapeMismatch { .. })
+        ));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_unavailable_without_feature() {
+        let net = Arc::new(random_network(13));
+        let err = EngineBuilder::new(net).build(BackendKind::Pjrt).unwrap_err();
+        assert!(matches!(err, EngineError::Unavailable(_)));
+    }
+}

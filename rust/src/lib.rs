@@ -4,8 +4,57 @@
 //! Sparsely Active Convolutional Spiking Neural Networks"* (Sommer, Özkan,
 //! Keszocze, Teich — IEEE TCAD 2022).
 //!
-//! The crate contains:
+//! ## The `engine` serving surface
 //!
+//! Everything inference-shaped goes through one API: the [`engine`]
+//! subsystem defines a [`engine::Backend`] trait (`infer(&mut self,
+//! &Frame) -> Result<Inference, EngineError>` plus `name()` /
+//! `cycle_model()` metadata) with shape-generic [`engine::Frame`] inputs
+//! and Vec-backed [`engine::Inference`] outputs, and a
+//! [`engine::BackendKind`] registry that constructs every architecture
+//! the repo models from one [`snn::network::Network`]:
+//!
+//! | kind        | backed by                         | cycle model        |
+//! |-------------|-----------------------------------|--------------------|
+//! | `sim`       | [`sim::Accelerator`] (×P lanes)   | cycle-accurate, event-driven |
+//! | `dense-ref` | [`sim::dense_ref::DenseRef`]      | functional golden  |
+//! | `dense-mac` | [`baseline::dense`]               | sparsity-blind 9-MAC |
+//! | `systolic`  | [`baseline::systolic`] (SIES-like)| sequential-merge bottleneck |
+//! | `aer-array` | [`baseline::aer_array`] (ASIE-like)| event-driven, fmap-sized array |
+//! | `pjrt`      | [`runtime`] (JAX/Pallas AOT)      | functional golden (`pjrt` feature) |
+//!
+//! Selecting and cross-checking backends takes a few lines — no
+//! artifacts needed with a synthetic network:
+//!
+//! ```
+//! use sacsnn::engine::{Backend, BackendKind, EngineBuilder, Frame};
+//! use sacsnn::snn::network::testutil::random_network;
+//! use std::sync::Arc;
+//!
+//! # fn main() -> sacsnn::Result<()> {
+//! let net = Arc::new(random_network(7));
+//! let builder = EngineBuilder::new(Arc::clone(&net)).lanes(4);
+//! let mut sim = builder.build(BackendKind::Sim)?;
+//! let mut golden = builder.build(BackendKind::DenseRef)?;
+//!
+//! let (h, w, c) = net.input_shape();
+//! let frame = Frame::from_u8(h, w, c, vec![128; h * w * c])?;
+//! let fast = sim.infer(&frame)?;
+//! let reference = golden.infer(&frame)?;
+//! assert_eq!(fast.logits, reference.logits); // spike-exact equivalence
+//! assert!(fast.stats.total_cycles > 0);      // ...with a cycle model
+//!
+//! // unknown kinds fail with the full registry listed
+//! assert!(BackendKind::parse("tpu").is_err());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! ## Module map
+//!
+//! * [`engine`] — the unified serving surface: `Backend` trait, `Frame` /
+//!   `Inference` types, typed [`engine::EngineError`], and the
+//!   `BackendKind` / [`engine::EngineBuilder`] registry.
 //! * [`sim`] — a cycle-level simulator of the proposed accelerator: the
 //!   interlaced Address-Event Queue ([`sim::aeq`]), the interlaced membrane
 //!   memory ([`sim::mempot`]), the 4-stage pipelined convolution unit with
@@ -23,24 +72,32 @@
 //!   m-TTFS input encoding and AER conversion.
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas golden
 //!   model (HLO text artifacts), used for spike-exact cross-checks.
+//!   Gated behind the `pjrt` cargo feature; stubbed otherwise.
 //! * [`coordinator`] — an inference service (router, batcher, worker pool)
-//!   that serves images through the simulated accelerator.
+//!   that serves any `Box<dyn Backend>`, including heterogeneous pools.
 //! * [`artifact`] — readers for the build-time artifacts (tensor archives,
 //!   `meta.json`).
+//! * [`report`] — the paper's tables/figures plus golden cross-checks,
+//!   shared by the CLI and the benches.
 //!
 //! Python/JAX/Pallas appear **only** in the build path (`make artifacts`);
-//! this crate is self-contained at run time.
+//! this crate is self-contained at run time and carries **zero external
+//! dependencies** (errors are the typed [`engine::EngineError`], not
+//! `anyhow`).
 
 pub mod artifact;
 pub mod baseline;
 pub mod coordinator;
 pub mod cost;
 pub mod data;
+pub mod engine;
 pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod snn;
 pub mod util;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub use engine::EngineError;
+
+/// Crate-wide result type over the typed boundary error.
+pub type Result<T, E = EngineError> = std::result::Result<T, E>;

@@ -4,21 +4,24 @@
 //! a small hand-rolled parser lives in this file):
 //!
 //! ```text
-//! sacsnn run        [--dataset mnist] [--bits 8] [--lanes 8] [--index 0]
-//! sacsnn eval       [--dataset mnist] [--bits 8] [--lanes 8] [--n 200]
-//! sacsnn serve      [--workers 4] [--lanes 8] [--requests 200] [--json]
-//! sacsnn golden     [--n 10]          simulator vs AOT JAX model (PJRT)
+//! sacsnn run        [--backend sim] [--dataset mnist] [--bits 8] [--lanes 8] [--index 0]
+//! sacsnn eval       [--backend sim] [--dataset mnist] [--bits 8] [--lanes 8] [--n 200]
+//! sacsnn serve      [--backend sim] [--workers 4] [--lanes 8] [--requests 200] [--json]
+//! sacsnn golden     [--backend sim] [--n 10]   backend vs AOT JAX model (PJRT)
+//! sacsnn backends                              list registered backends
 //! sacsnn table1|table2|table3|table4|table5|fig12|ablate
-//! sacsnn trace-neuron [--index 0]     Fig. 2-style membrane trace
+//! sacsnn trace-neuron [--index 0]              Fig. 2-style membrane trace
 //! ```
+//!
+//! `--backend` accepts any registered [`BackendKind`]; unknown names fail
+//! with the full list of valid kinds.
 
-use anyhow::{bail, Context, Result};
-use sacsnn::artifact::{artifacts_dir, Meta};
 use sacsnn::coordinator::{Coordinator, ServerConfig};
 use sacsnn::data::Dataset;
+use sacsnn::engine::{Backend as _, BackendKind, EngineBuilder, EngineError};
 use sacsnn::report;
-use sacsnn::sim::{AccelConfig, Accelerator};
 use sacsnn::snn::network::Network;
+use sacsnn::Result;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -43,7 +46,7 @@ impl Args {
                     i += 1;
                 }
             } else {
-                bail!("unexpected argument '{a}'");
+                return Err(EngineError::msg(format!("unexpected argument '{a}'")));
             }
         }
         Ok(Args { flags })
@@ -54,7 +57,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("invalid value '{v}' for --{key}")),
+                .map_err(|_| EngineError::msg(format!("invalid value '{v}' for --{key}"))),
         }
     }
 
@@ -62,26 +65,20 @@ impl Args {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// The `--backend` flag, resolved through the registry (errors list
+    /// every valid kind).
+    fn backend(&self) -> Result<BackendKind> {
+        BackendKind::parse(&self.get_str("backend", "sim"))
+    }
+
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 }
 
-fn load_env(dataset: &str, bits: u32) -> Result<(Arc<Network>, Dataset, Meta)> {
-    let dir = artifacts_dir();
-    let meta = Meta::load(&dir.join("meta.json"))
-        .context("run `make artifacts` first")?;
-    let quant = meta.quant(dataset, bits)?;
-    let net = Network::load(
-        &dir,
-        dataset,
-        bits,
-        quant.acc_bits,
-        meta.t_steps,
-        meta.thresholds.clone(),
-    )?;
-    let ds = Dataset::load(&dir, dataset)?;
-    Ok((Arc::new(net), ds, meta))
+fn load_env(dataset: &str, bits: u32) -> Result<(Arc<Network>, Dataset)> {
+    let (net, ds, _) = report::env(dataset, bits)?;
+    Ok((net, ds))
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -89,21 +86,28 @@ fn cmd_run(args: &Args) -> Result<()> {
     let bits: u32 = args.get("bits", 8)?;
     let lanes: usize = args.get("lanes", 8)?;
     let index: usize = args.get("index", 0)?;
-    let (net, ds, _) = load_env(&dataset, bits)?;
-    let mut accel = Accelerator::new(net, AccelConfig { lanes, ..Default::default() });
-    let img = ds.test_image(index);
+    let kind = args.backend()?;
+    let (net, ds) = load_env(&dataset, bits)?;
+    let mut backend = EngineBuilder::new(Arc::clone(&net)).lanes(lanes).build(kind)?;
+    let frame = report::frame_for(&net, &ds, index)?;
     let t0 = Instant::now();
-    let res = accel.infer(img);
+    let res = backend.infer(&frame)?;
     let wall = t0.elapsed();
-    println!("image #{index} (label {})", ds.test_y[index]);
+    let cm = backend.cycle_model();
+    println!("backend: {}   image #{index} (label {})", backend.name(), ds.test_y[index]);
     println!("prediction: {}   logits: {:?}", res.pred, res.logits);
-    println!(
-        "cycles: {}   sim FPS@333MHz: {:.0}   latency: {:.3} ms   (host wall {:?})",
-        res.stats.total_cycles,
-        res.stats.fps(333e6),
-        res.stats.latency_s(333e6) * 1e3,
-        wall,
-    );
+    if cm.cycle_accurate {
+        println!(
+            "cycles: {}   FPS@{:.0}MHz: {:.0}   latency: {:.3} ms   (host wall {:?})",
+            res.stats.total_cycles,
+            cm.clock_hz / 1e6,
+            res.stats.fps(cm.clock_hz),
+            res.stats.latency_s(cm.clock_hz) * 1e3,
+            wall,
+        );
+    } else {
+        println!("functional backend (no cycle model); host wall {wall:?}");
+    }
     for (i, l) in res.stats.layers.iter().enumerate() {
         println!(
             "  layer {}: conv {} cy, thresh {} cy, events {}, stalls {}, \
@@ -125,29 +129,41 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let dataset = args.get_str("dataset", "mnist");
     let bits: u32 = args.get("bits", 8)?;
     let lanes: usize = args.get("lanes", 8)?;
-    let (net, ds, _) = load_env(&dataset, bits)?;
+    let kind = args.backend()?;
+    let (net, ds) = load_env(&dataset, bits)?;
     let n: usize = args.get("n", 200.min(ds.n_test()))?;
     let n = n.min(ds.n_test());
-    let mut accel = Accelerator::new(net, AccelConfig { lanes, ..Default::default() });
+    let mut backend = EngineBuilder::new(Arc::clone(&net)).lanes(lanes).build(kind)?;
+    let cm = backend.cycle_model();
     let mut correct = 0usize;
     let mut cycles = 0u64;
     let t0 = Instant::now();
     for i in 0..n {
-        let res = accel.infer(ds.test_image(i));
+        let res = backend.infer(&report::frame_for(&net, &ds, i)?)?;
         if res.pred == ds.test_y[i] as usize {
             correct += 1;
         }
         cycles += res.stats.total_cycles;
     }
     let wall = t0.elapsed();
-    let avg = cycles as f64 / n as f64;
-    println!("{dataset} q{bits} ×{lanes}: accuracy {}/{n} = {:.2}%", correct, 100.0 * correct as f64 / n as f64);
     println!(
-        "avg cycles/frame {avg:.0} → {:.0} FPS @333 MHz ({:.3} ms latency); host sim {:.1} img/s",
-        333e6 / avg,
-        avg / 333e3,
-        n as f64 / wall.as_secs_f64(),
+        "{dataset} q{bits} [{}] ×{lanes}: accuracy {}/{n} = {:.2}%",
+        backend.name(),
+        correct,
+        100.0 * correct as f64 / n as f64
     );
+    if cm.cycle_accurate {
+        let avg = cycles as f64 / n as f64;
+        println!(
+            "avg cycles/frame {avg:.0} → {:.0} FPS @{:.0} MHz ({:.3} ms latency); host {:.1} img/s",
+            cm.clock_hz / avg,
+            cm.clock_hz / 1e6,
+            avg / cm.clock_hz * 1e3,
+            n as f64 / wall.as_secs_f64(),
+        );
+    } else {
+        println!("functional backend; host {:.1} img/s", n as f64 / wall.as_secs_f64());
+    }
     Ok(())
 }
 
@@ -156,26 +172,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let bits: u32 = args.get("bits", 8)?;
     let cfg = ServerConfig {
         workers: args.get("workers", 4)?,
+        backend: args.backend()?,
         lanes: args.get("lanes", 8)?,
         queue_depth: args.get("queue-depth", 256)?,
         batch_size: args.get("batch", 16)?,
     };
     let requests: usize = args.get("requests", 200)?;
-    let (net, ds, _) = load_env(&dataset, bits)?;
-    let coord = Coordinator::start(net, cfg.clone());
+    let (net, ds) = load_env(&dataset, bits)?;
+    let coord = Coordinator::start(Arc::clone(&net), cfg.clone())?;
     let t0 = Instant::now();
     let mut replies = Vec::with_capacity(requests);
     for i in 0..requests {
-        let img = ds.test_image(i % ds.n_test()).to_vec();
-        replies.push(coord.submit(img).map_err(|e| anyhow::anyhow!("{e}"))?);
+        let frame = report::frame_for(&net, &ds, i % ds.n_test())?;
+        replies.push(coord.submit(frame)?);
     }
-    let mut latencies: Vec<u64> = replies
-        .into_iter()
-        .map(|rx| {
-            let r = rx.recv().expect("worker dropped reply");
-            r.queue_wait_us + r.service_us
-        })
-        .collect();
+    let mut latencies = Vec::with_capacity(replies.len());
+    for rx in replies {
+        let r = rx.recv().map_err(|_| EngineError::Closed)??;
+        latencies.push(r.queue_wait_us + r.service_us);
+    }
     let wall = t0.elapsed();
     latencies.sort_unstable();
     let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
@@ -184,10 +199,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("{}", snap.to_json());
     } else {
         println!(
-            "served {requests} requests in {:.2} s  ({:.0} req/s) with {} workers ×{} lanes",
+            "served {requests} requests in {:.2} s  ({:.0} req/s) with {} × [{}] workers (×{} lanes)",
             wall.as_secs_f64(),
             requests as f64 / wall.as_secs_f64(),
             cfg.workers,
+            cfg.backend,
             cfg.lanes,
         );
         println!(
@@ -205,9 +221,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_golden(args: &Args) -> Result<()> {
     let n: usize = args.get("n", 10)?;
-    let out = report::golden_check(n)?;
+    let out = report::golden_check(n, args.backend()?)?;
     println!("{out}");
     Ok(())
+}
+
+fn cmd_backends() {
+    println!("registered backends (--backend <kind>):");
+    for kind in BackendKind::ALL {
+        let note = match kind {
+            BackendKind::Sim => "cycle-level simulator of the paper's accelerator (×P lanes)",
+            BackendKind::DenseRef => "frame-based integer reference (functional golden)",
+            BackendKind::DenseMac => "sparsity-blind 9-MAC sliding-window baseline",
+            BackendKind::Systolic => "SIES-like systolic array baseline",
+            BackendKind::AerArray => "ASIE-like fmap-sized AER PE array baseline",
+            BackendKind::Pjrt => {
+                "AOT JAX/Pallas golden model (requires the `pjrt` feature \
+                 plus the vendored xla crate; see Cargo.toml)"
+            }
+        };
+        println!("  {:<10} {note}", kind.name());
+    }
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
@@ -222,7 +256,7 @@ fn main() -> Result<()> {
         Some((c, r)) => (c.as_str(), r),
         None => {
             eprintln!(
-                "usage: sacsnn <run|eval|serve|golden|table1..table5|fig12|ablate|trace-neuron> [--flags]"
+                "usage: sacsnn <run|eval|serve|golden|backends|table1..table5|fig12|ablate|trace-neuron> [--flags]"
             );
             std::process::exit(2);
         }
@@ -233,6 +267,10 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
         "golden" => cmd_golden(&args),
+        "backends" => {
+            cmd_backends();
+            Ok(())
+        }
         "table1" => {
             println!("{}", report::table1(args.get("n", 20)?)?);
             Ok(())
@@ -262,6 +300,6 @@ fn main() -> Result<()> {
             Ok(())
         }
         "trace-neuron" => cmd_trace(&args),
-        other => bail!("unknown subcommand '{other}'"),
+        other => Err(EngineError::msg(format!("unknown subcommand '{other}'"))),
     }
 }

@@ -1,30 +1,30 @@
 //! Report generators: every table and figure of the paper's evaluation
 //! (Tables I–V, Fig. 12) plus the ablations and the golden-model check.
 //! Shared by the CLI subcommands and the `cargo bench` harnesses so both
-//! print identical artifacts.
+//! print identical artifacts. Backends are constructed through the
+//! [`crate::engine`] registry, so every row of every table goes through
+//! the same serving surface the coordinator uses.
 
 use crate::artifact::{artifacts_dir, Meta};
-use crate::baseline;
 use crate::cost::power::{PowerModel, TABLE1_PAPER};
 use crate::cost::resources::{ResourceModel, TABLE2_RELATED, TABLE2_THIS_WORK};
 use crate::cost::CLOCK_HZ;
 use crate::data::Dataset;
-use crate::runtime::{Input, Runtime};
+use crate::engine::{Backend, BackendKind, EngineBuilder, EngineError, Frame};
 use crate::sim::conv_unit::HazardMode;
-use crate::sim::dense_ref::DenseRef;
 use crate::sim::{AccelConfig, Accelerator};
 use crate::snn::encode::encode_mttfs;
 use crate::snn::network::Network;
-// (sparsity helper lives in snn::encode; Table III reads it from LayerStats)
-use anyhow::{Context, Result};
+use crate::Result;
 use std::fmt::Write as _;
 use std::sync::Arc;
 
 /// Load the standard environment (network + dataset + meta).
 pub fn env(dataset: &str, bits: u32) -> Result<(Arc<Network>, Dataset, Meta)> {
     let dir = artifacts_dir();
-    let meta = Meta::load(&dir.join("meta.json"))
-        .context("artifacts missing — run `make artifacts`")?;
+    let meta = Meta::load(&dir.join("meta.json")).map_err(|e| {
+        EngineError::Artifacts(format!("run `make artifacts` first ({e})"))
+    })?;
     let quant = meta.quant(dataset, bits)?;
     let net = Network::load(
         &dir,
@@ -36,6 +36,12 @@ pub fn env(dataset: &str, bits: u32) -> Result<(Arc<Network>, Dataset, Meta)> {
     )?;
     let ds = Dataset::load(&dir, dataset)?;
     Ok((Arc::new(net), ds, meta))
+}
+
+/// Wrap a dataset image in an engine [`Frame`] for the network's shape.
+pub fn frame_for(net: &Network, ds: &Dataset, i: usize) -> Result<Frame> {
+    let (h, w, c) = net.input_shape();
+    Frame::from_u8(h, w, c, ds.test_image(i).to_vec())
 }
 
 /// Measured performance of one configuration over `n` test images.
@@ -60,7 +66,7 @@ pub fn measure(net: &Arc<Network>, ds: &Dataset, lanes: usize, n: usize) -> Perf
     let mut busy = 0u64;
     let mut unit_cycles = 0u64;
     for i in 0..n {
-        let res = accel.infer(ds.test_image(i));
+        let res = accel.infer_image(ds.test_image(i));
         cycles += res.stats.total_cycles;
         for l in &res.stats.layers {
             busy += l.pe_busy;
@@ -122,7 +128,7 @@ pub fn table2() -> String {
 pub fn table3() -> Result<String> {
     let (net, ds, _) = env("mnist", 8)?;
     let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
-    let res = accel.infer(ds.test_image(0));
+    let res = accel.infer_image(ds.test_image(0));
     let paper_sparsity = [93.0, 98.0, 98.0];
     let paper_util = [72.0, 58.0, 56.0];
     let mut out = String::new();
@@ -168,7 +174,9 @@ pub fn table4() -> Result<String> {
     Ok(out)
 }
 
-/// Table V: platform comparison on MNIST.
+/// Table V: platform comparison on MNIST. The architectural baselines go
+/// through the engine registry — the same `Backend` objects the
+/// coordinator would serve.
 pub fn table5(n: usize) -> Result<String> {
     let (net8, ds, meta) = env("mnist", 8)?;
     let (net16, _, _) = env("mnist", 16)?;
@@ -177,20 +185,26 @@ pub fn table5(n: usize) -> Result<String> {
     let p8 = measure(&net8, &ds, 8, n);
     let p16 = measure(&net16, &ds, 8, n);
 
-    // Architectural baselines, re-measured on the same workload.
-    let mut sys_cycles = 0u64;
-    let mut aer_cycles = 0u64;
-    let mut dense_cycles = 0u64;
+    // Architectural baselines, re-measured on the same workload through
+    // the unified Backend surface.
+    let builder = EngineBuilder::new(Arc::clone(&net8));
+    let kinds = [BackendKind::Systolic, BackendKind::AerArray, BackendKind::DenseMac];
+    let mut backends: Vec<Box<dyn Backend>> = kinds
+        .iter()
+        .map(|&k| builder.build(k))
+        .collect::<Result<_>>()?;
+    let mut cycles = [0u64; 3];
     let m = n.min(ds.n_test()).max(1);
     for i in 0..m {
-        sys_cycles += baseline::systolic::run(&net8, ds.test_image(i)).cycles;
-        aer_cycles += baseline::aer_array::run(&net8, ds.test_image(i)).cycles;
-        dense_cycles += baseline::dense::run(&net8, ds.test_image(i)).cycles;
+        let f = frame_for(&net8, &ds, i)?;
+        for (c, b) in cycles.iter_mut().zip(backends.iter_mut()) {
+            *c += b.infer(&f)?.stats.total_cycles;
+        }
     }
     // Baseline clocks: SIES 200 MHz (paper Table II), ASIE/dense at ours.
-    let sys_fps = 200e6 / (sys_cycles as f64 / m as f64);
-    let aer_fps = CLOCK_HZ / (aer_cycles as f64 / m as f64);
-    let dense_fps = CLOCK_HZ / (dense_cycles as f64 / m as f64);
+    let sys_fps = 200e6 / (cycles[0] as f64 / m as f64);
+    let aer_fps = CLOCK_HZ / (cycles[1] as f64 / m as f64);
+    let dense_fps = CLOCK_HZ / (cycles[2] as f64 / m as f64);
 
     let mut out = String::new();
     writeln!(out, "Table V — MNIST platform comparison ({n} frames; cited rows from the paper)")?;
@@ -258,7 +272,7 @@ pub fn ablation(n: usize) -> Result<String> {
             AccelConfig { hazard_mode: mode, ..Default::default() },
         );
         for i in 0..n {
-            let r = accel.infer(ds.test_image(i));
+            let r = accel.infer_image(ds.test_image(i));
             cyc[k] += r.stats.total_cycles;
             stalls[k] += r.stats.layers.iter().map(|l| l.stalls).sum::<u64>();
         }
@@ -275,7 +289,7 @@ pub fn ablation(n: usize) -> Result<String> {
     let mut events = 0u64;
     let mut base_cycles = 0u64;
     for i in 0..n {
-        let r = accel.infer(ds.test_image(i));
+        let r = accel.infer_image(ds.test_image(i));
         events += r.stats.layers.iter().map(|l| l.events).sum::<u64>();
         base_cycles += r.stats.total_cycles;
     }
@@ -284,10 +298,12 @@ pub fn ablation(n: usize) -> Result<String> {
     writeln!(out, "[interlacing] monolithic dual-port model:  {} cycles/frame ({:.1}× slower)",
         mono_cycles / n as u64, mono_cycles as f64 / base_cycles as f64)?;
 
-    // 3. queue-based event processing vs dense sliding window
+    // 3. queue-based event processing vs dense sliding window (through
+    // the registry's dense-mac backend)
+    let mut dense = EngineBuilder::new(Arc::clone(&net)).build(BackendKind::DenseMac)?;
     let mut dense_cycles = 0u64;
     for i in 0..n {
-        dense_cycles += baseline::dense::run(&net, ds.test_image(i)).cycles;
+        dense_cycles += dense.infer(&frame_for(&net, &ds, i)?)?.stats.total_cycles;
     }
     writeln!(out, "\n[queues] event-driven (AEQ):   {} cycles/frame", base_cycles / n as u64)?;
     writeln!(out, "[queues] dense sliding window: {} cycles/frame ({:.1}× slower)",
@@ -304,64 +320,45 @@ pub fn ablation(n: usize) -> Result<String> {
     Ok(out)
 }
 
-/// Golden-model cross-check: simulator vs the AOT-lowered JAX/Pallas
-/// model executed via PJRT. Spike-count and argmax exact.
-pub fn golden_check(n: usize) -> Result<String> {
-    let (net, ds, meta) = env("mnist", 8)?;
-    let rt = Runtime::cpu()?;
-    let exe = rt.load_hlo(&artifacts_dir().join("model_q8.hlo.txt"))?;
-    let t_steps = meta.t_steps;
-    let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+/// Golden-model cross-check: any engine backend vs the AOT-lowered
+/// JAX/Pallas model executed via PJRT, both served through the same
+/// `Backend` surface. Spike-count and logit exact. Requires the `pjrt`
+/// cargo feature (typed [`EngineError::Unavailable`] otherwise).
+pub fn golden_check(n: usize, kind: BackendKind) -> Result<String> {
+    if kind == BackendKind::Pjrt {
+        return Err(EngineError::msg(
+            "golden check compares a device backend against the PJRT golden \
+             model; --backend pjrt would compare the golden model with itself",
+        ));
+    }
+    let (net, ds, _) = env("mnist", 8)?;
+    let builder = EngineBuilder::new(Arc::clone(&net));
+    let mut golden = builder.build(BackendKind::Pjrt)?;
+    let mut backend = builder.build(kind)?;
     let mut out = String::new();
     let n = n.min(ds.n_test()).max(1);
     let mut agree = 0usize;
     for i in 0..n {
-        let img = ds.test_image(i);
-        // JAX golden: frames (T, 28, 28, 1) f32
-        let frames = encode_mttfs(img, 28, 28, &net.thresholds);
-        let mut buf = vec![0f32; t_steps * 28 * 28];
-        for (t, f) in frames.iter().enumerate() {
-            for (p, &b) in f.iter().enumerate() {
-                buf[t * 784 + p] = b as u8 as f32;
-            }
-        }
-        let outputs = exe.run_f32(&[Input {
-            data: &buf,
-            dims: &[t_steps as i64, 28, 28, 1],
-        }])?;
-        let logits = &outputs[0];
-        let counts = &outputs[1]; // (T, 3)
-        let jax_pred = logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(k, _)| k)
-            .unwrap();
-
-        let (res, per_t) = accel.infer_traced(img);
-        let mut ok = res.pred == jax_pred;
-        // logits exact (integer-valued f32 golden vs i64 sim)
-        for k in 0..10 {
-            if (logits[k] as i64) != res.logits[k] {
-                ok = false;
-            }
-        }
-        for t in 0..t_steps {
-            for l in 0..3 {
-                if counts[t * 3 + l] as u64 != per_t[t][l] {
-                    ok = false;
-                }
-            }
-        }
+        let frame = frame_for(&net, &ds, i)?;
+        let jax = golden.infer(&frame)?;
+        let dev = backend.infer(&frame)?;
+        // logits exact (integer-valued f32 golden vs i64 device logits)
+        // plus the per-(t, layer) spike counts both backends report.
+        let ok = dev.pred == jax.pred
+            && dev.logits == jax.logits
+            && dev.stats.spike_counts == jax.stats.spike_counts;
         if ok {
             agree += 1;
         } else {
-            writeln!(out, "  image {i}: MISMATCH sim pred {} logits {:?} vs jax pred {jax_pred}",
-                res.pred, res.logits)?;
+            writeln!(out, "  image {i}: MISMATCH {} pred {} logits {:?} vs jax pred {} logits {:?}",
+                backend.name(), dev.pred, dev.logits, jax.pred, jax.logits)?;
         }
     }
-    writeln!(out, "golden check: {agree}/{n} images spike-exact (logits + per-(t,layer) spike counts)")?;
-    anyhow::ensure!(agree == n, "golden mismatch:\n{out}");
+    writeln!(out, "golden check [{}]: {agree}/{n} images spike-exact (logits + per-(t,layer) spike counts)",
+        backend.name())?;
+    if agree != n {
+        return Err(EngineError::msg(format!("golden mismatch:\n{out}")));
+    }
     Ok(out)
 }
 
@@ -370,9 +367,8 @@ pub fn golden_check(n: usize) -> Result<String> {
 pub fn trace_neuron(index: usize) -> Result<String> {
     let (net, ds, _) = env("mnist", 8)?;
     let img = ds.test_image(index.min(ds.n_test() - 1));
-    let dense = DenseRef::new(&net);
-    let _ = dense; // functional result not needed; we trace manually below
-    let frames = encode_mttfs(img, 28, 28, &net.thresholds);
+    let (h, w, _) = net.input_shape();
+    let frames = encode_mttfs(img, h, w, &net.thresholds);
     // manually integrate one channel (c=0) and pick the neuron with the
     // largest final membrane
     let layer = &net.conv[0];
@@ -386,7 +382,7 @@ pub fn trace_neuron(index: usize) -> Result<String> {
                 let mut acc = vm[ox * wo + oy];
                 for ky in 0..3 {
                     for kx in 0..3 {
-                        if f[(ox + ky) * 28 + (oy + kx)] {
+                        if f[(ox + ky) * w + (oy + kx)] {
                             acc += kernel[ky * 3 + kx] as i64;
                         }
                     }

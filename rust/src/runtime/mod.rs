@@ -9,47 +9,22 @@
 //! /opt/xla-example/README.md).
 //!
 //! Used by the golden-model cross-check (simulator vs JAX, spike-exact)
-//! and available to the coordinator as an alternative functional backend.
+//! and served through [`crate::engine::Backend`] as the `pjrt` backend.
+//!
+//! ## The `pjrt` cargo feature
+//!
+//! The `xla` crate (PJRT bindings) is **not** an unconditional
+//! dependency: the default build must work on machines without the
+//! vendored XLA toolchain, so the real implementation is gated behind
+//! the `pjrt` feature. Without it this module keeps the same API but
+//! every entry point returns [`EngineError::Unavailable`], and the
+//! engine registry refuses to construct [`crate::engine::BackendKind::Pjrt`].
+//! To enable: add the vendored `xla` crate as a path dependency in
+//! `Cargo.toml` and build with `--features pjrt`.
 
-use anyhow::{Context, Result};
+use crate::engine::EngineError;
+use crate::Result;
 use std::path::Path;
-
-/// A PJRT client (CPU).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load an HLO-text artifact and compile it (one compiled executable
-    /// per model variant; compile once, execute many).
-    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe })
-    }
-}
-
-/// A compiled executable.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-}
 
 /// An f32 input tensor (data + dims).
 pub struct Input<'a> {
@@ -57,45 +32,175 @@ pub struct Input<'a> {
     pub dims: &'a [i64],
 }
 
-impl Executable {
-    /// Execute with f32 inputs; returns the flattened f32 outputs of the
-    /// result tuple (jax lowers with `return_tuple=True`).
-    pub fn run_f32(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|inp| {
-                let lit = xla::Literal::vec1(inp.data);
-                lit.reshape(inp.dims).context("reshaping input literal")
-            })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .context("executing PJRT computation")?[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let parts = result.to_tuple().context("decomposing result tuple")?;
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<f32>().context("reading f32 output"))
-            .collect()
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::Input;
+    use crate::engine::Context;
+    use crate::Result;
+    use std::path::Path;
+
+    /// A PJRT client (CPU).
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
+
+    impl Runtime {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact and compile it (one compiled
+        /// executable per model variant; compile once, execute many).
+        pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Executable { exe })
+        }
+    }
+
+    /// A compiled executable.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Executable {
+        /// Execute with f32 inputs; returns the flattened f32 outputs of
+        /// the result tuple (jax lowers with `return_tuple=True`).
+        pub fn run_f32(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|inp| {
+                    let lit = xla::Literal::vec1(inp.data);
+                    lit.reshape(inp.dims).context("reshaping input literal")
+                })
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .context("executing PJRT computation")?[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            let parts = result.to_tuple().context("decomposing result tuple")?;
+            parts
+                .into_iter()
+                .map(|p| p.to_vec::<f32>().context("reading f32 output"))
+                .collect()
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{Executable, Runtime};
+
+/// Stub implementations when the `pjrt` feature is off: identical API,
+/// every entry point reports [`EngineError::Unavailable`].
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::{unavailable, Input};
+    use crate::Result;
+    use std::path::Path;
+
+    /// PJRT client placeholder (`pjrt` feature disabled).
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            Err(unavailable())
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load_hlo(&self, _path: &Path) -> Result<Executable> {
+            Err(unavailable())
+        }
+    }
+
+    /// Compiled-executable placeholder (`pjrt` feature disabled).
+    pub struct Executable {
+        _private: (),
+    }
+
+    impl Executable {
+        pub fn run_f32(&self, _inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+            Err(unavailable())
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+fn unavailable() -> EngineError {
+    EngineError::Unavailable(
+        "PJRT runtime not compiled in: build with `--features pjrt` and the \
+         vendored xla crate (see rust/src/runtime/mod.rs)"
+            .to_string(),
+    )
+}
+
+/// True when PJRT support is compiled into this binary.
+pub const fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}
+
+/// Resolve the HLO text artifact for a model variant, checking existence
+/// up front so callers get an [`EngineError::Artifacts`] with the path
+/// instead of a late compile failure.
+pub fn hlo_path(dir: &Path, stem: &str) -> Result<std::path::PathBuf> {
+    let path = dir.join(format!("{stem}.hlo.txt"));
+    if !path.exists() {
+        return Err(EngineError::Artifacts(format!(
+            "missing HLO artifact {} — run `make artifacts`",
+            path.display()
+        )));
+    }
+    Ok(path)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::artifact::artifacts_dir;
 
-    fn have_artifacts() -> bool {
-        crate::artifact::is_complete(&artifacts_dir())
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!pjrt_enabled());
+        let err = Runtime::cpu().unwrap_err();
+        assert!(matches!(err, EngineError::Unavailable(_)), "{err}");
+        assert!(err.to_string().contains("pjrt"));
     }
 
     #[test]
+    fn hlo_path_missing_is_artifacts_error() {
+        let err = hlo_path(Path::new("/nonexistent-dir"), "model_q8").unwrap_err();
+        assert!(matches!(err, EngineError::Artifacts(_)), "{err}");
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[test]
     fn load_and_run_layer_step() {
+        use crate::artifact::artifacts_dir;
         // artifacts are produced by `make artifacts`; skip quietly if the
         // build hasn't run (CI stages python first).
-        if !have_artifacts() {
+        if !crate::artifact::is_complete(&artifacts_dir()) {
             eprintln!("skipping: artifacts/ not built");
             return;
         }

@@ -28,7 +28,7 @@ use crate::sim::aeq::{Aeq, ReadSlot};
 use crate::sim::interlace::{self, COLUMNS};
 use crate::sim::mempot::MemPot;
 use crate::snn::sat::Sat;
-use once_cell::sync::Lazy;
+use std::sync::LazyLock;
 
 /// Flat-address sentinel for out-of-bounds window targets.
 const OOB: u32 = u32::MAX;
@@ -37,7 +37,7 @@ const OOB: u32 = u32::MAX;
 /// patterns, one per (px mod 3, py mod 3) — the hardware's "9 different
 /// permutations of the kernel weights" (paper §VI-B), resolved once.
 /// Entry: per target column s, (dx, dy, kidx) with ox = px + dx.
-static TARGET_LUT: Lazy<[[(i8, i8, u8); COLUMNS]; 9]> = Lazy::new(|| {
+static TARGET_LUT: LazyLock<[[(i8, i8, u8); COLUMNS]; 9]> = LazyLock::new(|| {
     let mut lut = [[(0i8, 0i8, 0u8); COLUMNS]; 9];
     for pxm in 0..3 {
         for pym in 0..3 {

@@ -1,6 +1,7 @@
 //! The accelerator top level (paper Fig. 3) with ×P parallelization
 //! (paper Table I) and the FC classification unit.
 
+use crate::engine::{check_frame, Backend, BackendKind, CycleModel, EngineError, Frame, Inference};
 use crate::sim::aeq::Aeq;
 use crate::sim::conv_unit::{ConvUnit, HazardMode};
 use crate::sim::mempot::MultiMem;
@@ -33,16 +34,8 @@ impl Default for AccelConfig {
     }
 }
 
-/// Result of one inference on the simulated accelerator.
-#[derive(Clone, Debug)]
-pub struct InferenceResult {
-    pub pred: usize,
-    pub logits: [i64; 10],
-    pub stats: RunStats,
-}
-
 /// The simulated accelerator. Owns its (multiplexed) MemPot and units;
-/// reusable across inferences (`infer` takes `&mut self`).
+/// reusable across inferences (`infer_image` takes `&mut self`).
 pub struct Accelerator {
     pub net: Arc<Network>,
     pub cfg: AccelConfig,
@@ -71,35 +64,68 @@ impl Accelerator {
         }
     }
 
-    /// Encode a 28×28 u8 frame into the input-layer AEQs (one channel).
+    /// Encode an input frame (the network's H×W u8 fmap, single channel)
+    /// into the input-layer AEQs.
     pub fn encode_input(&self, img: &[u8]) -> LayerQueues {
-        let frames = encode_mttfs(img, 28, 28, &self.net.thresholds);
+        let (h, w, _) = self.net.input_shape();
+        let frames = encode_mttfs(img, h, w, &self.net.thresholds);
         LayerQueues {
             q: vec![frames
                 .iter()
-                .map(|f| Aeq::from_events(&frames_to_events(f, 28, 28)))
+                .map(|f| Aeq::from_events(&frames_to_events(f, h, w)))
                 .collect()],
         }
     }
 
-    /// Run one image through the full accelerator.
-    pub fn infer(&mut self, img: &[u8]) -> InferenceResult {
+    /// Run one image (row-major H·W u8 slice) through the accelerator.
+    pub fn infer_image(&mut self, img: &[u8]) -> Inference {
         let input = self.encode_input(img);
         self.infer_from_queues(input)
     }
 
+    /// FC classification unit over a layer boundary's queues:
+    /// event-driven adds, one event per cycle, plus one bias cycle per
+    /// timestep. Returns (logits, classifier cycles).
+    fn classify(&self, queues: &LayerQueues) -> (Vec<i64>, u64) {
+        let net = &self.net;
+        let mut acc = vec![0i64; net.n_classes];
+        let mut cycles = 0u64;
+        for t in 0..net.t_steps {
+            for (k, acc_k) in acc.iter_mut().enumerate() {
+                *acc_k += net.fc_b[k] as i64;
+            }
+            cycles += 1;
+            for (c, ch) in queues.q.iter().enumerate() {
+                for slot in ch[t].read_slots() {
+                    if let crate::sim::aeq::ReadSlot::Event { x, y, .. } = slot {
+                        let flat = net.fc_index(x as usize, y as usize, c);
+                        for (k, acc_k) in acc.iter_mut().enumerate() {
+                            *acc_k += net.fc_w[flat * net.n_classes + k] as i64;
+                        }
+                        cycles += 1;
+                    }
+                }
+            }
+        }
+        (acc, cycles)
+    }
+
     /// Run from pre-encoded input queues (used by the coordinator, which
     /// encodes off the accelerator's critical path).
-    pub fn infer_from_queues(&mut self, input: LayerQueues) -> InferenceResult {
+    pub fn infer_from_queues(&mut self, input: LayerQueues) -> Inference {
         let net = Arc::clone(&self.net);
         let t_steps = net.t_steps;
+        let n_layers = net.conv.len();
         let mut stats = RunStats::default();
         let mut queues = input;
 
         // Host interface loads the input AEQs serially (1 event/cycle).
         stats.redistribution_cycles += queues.total_events();
 
-        let n_layers = net.conv.len();
+        // Per-(t, layer) spike counts — the golden cross-check signal —
+        // counted from each layer's output queues as they stream past,
+        // so no boundary has to be retained.
+        let mut spike_counts = vec![vec![0u64; n_layers]; t_steps];
         for (li, layer) in net.conv.iter().enumerate() {
             let (out, ls) = process_layer(
                 layer,
@@ -120,116 +146,58 @@ impl Accelerator {
                 stats.redistribution_cycles += ls.spikes_out;
             }
             stats.layers.push(ls);
+            for (t, counts) in spike_counts.iter_mut().enumerate() {
+                counts[li] = out.events_at(t);
+            }
             queues = out;
         }
         stats.total_cycles += stats.redistribution_cycles;
 
-        // Per-(t, layer) spike counts: layer 3 recovered from the retained
-        // final queues here; infer_traced keeps every boundary.
-        let mut spike_counts = vec![[0u64; 3]; t_steps];
-        for (t, counts) in spike_counts.iter_mut().enumerate() {
-            counts[2] = queues.events_at(t);
-        }
-
-        // FC classification unit: event-driven adds, one event per cycle,
-        // plus one bias cycle per timestep.
-        let mut acc = [0i64; 10];
-        let mut classifier_cycles = 0u64;
-        let (qh, qw, _) = net.conv.last().unwrap().queue_shape();
-        for t in 0..t_steps {
-            for (k, acc_k) in acc.iter_mut().enumerate() {
-                *acc_k += net.fc_b[k] as i64;
-            }
-            classifier_cycles += 1;
-            for (c, ch) in queues.q.iter().enumerate() {
-                for slot in ch[t].read_slots() {
-                    if let crate::sim::aeq::ReadSlot::Event { x, y, .. } = slot {
-                        let flat = net.fc_index(x as usize, y as usize, c);
-                        for (k, acc_k) in acc.iter_mut().enumerate() {
-                            *acc_k += net.fc_w[flat * 10 + k] as i64;
-                        }
-                        classifier_cycles += 1;
-                    }
-                }
-            }
-        }
-        let _ = (qh, qw);
+        let (acc, classifier_cycles) = self.classify(&queues);
         stats.classifier_cycles = classifier_cycles;
         stats.total_cycles += classifier_cycles;
         stats.spike_counts = spike_counts;
 
-        let pred = acc
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, v)| **v)
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-        InferenceResult { pred, logits: acc, stats }
+        let pred = argmax(&acc);
+        Inference { pred, logits: acc, stats }
     }
 
-    /// Run one image and also return per-(t, layer) spike counts for the
-    /// golden-model cross-check (keeps all boundary queues alive).
-    pub fn infer_traced(&mut self, img: &[u8]) -> (InferenceResult, Vec<[u64; 3]>) {
-        let net = Arc::clone(&self.net);
-        let t_steps = net.t_steps;
-        let input = self.encode_input(img);
-        let mut boundaries: Vec<LayerQueues> = Vec::new();
-        let mut queues = input;
-        let mut stats = RunStats::default();
-        stats.redistribution_cycles += queues.total_events();
-        let n_layers = net.conv.len();
-        for (li, layer) in net.conv.iter().enumerate() {
-            let (out, ls) = process_layer(
-                layer,
-                &queues,
-                &mut self.mem,
-                &self.conv,
-                &self.thresh,
-                net.sat,
-                self.cfg.lanes,
-            );
-            stats.total_cycles += ls.wall_cycles;
-            if li + 1 < n_layers {
-                stats.redistribution_cycles += ls.spikes_out;
-            }
-            stats.layers.push(ls);
-            boundaries.push(std::mem::replace(&mut queues, out));
-        }
-        boundaries.push(queues);
-        stats.total_cycles += stats.redistribution_cycles;
+}
 
-        let mut per_t = vec![[0u64; 3]; t_steps];
-        for (li, b) in boundaries.iter().skip(1).enumerate() {
-            for (t, counts) in per_t.iter_mut().enumerate() {
-                counts[li] = b.events_at(t);
-            }
+fn argmax(acc: &[i64]) -> usize {
+    acc.iter()
+        .enumerate()
+        .max_by_key(|(_, v)| **v)
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+impl Backend for Accelerator {
+    fn name(&self) -> &'static str {
+        BackendKind::Sim.name()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sim
+    }
+
+    fn cycle_model(&self) -> CycleModel {
+        CycleModel {
+            // 9 PEs per convolution core, one core per lane.
+            n_pes: 9 * self.cfg.lanes,
+            clock_hz: self.cfg.clock_hz,
+            event_driven: true,
+            cycle_accurate: true,
         }
-        // classifier over the final boundary
-        let last = boundaries.last().unwrap();
-        let mut acc = [0i64; 10];
-        for t in 0..t_steps {
-            for (k, acc_k) in acc.iter_mut().enumerate() {
-                *acc_k += net.fc_b[k] as i64;
-            }
-            for (c, ch) in last.q.iter().enumerate() {
-                for slot in ch[t].read_slots() {
-                    if let crate::sim::aeq::ReadSlot::Event { x, y, .. } = slot {
-                        let flat = net.fc_index(x as usize, y as usize, c);
-                        for (k, acc_k) in acc.iter_mut().enumerate() {
-                            *acc_k += net.fc_w[flat * 10 + k] as i64;
-                        }
-                    }
-                }
-            }
-        }
-        let pred = acc
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, v)| **v)
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-        stats.spike_counts = per_t.clone();
-        (InferenceResult { pred, logits: acc, stats }, per_t)
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.net.input_shape()
+    }
+
+    fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError> {
+        let img = check_frame(frame, self.input_shape())?;
+        Ok(self.infer_image(img))
     }
 }
 
@@ -256,14 +224,14 @@ mod tests {
             let img = random_image(rng.next_u64());
             let dense = DenseRef::new(&net).infer(&img);
             let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
-            let (res, per_t) = accel.infer_traced(&img);
+            let res = accel.infer_image(&img);
             if res.logits != dense.logits {
                 return Err(format!(
                     "logits differ:\n sim   {:?}\n dense {:?}",
                     res.logits, dense.logits
                 ));
             }
-            for (t, counts) in per_t.iter().enumerate() {
+            for (t, counts) in res.stats.spike_counts.iter().enumerate() {
                 if *counts != dense.spike_counts[t] {
                     return Err(format!(
                         "spike counts differ at t={t}: sim {:?} dense {:?}",
@@ -287,8 +255,8 @@ mod tests {
             Arc::clone(&net),
             AccelConfig { lanes: 8, ..Default::default() },
         );
-        let a = r1.infer(&img);
-        let b = r8.infer(&img);
+        let a = r1.infer_image(&img);
+        let b = r8.infer_image(&img);
         assert_eq!(a.logits, b.logits);
         assert!(b.stats.total_cycles < a.stats.total_cycles);
     }
@@ -302,8 +270,8 @@ mod tests {
         let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
         let dark = vec![30u8; 784]; // below all thresholds → no spikes
         let bright = vec![250u8; 784]; // above all → maximum spikes
-        let d = accel.infer(&dark);
-        let b = accel.infer(&bright);
+        let d = accel.infer_image(&dark);
+        let b = accel.infer_image(&bright);
         assert!(
             b.stats.total_cycles > d.stats.total_cycles,
             "bright {} !> dark {}",
@@ -317,9 +285,32 @@ mod tests {
         let net = Arc::new(random_network(79));
         let img = random_image(9);
         let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
-        let a = accel.infer(&img);
-        let b = accel.infer(&img);
+        let a = accel.infer_image(&img);
+        let b = accel.infer_image(&img);
         assert_eq!(a.logits, b.logits);
         assert_eq!(a.stats.total_cycles, b.stats.total_cycles);
+    }
+
+    #[test]
+    fn every_inference_carries_full_spike_counts() {
+        let net = Arc::new(random_network(80));
+        let img = random_image(10);
+        let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let res = accel.infer_image(&img);
+        assert_eq!(res.stats.spike_counts.len(), net.t_steps);
+        assert_eq!(res.stats.spike_counts[0].len(), net.conv.len());
+    }
+
+    #[test]
+    fn backend_trait_matches_inherent_inference() {
+        let net = Arc::new(random_network(81));
+        let img = random_image(11);
+        let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want = accel.infer_image(&img);
+        let frame = Frame::from_u8(28, 28, 1, img).unwrap();
+        let got = Backend::infer(&mut accel, &frame).unwrap();
+        assert_eq!(got.logits, want.logits);
+        assert_eq!(got.stats.total_cycles, want.stats.total_cycles);
+        assert!(accel.cycle_model().event_driven);
     }
 }

@@ -2,26 +2,29 @@
 //! implementation the event-driven accelerator must match **exactly**
 //! (same quantized integer domain, same saturation arithmetic, same
 //! m-TTFS semantics). Used by the test-suite to validate the simulator
-//! end-to-end and by the baseline cycle models as their functional core.
+//! end-to-end, by the baseline cycle models as their functional core,
+//! and served through [`crate::engine::Backend`] as the `dense-ref`
+//! backend.
 
 use crate::snn::encode::encode_mttfs;
 use crate::snn::network::Network;
 use crate::snn::sat::Sat;
 
-/// Result of a dense reference inference.
+/// Result of a dense reference inference (Vec-backed: one logit per
+/// class, one spike count per layer — no fixed-workload arrays).
 #[derive(Clone, Debug)]
 pub struct DenseResult {
-    pub logits: [i64; 10],
+    pub logits: Vec<i64>,
     pub pred: usize,
-    /// Spikes per (timestep, layer) — layer 2 counted after pooling.
-    pub spike_counts: Vec<[u64; 3]>,
+    /// Spikes per (timestep, layer) — pooled layers counted after pooling.
+    pub spike_counts: Vec<Vec<u64>>,
     /// Total input events per layer (for sparsity bookkeeping).
-    pub layer_input_events: [u64; 3],
+    pub layer_input_events: Vec<u64>,
 }
 
 /// Dense per-layer state.
 struct LayerState {
-    vm: Vec<i32>,    // [cout][ho*wo] flattened
+    vm: Vec<i32>, // [cout][ho*wo] flattened
     fired: Vec<bool>,
 }
 
@@ -67,11 +70,15 @@ impl<'a> DenseRef<'a> {
         }
     }
 
-    /// Full inference on a 28×28 u8 image.
+    /// Full inference on an input image (row-major H·W u8 slice of the
+    /// network's input fmap).
     pub fn infer(&self, img: &[u8]) -> DenseResult {
         let net = self.net;
         let sat = net.sat;
-        let frames = encode_mttfs(img, 28, 28, &net.thresholds);
+        let (h0, w0, _) = net.input_shape();
+        let n_layers = net.conv.len();
+        let n_classes = net.n_classes;
+        let frames = encode_mttfs(img, h0, w0, &net.thresholds);
         let t_steps = net.t_steps;
 
         let mut states: Vec<LayerState> = net
@@ -82,14 +89,14 @@ impl<'a> DenseRef<'a> {
                 LayerState { vm: vec![0; ho * wo * co], fired: vec![false; ho * wo * co] }
             })
             .collect();
-        let mut acc = [0i64; 10];
+        let mut acc = vec![0i64; n_classes];
         let mut spike_counts = Vec::with_capacity(t_steps);
-        let mut layer_input_events = [0u64; 3];
+        let mut layer_input_events = vec![0u64; n_layers];
 
         for frame in frames.iter().take(t_steps) {
             let mut input: Vec<Vec<bool>> = vec![frame.clone()];
-            let (mut h, mut w) = (28usize, 28usize);
-            let mut counts = [0u64; 3];
+            let (mut h, mut w) = (h0, w0);
+            let mut counts = vec![0u64; n_layers];
 
             for (li, layer) in net.conv.iter().enumerate() {
                 let (ho, wo, co) = layer.out_shape;
@@ -150,20 +157,19 @@ impl<'a> DenseRef<'a> {
             for (k, acc_k) in acc.iter_mut().enumerate() {
                 *acc_k += net.fc_b[k] as i64;
             }
-            let (qh, qw, qc) = net.conv.last().unwrap().queue_shape();
+            let (qh, qw, _) = net.conv.last().unwrap().queue_shape();
             for (c, ch) in input.iter().enumerate() {
                 for x in 0..qh {
                     for y in 0..qw {
                         if ch[x * qw + y] {
                             let flat = net.fc_index(x, y, c);
-                            for k in 0..10 {
-                                acc[k] += net.fc_w[flat * 10 + k] as i64;
+                            for (k, acc_k) in acc.iter_mut().enumerate() {
+                                *acc_k += net.fc_w[flat * n_classes + k] as i64;
                             }
                         }
                     }
                 }
             }
-            let _ = qc;
             spike_counts.push(counts);
         }
 
@@ -194,6 +200,8 @@ mod tests {
         assert_eq!(r1.pred, r2.pred);
         assert_eq!(r1.spike_counts, r2.spike_counts);
         assert!(r1.pred < 10);
+        assert_eq!(r1.logits.len(), net.n_classes);
+        assert_eq!(r1.layer_input_events.len(), net.conv.len());
     }
 
     #[test]
@@ -204,7 +212,7 @@ mod tests {
         let mut rng = Pcg::new(2);
         let img: Vec<u8> = (0..784).map(|_| rng.below(256) as u8).collect();
         let r = DenseRef::new(&net).infer(&img);
-        for l in 0..3 {
+        for l in 0..net.conv.len() {
             for t in 1..r.spike_counts.len() {
                 assert!(
                     r.spike_counts[t][l] >= r.spike_counts[t - 1][l],

@@ -34,5 +34,5 @@ pub mod scheduler;
 pub mod stats;
 pub mod threshold_unit;
 
-pub use self::core::{Accelerator, AccelConfig, InferenceResult};
+pub use self::core::{AccelConfig, Accelerator};
 pub use stats::{LayerStats, RunStats};

@@ -53,8 +53,9 @@ pub struct RunStats {
     /// End-to-end cycles for the frame (layers sequential + classifier).
     pub total_cycles: u64,
     /// Spike counts per (timestep, layer) — the cross-check signal against
-    /// the JAX golden model's `spike_counts` output.
-    pub spike_counts: Vec<[u64; 3]>,
+    /// the JAX golden model's `spike_counts` output. `spike_counts[t]` has
+    /// one entry per layer (Vec-shaped; no fixed 3-layer assumption).
+    pub spike_counts: Vec<Vec<u64>>,
 }
 
 impl RunStats {

@@ -14,8 +14,10 @@
 //! datapath applies the 180°-rotated kernel (paper Fig. 4).
 
 use crate::artifact::Archive;
+use crate::engine::error::ensure;
+use crate::engine::Context;
 use crate::snn::sat::Sat;
-use anyhow::{ensure, Context, Result};
+use crate::Result;
 use std::path::Path;
 
 /// One convolutional IF layer (quantized integer domain).
@@ -149,6 +151,12 @@ impl Network {
         })
     }
 
+    /// Input fmap shape (H, W, C) of the first layer — the frame shape
+    /// every [`crate::engine::Backend`] built on this network serves.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        self.conv.first().map(|l| l.in_shape).unwrap_or((0, 0, 0))
+    }
+
     /// Total number of spiking neurons (membrane potentials) per channel
     /// multiplexing step — the largest single-channel fmap (paper §V-D).
     pub fn max_channel_neurons(&self) -> usize {
@@ -168,7 +176,9 @@ impl Network {
     }
 }
 
-#[cfg(test)]
+/// Synthetic-network helpers. Compiled unconditionally (not just under
+/// `cfg(test)`) so integration tests, doctests and benches can build
+/// seeded networks without artifacts.
 pub mod testutil {
     use super::*;
     use crate::util::prng::Pcg;
