@@ -105,7 +105,11 @@ impl Frame {
 /// per-layer [`crate::sim::LayerStats`] plus `Vec`-shaped spike counts —
 /// no `[i64; 10]` / `[u64; 3]` fixed-workload assumptions survive at
 /// this boundary.
-#[derive(Clone, Debug)]
+/// The `Default` value (empty logits, zeroed stats) doubles as the
+/// reusable output container for `*_into` inference APIs (e.g.
+/// [`crate::sim::Accelerator::infer_image_into`]): buffers grow on first
+/// use and are recycled afterwards.
+#[derive(Clone, Debug, Default)]
 pub struct Inference {
     /// Argmax class.
     pub pred: usize,

@@ -63,6 +63,17 @@
 //!   ([`sim::threshold_unit`]), the Algorithm-1 channel-multiplexed
 //!   scheduler ([`sim::scheduler`]) and the ×P parallelized top level
 //!   ([`sim::core`]).
+//!
+//!   Host inference is split into a one-time **compile step**
+//!   ([`sim::plan::NetworkPlan::compile`], run in `Accelerator::new`:
+//!   kernel permutation banks, buffer geometry) and an allocation-free
+//!   **execute step** (`infer_image_into` over the reusable
+//!   [`sim::plan::Scratch`] arenas) — so pooled serving throughput
+//!   scales with spikes, not allocator pressure. These §Perf choices are
+//!   host-side only; modeled cycle counts and outputs are bit-identical
+//!   to the literal schedule (`batched_equals_per_channel` and the
+//!   parity suite referee this), and steady-state zero-allocation is
+//!   enforced by the `zero_alloc` integration test.
 //! * [`baseline`] — the architectures the paper compares against, as cycle
 //!   models: a dense sliding-window accelerator, a SIES-like systolic
 //!   array, and an ASIE-like fmap-sized AER PE array.

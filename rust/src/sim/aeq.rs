@@ -60,6 +60,16 @@ impl Aeq {
         aeq
     }
 
+    /// Drop all events but KEEP every column's allocation — the scratch
+    /// arena reuse that makes steady-state inference allocation-free
+    /// ([`crate::sim::plan::Scratch`]).
+    #[inline]
+    pub fn clear(&mut self) {
+        for col in &mut self.cols {
+            col.clear();
+        }
+    }
+
     /// Total number of valid address events.
     pub fn len(&self) -> usize {
         self.cols.iter().map(Vec::len).sum()

@@ -54,6 +54,15 @@ static TARGET_LUT: LazyLock<[[(i8, i8, u8); COLUMNS]; 9]> = LazyLock::new(|| {
     lut
 });
 
+/// Kernel index selected for output column `s` when the incoming event
+/// sits in input column `s_in` — the hardware's precomputed permutation
+/// mux, exposed so [`crate::sim::plan::LayerPlan`] can resolve the full
+/// weight-selection banks once at compile time.
+#[inline]
+pub fn column_kidx(s_in: usize, s: usize) -> usize {
+    TARGET_LUT[s_in][s].2 as usize
+}
+
 /// Hazard-handling policy (the paper's design vs ablation variants).
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum HazardMode {
@@ -317,6 +326,11 @@ impl ConvUnit {
     /// `kernels` is the per-output-channel kernel bank `[cout][ky*3+kx]`.
     /// Functional + timing equality with per-channel `process_queue` is
     /// asserted by the `multi_equals_single` property test.
+    ///
+    /// This entry point permutes the bank on the fly and delegates to
+    /// [`Self::process_queue_multi_pre`]; the planned hot path
+    /// ([`crate::sim::plan::LayerPlan::wsel_bank`]) skips the rebuild
+    /// entirely.
     pub fn process_queue_multi(
         &self,
         aeq: &Aeq,
@@ -324,12 +338,40 @@ impl ConvUnit {
         mem: &mut crate::sim::mempot::MultiMem,
         sat: Sat,
     ) -> ConvPassStats {
+        let nc = mem.nc;
+        debug_assert_eq!(kernels.len(), nc);
+        let mut wsel = vec![0i32; COLUMNS * COLUMNS * nc];
+        for s_in in 0..COLUMNS {
+            let variant = &TARGET_LUT[s_in];
+            for s in 0..COLUMNS {
+                let kidx = variant[s].2 as usize;
+                for (c, k) in kernels.iter().enumerate() {
+                    wsel[(s_in * COLUMNS + s) * nc + c] = k[kidx];
+                }
+            }
+        }
+        self.process_queue_multi_pre(aeq, &wsel, mem, sat)
+    }
+
+    /// Batched multi-channel pass over a **precompiled** weight-selection
+    /// bank (`wsel_bank[(s_in·9 + s)·nc + c]`, see
+    /// [`crate::sim::plan::LayerPlan`]): the execute-step hot path. No
+    /// allocation, no per-pass permutation work — the only per-event cost
+    /// is the 9-address calculation and the channel scatter itself.
+    pub fn process_queue_multi_pre(
+        &self,
+        aeq: &Aeq,
+        wsel_bank: &[i32],
+        mem: &mut crate::sim::mempot::MultiMem,
+        sat: Sat,
+    ) -> ConvPassStats {
         let (ho, wo) = (mem.h, mem.w);
         let cells_j = mem.cells_j;
         let nc = mem.nc;
-        debug_assert_eq!(kernels.len(), nc);
+        debug_assert_eq!(wsel_bank.len(), COLUMNS * COLUMNS * nc);
         let mut stats = ConvPassStats::default();
         let stall_only = self.hazard_mode == HazardMode::StallOnly;
+        let (vmin, vmax) = (sat.min, sat.max);
 
         let mut p1_addr = [OOB; COLUMNS];
         let mut p2_addr = [OOB; COLUMNS];
@@ -337,9 +379,6 @@ impl ConvUnit {
         let mut gap: u64 = 0;
         let mut slot_idx: u64 = 0;
         let mut last_event_fetch: u64 = 0;
-
-        // per-column pre-permuted kernel bank: wsel[s][c]
-        let mut wsel = vec![0i32; COLUMNS * nc];
 
         for s_in in 0..COLUMNS {
             let col = &aeq.cols[s_in];
@@ -350,12 +389,7 @@ impl ConvUnit {
                 continue;
             }
             let variant = &TARGET_LUT[s_in];
-            for s in 0..COLUMNS {
-                let kidx = variant[s].2 as usize;
-                for (c, k) in kernels.iter().enumerate() {
-                    wsel[s * nc + c] = k[kidx];
-                }
-            }
+            let wsel = &wsel_bank[s_in * COLUMNS * nc..(s_in + 1) * COLUMNS * nc];
             for ev in col {
                 slot_idx += 1;
                 let px = ev.i as usize * 3 + s_in / 3;
@@ -372,12 +406,14 @@ impl ConvUnit {
                         addr[s] = a;
                         ov1 |= a == p1_addr[s];
                         ov2 |= a == p2_addr[s];
-                        // vectorized scatter across channels
+                        // vectorized scatter across channels. saturating
+                        // i32 add + clamp is bit-identical to the widening
+                        // i64 clamp (`Sat::add`) for every input and lets
+                        // the compiler auto-vectorize the loop.
                         let ws = &wsel[s * nc..(s + 1) * nc];
                         let vs = mem.vm_channels_mut(s, a as usize);
                         for c in 0..nc {
-                            let v = vs[c] as i64 + ws[c] as i64;
-                            vs[c] = v.clamp(sat.min as i64, sat.max as i64) as i32;
+                            vs[c] = vs[c].saturating_add(ws[c]).clamp(vmin, vmax);
                         }
                     }
                 }
@@ -757,6 +793,48 @@ mod tests {
                     return Err(format!(
                         "{mode:?}: stats mismatch ({h}x{w}, d={density})\n fast {fast:?}\n pipe {pipe:?}"
                     ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn multi_equals_single() {
+        // The batched multi-channel pass (precompiled weight banks) must
+        // match the per-channel single pass on every channel's membrane
+        // AND on the per-channel cycle/stall/forward accounting.
+        prop::check("multi == single", 20, |rng| {
+            let h = 5 + rng.below(20);
+            let w = 5 + rng.below(20);
+            let nc = 1 + rng.below(6);
+            let density = [0.05, 0.3, 0.8][rng.below(3)];
+            let frame: Vec<bool> = (0..h * w).map(|_| rng.chance(density)).collect();
+            let aeq = Aeq::from_events(&frames_to_events(&frame, h, w));
+            let mut kernels = vec![[0i32; 9]; nc];
+            for k in kernels.iter_mut() {
+                for v in k.iter_mut() {
+                    *v = rng.range_i32(-60, 60);
+                }
+            }
+            let sat = Sat::from_bits(20);
+            for mode in [HazardMode::ForwardAndStall, HazardMode::StallOnly] {
+                let unit = ConvUnit::new(mode);
+                let mut multi = crate::sim::mempot::MultiMem::new(h - 2, w - 2, nc);
+                multi.reset_for(h - 2, w - 2, nc);
+                let ms = unit.process_queue_multi(&aeq, &kernels, &mut multi, sat);
+                for (c, k) in kernels.iter().enumerate() {
+                    let mut mem = MemPot::new(h - 2, w - 2);
+                    mem.reset_for(h - 2, w - 2);
+                    let ss = unit.process_queue(&aeq, k, &mut mem, sat);
+                    if multi.to_dense(c) != mem.to_dense() {
+                        return Err(format!("{mode:?}: channel {c} functional mismatch"));
+                    }
+                    if ms != ss {
+                        return Err(format!(
+                            "{mode:?}: stats mismatch\n multi {ms:?}\n single {ss:?}"
+                        ));
+                    }
                 }
             }
             Ok(())

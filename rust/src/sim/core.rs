@@ -1,15 +1,30 @@
 //! The accelerator top level (paper Fig. 3) with ×P parallelization
 //! (paper Table I) and the FC classification unit.
+//!
+//! ## §Perf — compile/execute split
+//!
+//! `Accelerator::new` is the **compile step**: it builds a
+//! [`NetworkPlan`] (per-layer kernel permutation banks, geometry — see
+//! [`crate::sim::plan`]) and allocates every working buffer the execute
+//! step will ever need (membrane memory, double-buffered inter-layer
+//! queues, input queues, counters, all sized from the plan).
+//! [`Accelerator::infer_image_into`] is the **execute step**: it encodes
+//! straight into the scratch input queues and ping-pongs layer outputs
+//! between the two scratch buffers — zero heap allocations once warm
+//! (asserted by the `zero_alloc` integration test).
+//! [`Accelerator::infer_image`] is the same execute step plus the
+//! allocation of the returned [`Inference`]'s own vectors.
 
 use crate::engine::{check_frame, Backend, BackendKind, CycleModel, EngineError, Frame, Inference};
-use crate::sim::aeq::Aeq;
+use crate::sim::aeq::{Aeq, ReadSlot};
 use crate::sim::conv_unit::{ConvUnit, HazardMode};
 use crate::sim::mempot::MultiMem;
-use crate::sim::scheduler::{process_layer, LayerQueues};
-use crate::sim::stats::RunStats;
+use crate::sim::plan::{NetworkPlan, Scratch};
+use crate::sim::scheduler::{process_layer_planned, LayerQueues};
 use crate::sim::threshold_unit::ThresholdUnit;
 use crate::snn::encode::{encode_mttfs, frames_to_events};
 use crate::snn::network::Network;
+use crate::util::ceil_div;
 use std::sync::Arc;
 
 /// Accelerator configuration.
@@ -34,11 +49,15 @@ impl Default for AccelConfig {
     }
 }
 
-/// The simulated accelerator. Owns its (multiplexed) MemPot and units;
-/// reusable across inferences (`infer_image` takes `&mut self`).
+/// The simulated accelerator. Owns its compiled [`NetworkPlan`], its
+/// (multiplexed) MemPot, its units and the reusable [`Scratch`] arenas;
+/// reusable across inferences (`infer_image` takes `&mut self`, and the
+/// steady-state execute step allocates nothing).
 pub struct Accelerator {
     pub net: Arc<Network>,
     pub cfg: AccelConfig,
+    plan: NetworkPlan,
+    scratch: Scratch,
     mem: MultiMem,
     conv: ConvUnit,
     thresh: ThresholdUnit,
@@ -46,26 +65,35 @@ pub struct Accelerator {
 
 impl Accelerator {
     pub fn new(net: Arc<Network>, cfg: AccelConfig) -> Self {
-        // Batched membrane storage sized for the largest layer
-        // (architecturally: one single-channel MemPot per lane; see
-        // scheduler.rs for why the host batches channels).
-        let (mh, mw, mc) = net
-            .conv
-            .iter()
-            .map(|l| l.out_shape)
-            .max_by_key(|&(h, w, c)| h * w * c)
-            .unwrap_or((26, 26, 32));
+        // Compile step: resolve kernel permutation banks and derive every
+        // buffer shape from the network (the membrane memory is sized for
+        // the largest layer — architecturally one single-channel MemPot
+        // per lane; see scheduler.rs for why the host batches channels).
+        let plan = NetworkPlan::compile(&net);
+        let (mh, mw, mc) = plan.mem_shape;
+        let scratch = Scratch::for_plan(&plan);
         Accelerator {
             conv: ConvUnit::new(cfg.hazard_mode),
             thresh: ThresholdUnit,
             mem: MultiMem::new(mh, mw, mc),
+            plan,
+            scratch,
             net,
             cfg,
         }
     }
 
+    /// The compiled plan this accelerator executes.
+    pub fn plan(&self) -> &NetworkPlan {
+        &self.plan
+    }
+
     /// Encode an input frame (the network's H×W u8 fmap, single channel)
-    /// into the input-layer AEQs.
+    /// into freshly allocated input-layer AEQs — the off-critical-path
+    /// helper for callers that pre-encode (see
+    /// [`Self::infer_from_queues`]). The accelerator's own hot path
+    /// ([`Self::infer_image_into`]) encodes into its scratch queues
+    /// instead and never allocates.
     pub fn encode_input(&self, img: &[u8]) -> LayerQueues {
         let (h, w, _) = self.net.input_shape();
         let frames = encode_mttfs(img, h, w, &self.net.thresholds);
@@ -78,90 +106,207 @@ impl Accelerator {
     }
 
     /// Run one image (row-major H·W u8 slice) through the accelerator.
+    ///
+    /// Allocates only the returned [`Inference`]'s output vectors; use
+    /// [`Self::infer_image_into`] to recycle those too.
     pub fn infer_image(&mut self, img: &[u8]) -> Inference {
-        let input = self.encode_input(img);
-        self.infer_from_queues(input)
+        let mut out = Inference::default();
+        self.infer_image_into(img, &mut out);
+        out
     }
 
-    /// FC classification unit over a layer boundary's queues:
-    /// event-driven adds, one event per cycle, plus one bias cycle per
-    /// timestep. Returns (logits, classifier cycles).
-    fn classify(&self, queues: &LayerQueues) -> (Vec<i64>, u64) {
-        let net = &self.net;
-        let mut acc = vec![0i64; net.n_classes];
-        let mut cycles = 0u64;
-        for t in 0..net.t_steps {
-            for (k, acc_k) in acc.iter_mut().enumerate() {
-                *acc_k += net.fc_b[k] as i64;
-            }
-            cycles += 1;
-            for (c, ch) in queues.q.iter().enumerate() {
-                for slot in ch[t].read_slots() {
-                    if let crate::sim::aeq::ReadSlot::Event { x, y, .. } = slot {
-                        let flat = net.fc_index(x as usize, y as usize, c);
-                        for (k, acc_k) in acc.iter_mut().enumerate() {
-                            *acc_k += net.fc_w[flat * net.n_classes + k] as i64;
-                        }
-                        cycles += 1;
-                    }
+    /// The allocation-free execute step: run one image, writing the
+    /// result into `out` (whose vectors are cleared and reused). After a
+    /// warm-up call has grown every scratch buffer to its high-water
+    /// mark, this performs **zero heap allocations**.
+    pub fn infer_image_into(&mut self, img: &[u8], out: &mut Inference) {
+        let (h, w, c) = self.net.input_shape();
+        // The m-TTFS encoder (like the pre-plan `encode_input` path)
+        // produces a single-channel queue set; fail loudly rather than
+        // leave channels 1.. silently empty.
+        assert!(c <= 1, "m-TTFS input encoding supports 1 channel, network has {c}");
+        assert_eq!(img.len(), h * w, "image length mismatch");
+        let t_steps = self.net.t_steps;
+        let Scratch { input, bufs, events_t } = &mut self.scratch;
+        input.clear_events();
+        let mut input_events = 0u64;
+        for (t, aeq) in input.q[0].iter_mut().enumerate() {
+            // step 0 uses the LARGEST threshold (m-TTFS reversed order;
+            // bit-identical to `encode_mttfs` + `frames_to_events`).
+            let thr = self.net.thresholds[t_steps - 1 - t];
+            input_events += encode_frame_into(img, h, w, thr, aeq);
+        }
+        run_pipeline(
+            &self.net,
+            &self.plan,
+            &mut self.mem,
+            &self.conv,
+            &self.thresh,
+            self.cfg.lanes,
+            input,
+            input_events,
+            bufs,
+            events_t,
+            out,
+        );
+    }
+
+    /// Run from pre-encoded input queues (for callers that encode off
+    /// the accelerator's critical path).
+    pub fn infer_from_queues(&mut self, input: LayerQueues) -> Inference {
+        let mut out = Inference::default();
+        let input_events = input.total_events();
+        let Scratch { bufs, events_t, .. } = &mut self.scratch;
+        run_pipeline(
+            &self.net,
+            &self.plan,
+            &mut self.mem,
+            &self.conv,
+            &self.thresh,
+            self.cfg.lanes,
+            &input,
+            input_events,
+            bufs,
+            events_t,
+            &mut out,
+        );
+        out
+    }
+}
+
+/// Direct m-TTFS encode of one timestep into a scratch AEQ: cell scan
+/// order with the 9 column comparators per cell, exactly as the
+/// thresholding-unit write side would emit it (and bit-identical to
+/// `Aeq::from_events(&frames_to_events(..))` on the binarized frame).
+/// Returns the number of events written.
+fn encode_frame_into(img: &[u8], h: usize, w: usize, thr: f32, aeq: &mut Aeq) -> u64 {
+    let cells_i = ceil_div(h, 3);
+    let cells_j = ceil_div(w, 3);
+    let mut n = 0u64;
+    for ci in 0..cells_i {
+        for cj in 0..cells_j {
+            for s in 0..9 {
+                let x = ci * 3 + s / 3;
+                let y = cj * 3 + s % 3;
+                if x < h && y < w && (img[x * w + y] as f32 / 255.0) > thr {
+                    aeq.push(s, ci as u16, cj as u16);
+                    n += 1;
                 }
             }
         }
-        (acc, cycles)
     }
+    n
+}
 
-    /// Run from pre-encoded input queues (used by the coordinator, which
-    /// encodes off the accelerator's critical path).
-    pub fn infer_from_queues(&mut self, input: LayerQueues) -> Inference {
-        let net = Arc::clone(&self.net);
-        let t_steps = net.t_steps;
-        let n_layers = net.conv.len();
-        let mut stats = RunStats::default();
-        let mut queues = input;
-
-        // Host interface loads the input AEQs serially (1 event/cycle).
-        stats.redistribution_cycles += queues.total_events();
-
-        // Per-(t, layer) spike counts — the golden cross-check signal —
-        // counted from each layer's output queues as they stream past,
-        // so no boundary has to be retained.
-        let mut spike_counts = vec![vec![0u64; n_layers]; t_steps];
-        for (li, layer) in net.conv.iter().enumerate() {
-            let (out, ls) = process_layer(
-                layer,
-                &queues,
-                &mut self.mem,
-                &self.conv,
-                &self.thresh,
-                net.sat,
-                self.cfg.lanes,
-            );
-            stats.total_cycles += ls.wall_cycles;
-            // Inter-layer redistribution: each lane's output queues are
-            // broadcast over the shared bus into the next layer's P
-            // lane-local AEQ RAMs — serial, 1 event/cycle (the Amdahl
-            // component; the last layer streams into the classifier
-            // instead, which is counted there).
-            if li + 1 < n_layers {
-                stats.redistribution_cycles += ls.spikes_out;
-            }
-            stats.layers.push(ls);
-            for (t, counts) in spike_counts.iter_mut().enumerate() {
-                counts[li] = out.events_at(t);
-            }
-            queues = out;
+/// FC classification unit over a layer boundary's queues: event-driven
+/// adds, one event per cycle, plus one bias cycle per timestep. Reads
+/// the first `n_ch` channel rows (scratch buffers may be wider than the
+/// boundary), accumulates into `acc` (cleared and reused) and returns
+/// the classifier cycle count.
+fn classify_into(net: &Network, queues: &LayerQueues, n_ch: usize, acc: &mut Vec<i64>) -> u64 {
+    acc.clear();
+    acc.resize(net.n_classes, 0);
+    let mut cycles = 0u64;
+    for t in 0..net.t_steps {
+        for (k, acc_k) in acc.iter_mut().enumerate() {
+            *acc_k += net.fc_b[k] as i64;
         }
-        stats.total_cycles += stats.redistribution_cycles;
+        cycles += 1;
+        for (c, ch) in queues.q.iter().take(n_ch).enumerate() {
+            for slot in ch[t].read_slots() {
+                if let ReadSlot::Event { x, y, .. } = slot {
+                    let flat = net.fc_index(x as usize, y as usize, c);
+                    for (k, acc_k) in acc.iter_mut().enumerate() {
+                        *acc_k += net.fc_w[flat * net.n_classes + k] as i64;
+                    }
+                    cycles += 1;
+                }
+            }
+        }
+    }
+    cycles
+}
 
-        let (acc, classifier_cycles) = self.classify(&queues);
-        stats.classifier_cycles = classifier_cycles;
-        stats.total_cycles += classifier_cycles;
-        stats.spike_counts = spike_counts;
+/// The execute step: run every layer from the compiled plan, ping-pong
+/// the layer boundaries through the two scratch buffers, classify, and
+/// fill `out` (recycling its vectors). Performs no heap allocation once
+/// all buffers have reached their high-water marks.
+#[allow(clippy::too_many_arguments)]
+fn run_pipeline(
+    net: &Network,
+    plan: &NetworkPlan,
+    mem: &mut MultiMem,
+    conv: &ConvUnit,
+    thresh: &ThresholdUnit,
+    lanes: usize,
+    input: &LayerQueues,
+    input_events: u64,
+    bufs: &mut [LayerQueues; 2],
+    events_t: &mut [u64],
+    out: &mut Inference,
+) {
+    let t_steps = plan.t_steps;
+    let n_layers = plan.layers.len();
 
-        let pred = argmax(&acc);
-        Inference { pred, logits: acc, stats }
+    // Recycle the output container (no-ops at steady state).
+    out.stats.layers.clear();
+    out.stats.classifier_cycles = 0;
+    out.stats.redistribution_cycles = 0;
+    out.stats.total_cycles = 0;
+    if out.stats.spike_counts.len() != t_steps {
+        out.stats.spike_counts.resize_with(t_steps, Vec::new);
+    }
+    for row in &mut out.stats.spike_counts {
+        row.clear();
+        row.resize(n_layers, 0);
     }
 
+    // Host interface loads the input AEQs serially (1 event/cycle).
+    out.stats.redistribution_cycles += input_events;
+
+    // `cur_events` carries each boundary's event total forward — the
+    // single-pass replacement for rescanning queues with `events_at`.
+    let mut cur_events = input_events;
+    for (li, lp) in plan.layers.iter().enumerate() {
+        let (a, b) = bufs.split_at_mut(1);
+        let (src, dst): (&LayerQueues, &mut LayerQueues) = if li == 0 {
+            (input, &mut a[0])
+        } else if li % 2 == 1 {
+            (&a[0], &mut b[0])
+        } else {
+            (&b[0], &mut a[0])
+        };
+        dst.clear_events();
+        let ls = process_layer_planned(
+            lp, src, cur_events, dst, events_t, mem, conv, thresh, net.sat, lanes,
+        );
+        out.stats.total_cycles += ls.wall_cycles;
+        // Inter-layer redistribution: each lane's output queues are
+        // broadcast over the shared bus into the next layer's P
+        // lane-local AEQ RAMs — serial, 1 event/cycle (the Amdahl
+        // component; the last layer streams into the classifier
+        // instead, which is counted there).
+        if li + 1 < n_layers {
+            out.stats.redistribution_cycles += ls.spikes_out;
+        }
+        // Per-(t, layer) spike counts — the golden cross-check signal —
+        // taken from the layer's own output counters as it runs.
+        for (row, &n) in out.stats.spike_counts.iter_mut().zip(events_t.iter()) {
+            row[li] = n;
+        }
+        cur_events = ls.spikes_out;
+        out.stats.layers.push(ls);
+    }
+    out.stats.total_cycles += out.stats.redistribution_cycles;
+
+    let (last, n_ch) = if n_layers == 0 {
+        (input, input.channels())
+    } else {
+        (&bufs[(n_layers - 1) % 2], plan.layers[n_layers - 1].queue_shape.2)
+    };
+    out.stats.classifier_cycles = classify_into(net, last, n_ch, &mut out.logits);
+    out.stats.total_cycles += out.stats.classifier_cycles;
+    out.pred = argmax(&out.logits);
 }
 
 fn argmax(acc: &[i64]) -> usize {
@@ -205,6 +350,8 @@ impl Backend for Accelerator {
 mod tests {
     use super::*;
     use crate::sim::dense_ref::DenseRef;
+    use crate::sim::scheduler::process_layer;
+    use crate::sim::stats::RunStats;
     use crate::snn::network::testutil::random_network;
     use crate::util::prng::Pcg;
     use crate::util::prop;
@@ -241,6 +388,117 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn planned_pipeline_matches_unplanned_reference() {
+        // Regression referee for the compile/execute split: rebuild the
+        // pre-plan inference loop verbatim (fresh queues per layer,
+        // per-call kernel banks via `process_layer`, `events_at` scans,
+        // straight-line classifier) and demand bit-identical logits,
+        // spike counts and EVERY stats counter from the planned path.
+        for seed in [60u64, 61] {
+            let net = Arc::new(random_network(seed));
+            let img = random_image(seed + 7);
+
+            let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+            let input = accel.encode_input(&img);
+
+            let mut mem = MultiMem::new(26, 26, 32);
+            let conv = ConvUnit::new(HazardMode::ForwardAndStall);
+            let t_steps = net.t_steps;
+            let n_layers = net.conv.len();
+            let mut stats = RunStats::default();
+            let mut queues = input;
+            stats.redistribution_cycles += queues.total_events();
+            let mut spike_counts = vec![vec![0u64; n_layers]; t_steps];
+            for (li, layer) in net.conv.iter().enumerate() {
+                let (out, ls) = process_layer(
+                    layer, &queues, &mut mem, &conv, &ThresholdUnit, net.sat, 1,
+                );
+                stats.total_cycles += ls.wall_cycles;
+                if li + 1 < n_layers {
+                    stats.redistribution_cycles += ls.spikes_out;
+                }
+                stats.layers.push(ls);
+                for (t, counts) in spike_counts.iter_mut().enumerate() {
+                    counts[li] = out.events_at(t);
+                }
+                queues = out;
+            }
+            stats.total_cycles += stats.redistribution_cycles;
+            // straight-line FC classifier (the pre-plan `classify`)
+            let mut acc = vec![0i64; net.n_classes];
+            let mut cycles = 0u64;
+            for t in 0..t_steps {
+                for (k, acc_k) in acc.iter_mut().enumerate() {
+                    *acc_k += net.fc_b[k] as i64;
+                }
+                cycles += 1;
+                for (c, ch) in queues.q.iter().enumerate() {
+                    for slot in ch[t].read_slots() {
+                        if let ReadSlot::Event { x, y, .. } = slot {
+                            let flat = net.fc_index(x as usize, y as usize, c);
+                            for (k, acc_k) in acc.iter_mut().enumerate() {
+                                *acc_k += net.fc_w[flat * net.n_classes + k] as i64;
+                            }
+                            cycles += 1;
+                        }
+                    }
+                }
+            }
+            stats.classifier_cycles = cycles;
+            stats.total_cycles += cycles;
+            stats.spike_counts = spike_counts;
+
+            let got = accel.infer_image(&img);
+            assert_eq!(got.logits, acc, "seed {seed}: logits");
+            assert_eq!(got.pred, argmax(&acc), "seed {seed}: pred");
+            assert_eq!(got.stats, stats, "seed {seed}: stats");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless_across_images() {
+        // Reusing one accelerator across many different images must give
+        // exactly what a fresh accelerator gives for each image.
+        let net = Arc::new(random_network(62));
+        let mut reused = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        for seed in 20..26u64 {
+            let img = random_image(seed);
+            let got = reused.infer_image(&img);
+            let mut fresh = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+            let want = fresh.infer_image(&img);
+            assert_eq!(got.logits, want.logits, "img seed {seed}");
+            assert_eq!(got.stats, want.stats, "img seed {seed}");
+        }
+    }
+
+    #[test]
+    fn infer_into_matches_infer() {
+        let net = Arc::new(random_network(63));
+        let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let mut out = Inference::default();
+        for seed in [1u64, 2, 3] {
+            let img = random_image(seed);
+            accel.infer_image_into(&img, &mut out);
+            let want = accel.infer_image(&img);
+            assert_eq!(out.pred, want.pred);
+            assert_eq!(out.logits, want.logits);
+            assert_eq!(out.stats, want.stats);
+        }
+    }
+
+    #[test]
+    fn infer_from_queues_matches_infer_image() {
+        let net = Arc::new(random_network(64));
+        let img = random_image(14);
+        let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let queues = accel.encode_input(&img);
+        let a = accel.infer_from_queues(queues);
+        let b = accel.infer_image(&img);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.stats, b.stats);
     }
 
     #[test]

@@ -7,12 +7,27 @@
 //! per clock cycle — the constraint that motivates interlacing in the
 //! first place.
 //!
-//! Perf note (§Perf, EXPERIMENTS.md): membrane potentials and indicator
-//! bits live in SEPARATE flat arrays per column. The convolution unit
-//! only ever touches `vm` (indicator bits are thresholding-unit state),
-//! so its S4 writeback is a single store instead of a read-modify-write
-//! of a packed entry — this is the hardware's separate bit-plane, and it
-//! doubled host simulation throughput.
+//! ## §Perf — host-side vs modeled hardware
+//!
+//! Everything in this module's *layout* is a host simulation choice; the
+//! modeled hardware is always "9 dual-port column RAMs per lane, one
+//! single-channel fmap, multiplexed across output channels" and the
+//! cycle accounting never changes. The host optimizations are:
+//!
+//! * **Separate bit planes**: membrane potentials and m-TTFS indicator
+//!   bits live in separate flat arrays per column. The convolution unit
+//!   only touches `vm`, so its S4 writeback is a single store instead of
+//!   a read-modify-write of a packed entry (this mirrors the hardware's
+//!   separate indicator bit-plane and doubled host throughput).
+//! * **Channel batching** ([`MultiMem`]): all output channels' membrane
+//!   planes in one channel-contiguous allocation, so each AEQ is walked
+//!   once per `(t, c_in)` instead of once per `(c_out, t, c_in)` and the
+//!   9-way scatter vectorizes across channels.
+//! * **Compile/execute split** ([`crate::sim::plan`]): both memories are
+//!   allocated once in `Accelerator::new` (sized from the compiled
+//!   [`crate::sim::plan::NetworkPlan`], not a hard-coded fallback shape)
+//!   and only `reset_for` — a `fill(0)` — runs per layer. The inference
+//!   hot path performs no heap allocation.
 
 use crate::sim::interlace::{self, COLUMNS};
 
@@ -239,6 +254,16 @@ impl MultiMem {
         let b = self.base(s, flat);
         let nc = self.nc;
         unsafe { self.vm.get_unchecked_mut(b..b + nc) }
+    }
+
+    /// Mutable channel slices of BOTH planes at (s, flat) — the fused
+    /// thresholding pass reads/writes membrane and indicator together
+    /// ([`crate::sim::threshold_unit::ThresholdUnit::process_all_channels`]).
+    #[inline(always)]
+    pub fn vm_fired_channels_mut(&mut self, s: usize, flat: usize) -> (&mut [i32], &mut [bool]) {
+        let b = self.base(s, flat);
+        let nc = self.nc;
+        (&mut self.vm[b..b + nc], &mut self.fired[b..b + nc])
     }
 
     #[inline(always)]

@@ -18,6 +18,11 @@
 //!   pooled-address generator, AEQ write-back (paper §VI-C).
 //! * [`scheduler`] — Algorithm 1: layer-by-layer, output-channel-
 //!   multiplexed MemPot reuse, all T timesteps per channel.
+//! * [`plan`] — the host-side compile step (§Perf): precompiled per-layer
+//!   kernel-permutation banks ([`plan::NetworkPlan`]) and the reusable
+//!   scratch arenas ([`plan::Scratch`]) that make the execute step
+//!   allocation-free. Purely a simulator optimization — cycle accounting
+//!   and outputs are bit-identical to the unplanned path.
 //! * [`core`] — the ×P parallelized accelerator (paper Table I) plus the
 //!   FC classification unit.
 //! * [`stats`] — cycle/stall/utilization counters (paper Table III).
@@ -30,6 +35,7 @@ pub mod core;
 pub mod dense_ref;
 pub mod interlace;
 pub mod mempot;
+pub mod plan;
 pub mod scheduler;
 pub mod stats;
 pub mod threshold_unit;

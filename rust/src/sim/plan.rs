@@ -1,0 +1,284 @@
+//! Precompiled inference plans and reusable scratch arenas (§Perf).
+//!
+//! Host inference is split into a one-time **compile step** and an
+//! allocation-free **execute step**:
+//!
+//! * [`NetworkPlan::compile`] (run once, in `Accelerator::new`) resolves
+//!   everything that is a pure function of the network: per-layer kernel
+//!   permutation banks `wsel[c_in][s_in][s][c_out]` (the hardware's
+//!   "9 permutations of the kernel weights" mux, fully pre-selected for
+//!   every input column and output channel), layer geometry, biases and
+//!   thresholds. Before this split the simulator rebuilt the kernel bank
+//!   for every layer call and re-permuted the weight selection for every
+//!   non-empty column of every `(layer, t, c_in)` queue pass.
+//! * [`Scratch`] (owned by the `Accelerator`) holds the double-buffered
+//!   inter-layer [`LayerQueues`], the input queues and the per-timestep
+//!   spike counters. All of them are `clear()`ed and reused across
+//!   inferences, so a warmed-up `infer_image_into` performs **zero heap
+//!   allocations** (asserted by the `zero_alloc` integration test).
+//!
+//! None of this changes what is modeled: cycle counts, stall/forward
+//! accounting and functional outputs are bit-identical to the unplanned
+//! path (`batched_equals_per_channel`, the pre-plan regression test in
+//! `sim::core` and the parity suite are the referees). The plan
+//! is the host-side analogue of the hardware's configuration ROMs: fixed
+//! after synthesis, read-only during operation.
+
+use crate::sim::conv_unit::column_kidx;
+use crate::sim::interlace::{self, COLUMNS};
+use crate::sim::scheduler::LayerQueues;
+use crate::snn::network::{ConvLayerDef, Network};
+
+/// Everything about one convolutional layer that is a pure function of
+/// the network definition, resolved once at compile time.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    /// Input fmap (H, W, Cin).
+    pub in_shape: (usize, usize, usize),
+    /// Output fmap (Ho, Wo, Cout).
+    pub out_shape: (usize, usize, usize),
+    /// Shape of the fmap written to the AEQs (after optional pooling).
+    pub queue_shape: (usize, usize, usize),
+    /// OR-max-pool 3×3/3 applied by this layer's thresholding unit.
+    pub pool: bool,
+    /// Firing threshold (accumulator domain).
+    pub vt: i32,
+    /// Per-output-channel bias, applied once per timestep.
+    pub bias: Vec<i32>,
+    /// Fully pre-permuted weight-selection banks, flattened as
+    /// `[((c_in · 9 + s_in) · 9 + s) · c_out + c]`: the weight the PE of
+    /// output column `s` applies when an event arrives from input column
+    /// `s_in`, for every (input channel, output channel) kernel.
+    wsel: Vec<i32>,
+}
+
+impl LayerPlan {
+    /// Compile one layer: resolve the kernel permutation for every
+    /// `(c_in, s_in, s, c_out)` combination.
+    pub fn compile(layer: &ConvLayerDef) -> Self {
+        let (_, _, cin_n) = layer.in_shape;
+        let (_, _, cout_n) = layer.out_shape;
+        let mut wsel = vec![0i32; cin_n * COLUMNS * COLUMNS * cout_n];
+        for cin in 0..cin_n {
+            for s_in in 0..COLUMNS {
+                for s in 0..COLUMNS {
+                    let kidx = column_kidx(s_in, s);
+                    let base = ((cin * COLUMNS + s_in) * COLUMNS + s) * cout_n;
+                    for cout in 0..cout_n {
+                        wsel[base + cout] = layer.weight(cout, cin, kidx / 3, kidx % 3);
+                    }
+                }
+            }
+        }
+        LayerPlan {
+            in_shape: layer.in_shape,
+            out_shape: layer.out_shape,
+            queue_shape: layer.queue_shape(),
+            pool: layer.pool,
+            vt: layer.vt,
+            bias: layer.b.clone(),
+            wsel,
+        }
+    }
+
+    /// Number of input channels.
+    #[inline(always)]
+    pub fn cin(&self) -> usize {
+        self.in_shape.2
+    }
+
+    /// Number of output channels.
+    #[inline(always)]
+    pub fn cout(&self) -> usize {
+        self.out_shape.2
+    }
+
+    /// The pre-permuted weight bank for one input channel: a
+    /// `9 · 9 · c_out` slice laid out `[s_in][s][c_out]`, consumed by
+    /// [`crate::sim::conv_unit::ConvUnit::process_queue_multi_pre`].
+    #[inline(always)]
+    pub fn wsel_bank(&self, cin: usize) -> &[i32] {
+        let stride = COLUMNS * COLUMNS * self.cout();
+        &self.wsel[cin * stride..(cin + 1) * stride]
+    }
+}
+
+/// The compiled form of a whole [`Network`]: one [`LayerPlan`] per conv
+/// layer plus the derived geometry the accelerator's memories and
+/// scratch arenas are sized from (no magic fallback shapes).
+#[derive(Clone, Debug)]
+pub struct NetworkPlan {
+    pub layers: Vec<LayerPlan>,
+    /// Input fmap shape (H, W, C) of the first layer.
+    pub in_shape: (usize, usize, usize),
+    /// Encoding timesteps.
+    pub t_steps: usize,
+    /// Classifier outputs.
+    pub n_classes: usize,
+    /// The conv output fmap (H, W, C) with the largest **interlaced
+    /// capacity** `ceil(H/3)·ceil(W/3)·C` — what actually governs
+    /// [`crate::sim::mempot::MultiMem`] storage, so `reset_for` can
+    /// never outgrow the allocation (`h·w·c` would under-size it for
+    /// e.g. a small-but-many-channel layer behind a large shallow one).
+    pub mem_shape: (usize, usize, usize),
+    /// Largest channel count any layer boundary's queues need (input
+    /// channels included) — sizes the scratch queue buffers.
+    pub max_queue_channels: usize,
+}
+
+impl NetworkPlan {
+    /// Compile a network once; the plan is then read-only on the hot path.
+    pub fn compile(net: &Network) -> Self {
+        let layers: Vec<LayerPlan> = net.conv.iter().map(LayerPlan::compile).collect();
+        let in_shape = net.input_shape();
+        let mem_shape = net
+            .conv
+            .iter()
+            .map(|l| l.out_shape)
+            .max_by_key(|&(h, w, c)| {
+                let (ci, cj) = interlace::cell_grid(h, w);
+                ci * cj * c
+            })
+            .unwrap_or((0, 0, 0));
+        let max_queue_channels = layers
+            .iter()
+            .map(|l| l.queue_shape.2)
+            .chain(std::iter::once(in_shape.2))
+            .max()
+            .unwrap_or(0);
+        NetworkPlan {
+            layers,
+            in_shape,
+            t_steps: net.t_steps,
+            n_classes: net.n_classes,
+            mem_shape,
+            max_queue_channels,
+        }
+    }
+}
+
+/// Reusable per-accelerator working memory for the execute step.
+///
+/// Layer boundaries ping-pong between the two queue buffers (layer 0
+/// writes `bufs[0]`, layer 1 reads it and writes `bufs[1]`, …); the input
+/// encoder writes `input`. Every [`crate::sim::aeq::Aeq`] column keeps
+/// its allocation across inferences (`clear()` only resets lengths), so
+/// after a warm-up inference the steady state allocates nothing.
+#[derive(Clone, Debug)]
+pub struct Scratch {
+    /// Input-layer AEQs, written by the m-TTFS encoder.
+    pub(crate) input: LayerQueues,
+    /// Double-buffered inter-layer AEQs (ping-pong per layer).
+    pub(crate) bufs: [LayerQueues; 2],
+    /// Per-timestep output spike counters for the layer in flight — the
+    /// single-pass replacement for re-scanning queues with `events_at`.
+    pub(crate) events_t: Vec<u64>,
+}
+
+impl Scratch {
+    /// Allocate scratch sized for `plan` (the only allocation site; the
+    /// execute step never grows these other than warm-up high-water
+    /// adjustments of the per-column event vectors).
+    pub fn for_plan(plan: &NetworkPlan) -> Self {
+        let ch = plan.max_queue_channels;
+        Scratch {
+            input: LayerQueues::new(plan.in_shape.2.max(1), plan.t_steps),
+            bufs: [
+                LayerQueues::new(ch, plan.t_steps),
+                LayerQueues::new(ch, plan.t_steps),
+            ],
+            events_t: vec![0; plan.t_steps],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::network::testutil::random_network;
+
+    #[test]
+    fn plan_geometry_derived_from_network() {
+        let net = random_network(31);
+        let plan = NetworkPlan::compile(&net);
+        assert_eq!(plan.layers.len(), 3);
+        assert_eq!(plan.in_shape, (28, 28, 1));
+        assert_eq!(plan.mem_shape, (26, 26, 32));
+        assert_eq!(plan.max_queue_channels, 32);
+        assert_eq!(plan.t_steps, net.t_steps);
+        assert_eq!(plan.layers[1].queue_shape, (8, 8, 32));
+        assert_eq!(plan.layers[2].cout(), 10);
+    }
+
+    #[test]
+    fn wsel_bank_matches_kernel_permutation() {
+        // The precompiled bank must hold exactly the weight the unplanned
+        // path selects: kernel(cout, cin)[column_kidx(s_in, s)].
+        let net = random_network(32);
+        for layer in &net.conv {
+            let plan = LayerPlan::compile(layer);
+            let (_, _, cin_n) = layer.in_shape;
+            let (_, _, cout_n) = layer.out_shape;
+            for cin in 0..cin_n {
+                let bank = plan.wsel_bank(cin);
+                for s_in in 0..COLUMNS {
+                    for s in 0..COLUMNS {
+                        let kidx = column_kidx(s_in, s);
+                        for cout in 0..cout_n {
+                            assert_eq!(
+                                bank[(s_in * COLUMNS + s) * cout_n + cout],
+                                layer.kernel(cout, cin)[kidx],
+                                "cin={cin} s_in={s_in} s={s} cout={cout}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mem_shape_uses_interlaced_capacity() {
+        use crate::snn::sat::Sat;
+        fn layer(in_shape: (usize, usize, usize), out_shape: (usize, usize, usize)) -> ConvLayerDef {
+            ConvLayerDef {
+                in_shape,
+                out_shape,
+                pool: false,
+                w: vec![0; 9 * in_shape.2 * out_shape.2],
+                b: vec![0; out_shape.2],
+                vt: 1,
+            }
+        }
+        // (25,25,3): h·w·c = 1875 but only 9·9·3 = 243 interlaced cells·ch;
+        // (4,4,100): h·w·c = 1600 but 2·2·100 = 400 cells·ch — it needs
+        // MORE MultiMem storage despite the smaller dense product, so it
+        // must win the sizing (sizing by h·w·c would panic in reset_for).
+        let net = Network {
+            conv: vec![
+                layer((27, 27, 1), (25, 25, 3)),
+                layer((6, 6, 3), (4, 4, 100)),
+            ],
+            fc_w: vec![0; 4 * 4 * 100 * 10],
+            fc_b: vec![0; 10],
+            n_classes: 10,
+            thresholds: vec![0.5],
+            t_steps: 1,
+            sat: Sat::from_bits(20),
+            bits: 8,
+        };
+        let plan = NetworkPlan::compile(&net);
+        assert_eq!(plan.mem_shape, (4, 4, 100));
+    }
+
+    #[test]
+    fn scratch_sized_for_plan() {
+        let net = random_network(33);
+        let plan = NetworkPlan::compile(&net);
+        let scratch = Scratch::for_plan(&plan);
+        assert_eq!(scratch.bufs[0].channels(), 32);
+        assert_eq!(scratch.bufs[0].t_steps(), net.t_steps);
+        assert_eq!(scratch.input.channels(), 1);
+        assert_eq!(scratch.events_t.len(), net.t_steps);
+    }
+}

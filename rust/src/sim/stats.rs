@@ -1,7 +1,7 @@
 //! Cycle / utilization / sparsity counters (paper Tables I, III, V).
 
 /// Counters for one convolutional layer of one inference.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LayerStats {
     /// Conv-unit cycles summed over all (c_out, t, c_in) passes (one lane).
     pub conv_cycles: u64,
@@ -40,7 +40,7 @@ impl LayerStats {
 }
 
 /// Counters for a full single-image inference.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct RunStats {
     pub layers: Vec<LayerStats>,
     /// Classification-unit (FC) cycles.

@@ -156,8 +156,10 @@ impl ThresholdUnit {
 
 impl ThresholdUnit {
     /// Channel-`c` pass over a batched [`crate::sim::mempot::MultiMem`]
-    /// (host §Perf path; semantics identical to `process` on the
-    /// channel's own MemPot — asserted by `multi_threshold_equals_single`).
+    /// (semantics identical to `process` on the channel's own MemPot —
+    /// asserted end-to-end by `batched_equals_per_channel`; the fused
+    /// hot path is checked against this one by
+    /// `fused_all_channels_equals_per_channel`).
     pub fn process_channel(
         &self,
         mem: &mut crate::sim::mempot::MultiMem,
@@ -209,6 +211,97 @@ impl ThresholdUnit {
         }
         stats.cycles = stats.windows + PIPELINE_DEPTH;
         stats
+    }
+
+    /// Fused all-channel pass (planned hot path, §Perf): one cell scan
+    /// updates EVERY output channel, with the channel loop innermost so
+    /// the bias-add / threshold runs over contiguous memory. Semantics
+    /// and event order are identical to `nc` independent
+    /// [`Self::process_channel`] passes (each channel's AEQ still
+    /// receives its events in cell-scan order; asserted by
+    /// `fused_all_channels_equals_per_channel`) — the MODELED hardware is
+    /// unchanged: one single-channel thresholding unit per lane,
+    /// `windows + PIPELINE_DEPTH` cycles per output channel.
+    ///
+    /// `q` is the per-channel queue table (`q[c][t]` is written);
+    /// returns `(windows, total_spikes)` — per-channel cycles are
+    /// deterministic, so the caller expands them.
+    #[allow(clippy::too_many_arguments)]
+    pub fn process_all_channels(
+        &self,
+        mem: &mut crate::sim::mempot::MultiMem,
+        nc: usize,
+        biases: &[i32],
+        vt: i32,
+        sat: Sat,
+        pool: bool,
+        t: usize,
+        q: &mut [Vec<Aeq>],
+    ) -> (u64, u64) {
+        let (h, w) = (mem.h, mem.w);
+        let (cells_i, cells_j) = (mem.cells_i, mem.cells_j);
+        debug_assert!(nc <= mem.nc);
+        debug_assert_eq!(biases.len(), nc);
+        debug_assert!(q.len() >= nc);
+        let (vmin, vmax) = (sat.min, sat.max);
+        let mut spikes = 0u64;
+        let mut pool_gen = PoolAddrGen::new(cells_j);
+
+        for i in 0..cells_i {
+            for j in 0..cells_j {
+                let flat = i * cells_j + j;
+                if !pool {
+                    // element-wise: channel-contiguous bias/threshold.
+                    // saturating i32 add + clamp == `Sat::add` bit-exactly.
+                    for s in 0..COLUMNS {
+                        let (x, y) = interlace::position(i, j, s);
+                        if x >= h || y >= w {
+                            continue;
+                        }
+                        let (vs, fs) = mem.vm_fired_channels_mut(s, flat);
+                        for c in 0..nc {
+                            let vm = vs[c].saturating_add(biases[c]).clamp(vmin, vmax);
+                            vs[c] = vm;
+                            let spike = vm > vt || fs[c];
+                            fs[c] = spike;
+                            if spike {
+                                q[c][t].push(s, i as u16, j as u16);
+                                spikes += 1;
+                            }
+                        }
+                    }
+                } else {
+                    // pooled: per-channel 9-to-1 OR over the window (the
+                    // pooled address is shared across channels).
+                    for (c, &bias) in biases.iter().enumerate() {
+                        let mut any_spike = false;
+                        for s in 0..COLUMNS {
+                            let (x, y) = interlace::position(i, j, s);
+                            if x >= h || y >= w {
+                                continue;
+                            }
+                            let vm = sat.add(mem.vm_at(s, flat, c), bias);
+                            mem.set_vm_at(s, flat, c, vm);
+                            let fired = mem.fired_at(s, flat, c);
+                            let spike = vm > vt || fired;
+                            if spike {
+                                if !fired {
+                                    mem.set_fired_at(s, flat, c, true);
+                                }
+                                any_spike = true;
+                            }
+                        }
+                        if any_spike {
+                            let (pi, pj, ps) = pool_gen.current();
+                            q[c][t].push(ps as usize, pi, pj);
+                            spikes += 1;
+                        }
+                    }
+                }
+                pool_gen.advance();
+            }
+        }
+        ((cells_i * cells_j) as u64, spikes)
     }
 }
 
@@ -335,6 +428,83 @@ mod tests {
         let frame = out.to_frame(h, w);
         assert!(frame[25 * w + 25]);
         assert_eq!(frame.iter().filter(|&&b| b).count(), 1);
+    }
+
+    #[test]
+    fn fused_all_channels_equals_per_channel() {
+        // The planned-path fused pass must be indistinguishable from nc
+        // independent `process_channel` passes: same membranes, same
+        // indicator bits, same queue contents (and order), same counts —
+        // for both pooled and non-pooled layers.
+        use crate::sim::interlace;
+        use crate::sim::mempot::MultiMem;
+        prop::check("fused threshold == per-channel", 30, |rng| {
+            let h = 3 + rng.below(24);
+            let w = 3 + rng.below(24);
+            let nc = 1 + rng.below(8);
+            let vt = rng.range_i32(10, 200);
+            let sat = Sat::from_bits(12);
+            let pool = rng.chance(0.5);
+            let biases: Vec<i32> = (0..nc).map(|_| rng.range_i32(-30, 30)).collect();
+            let mut a = MultiMem::new(h, w, nc);
+            a.reset_for(h, w, nc);
+            for c in 0..nc {
+                for x in 0..h {
+                    for y in 0..w {
+                        let s = interlace::column(x, y);
+                        let (i, j) = interlace::cell(x, y);
+                        let flat = i * a.cells_j + j;
+                        a.set_vm_at(s, flat, c, rng.range_i32(-300, 300));
+                        if rng.chance(0.1) {
+                            a.set_fired_at(s, flat, c, true);
+                        }
+                    }
+                }
+            }
+            let mut b = a.clone();
+            let t = 1; // write slot 1 to exercise the timestep indexing
+            let mk = |nc: usize| -> Vec<Vec<Aeq>> {
+                (0..nc).map(|_| (0..2).map(|_| Aeq::new()).collect()).collect()
+            };
+            let mut q_ref = mk(nc);
+            let mut spikes_ref = 0u64;
+            let mut windows_ref = 0u64;
+            for c in 0..nc {
+                let ts = ThresholdUnit.process_channel(
+                    &mut a, c, biases[c], vt, sat, pool, &mut q_ref[c][t],
+                );
+                spikes_ref += ts.spikes;
+                windows_ref = ts.windows;
+            }
+            let mut q_fused = mk(nc);
+            let (windows, spikes) = ThresholdUnit.process_all_channels(
+                &mut b, nc, &biases, vt, sat, pool, t, &mut q_fused,
+            );
+            if (windows, spikes) != (windows_ref, spikes_ref) {
+                return Err(format!(
+                    "counts: fused ({windows}, {spikes}) ref ({windows_ref}, {spikes_ref})"
+                ));
+            }
+            for c in 0..nc {
+                if q_fused[c][t].cols != q_ref[c][t].cols {
+                    return Err(format!("queue mismatch on channel {c} (pool={pool})"));
+                }
+                if b.to_dense(c) != a.to_dense(c) {
+                    return Err(format!("membrane mismatch on channel {c}"));
+                }
+                for x in 0..h {
+                    for y in 0..w {
+                        let s = interlace::column(x, y);
+                        let (i, j) = interlace::cell(x, y);
+                        let flat = i * a.cells_j + j;
+                        if a.fired_at(s, flat, c) != b.fired_at(s, flat, c) {
+                            return Err(format!("fired mismatch at ({x},{y}) c={c}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,0 +1,49 @@
+//! A counting [`GlobalAlloc`] wrapper around the system allocator.
+//!
+//! Shared by the `zero_alloc` integration test (which *enforces* the
+//! steady-state zero-allocation property of the inference execute step)
+//! and the `perf` bench (which *reports* allocs-per-inference in
+//! `BENCH_sim.json`) so the counting policy cannot drift between them.
+//! Each binary registers it itself:
+//!
+//! ```ignore
+//! use sacsnn::util::alloc_counter::{alloc_count, CountingAllocator};
+//! #[global_allocator]
+//! static GLOBAL: CountingAllocator = CountingAllocator;
+//! ```
+//!
+//! Policy: every `alloc` / `alloc_zeroed` / `realloc` counts as one
+//! allocator hit; `dealloc` is free (releasing warm-up buffers is not
+//! the churn we are hunting).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide allocation counter (see module doc).
+pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Read the current allocation count.
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// The counting allocator; delegates all real work to [`System`].
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}

@@ -2,6 +2,7 @@
 //! `serde`, `rand` or `proptest`, so the pieces we need are implemented
 //! here and tested in place).
 
+pub mod alloc_counter;
 pub mod json;
 pub mod prng;
 pub mod prop;

@@ -1,0 +1,72 @@
+//! Proof that the §Perf compile/execute split holds: after warm-up, the
+//! accelerator's execute step (`infer_image_into`) performs ZERO heap
+//! allocations, and `infer_image` allocates only the returned
+//! `Inference`'s own small output vectors — never per-event traffic.
+//!
+//! This file contains exactly one test: the `#[global_allocator]`
+//! counter is process-wide, so concurrent tests in the same binary would
+//! pollute the measurement.
+
+use sacsnn::engine::Inference;
+use sacsnn::sim::{AccelConfig, Accelerator};
+use sacsnn::snn::network::testutil::random_network;
+use sacsnn::util::alloc_counter::{alloc_count as allocs, CountingAllocator};
+use sacsnn::util::prng::Pcg;
+use std::sync::Arc;
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+#[test]
+fn steady_state_inference_is_allocation_free() {
+    let net = Arc::new(random_network(90));
+    let (h, w, c) = net.input_shape();
+    let mut rng = Pcg::new(17);
+    let imgs: Vec<Vec<u8>> = (0..3)
+        .map(|_| (0..h * w * c).map(|_| rng.below(256) as u8).collect())
+        .collect();
+    let bright = vec![250u8; h * w * c]; // maximum input spikes
+
+    let mut accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+    let mut out = Inference::default();
+
+    // Warm-up: grow every scratch buffer and output vector to the
+    // high-water mark of this workload.
+    for _ in 0..3 {
+        accel.infer_image_into(&bright, &mut out);
+        for img in &imgs {
+            accel.infer_image_into(img, &mut out);
+        }
+    }
+
+    // Steady state: the execute step must not touch the allocator.
+    let before = allocs();
+    for _ in 0..5 {
+        accel.infer_image_into(&bright, &mut out);
+        for img in &imgs {
+            accel.infer_image_into(img, &mut out);
+        }
+    }
+    let grew = allocs() - before;
+    assert_eq!(grew, 0, "steady-state infer_image_into allocated {grew} times");
+
+    // `infer_image` adds only the returned Inference's output vectors —
+    // an O(layers + t_steps) constant, nothing per-event (the pre-plan
+    // path allocated thousands of times per inference here).
+    let before = allocs();
+    let res = accel.infer_image(&imgs[0]);
+    let per_infer = allocs() - before;
+    assert!(
+        per_infer <= 64,
+        "infer_image allocated {per_infer} times; expected only the output container"
+    );
+
+    // The recycled path must still be bit-identical to a fresh machine.
+    let mut fresh = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+    let want = fresh.infer_image(&imgs[0]);
+    assert_eq!(res.logits, want.logits);
+    assert_eq!(res.stats.total_cycles, want.stats.total_cycles);
+    accel.infer_image_into(&imgs[0], &mut out);
+    assert_eq!(out.logits, want.logits);
+    assert_eq!(out.stats.spike_counts, want.stats.spike_counts);
+}
