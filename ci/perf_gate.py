@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate: BENCH_sim.json vs the committed baseline.
+
+Usage:
+    python3 ci/perf_gate.py [--current BENCH_sim.json] [--baseline BENCH_baseline.json]
+
+Rules (tolerances chosen for shared CI runners):
+  * ``frames_per_s``           — fail on a drop of more than 15% vs baseline
+  * ``images_per_sec_batched`` — fail on a drop of more than 15% vs baseline
+  * ``allocs_per_inference``   — fail on ANY increase (the zero-allocation
+    execute step is machine-independent: an increase is always a real
+    regression, never runner noise)
+
+While the baseline carries ``"_provisional": true`` (floors not yet seeded
+from a real CI artifact), throughput drops are downgraded to warnings —
+only the alloc rule hard-fails. Seed real floors by copying the
+``BENCH_sim`` artifact of a green main run over the baseline and removing
+``_provisional``; refresh the same way whenever the hot path gets faster.
+
+The full field-by-field diff is printed and, when running inside GitHub
+Actions, appended to the step summary.
+
+Exit status: 0 = pass, 1 = regression, 2 = missing/invalid input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+THROUGHPUT_DROP_TOLERANCE = 0.15  # >15% drop fails
+THROUGHPUT_FIELDS = ("frames_per_s", "images_per_sec_batched")
+ALLOC_FIELD = "allocs_per_inference"
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"perf gate: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_sim.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    args = ap.parse_args()
+
+    cur = load(args.current)
+    base = load(args.baseline)
+    provisional = bool(base.get("_provisional"))
+
+    failures: list[str] = []
+    warnings: list[str] = []
+    rows: list[tuple[str, str, str, str, str]] = []
+
+    def row(field, baseline, current, delta, verdict):
+        rows.append((field, baseline, current, delta, verdict))
+
+    for field in THROUGHPUT_FIELDS:
+        b, c = base.get(field), cur.get(field)
+        if b is None or c is None:
+            row(field, str(b), str(c), "-", "skipped (missing)")
+            continue
+        floor = b * (1.0 - THROUGHPUT_DROP_TOLERANCE)
+        delta = (c - b) / b * 100.0 if b else float("inf")
+        ok = c >= floor
+        verdict = "ok" if ok else ("WARN (provisional baseline)" if provisional else "FAIL")
+        row(field, f"{b:.1f}", f"{c:.1f}", f"{delta:+.1f}%", verdict)
+        if not ok:
+            msg = (
+                f"{field}: {c:.1f} is below the {THROUGHPUT_DROP_TOLERANCE:.0%}"
+                f"-tolerance floor {floor:.1f} (baseline {b:.1f})"
+            )
+            (warnings if provisional else failures).append(msg)
+
+    b, c = base.get(ALLOC_FIELD), cur.get(ALLOC_FIELD)
+    if b is None or c is None:
+        row(ALLOC_FIELD, str(b), str(c), "-", "skipped (missing)")
+    else:
+        ok = c <= b + 1e-9
+        row(ALLOC_FIELD, f"{b:.3f}", f"{c:.3f}", f"{c - b:+.3f}", "ok" if ok else "FAIL")
+        if not ok:
+            failures.append(
+                f"{ALLOC_FIELD}: increased from {b:.3f} to {c:.3f} "
+                "(any increase fails — the execute step must stay allocation-free)"
+            )
+
+    # Informational fields: everything numeric the two files share.
+    for field in sorted(set(cur) & set(base)):
+        if field in THROUGHPUT_FIELDS or field == ALLOC_FIELD:
+            continue
+        b, c = base[field], cur[field]
+        if isinstance(b, (int, float)) and isinstance(c, (int, float)) and not isinstance(b, bool):
+            delta = f"{(c - b) / b * 100.0:+.1f}%" if b else "-"
+            row(field, f"{b}", f"{c}", delta, "info")
+
+    header = ("field", "baseline", "current", "delta", "verdict")
+    md = ["| " + " | ".join(header) + " |", "|" + "---|" * len(header)]
+    md += ["| " + " | ".join(r) + " |" for r in rows]
+    verdict = "PASS" if not failures else "FAIL:\n  " + "\n  ".join(failures)
+    report = "### Perf gate\n\n" + "\n".join(md) + f"\n\n**{verdict}**\n"
+    if warnings:
+        report += (
+            "\nWarnings (baseline is provisional — seed it from a real "
+            "BENCH_sim CI artifact to make these hard failures):\n  "
+            + "\n  ".join(warnings)
+            + "\n"
+        )
+
+    print(report)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a", encoding="utf-8") as f:
+            f.write(report)
+
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

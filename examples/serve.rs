@@ -1,8 +1,14 @@
-//! Serving demo: start the coordinator over a **heterogeneous** backend
-//! pool (simulator workers plus one dense-reference shadow worker behind
-//! the same queue), fire a bursty synthetic request stream at it, and
-//! report latency percentiles, throughput, batching behaviour,
-//! backpressure events and which backends served the traffic.
+//! Batched serving demo: start the coordinator over a **heterogeneous**
+//! pool — a multi-core sharded simulator worker, a plain ×8 simulator
+//! worker, and one dense-reference shadow worker behind the same queue —
+//! fire a bursty synthetic request stream at it, and report latency
+//! percentiles, batch-dispatch behaviour (sizes, per-batch service time,
+//! worker-side images/sec), backpressure events and which backends
+//! served the traffic.
+//!
+//! Every worker drains dynamic batches and serves them through one
+//! `Backend::infer_batch` call; the sharded worker additionally fans its
+//! batch out across host cores (see `lib.rs` §Throughput).
 //!
 //! Run with: `cargo run --release --example serve [n_requests]`
 
@@ -23,17 +29,27 @@ fn main() -> Result<()> {
     let (net, ds, _) = report::env("mnist", 8)?;
     let cfg = ServerConfig { lanes: 8, queue_depth: 64, batch_size: 8, ..Default::default() };
 
-    // Heterogeneous pool: three ×8 simulators + one functional shadow.
+    // Heterogeneous pool behind one queue:
+    //   worker 0: sim sharded over 4 host cores (batches fan out),
+    //   worker 1: plain single-core ×8 sim,
+    //   worker 2: functional dense-ref shadow (online cross-check).
     let builder = EngineBuilder::new(Arc::clone(&net)).lanes(cfg.lanes);
-    let mut backends = builder.build_pool(BackendKind::Sim, 3)?;
-    backends.push(builder.build(BackendKind::DenseRef)?);
+    let backends = vec![
+        builder.clone().threads(4).build(BackendKind::Sim)?,
+        builder.build(BackendKind::Sim)?,
+        builder.build(BackendKind::DenseRef)?,
+    ];
     println!(
-        "coordinator: {} workers (3×sim ×{} lanes + 1×dense-ref shadow), queue depth {}, max batch {}",
-        backends.len(), cfg.lanes, cfg.queue_depth, cfg.batch_size
+        "coordinator: {} workers (1×sim sharded ×4 threads + 1×sim + 1×dense-ref shadow), \
+         queue depth {}, max batch {}",
+        backends.len(),
+        cfg.queue_depth,
+        cfg.batch_size
     );
     let coord = Coordinator::start_pool(backends, cfg)?;
 
-    // Bursty open-loop load: Poisson-ish bursts with think time.
+    // Bursty open-loop load: Poisson-ish bursts with think time, so the
+    // dynamic batcher sees everything from singletons to full batches.
     let mut rng = Pcg::new(2024);
     let mut pending = Vec::new();
     let mut rejected = 0usize;
@@ -55,27 +71,56 @@ fn main() -> Result<()> {
 
     let mut lat = Vec::with_capacity(pending.len());
     let mut served_by: BTreeMap<&'static str, usize> = BTreeMap::new();
+    let mut batch_sizes: BTreeMap<usize, usize> = BTreeMap::new();
     for rx in pending {
         let r = rx.recv().expect("reply")?;
         *served_by.entry(r.backend).or_insert(0) += 1;
+        *batch_sizes.entry(r.batch_size).or_insert(0) += 1;
         lat.push(r.queue_wait_us + r.service_us);
     }
     let wall = t0.elapsed();
     lat.sort_unstable();
     let pct = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize];
     let snap = coord.metrics.snapshot();
-    println!("\nserved {} / {} requests in {:.2} s ({:.0} req/s), {} rejected by backpressure",
-        lat.len(), n, wall.as_secs_f64(), lat.len() as f64 / wall.as_secs_f64(), rejected);
+    println!(
+        "\nserved {} / {} requests in {:.2} s ({:.0} req/s), {} rejected by backpressure",
+        lat.len(),
+        n,
+        wall.as_secs_f64(),
+        lat.len() as f64 / wall.as_secs_f64(),
+        rejected
+    );
     print!("served by:");
     for (name, count) in &served_by {
         print!("  {name} ×{count}");
     }
     println!();
-    println!("latency (queue+service): p50 {} µs, p90 {} µs, p99 {} µs, max {} µs",
-        pct(0.50), pct(0.90), pct(0.99), lat.last().unwrap());
-    println!("dynamic batching: {} batches, mean size {:.2}", snap.batches, snap.mean_batch);
-    println!("mean simulated cycles/frame: {:.0} (→ {:.0} device-FPS @333 MHz)",
-        snap.mean_sim_cycles, 333e6 / snap.mean_sim_cycles);
+    print!("request batch sizes:");
+    for (size, count) in &batch_sizes {
+        print!("  {size}→{count}");
+    }
+    println!();
+    println!(
+        "latency (queue+batch service): p50 {} µs, p90 {} µs, p99 {} µs, max {} µs",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99),
+        lat.last().unwrap()
+    );
+    println!(
+        "batch dispatch: {} batches, mean size {:.2}, mean service {:.0} µs \
+         (max {} µs), worker-side {:.1} images/s",
+        snap.batches,
+        snap.mean_batch,
+        snap.mean_batch_service_us,
+        snap.max_batch_service_us,
+        snap.batch_images_per_sec
+    );
+    println!(
+        "mean simulated cycles/frame: {:.0} (→ {:.0} device-FPS @333 MHz)",
+        snap.mean_sim_cycles,
+        333e6 / snap.mean_sim_cycles
+    );
     println!("metrics json: {}", snap.to_json());
     coord.shutdown();
     Ok(())

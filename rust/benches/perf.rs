@@ -1,18 +1,25 @@
 //! §Perf harness: host-side simulator performance. Always runs — with
 //! MNIST artifacts when present, otherwise on a seeded `random_network`
 //! workload — and emits machine-readable `BENCH_sim.json` (host
-//! frames/s, simulated conv-events/s, allocs-per-inference) so the perf
-//! trajectory is tracked across PRs. `--smoke` (or `BENCH_SMOKE=1`)
+//! frames/s, batched multi-core images/s + scaling efficiency,
+//! simulated conv-events/s, allocs-per-inference) so the perf
+//! trajectory is tracked across PRs and gated in CI (`perf-gate` job vs
+//! the committed `BENCH_baseline.json`). `--smoke` (or `BENCH_SMOKE=1`)
 //! shrinks the iteration counts for CI.
 
 mod common;
 
-use sacsnn::engine::Inference;
+use sacsnn::engine::{Frame, Inference};
+use sacsnn::sim::parallel::ShardedExecutor;
 use sacsnn::sim::{AccelConfig, Accelerator};
-use sacsnn::snn::network::testutil::random_network;
+use sacsnn::snn::network::testutil::synthetic_workload;
 use sacsnn::util::alloc_counter::{alloc_count, CountingAllocator};
-use sacsnn::util::prng::Pcg;
 use std::sync::Arc;
+
+/// Thread count of the batched measurement — fixed so the
+/// `images_per_sec_batched` trajectory is comparable across runs (the
+/// acceptance target is ≥2.5× single-thread at 4 threads).
+const BATCH_THREADS: usize = 4;
 
 // Counts every allocation so the bench can report allocs-per-inference
 // (the zero-allocation execute step is the point of the §Perf split).
@@ -33,12 +40,7 @@ fn main() {
         }
         Err(e) => {
             println!("artifacts unavailable ({e}); using seeded random_network workload");
-            let net = Arc::new(random_network(42));
-            let (h, w, c) = net.input_shape();
-            let mut rng = Pcg::new(7);
-            let images: Vec<Vec<u8>> = (0..20)
-                .map(|_| (0..h * w * c).map(|_| rng.below(256) as u8).collect())
-                .collect();
+            let (net, images) = synthetic_workload(20);
             (net, images, "synthetic")
         }
     };
@@ -77,14 +79,56 @@ fn main() {
         ev_per_frame
     );
 
+    // Batched multi-core throughput: the same images as Frames through
+    // the sharded executor (chase-the-queue over BATCH_THREADS workers),
+    // vs a single-thread infer_batch on the same batch size.
+    let (h, w, c) = net.input_shape();
+    let batch: Vec<Frame> = images
+        .iter()
+        .cycle()
+        .take(if smoke { 32 } else { 128 })
+        .map(|img| Frame::from_u8(h, w, c, img.clone()).expect("bench frame"))
+        .collect();
+    let mut outs = Vec::new();
+
+    let mut single = ShardedExecutor::new(Arc::clone(&net), AccelConfig::default(), 1);
+    let (mean_1, _, _) = common::time_ms(warmup, iters, || {
+        single.infer_batch_into(&batch, &mut outs).expect("single-thread batch");
+    });
+    let images_per_sec_single = batch.len() as f64 * 1e3 / mean_1;
+
+    let mut pool = ShardedExecutor::new(Arc::clone(&net), AccelConfig::default(), BATCH_THREADS);
+    let (mean_t, _, _) = common::time_ms(warmup, iters, || {
+        pool.infer_batch_into(&batch, &mut outs).expect("sharded batch");
+    });
+    let images_per_sec_batched = batch.len() as f64 * 1e3 / mean_t;
+    let speedup = images_per_sec_batched / images_per_sec_single;
+    let scaling_efficiency = speedup / BATCH_THREADS as f64;
+
+    println!(
+        "batched ({} frames): 1 thread {:.1} images/s, {} threads {:.1} images/s \
+         → ×{speedup:.2} speedup, {:.0}% scaling efficiency",
+        batch.len(),
+        images_per_sec_single,
+        BATCH_THREADS,
+        images_per_sec_batched,
+        scaling_efficiency * 100.0
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"sim\",\n  \"mode\": \"{mode}\",\n  \"smoke\": {smoke},\n  \
          \"frames\": {},\n  \"mean_ms_per_batch\": {mean:.6},\n  \
          \"frames_per_s\": {frames_per_s:.3},\n  \
+         \"batch_frames\": {},\n  \
+         \"threads\": {BATCH_THREADS},\n  \
+         \"images_per_sec_single\": {images_per_sec_single:.3},\n  \
+         \"images_per_sec_batched\": {images_per_sec_batched:.3},\n  \
+         \"scaling_efficiency\": {scaling_efficiency:.4},\n  \
          \"sim_conv_events_per_s\": {conv_events_per_s:.3},\n  \
          \"events_per_frame\": {ev_per_frame:.3},\n  \
          \"allocs_per_inference\": {allocs_per_inference:.3}\n}}\n",
-        images.len()
+        images.len(),
+        batch.len()
     );
     match std::fs::write("BENCH_sim.json", &json) {
         Ok(()) => println!("wrote BENCH_sim.json"),

@@ -13,6 +13,9 @@ pub struct Metrics {
     failed: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
+    batches_served: AtomicU64,
+    batch_service_us_sum: AtomicU64,
+    max_batch_service_us: AtomicU64,
     queue_wait_us_sum: AtomicU64,
     service_us_sum: AtomicU64,
     sim_cycles_sum: AtomicU64,
@@ -30,6 +33,18 @@ pub struct MetricsSnapshot {
     pub failed: u64,
     pub batches: u64,
     pub mean_batch: f64,
+    /// Batches whose dispatch succeeded (`batches` counts every formed
+    /// batch, including ones that failed or panicked).
+    pub batches_served: u64,
+    /// Mean wall time a worker spent inside one *successful*
+    /// `infer_batch` dispatch (failed batches record no service time,
+    /// so they must not dilute the mean).
+    pub mean_batch_service_us: f64,
+    /// Worst-case batch dispatch time.
+    pub max_batch_service_us: u64,
+    /// Completed requests per second of cumulative batch service time —
+    /// the worker-side throughput figure (queue wait excluded).
+    pub batch_images_per_sec: f64,
     pub mean_queue_wait_us: f64,
     pub mean_service_us: f64,
     pub mean_sim_cycles: f64,
@@ -55,6 +70,14 @@ impl Metrics {
         self.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    /// Record one successfully completed `infer_batch` dispatch (wall
+    /// time of the whole batch).
+    pub fn batch_served(&self, service_us: u64) {
+        self.batches_served.fetch_add(1, Ordering::Relaxed);
+        self.batch_service_us_sum.fetch_add(service_us, Ordering::Relaxed);
+        self.max_batch_service_us.fetch_max(service_us, Ordering::Relaxed);
+    }
+
     pub fn completed(&self, queue_wait_us: u64, service_us: u64, sim_cycles: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.queue_wait_us_sum.fetch_add(queue_wait_us, Ordering::Relaxed);
@@ -67,6 +90,7 @@ impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
+        let batch_us = self.batch_service_us_sum.load(Ordering::Relaxed);
         let div = |a: u64, b: u64| if b == 0 { 0.0 } else { a as f64 / b as f64 };
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -75,6 +99,11 @@ impl Metrics {
             failed: self.failed.load(Ordering::Relaxed),
             batches,
             mean_batch: div(self.batched_requests.load(Ordering::Relaxed), batches),
+            batches_served: self.batches_served.load(Ordering::Relaxed),
+            mean_batch_service_us: div(batch_us, self.batches_served.load(Ordering::Relaxed)),
+            max_batch_service_us: self.max_batch_service_us.load(Ordering::Relaxed),
+            // completed requests per second of cumulative batch time
+            batch_images_per_sec: div(completed * 1_000_000, batch_us),
             mean_queue_wait_us: div(self.queue_wait_us_sum.load(Ordering::Relaxed), completed),
             mean_service_us: div(self.service_us_sum.load(Ordering::Relaxed), completed),
             mean_sim_cycles: div(self.sim_cycles_sum.load(Ordering::Relaxed), completed),
@@ -94,6 +123,10 @@ impl MetricsSnapshot {
         m.insert("failed".into(), Json::Num(self.failed as f64));
         m.insert("batches".into(), Json::Num(self.batches as f64));
         m.insert("mean_batch".into(), Json::Num(self.mean_batch));
+        m.insert("batches_served".into(), Json::Num(self.batches_served as f64));
+        m.insert("mean_batch_service_us".into(), Json::Num(self.mean_batch_service_us));
+        m.insert("max_batch_service_us".into(), Json::Num(self.max_batch_service_us as f64));
+        m.insert("batch_images_per_sec".into(), Json::Num(self.batch_images_per_sec));
         m.insert("mean_queue_wait_us".into(), Json::Num(self.mean_queue_wait_us));
         m.insert("mean_service_us".into(), Json::Num(self.mean_service_us));
         m.insert("mean_sim_cycles".into(), Json::Num(self.mean_sim_cycles));
@@ -115,6 +148,7 @@ mod tests {
         m.rejected();
         m.failed();
         m.batch_formed(2);
+        m.batch_served(500);
         m.completed(10, 100, 1000);
         m.completed(30, 300, 3000);
         let s = m.snapshot();
@@ -127,6 +161,17 @@ mod tests {
         assert!((s.mean_sim_cycles - 2000.0).abs() < 1e-9);
         assert_eq!(s.max_service_us, 300);
         assert!((s.mean_batch - 2.0).abs() < 1e-9);
+        assert_eq!(s.batches_served, 1);
+        assert!((s.mean_batch_service_us - 500.0).abs() < 1e-9);
+        assert_eq!(s.max_batch_service_us, 500);
+        // a formed-but-failed batch must not dilute the service mean
+        m.batch_formed(3);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.batches_served, 1);
+        assert!((s.mean_batch_service_us - 500.0).abs() < 1e-9);
+        // 2 completed over 500 µs of batch service time → 4000 img/s
+        assert!((s.batch_images_per_sec - 4000.0).abs() < 1e-6);
     }
 
     #[test]

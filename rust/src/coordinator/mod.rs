@@ -16,8 +16,20 @@
 //!
 //! Workers drain up to `batch_size` requests at once (dynamic batching:
 //! a batch forms from whatever is queued, never waiting for a full
-//! batch) and run their backend per frame — mirroring how a host CPU
-//! feeds the FPGA.
+//! batch) and dispatch the whole batch through one
+//! [`Backend::infer_batch`] call — so a worker whose backend is a
+//! [`crate::sim::parallel::ShardedExecutor`] fans the batch out across
+//! host cores, and batch-native backends recycle their scratch arenas
+//! across dispatches. Per-batch service time and worker-side throughput
+//! are tracked in [`Metrics`].
+//!
+//! Failure semantics are typed end to end: a misshapen frame is rejected
+//! at batch-admission time with [`EngineError::ShapeMismatch`] (it never
+//! fails the batch it would have joined), and a backend that *panics*
+//! mid-dispatch fails every in-flight request of that batch with
+//! [`EngineError::WorkerPanicked`] — the panic is caught, typed replies
+//! are sent, and the worker retires (its state can no longer be
+//! trusted); surviving workers keep draining the queue.
 //!
 //! Any [`Backend`] can serve, and pools may be **heterogeneous**: e.g.
 //! [`Coordinator::start_pool`] with seven simulator workers plus one
@@ -63,7 +75,9 @@ pub struct Response {
     pub sim_cycles: u64,
     /// Wall-clock time spent queued before a worker picked it up.
     pub queue_wait_us: u64,
-    /// Wall-clock service time (encode + simulate).
+    /// Wall-clock service time of the `infer_batch` dispatch this
+    /// request rode in — the request's reply is sent when its batch
+    /// completes, so this is the latency it actually experienced.
     pub service_us: u64,
     /// Size of the dynamic batch this request was served in.
     pub batch_size: usize,
@@ -79,6 +93,11 @@ pub struct ServerConfig {
     pub backend: BackendKind,
     /// ×P parallelization of each simulated accelerator.
     pub lanes: usize,
+    /// Host shard threads per worker: with `threads > 1` each sim worker
+    /// is a [`crate::sim::parallel::ShardedExecutor`] that fans its
+    /// drained batch out across this many cores (other backends ignore
+    /// it). Total host parallelism is `workers × threads`.
+    pub threads: usize,
     /// Bounded queue depth — the backpressure point.
     pub queue_depth: usize,
     /// Max requests a worker drains per batch.
@@ -91,6 +110,7 @@ impl Default for ServerConfig {
             workers: 4,
             backend: BackendKind::Sim,
             lanes: 8,
+            threads: 1,
             queue_depth: 256,
             batch_size: 16,
         }
@@ -111,6 +131,7 @@ impl Coordinator {
     pub fn start(net: Arc<Network>, cfg: ServerConfig) -> Result<Self, EngineError> {
         let backends = EngineBuilder::new(net)
             .lanes(cfg.lanes)
+            .threads(cfg.threads)
             .build_pool(cfg.backend, cfg.workers)?;
         Self::start_pool(backends, cfg)
     }
@@ -132,13 +153,15 @@ impl Coordinator {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
+        let live = Arc::new(std::sync::atomic::AtomicUsize::new(backends.len()));
         let mut workers = Vec::with_capacity(backends.len());
         for backend in backends {
             let rx = Arc::clone(&rx);
             let metrics = Arc::clone(&metrics);
+            let live = Arc::clone(&live);
             let batch_size = cfg.batch_size;
             workers.push(std::thread::spawn(move || {
-                worker_loop(backend, rx, metrics, batch_size);
+                worker_loop(backend, rx, metrics, batch_size, live);
             }));
         }
         Ok(Coordinator {
@@ -198,60 +221,171 @@ impl Coordinator {
     }
 }
 
+/// Metadata of one drained request (its frame has been moved into the
+/// worker's batch buffer).
+type Pending = (u64, Sender<Reply>, Instant);
+
+/// Admit one drained request into the forming batch — or reject it
+/// immediately with a typed [`EngineError::ShapeMismatch`] reply, so a
+/// single malformed frame can never fail the whole `infer_batch`
+/// dispatch it would have joined.
+fn admit(
+    req: Request,
+    expected: (usize, usize, usize),
+    frames: &mut Vec<Frame>,
+    pending: &mut Vec<Pending>,
+    metrics: &Metrics,
+) {
+    let Request { id, frame, reply, enqueued } = req;
+    if frame.shape() != expected {
+        metrics.failed();
+        let _ = reply.send(Err(EngineError::ShapeMismatch { expected, got: frame.shape() }));
+    } else {
+        frames.push(frame);
+        pending.push((id, reply, enqueued));
+    }
+}
+
 fn worker_loop(
     mut backend: Box<dyn Backend>,
     rx: Arc<Mutex<Receiver<Request>>>,
     metrics: Arc<Metrics>,
     batch_size: usize,
+    live: Arc<std::sync::atomic::AtomicUsize>,
 ) {
+    let expected = backend.input_shape();
+    // Reusable per-worker buffers: the frames handed to `infer_batch`,
+    // the drained request metadata, and the recycled inference outputs
+    // (batch-native backends keep `outs` warm across dispatches).
+    let mut frames: Vec<Frame> = Vec::with_capacity(batch_size);
+    let mut pending: Vec<Pending> = Vec::with_capacity(batch_size);
+    let mut outs: Vec<Inference> = Vec::new();
     loop {
-        // Dynamic batching: block for one request, then opportunistically
-        // drain whatever else is queued (up to batch_size).
-        let mut batch = Vec::with_capacity(batch_size);
+        frames.clear();
+        pending.clear();
         {
+            // Dynamic batching: block for one request, then
+            // opportunistically drain whatever else is queued (up to
+            // batch_size). Misshapen frames are rejected with a typed
+            // reply here, so one bad request can never fail a batch.
             let guard = rx.lock().expect("rx mutex poisoned");
             match guard.recv() {
-                Ok(req) => batch.push(req),
+                Ok(req) => admit(req, expected, &mut frames, &mut pending, &metrics),
                 // Channel closed; every queued request has already been
                 // received (see `Coordinator::shutdown`), so exiting here
                 // cannot strand work.
                 Err(_) => return,
             }
-            while batch.len() < batch_size {
+            while frames.len() < batch_size {
                 match guard.try_recv() {
-                    Ok(req) => batch.push(req),
+                    Ok(req) => admit(req, expected, &mut frames, &mut pending, &metrics),
                     Err(_) => break,
                 }
             }
         } // release the lock before the (long) simulation
 
-        let n = batch.len();
-        metrics.batch_formed(n);
-        for req in batch {
-            let picked = Instant::now();
-            let queue_wait_us = picked.duration_since(req.enqueued).as_micros() as u64;
-            let reply = match backend.infer(&req.frame) {
-                Ok(Inference { pred, logits, stats }) => {
-                    let service_us = picked.elapsed().as_micros() as u64;
-                    metrics.completed(queue_wait_us, service_us, stats.total_cycles);
-                    Ok(Response {
-                        id: req.id,
-                        pred,
-                        logits,
-                        backend: backend.name(),
-                        sim_cycles: stats.total_cycles,
-                        queue_wait_us,
-                        service_us,
-                        batch_size: n,
-                    })
-                }
-                Err(e) => {
-                    metrics.failed();
-                    Err(e)
-                }
-            };
-            let _ = req.reply.send(reply);
+        let n = frames.len();
+        if n == 0 {
+            continue; // everything drained was misshapen
         }
+        metrics.batch_formed(n);
+        let picked = Instant::now();
+
+        // One `infer_batch` dispatch for the whole drained batch. A
+        // panicking backend must surface as a typed reply on every
+        // in-flight request — not as a silently dropped channel — so the
+        // dispatch runs under `catch_unwind` and the worker retires
+        // afterwards (its backend state can no longer be trusted).
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            backend.infer_batch(&frames, &mut outs)
+        }));
+        let batch_us = picked.elapsed().as_micros() as u64;
+        match result {
+            // `infer_batch` must fill exactly one output per frame; an
+            // implementation that returns Ok with a short (or long) outs
+            // is a contract violation and fails the batch typed below
+            // instead of silently dropping the unmatched reply channels.
+            Ok(Ok(())) if outs.len() == n => {
+                metrics.batch_served(batch_us);
+                for ((id, reply, enqueued), inf) in pending.drain(..).zip(outs.iter()) {
+                    let queue_wait_us =
+                        picked.duration_since(enqueued).as_micros() as u64;
+                    metrics.completed(queue_wait_us, batch_us, inf.stats.total_cycles);
+                    let _ = reply.send(Ok(Response {
+                        id,
+                        pred: inf.pred,
+                        logits: inf.logits.clone(),
+                        backend: backend.name(),
+                        sim_cycles: inf.stats.total_cycles,
+                        queue_wait_us,
+                        // the request completes when its batch completes
+                        service_us: batch_us,
+                        batch_size: n,
+                    }));
+                }
+            }
+            Ok(Ok(())) => {
+                let e = EngineError::Backend(format!(
+                    "{}: infer_batch returned {} outputs for {} frames",
+                    backend.name(),
+                    outs.len(),
+                    n,
+                ));
+                fail_batch(&mut pending, &metrics, e);
+            }
+            Ok(Err(e)) => fail_batch(&mut pending, &metrics, e),
+            Err(payload) => {
+                let panic = EngineError::worker_panicked(backend.name(), &*payload);
+                fail_batch(&mut pending, &metrics, panic);
+                // Retire this worker — its backend state can no longer
+                // be trusted. If other workers are still live they keep
+                // draining the queue; the LAST worker to die instead
+                // becomes a fail-fast drainer, so queued and future
+                // requests get typed replies rather than hanging on a
+                // channel nobody will ever answer.
+                if live.fetch_sub(1, std::sync::atomic::Ordering::AcqRel) > 1 {
+                    return;
+                }
+                drain_and_fail(backend.name(), &rx, &metrics, &*payload);
+                return;
+            }
+        }
+    }
+}
+
+/// Reply a typed error to every member of the in-flight batch.
+///
+/// The error is [`EngineError::replicate`]d per member, so every
+/// batchmate — not just the first — receives the matchable variant
+/// (`WorkerPanicked`, `ShapeMismatch`, …; only `Io` degrades to a
+/// `Backend` wrapper, as its `io::Error` cannot be cloned). `infer_batch`
+/// is all-or-nothing by contract, which is why the coordinator
+/// pre-validates frame shapes at admission: the only per-request error
+/// the built-in backends can raise never reaches a batch.
+fn fail_batch(pending: &mut Vec<Pending>, metrics: &Metrics, e: EngineError) {
+    for (_, reply, _) in pending.drain(..) {
+        metrics.failed();
+        let _ = reply.send(Err(e.replicate()));
+    }
+}
+
+/// Fail-fast drain mode of the last live worker after a panic: keep
+/// receiving and reply [`EngineError::WorkerPanicked`] to everything
+/// until the coordinator shuts the channel down — no request ever
+/// blocks forever on a pool with zero serving capacity.
+fn drain_and_fail(
+    worker: &'static str,
+    rx: &Mutex<Receiver<Request>>,
+    metrics: &Metrics,
+    payload: &(dyn std::any::Any + Send),
+) {
+    loop {
+        let req = match rx.lock().expect("rx mutex poisoned").recv() {
+            Ok(req) => req,
+            Err(_) => return, // channel closed by shutdown
+        };
+        metrics.failed();
+        let _ = req.reply.send(Err(EngineError::worker_panicked(worker, payload)));
     }
 }
 
@@ -356,6 +490,159 @@ mod tests {
         let err = coord.submit(bad).unwrap().recv().unwrap().unwrap_err();
         assert!(matches!(err, EngineError::ShapeMismatch { .. }), "{err}");
         assert_eq!(coord.metrics.snapshot().failed, 1);
+        coord.shutdown();
+    }
+
+    /// A backend whose inference path panics — the fault-injection probe
+    /// for the worker-panic containment contract.
+    struct PanickingBackend;
+
+    impl Backend for PanickingBackend {
+        fn name(&self) -> &'static str {
+            "panicker"
+        }
+        fn kind(&self) -> BackendKind {
+            BackendKind::DenseRef
+        }
+        fn cycle_model(&self) -> crate::engine::CycleModel {
+            crate::engine::CycleModel {
+                n_pes: 0,
+                clock_hz: 1.0,
+                event_driven: false,
+                cycle_accurate: false,
+            }
+        }
+        fn input_shape(&self) -> (usize, usize, usize) {
+            (28, 28, 1)
+        }
+        fn infer(&mut self, _frame: &Frame) -> Result<Inference, EngineError> {
+            panic!("injected backend fault");
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_as_typed_error() {
+        // One panicking worker, several queued requests: every request of
+        // the drained batch must receive a typed WorkerPanicked reply —
+        // not a silently dropped channel.
+        let coord = Coordinator::start_pool(
+            vec![Box::new(PanickingBackend) as Box<dyn Backend>],
+            ServerConfig { queue_depth: 8, batch_size: 4, ..Default::default() },
+        )
+        .unwrap();
+        // EVERY batchmate must get the matchable WorkerPanicked variant,
+        // whether it rode in the panicking dispatch or was drained after.
+        let replies: Vec<_> = (0..4).map(|i| coord.submit(frame(i)).unwrap()).collect();
+        for rx in replies {
+            let err = rx.recv().expect("typed reply, not a dropped channel").unwrap_err();
+            assert!(matches!(err, EngineError::WorkerPanicked { .. }), "{err}");
+            let rendered = err.to_string();
+            assert!(rendered.contains("panicker"), "{rendered}");
+            assert!(rendered.contains("injected backend fault"), "{rendered}");
+        }
+        assert_eq!(coord.metrics.snapshot().failed, 4);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn last_panicked_worker_drains_queue_with_typed_errors() {
+        // A pool whose ONLY worker panics must not strand queued or
+        // later requests on a channel nobody answers: the last worker to
+        // die becomes a fail-fast drainer.
+        let coord = Coordinator::start_pool(
+            vec![Box::new(PanickingBackend) as Box<dyn Backend>],
+            ServerConfig { queue_depth: 16, batch_size: 1, ..Default::default() },
+        )
+        .unwrap();
+        // several requests, submitted before AND after the panic lands
+        let early: Vec<_> = (0..4).map(|i| coord.submit(frame(i)).unwrap()).collect();
+        for rx in early {
+            let err = rx.recv().expect("typed reply, not a dropped channel").unwrap_err();
+            assert!(matches!(err, EngineError::WorkerPanicked { .. }), "{err}");
+        }
+        let late = coord.submit(frame(9)).unwrap();
+        let err = late.recv().expect("drainer must answer late requests").unwrap_err();
+        assert!(matches!(err, EngineError::WorkerPanicked { .. }), "{err}");
+        assert_eq!(coord.metrics.snapshot().failed, 5);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn panicked_worker_does_not_kill_survivors() {
+        // Heterogeneous pool: the panicker retires on its first batch,
+        // the healthy sim worker keeps draining the queue.
+        let net = Arc::new(random_network(37));
+        let healthy = EngineBuilder::new(Arc::clone(&net)).build(BackendKind::Sim).unwrap();
+        let coord = Coordinator::start_pool(
+            vec![Box::new(PanickingBackend) as Box<dyn Backend>, healthy],
+            ServerConfig { queue_depth: 32, batch_size: 2, ..Default::default() },
+        )
+        .unwrap();
+        let mut panics = 0;
+        let mut served = 0;
+        for i in 0..16 {
+            match coord.submit(frame(i)).unwrap().recv().unwrap() {
+                Ok(resp) => {
+                    assert_eq!(resp.backend, "sim");
+                    served += 1;
+                }
+                Err(EngineError::WorkerPanicked { .. }) => panics += 1,
+                Err(e) => panic!("unexpected: {e}"),
+            }
+        }
+        assert!(served > 0, "healthy worker must keep serving after a peer panic");
+        assert_eq!(served + panics, 16);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batched_dispatch_reports_batch_metrics() {
+        let net = Arc::new(random_network(38));
+        let coord = Coordinator::start(
+            Arc::clone(&net),
+            ServerConfig { workers: 1, lanes: 4, queue_depth: 32, batch_size: 8, ..Default::default() },
+        )
+        .unwrap();
+        let replies: Vec<_> = (0..12).map(|i| coord.submit(frame(i)).unwrap()).collect();
+        for rx in replies {
+            let resp = rx.recv().unwrap().unwrap();
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+            // a request's service time is its batch's wall time
+            assert!(resp.service_us > 0);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.completed, 12);
+        assert!(snap.batches >= 2, "12 requests, max batch 8 → at least 2 batches");
+        assert!(snap.mean_batch_service_us > 0.0);
+        assert!(snap.batch_images_per_sec > 0.0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sharded_backend_pool_serves_batches() {
+        // A coordinator worker can itself be a multi-core ShardedExecutor:
+        // one queue, one worker, four shard threads under it.
+        let net = Arc::new(random_network(39));
+        let sharded = EngineBuilder::new(Arc::clone(&net))
+            .lanes(2)
+            .threads(4)
+            .build(BackendKind::Sim)
+            .unwrap();
+        let coord = Coordinator::start_pool(
+            vec![sharded],
+            ServerConfig { queue_depth: 64, batch_size: 16, ..Default::default() },
+        )
+        .unwrap();
+        let f = frame(55);
+        let mut direct = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want = direct.infer_image(f.as_u8().unwrap());
+        let replies: Vec<_> = (0..24).map(|_| coord.submit(f.clone()).unwrap()).collect();
+        for rx in replies {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.backend, "sim");
+            assert_eq!(resp.logits, want.logits);
+        }
+        assert_eq!(coord.metrics.snapshot().completed, 24);
         coord.shutdown();
     }
 

@@ -34,6 +34,11 @@ pub enum EngineError {
     Closed,
     /// A backend failed while executing an inference.
     Backend(String),
+    /// A worker thread panicked mid-inference. Carries the worker's
+    /// identity and the panic payload (when it was a string) so the
+    /// failure surfaces as a typed, matchable reply instead of a
+    /// silently dropped channel.
+    WorkerPanicked { worker: String, payload: String },
     /// Filesystem error with the path that caused it.
     Io { path: String, source: std::io::Error },
     /// Free-form context wrapper (produced by [`Context`]).
@@ -44,6 +49,55 @@ impl EngineError {
     /// Free-form error, for internal plumbing that has no richer variant.
     pub fn msg(m: impl Into<String>) -> Self {
         EngineError::Msg(m.into())
+    }
+
+    /// Reconstruct this error for fan-out to multiple recipients (e.g.
+    /// every batchmate of a failed `infer_batch` dispatch). Every
+    /// variant is rebuilt verbatim — so receivers can still match on the
+    /// type — except [`EngineError::Io`], whose live `io::Error` cannot
+    /// be cloned and falls back to a [`EngineError::Backend`] wrapper
+    /// carrying the same rendering. (`EngineError` deliberately does not
+    /// implement `Clone` because of that one variant.)
+    pub fn replicate(&self) -> EngineError {
+        match self {
+            EngineError::Artifacts(m) => EngineError::Artifacts(m.clone()),
+            EngineError::Parse(m) => EngineError::Parse(m.clone()),
+            EngineError::UnknownBackend { given, valid } => EngineError::UnknownBackend {
+                given: given.clone(),
+                valid: valid.clone(),
+            },
+            EngineError::ShapeMismatch { expected, got } => {
+                EngineError::ShapeMismatch { expected: *expected, got: *got }
+            }
+            EngineError::DtypeMismatch { expected, got } => {
+                EngineError::DtypeMismatch { expected: *expected, got: *got }
+            }
+            EngineError::Unavailable(m) => EngineError::Unavailable(m.clone()),
+            EngineError::Busy => EngineError::Busy,
+            EngineError::Closed => EngineError::Closed,
+            EngineError::Backend(m) => EngineError::Backend(m.clone()),
+            EngineError::WorkerPanicked { worker, payload } => EngineError::WorkerPanicked {
+                worker: worker.clone(),
+                payload: payload.clone(),
+            },
+            EngineError::Io { .. } => EngineError::Backend(self.to_string()),
+            EngineError::Msg(m) => EngineError::Msg(m.clone()),
+        }
+    }
+
+    /// Build a [`EngineError::WorkerPanicked`] from a payload caught with
+    /// `std::panic::catch_unwind` / `JoinHandle::join`, extracting the
+    /// message when the panic carried one.
+    pub fn worker_panicked(
+        worker: impl Into<String>,
+        payload: &(dyn std::any::Any + Send),
+    ) -> Self {
+        let msg = payload
+            .downcast_ref::<&'static str>()
+            .map(|s| (*s).to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        EngineError::WorkerPanicked { worker: worker.into(), payload: msg }
     }
 }
 
@@ -69,6 +123,9 @@ impl fmt::Display for EngineError {
             EngineError::Busy => write!(f, "queue full (backpressure)"),
             EngineError::Closed => write!(f, "server is shut down"),
             EngineError::Backend(m) => write!(f, "backend error: {m}"),
+            EngineError::WorkerPanicked { worker, payload } => {
+                write!(f, "worker '{worker}' panicked: {payload}")
+            }
             EngineError::Io { path, source } => write!(f, "{path}: {source}"),
             EngineError::Msg(m) => write!(f, "{m}"),
         }
@@ -183,6 +240,34 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("gpu") && s.contains("sim") && s.contains("dense-ref"));
         assert!(EngineError::Busy.to_string().contains("backpressure"));
+    }
+
+    #[test]
+    fn replicate_preserves_variants() {
+        let shape = EngineError::ShapeMismatch { expected: (28, 28, 1), got: (4, 4, 1) };
+        assert!(matches!(shape.replicate(), EngineError::ShapeMismatch { .. }));
+        let panic = EngineError::WorkerPanicked {
+            worker: "w".into(),
+            payload: "boom".into(),
+        };
+        match panic.replicate() {
+            EngineError::WorkerPanicked { worker, payload } => {
+                assert_eq!(worker, "w");
+                assert_eq!(payload, "boom");
+            }
+            other => panic!("variant lost: {other}"),
+        }
+        // Io is the one variant that degrades (io::Error is not Clone),
+        // keeping the same rendering.
+        let io = EngineError::Io {
+            path: "x".into(),
+            source: std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        };
+        let msg = io.to_string();
+        match io.replicate() {
+            EngineError::Backend(m) => assert_eq!(m, msg),
+            other => panic!("unexpected: {other}"),
+        }
     }
 
     #[test]

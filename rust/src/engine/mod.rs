@@ -156,6 +156,42 @@ pub trait Backend: Send {
 
     /// Run one frame end to end.
     fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError>;
+
+    /// Run a whole batch of frames, writing one [`Inference`] per frame
+    /// into `out` (resized to `frames.len()`, existing entries recycled
+    /// where the implementation supports it).
+    ///
+    /// The default implementation loops [`Self::infer`] sequentially;
+    /// batch-native backends override it — the simulator recycles its
+    /// scratch arenas per frame, and [`crate::sim::parallel::ShardedExecutor`]
+    /// shards the batch across worker threads. Output order always
+    /// matches input order, and results are bit-identical to calling
+    /// `infer` per frame (the `parity` suite referees this for every
+    /// registered backend).
+    fn infer_batch(
+        &mut self,
+        frames: &[Frame],
+        out: &mut Vec<Inference>,
+    ) -> Result<(), EngineError> {
+        out.clear();
+        out.reserve(frames.len());
+        for frame in frames {
+            out.push(self.infer(frame)?);
+        }
+        Ok(())
+    }
+}
+
+/// Resize a batch-output vector to `n` entries while keeping the
+/// already-grown buffers of surviving entries (the batched analogue of
+/// recycling one [`Inference`] across `*_into` calls). Shared by every
+/// batch-native `infer_batch` implementation.
+pub(crate) fn resize_batch_out(out: &mut Vec<Inference>, n: usize) {
+    if out.len() > n {
+        out.truncate(n);
+    } else {
+        out.resize_with(n, Inference::default);
+    }
 }
 
 /// Shared frame validation for network-backed backends.

@@ -9,10 +9,12 @@ use crate::baseline::{self, BaselineResult};
 use crate::cost::CLOCK_HZ;
 use crate::sim::conv_unit::HazardMode;
 use crate::sim::dense_ref::{DenseRef, DenseResult};
+use crate::sim::parallel::ShardedExecutor;
+use crate::sim::plan::NetworkPlan;
 use crate::sim::{AccelConfig, Accelerator, LayerStats, RunStats};
 use crate::snn::network::Network;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Every backend the registry can construct.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
@@ -101,8 +103,17 @@ impl std::fmt::Display for BackendKind {
 pub struct EngineBuilder {
     net: Arc<Network>,
     lanes: usize,
+    threads: usize,
     hazard_mode: HazardMode,
     clock_hz: f64,
+    // Sim backends share ONE compiled NetworkPlan: it is a pure function
+    // of the network, so the builder caches it on first sim build and
+    // every later build (e.g. a whole coordinator pool) reuses the Arc
+    // instead of recompiling the weight banks per worker. The cell is
+    // itself behind an Arc so builder CLONES share the cache too — the
+    // idiomatic `builder.clone().threads(T).build(..)` pattern must not
+    // recompile (`clones_share_the_plan_cache` referees this).
+    plan: Arc<OnceLock<Arc<NetworkPlan>>>,
     // Only the PJRT backend reads this; keep the builder API identical
     // in both configurations.
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
@@ -114,16 +125,38 @@ impl EngineBuilder {
         EngineBuilder {
             net,
             lanes: 1,
+            threads: 1,
             hazard_mode: HazardMode::ForwardAndStall,
             clock_hz: CLOCK_HZ,
+            plan: Arc::new(OnceLock::new()),
             artifacts: None,
         }
+    }
+
+    /// The shared compiled plan for sim backends (compiled once per
+    /// builder, however many workers are built from it).
+    fn sim_plan(&self) -> Arc<NetworkPlan> {
+        Arc::clone(
+            self.plan
+                .get_or_init(|| Arc::new(NetworkPlan::compile(&self.net))),
+        )
     }
 
     /// ×P parallelization of the simulated accelerator (ignored by the
     /// other backends).
     pub fn lanes(mut self, lanes: usize) -> Self {
         self.lanes = lanes;
+        self
+    }
+
+    /// Host worker threads for batched inference. With `threads > 1`,
+    /// [`Self::build`] wraps the sim backend in a
+    /// [`crate::sim::parallel::ShardedExecutor`] whose `infer_batch`
+    /// shards frames across this many cores (single-frame `infer` and
+    /// everything modeled are unchanged; other backends ignore it).
+    /// Clamped to at least 1.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
         self
     }
 
@@ -148,14 +181,22 @@ impl EngineBuilder {
 
     /// Construct one backend of the given kind.
     pub fn build(&self, kind: BackendKind) -> Result<Box<dyn Backend>, EngineError> {
+        let accel_cfg = AccelConfig {
+            lanes: self.lanes,
+            hazard_mode: self.hazard_mode,
+            clock_hz: self.clock_hz,
+        };
         Ok(match kind {
-            BackendKind::Sim => Box::new(Accelerator::new(
+            BackendKind::Sim if self.threads > 1 => Box::new(ShardedExecutor::with_plan(
                 Arc::clone(&self.net),
-                AccelConfig {
-                    lanes: self.lanes,
-                    hazard_mode: self.hazard_mode,
-                    clock_hz: self.clock_hz,
-                },
+                self.sim_plan(),
+                accel_cfg,
+                self.threads,
+            )),
+            BackendKind::Sim => Box::new(Accelerator::with_plan(
+                Arc::clone(&self.net),
+                self.sim_plan(),
+                accel_cfg,
             )),
             BackendKind::DenseRef => Box::new(DenseRefBackend { net: Arc::clone(&self.net) }),
             BackendKind::DenseMac | BackendKind::Systolic | BackendKind::AerArray => {
@@ -470,6 +511,54 @@ mod tests {
             if b.cycle_model().cycle_accurate {
                 assert!(inf.stats.total_cycles > 0, "{}", b.name());
             }
+        }
+    }
+
+    #[test]
+    fn builder_caches_one_plan_for_sim_pools() {
+        // A whole pool of sim workers must share ONE compiled plan.
+        let net = Arc::new(random_network(15));
+        let builder = EngineBuilder::new(net);
+        let first = builder.sim_plan();
+        let _pool = builder.build_pool(BackendKind::Sim, 3).unwrap();
+        assert!(
+            Arc::ptr_eq(&first, &builder.sim_plan()),
+            "build_pool recompiled the network plan"
+        );
+    }
+
+    #[test]
+    fn clones_share_the_plan_cache() {
+        // `builder.clone().threads(T).build(..)` — the documented usage —
+        // must reuse the same compiled plan as the original builder.
+        let net = Arc::new(random_network(16));
+        let builder = EngineBuilder::new(net);
+        let from_clone = builder.clone().threads(2).sim_plan();
+        assert!(
+            Arc::ptr_eq(&from_clone, &builder.sim_plan()),
+            "cloned builder recompiled the network plan"
+        );
+    }
+
+    #[test]
+    fn threads_knob_builds_sharded_sim() {
+        let net = Arc::new(random_network(14));
+        let builder = EngineBuilder::new(Arc::clone(&net)).lanes(2);
+        let mut single = builder.build(BackendKind::Sim).unwrap();
+        let mut sharded = builder.clone().threads(4).build(BackendKind::Sim).unwrap();
+        // same serving identity, same results — only host throughput changes
+        assert_eq!(sharded.name(), "sim");
+        assert_eq!(sharded.kind(), BackendKind::Sim);
+        let frames: Vec<Frame> = (0..6)
+            .map(|i| Frame::from_u8(28, 28, 1, vec![40 * i as u8 + 10; 784]).unwrap())
+            .collect();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        single.infer_batch(&frames, &mut a).unwrap();
+        sharded.infer_batch(&frames, &mut b).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.logits, y.logits);
+            assert_eq!(x.stats, y.stats);
         }
     }
 

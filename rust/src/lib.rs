@@ -23,8 +23,11 @@
 //! | `aer-array` | [`baseline::aer_array`] (ASIE-like)| event-driven, fmap-sized array |
 //! | `pjrt`      | [`runtime`] (JAX/Pallas AOT)      | functional golden (`pjrt` feature) |
 //!
-//! Selecting and cross-checking backends takes a few lines — no
-//! artifacts needed with a synthetic network:
+//! Inference is **batch-native**: [`engine::Backend::infer_batch`] runs
+//! a whole slice of frames per dispatch, and the builder's `threads`
+//! knob shards a sim batch across host cores. Selecting, batching and
+//! cross-checking backends takes a few lines — no artifacts needed with
+//! a synthetic network:
 //!
 //! ```
 //! use sacsnn::engine::{Backend, BackendKind, EngineBuilder, Frame};
@@ -34,21 +37,69 @@
 //! # fn main() -> sacsnn::Result<()> {
 //! let net = Arc::new(random_network(7));
 //! let builder = EngineBuilder::new(Arc::clone(&net)).lanes(4);
-//! let mut sim = builder.build(BackendKind::Sim)?;
+//! // `threads(2)`: infer_batch shards across 2 cores (sim backend);
+//! // results stay bit-identical to a sequential loop in input order.
+//! let mut sim = builder.clone().threads(2).build(BackendKind::Sim)?;
 //! let mut golden = builder.build(BackendKind::DenseRef)?;
 //!
 //! let (h, w, c) = net.input_shape();
-//! let frame = Frame::from_u8(h, w, c, vec![128; h * w * c])?;
-//! let fast = sim.infer(&frame)?;
-//! let reference = golden.infer(&frame)?;
-//! assert_eq!(fast.logits, reference.logits); // spike-exact equivalence
-//! assert!(fast.stats.total_cycles > 0);      // ...with a cycle model
+//! let frames: Vec<Frame> = (0..6)
+//!     .map(|i| Frame::from_u8(h, w, c, vec![i as u8 * 40 + 10; h * w * c]))
+//!     .collect::<sacsnn::Result<_>>()?;
+//!
+//! let mut batch = Vec::new(); // recycled across dispatches
+//! sim.infer_batch(&frames, &mut batch)?;
+//! for (frame, fast) in frames.iter().zip(&batch) {
+//!     let reference = golden.infer(frame)?;
+//!     assert_eq!(fast.logits, reference.logits); // spike-exact equivalence
+//!     assert!(fast.stats.total_cycles > 0);      // ...with a cycle model
+//! }
 //!
 //! // unknown kinds fail with the full registry listed
 //! assert!(BackendKind::parse("tpu").is_err());
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! ## Throughput
+//!
+//! The paper keeps its PE array saturated by feeding it nothing but
+//! events; this crate applies the same discipline to host cores when
+//! serving at scale. Two knobs govern the batched hot path:
+//!
+//! * **`--batch N` / [`engine::Backend::infer_batch`]** — frames per
+//!   dispatch. Batch-native backends recycle their output containers
+//!   and scratch arenas across dispatches; the default trait impl
+//!   (functional baselines) just loops `infer`. Output order always
+//!   matches input order, bit-identically to sequential inference —
+//!   the `parity` suite checks batch sizes {0, 1, 7, 64} × thread
+//!   counts {1, 4} for every registered backend.
+//! * **`--threads T` / [`engine::EngineBuilder::threads`]** — host
+//!   cores per sim batch. With `T > 1` the sim backend becomes a
+//!   [`sim::parallel::ShardedExecutor`]: the compiled
+//!   [`sim::plan::NetworkPlan`] is shared read-only behind an `Arc`,
+//!   and `T` workers — each owning a private [`sim::plan::Scratch`],
+//!   membrane memory and pipeline units — *chase the queue*, claiming
+//!   the next frame index from an atomic cursor so a spike-dense
+//!   straggler frame never idles the pool.
+//!
+//! **Per-worker zero-allocation guarantee.** Each worker inherits the
+//! compile/execute split: after a warm-up dispatch has grown its
+//! scratch to the workload's high-water mark, a worker's inference
+//! loop performs zero heap allocations — a constant-size `infer_batch`
+//! on a warmed single-worker executor does not touch the allocator at
+//! all, and a multi-thread dispatch allocates only the O(T)
+//! thread-spawn bookkeeping (`ShardedExecutor::warm` warms every
+//! worker deterministically; both properties are enforced by the
+//! `zero_alloc` test;
+//! `allocs_per_inference` is tracked in `BENCH_sim.json` and gated in
+//! CI against `BENCH_baseline.json`).
+//!
+//! Tuning: `threads × workers` (coordinator pools) should not exceed
+//! physical cores; larger batches amortize dispatch overhead but add
+//! queueing latency — `sacsnn bench --threads T --batch N` measures
+//! images/sec and scaling efficiency for any combination, with no
+//! artifacts required.
 //!
 //! ## Module map
 //!
@@ -84,8 +135,13 @@
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas golden
 //!   model (HLO text artifacts), used for spike-exact cross-checks.
 //!   Gated behind the `pjrt` cargo feature; stubbed otherwise.
-//! * [`coordinator`] — an inference service (router, batcher, worker pool)
-//!   that serves any `Box<dyn Backend>`, including heterogeneous pools.
+//! * [`coordinator`] — an inference service (router, dynamic batcher,
+//!   worker pool) that dispatches whole batches through
+//!   `Backend::infer_batch` to any `Box<dyn Backend>` — including
+//!   heterogeneous pools and multi-core
+//!   [`sim::parallel::ShardedExecutor`] workers — with typed failure
+//!   containment (`EngineError::WorkerPanicked`) and per-batch
+//!   latency/throughput metrics.
 //! * [`artifact`] — readers for the build-time artifacts (tensor archives,
 //!   `meta.json`).
 //! * [`report`] — the paper's tables/figures plus golden cross-checks,

@@ -5,8 +5,12 @@
 //!
 //! ```text
 //! sacsnn run        [--backend sim] [--dataset mnist] [--bits 8] [--lanes 8] [--index 0]
+//!                   [--batch 1] [--threads 1]
 //! sacsnn eval       [--backend sim] [--dataset mnist] [--bits 8] [--lanes 8] [--n 200]
-//! sacsnn serve      [--backend sim] [--workers 4] [--lanes 8] [--requests 200] [--json]
+//!                   [--batch 16] [--threads 1]
+//! sacsnn serve      [--backend sim] [--workers 4] [--lanes 8] [--threads 1]
+//!                   [--batch 16] [--requests 200] [--json]
+//! sacsnn bench      [--backend sim] [--lanes 8] [--threads 4] [--batch 64] [--n 128]
 //! sacsnn golden     [--backend sim] [--n 10]   backend vs AOT JAX model (PJRT)
 //! sacsnn backends                              list registered backends
 //! sacsnn table1|table2|table3|table4|table5|fig12|ablate
@@ -15,6 +19,13 @@
 //!
 //! `--backend` accepts any registered [`BackendKind`]; unknown names fail
 //! with the full list of valid kinds.
+//!
+//! Throughput knobs (see `lib.rs` §Throughput): `--batch N` groups frames
+//! into one `infer_batch` dispatch; `--threads N` shards each sim batch
+//! across N host cores (`run`/`eval`/`bench`) or per coordinator worker
+//! (`serve`). `bench` measures single- vs multi-thread images/sec and
+//! reports the scaling efficiency — it always runs, falling back to a
+//! seeded synthetic workload when artifacts are missing.
 
 use sacsnn::coordinator::{Coordinator, ServerConfig};
 use sacsnn::data::Dataset;
@@ -86,9 +97,41 @@ fn cmd_run(args: &Args) -> Result<()> {
     let bits: u32 = args.get("bits", 8)?;
     let lanes: usize = args.get("lanes", 8)?;
     let index: usize = args.get("index", 0)?;
+    let batch: usize = args.get("batch", 1)?;
+    let threads: usize = args.get("threads", 1)?;
     let kind = args.backend()?;
     let (net, ds) = load_env(&dataset, bits)?;
-    let mut backend = EngineBuilder::new(Arc::clone(&net)).lanes(lanes).build(kind)?;
+    let mut backend = EngineBuilder::new(Arc::clone(&net))
+        .lanes(lanes)
+        .threads(threads)
+        .build(kind)?;
+    if batch > 1 {
+        // Batched mode: run `batch` consecutive test images through one
+        // infer_batch dispatch and report the throughput.
+        let frames: Vec<_> = (0..batch)
+            .map(|i| report::frame_for(&net, &ds, (index + i) % ds.n_test()))
+            .collect::<Result<_>>()?;
+        let mut outs = Vec::new();
+        let t0 = Instant::now();
+        backend.infer_batch(&frames, &mut outs)?;
+        let wall = t0.elapsed();
+        let correct = outs
+            .iter()
+            .enumerate()
+            .filter(|(i, r)| r.pred == ds.test_y[(index + i) % ds.n_test()] as usize)
+            .count();
+        println!(
+            "backend: {} [{} threads]   batch of {batch} images from #{index}",
+            backend.name(),
+            threads.max(1),
+        );
+        println!(
+            "correct: {correct}/{batch}   wall {:.2} ms → {:.1} images/s host",
+            wall.as_secs_f64() * 1e3,
+            batch as f64 / wall.as_secs_f64(),
+        );
+        return Ok(());
+    }
     let frame = report::frame_for(&net, &ds, index)?;
     let t0 = Instant::now();
     let res = backend.infer(&frame)?;
@@ -129,26 +172,43 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let dataset = args.get_str("dataset", "mnist");
     let bits: u32 = args.get("bits", 8)?;
     let lanes: usize = args.get("lanes", 8)?;
+    let batch: usize = args.get("batch", 16)?.max(1);
+    let threads: usize = args.get("threads", 1)?;
     let kind = args.backend()?;
     let (net, ds) = load_env(&dataset, bits)?;
     let n: usize = args.get("n", 200.min(ds.n_test()))?;
     let n = n.min(ds.n_test());
-    let mut backend = EngineBuilder::new(Arc::clone(&net)).lanes(lanes).build(kind)?;
+    let mut backend = EngineBuilder::new(Arc::clone(&net))
+        .lanes(lanes)
+        .threads(threads)
+        .build(kind)?;
     let cm = backend.cycle_model();
     let mut correct = 0usize;
     let mut cycles = 0u64;
+    let mut outs = Vec::new();
     let t0 = Instant::now();
-    for i in 0..n {
-        let res = backend.infer(&report::frame_for(&net, &ds, i)?)?;
-        if res.pred == ds.test_y[i] as usize {
-            correct += 1;
+    // Batched evaluation: `batch` frames per infer_batch dispatch, reusing
+    // the output containers across chunks.
+    let mut i = 0;
+    while i < n {
+        let chunk = batch.min(n - i);
+        let frames: Vec<_> = (i..i + chunk)
+            .map(|j| report::frame_for(&net, &ds, j))
+            .collect::<Result<_>>()?;
+        backend.infer_batch(&frames, &mut outs)?;
+        for (j, res) in outs.iter().enumerate() {
+            if res.pred == ds.test_y[i + j] as usize {
+                correct += 1;
+            }
+            cycles += res.stats.total_cycles;
         }
-        cycles += res.stats.total_cycles;
+        i += chunk;
     }
     let wall = t0.elapsed();
     println!(
-        "{dataset} q{bits} [{}] ×{lanes}: accuracy {}/{n} = {:.2}%",
+        "{dataset} q{bits} [{}] ×{lanes} (batch {batch}, {} host threads): accuracy {}/{n} = {:.2}%",
         backend.name(),
+        threads.max(1),
         correct,
         100.0 * correct as f64 / n as f64
     );
@@ -174,6 +234,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.get("workers", 4)?,
         backend: args.backend()?,
         lanes: args.get("lanes", 8)?,
+        threads: args.get("threads", 1)?,
         queue_depth: args.get("queue-depth", 256)?,
         batch_size: args.get("batch", 16)?,
     };
@@ -199,12 +260,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("{}", snap.to_json());
     } else {
         println!(
-            "served {requests} requests in {:.2} s  ({:.0} req/s) with {} × [{}] workers (×{} lanes)",
+            "served {requests} requests in {:.2} s  ({:.0} req/s) with {} × [{}] workers \
+             (×{} lanes, {} shard threads each)",
             wall.as_secs_f64(),
             requests as f64 / wall.as_secs_f64(),
             cfg.workers,
             cfg.backend,
             cfg.lanes,
+            cfg.threads.max(1),
         );
         println!(
             "latency p50 {} µs, p95 {} µs, p99 {} µs; mean batch {:.2}; mean sim cycles {:.0}",
@@ -214,8 +277,87 @@ fn cmd_serve(args: &Args) -> Result<()> {
             snap.mean_batch,
             snap.mean_sim_cycles,
         );
+        println!(
+            "batch dispatch: mean {:.0} µs, max {} µs, worker-side {:.1} images/s",
+            snap.mean_batch_service_us, snap.max_batch_service_us, snap.batch_images_per_sec,
+        );
     }
     coord.shutdown();
+    Ok(())
+}
+
+/// Offline throughput bench: single-thread vs `--threads`-way batched
+/// inference over the same frames, printing images/sec and scaling
+/// efficiency. Works with no artifacts (falls back to the seeded
+/// synthetic workload, like `cargo bench --bench perf`).
+fn cmd_bench(args: &Args) -> Result<()> {
+    use sacsnn::engine::Frame;
+    use sacsnn::snn::network::testutil::synthetic_workload;
+
+    let lanes: usize = args.get("lanes", 8)?;
+    let threads: usize = args.get("threads", 4)?.max(1);
+    let batch: usize = args.get("batch", 64)?.max(1);
+    let n: usize = args.get("n", 128)?.max(1);
+    let kind = args.backend()?;
+
+    let dataset = args.get_str("dataset", "mnist");
+    let bits: u32 = args.get("bits", 8)?;
+    let (net, frames, mode) = match load_env(&dataset, bits) {
+        Ok((net, ds)) => {
+            let frames: Vec<Frame> = (0..n)
+                .map(|i| report::frame_for(&net, &ds, i % ds.n_test()))
+                .collect::<Result<_>>()?;
+            (net, frames, "mnist")
+        }
+        Err(e) => {
+            println!("artifacts unavailable ({e}); using seeded synthetic workload");
+            // the same seeded workload the CI-gated perf bench measures
+            let (net, images) = synthetic_workload(n);
+            let (h, w, c) = net.input_shape();
+            let frames: Vec<Frame> = images
+                .into_iter()
+                .map(|data| Frame::from_u8(h, w, c, data))
+                .collect::<Result<_>>()?;
+            (net, frames, "synthetic")
+        }
+    };
+
+    let builder = EngineBuilder::new(Arc::clone(&net)).lanes(lanes);
+    // One warm-up pass + one timed pass per configuration; every frame
+    // goes through infer_batch in chunks of `batch`.
+    let mut run = |threads: usize| -> Result<f64> {
+        let mut backend = builder.clone().threads(threads).build(kind)?;
+        let mut outs = Vec::new();
+        for chunk in frames.chunks(batch).take(1) {
+            backend.infer_batch(chunk, &mut outs)?; // warm-up
+        }
+        let t0 = Instant::now();
+        for chunk in frames.chunks(batch) {
+            backend.infer_batch(chunk, &mut outs)?;
+        }
+        Ok(frames.len() as f64 / t0.elapsed().as_secs_f64())
+    };
+
+    println!(
+        "bench [{mode}] backend {} ×{lanes} lanes, {} frames, batch {batch}",
+        kind.name(),
+        frames.len()
+    );
+    let single = run(1)?;
+    println!("  1 thread : {single:>9.1} images/s");
+    // --threads only shards the sim backend; printing a "speedup" for a
+    // backend that ignores the knob would present noise as scaling data.
+    if threads > 1 && kind == BackendKind::Sim {
+        let multi = run(threads)?;
+        let speedup = multi / single;
+        println!(
+            "  {threads} threads: {multi:>9.1} images/s   speedup ×{speedup:.2}   \
+             scaling efficiency {:.0}%",
+            100.0 * speedup / threads as f64
+        );
+    } else if threads > 1 {
+        println!("  ({} ignores --threads; multi-thread row skipped)", kind.name());
+    }
     Ok(())
 }
 
@@ -256,7 +398,7 @@ fn main() -> Result<()> {
         Some((c, r)) => (c.as_str(), r),
         None => {
             eprintln!(
-                "usage: sacsnn <run|eval|serve|golden|backends|table1..table5|fig12|ablate|trace-neuron> [--flags]"
+                "usage: sacsnn <run|eval|serve|bench|golden|backends|table1..table5|fig12|ablate|trace-neuron> [--flags]"
             );
             std::process::exit(2);
         }
@@ -266,6 +408,7 @@ fn main() -> Result<()> {
         "run" => cmd_run(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "golden" => cmd_golden(&args),
         "backends" => {
             cmd_backends();

@@ -28,7 +28,7 @@ use crate::sim::aeq::{Aeq, ReadSlot};
 use crate::sim::interlace::{self, COLUMNS};
 use crate::sim::mempot::MemPot;
 use crate::snn::sat::Sat;
-use std::sync::LazyLock;
+use std::sync::OnceLock;
 
 /// Flat-address sentinel for out-of-bounds window targets.
 const OOB: u32 = u32::MAX;
@@ -37,22 +37,29 @@ const OOB: u32 = u32::MAX;
 /// patterns, one per (px mod 3, py mod 3) — the hardware's "9 different
 /// permutations of the kernel weights" (paper §VI-B), resolved once.
 /// Entry: per target column s, (dx, dy, kidx) with ox = px + dx.
-static TARGET_LUT: LazyLock<[[(i8, i8, u8); COLUMNS]; 9]> = LazyLock::new(|| {
-    let mut lut = [[(0i8, 0i8, 0u8); COLUMNS]; 9];
-    for pxm in 0..3 {
-        for pym in 0..3 {
-            // derive from the closed form at a representative position
-            let (px, py) = (3 + pxm, 3 + pym);
-            let targets = interlace::window_targets(px, py);
-            for s in 0..COLUMNS {
-                let (ox, oy, kidx) = targets[s];
-                lut[pxm * 3 + pym][s] =
-                    ((ox - px as i64) as i8, (oy - py as i64) as i8, kidx as u8);
+/// (`OnceLock` rather than `LazyLock`: the latter needs Rust 1.80 and
+/// the crate pins MSRV 1.75 — see `rust-version` in Cargo.toml.)
+static TARGET_LUT_CELL: OnceLock<[[(i8, i8, u8); COLUMNS]; 9]> = OnceLock::new();
+
+#[inline]
+fn target_lut() -> &'static [[(i8, i8, u8); COLUMNS]; 9] {
+    TARGET_LUT_CELL.get_or_init(|| {
+        let mut lut = [[(0i8, 0i8, 0u8); COLUMNS]; 9];
+        for pxm in 0..3 {
+            for pym in 0..3 {
+                // derive from the closed form at a representative position
+                let (px, py) = (3 + pxm, 3 + pym);
+                let targets = interlace::window_targets(px, py);
+                for s in 0..COLUMNS {
+                    let (ox, oy, kidx) = targets[s];
+                    lut[pxm * 3 + pym][s] =
+                        ((ox - px as i64) as i8, (oy - py as i64) as i8, kidx as u8);
+                }
             }
         }
-    }
-    lut
-});
+        lut
+    })
+}
 
 /// Kernel index selected for output column `s` when the incoming event
 /// sits in input column `s_in` — the hardware's precomputed permutation
@@ -60,7 +67,7 @@ static TARGET_LUT: LazyLock<[[(i8, i8, u8); COLUMNS]; 9]> = LazyLock::new(|| {
 /// weight-selection banks once at compile time.
 #[inline]
 pub fn column_kidx(s_in: usize, s: usize) -> usize {
-    TARGET_LUT[s_in][s].2 as usize
+    target_lut()[s_in][s].2 as usize
 }
 
 /// Hazard-handling policy (the paper's design vs ablation variants).
@@ -165,7 +172,7 @@ impl ConvUnit {
         wo: usize,
         cells_j: usize,
     ) -> InFlight {
-        let variant = &TARGET_LUT[(ev_x % 3) * 3 + (ev_y % 3)];
+        let variant = &target_lut()[(ev_x % 3) * 3 + (ev_y % 3)];
         let mut addr = [OOB; COLUMNS];
         let mut wsel = [0i32; COLUMNS];
         // `variant[s]` is indexed by the *output* column s — which PE
@@ -243,7 +250,7 @@ impl ConvUnit {
             // The kernel permutation variant is CONSTANT per input column
             // (px mod 3 = s_in/3, py mod 3 = s_in%3) — hoisted, exactly
             // like the hardware's per-column mux select.
-            let variant = &TARGET_LUT[s_in];
+            let variant = &target_lut()[s_in];
             // Pre-permuted kernel for this column.
             let mut wsel = [0i32; COLUMNS];
             for s in 0..COLUMNS {
@@ -342,7 +349,7 @@ impl ConvUnit {
         debug_assert_eq!(kernels.len(), nc);
         let mut wsel = vec![0i32; COLUMNS * COLUMNS * nc];
         for s_in in 0..COLUMNS {
-            let variant = &TARGET_LUT[s_in];
+            let variant = &target_lut()[s_in];
             for s in 0..COLUMNS {
                 let kidx = variant[s].2 as usize;
                 for (c, k) in kernels.iter().enumerate() {
@@ -388,7 +395,7 @@ impl ConvUnit {
                 gap += 1;
                 continue;
             }
-            let variant = &TARGET_LUT[s_in];
+            let variant = &target_lut()[s_in];
             let wsel = &wsel_bank[s_in * COLUMNS * nc..(s_in + 1) * COLUMNS * nc];
             for ev in col {
                 slot_idx += 1;

@@ -15,7 +15,9 @@
 //! [`Accelerator::infer_image`] is the same execute step plus the
 //! allocation of the returned [`Inference`]'s own vectors.
 
-use crate::engine::{check_frame, Backend, BackendKind, CycleModel, EngineError, Frame, Inference};
+use crate::engine::{
+    check_frame, resize_batch_out, Backend, BackendKind, CycleModel, EngineError, Frame, Inference,
+};
 use crate::sim::aeq::{Aeq, ReadSlot};
 use crate::sim::conv_unit::{ConvUnit, HazardMode};
 use crate::sim::mempot::MultiMem;
@@ -56,7 +58,7 @@ impl Default for AccelConfig {
 pub struct Accelerator {
     pub net: Arc<Network>,
     pub cfg: AccelConfig,
-    plan: NetworkPlan,
+    plan: Arc<NetworkPlan>,
     scratch: Scratch,
     mem: MultiMem,
     conv: ConvUnit,
@@ -69,7 +71,16 @@ impl Accelerator {
         // buffer shape from the network (the membrane memory is sized for
         // the largest layer — architecturally one single-channel MemPot
         // per lane; see scheduler.rs for why the host batches channels).
-        let plan = NetworkPlan::compile(&net);
+        let plan = Arc::new(NetworkPlan::compile(&net));
+        Self::with_plan(net, plan, cfg)
+    }
+
+    /// Build an accelerator around an already-compiled (shared) plan —
+    /// the cheap constructor behind every worker of a
+    /// [`crate::sim::parallel::ShardedExecutor`]: the read-only plan is
+    /// compiled once and shared via `Arc`, while each worker owns its own
+    /// mutable state (membrane memory, units, [`Scratch`] arenas).
+    pub fn with_plan(net: Arc<Network>, plan: Arc<NetworkPlan>, cfg: AccelConfig) -> Self {
         let (mh, mw, mc) = plan.mem_shape;
         let scratch = Scratch::for_plan(&plan);
         Accelerator {
@@ -86,6 +97,12 @@ impl Accelerator {
     /// The compiled plan this accelerator executes.
     pub fn plan(&self) -> &NetworkPlan {
         &self.plan
+    }
+
+    /// A cheap `Arc` handle to the compiled plan (for spawning sibling
+    /// workers that share it).
+    pub fn plan_handle(&self) -> Arc<NetworkPlan> {
+        Arc::clone(&self.plan)
     }
 
     /// Encode an input frame (the network's H×W u8 fmap, single channel)
@@ -343,6 +360,24 @@ impl Backend for Accelerator {
     fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError> {
         let img = check_frame(frame, self.input_shape())?;
         Ok(self.infer_image(img))
+    }
+
+    /// Batch-native override: recycles each `out` slot through the
+    /// allocation-free execute step ([`Accelerator::infer_image_into`]),
+    /// so a warmed-up constant-size batch performs zero heap allocations
+    /// end to end (the default trait impl would allocate one fresh
+    /// [`Inference`] per frame).
+    fn infer_batch(
+        &mut self,
+        frames: &[Frame],
+        out: &mut Vec<Inference>,
+    ) -> Result<(), EngineError> {
+        resize_batch_out(out, frames.len());
+        for (frame, slot) in frames.iter().zip(out.iter_mut()) {
+            let img = check_frame(frame, self.input_shape())?;
+            self.infer_image_into(img, slot);
+        }
+        Ok(())
     }
 }
 

@@ -25,6 +25,10 @@
 //!   and outputs are bit-identical to the unplanned path.
 //! * [`core`] — the ×P parallelized accelerator (paper Table I) plus the
 //!   FC classification unit.
+//! * [`parallel`] — host-side batched throughput: the
+//!   [`parallel::ShardedExecutor`] shards an `infer_batch` across worker
+//!   threads that share one compiled plan (chase-the-queue scheduling,
+//!   per-worker scratch; §Throughput in `lib.rs`).
 //! * [`stats`] — cycle/stall/utilization counters (paper Table III).
 //! * [`dense_ref`] — frame-based integer reference implementation used to
 //!   validate the event-driven datapath end-to-end.
@@ -35,10 +39,12 @@ pub mod core;
 pub mod dense_ref;
 pub mod interlace;
 pub mod mempot;
+pub mod parallel;
 pub mod plan;
 pub mod scheduler;
 pub mod stats;
 pub mod threshold_unit;
 
 pub use self::core::{AccelConfig, Accelerator};
+pub use parallel::ShardedExecutor;
 pub use stats::{LayerStats, RunStats};

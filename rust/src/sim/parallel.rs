@@ -1,0 +1,341 @@
+//! Sharded multi-core batch executor (§Throughput).
+//!
+//! The paper's architecture keeps its PE array saturated by feeding it
+//! nothing but events; the host analogue for the ROADMAP's serving
+//! target is keeping every *core* saturated the same way. This module
+//! shards a batch of frames across OS threads:
+//!
+//! ```text
+//!                 ┌── worker 0: Accelerator (own Scratch/MemPot/units) ──┐
+//!   frames[..] ──▶│   worker 1: Accelerator (own Scratch/MemPot/units)   │──▶ out[..]
+//!   AtomicUsize   │   ...                                                │
+//!   cursor        └── worker T-1 ──────────────────────────────────────┘
+//! ```
+//!
+//! * The immutable compiled [`NetworkPlan`] is built **once** and shared
+//!   behind an `Arc` — workers are [`Accelerator::with_plan`] instances,
+//!   so adding a thread costs one [`crate::sim::plan::Scratch`] +
+//!   membrane memory, never a
+//!   plan recompile.
+//! * Each worker owns its scratch arenas, preserving the steady-state
+//!   **zero-allocation** property *per worker* (the `zero_alloc`
+//!   integration test drives the batch path through a warmed executor
+//!   and asserts the execute steps never touch the allocator).
+//! * Work distribution is **chase-the-queue**: workers claim the next
+//!   unprocessed frame index from a shared [`AtomicUsize`] cursor, so a
+//!   straggler chewing on a dense (spike-heavy) frame never idles the
+//!   rest of the pool — the event-driven cost model makes per-frame
+//!   latency data-dependent, which is exactly the workload static
+//!   chunking handles worst.
+//!
+//! Results are **bit-identical** to sequential [`Accelerator::infer`]
+//! in input order regardless of thread count (each frame is simulated
+//! by exactly one worker on an isolated state; the `parity` suite
+//! referees batch sizes × thread counts).
+//!
+//! Design note: each dispatch spawns scoped OS threads and joins them
+//! (`std::thread::scope`) rather than keeping a persistent channel-fed
+//! pool. That costs thread create/join per batch — O(T) allocations and
+//! tens of microseconds, amortized over multi-millisecond batches — in
+//! exchange for a pool with no idle threads, no shutdown protocol, and
+//! borrow-checked access to the caller's frames/outputs with no channel
+//! copies. If profiling ever shows dispatch overhead mattering (very
+//! small batches at very high rates), a persistent shard pool behind
+//! the same `infer_batch_into` signature is the upgrade path.
+
+use crate::engine::{
+    check_frame, resize_batch_out, Backend, BackendKind, CycleModel, EngineError, Frame, Inference,
+};
+use crate::sim::plan::NetworkPlan;
+use crate::sim::{AccelConfig, Accelerator};
+use crate::snn::network::Network;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Batched multi-core front end over `T` [`Accelerator`] workers that
+/// share one compiled [`NetworkPlan`].
+///
+/// Implements [`Backend`]: `infer` runs inline on worker 0 (identical to
+/// a plain `sim` backend), `infer_batch` shards across all workers. The
+/// reported `name()`/`kind()` stay `"sim"`/[`BackendKind::Sim`] — the
+/// executor changes *host* throughput only, never what is modeled.
+pub struct ShardedExecutor {
+    workers: Vec<Accelerator>,
+}
+
+impl ShardedExecutor {
+    /// Compile the plan once and build `threads` workers around it
+    /// (`threads` is clamped to at least 1).
+    pub fn new(net: Arc<Network>, cfg: AccelConfig, threads: usize) -> Self {
+        let plan = Arc::new(NetworkPlan::compile(&net));
+        Self::with_plan(net, plan, cfg, threads)
+    }
+
+    /// Build the worker pool around an already-compiled shared plan
+    /// (e.g. one cached by [`crate::engine::EngineBuilder`] so a whole
+    /// coordinator pool of executors compiles the network exactly once).
+    pub fn with_plan(
+        net: Arc<Network>,
+        plan: Arc<NetworkPlan>,
+        cfg: AccelConfig,
+        threads: usize,
+    ) -> Self {
+        let workers = (0..threads.max(1))
+            .map(|_| Accelerator::with_plan(Arc::clone(&net), Arc::clone(&plan), cfg))
+            .collect();
+        ShardedExecutor { workers }
+    }
+
+    /// Number of worker threads the batch path shards across.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `frame` once on EVERY worker, inline on the calling thread —
+    /// the deterministic warm-up. Chase-the-queue scheduling gives no
+    /// guarantee which worker sees which frame, so a pool that must hit
+    /// its steady-state zero-allocation property (or its best latency)
+    /// from the first real dispatch should be warmed with the densest
+    /// expected frames first; the `zero_alloc` test relies on this.
+    pub fn warm(&mut self, frame: &Frame) -> Result<(), EngineError> {
+        check_frame(frame, self.workers[0].net.input_shape())?;
+        let mut sink = Inference::default();
+        for worker in &mut self.workers {
+            worker.infer_image_into(frame.bytes(), &mut sink);
+        }
+        Ok(())
+    }
+
+    /// Shard `frames` across the worker pool, writing `out[i]` for
+    /// `frames[i]` (existing `out` buffers are recycled).
+    ///
+    /// Every frame is shape-checked up front on the calling thread, so
+    /// a malformed frame yields a typed [`EngineError::ShapeMismatch`]
+    /// before any work is dispatched. Worker threads are scoped: the
+    /// call returns only after every spawned worker has finished, and a
+    /// worker panic surfaces as [`EngineError::WorkerPanicked`].
+    pub fn infer_batch_into(
+        &mut self,
+        frames: &[Frame],
+        out: &mut Vec<Inference>,
+    ) -> Result<(), EngineError> {
+        let expected = self.workers[0].net.input_shape();
+        for frame in frames {
+            check_frame(frame, expected)?;
+        }
+        resize_batch_out(out, frames.len());
+
+        // Small batches (or a single worker) run inline: no spawn cost,
+        // and the zero-allocation property holds for the whole call.
+        let threads = self.workers.len().min(frames.len());
+        if threads <= 1 {
+            for (frame, slot) in frames.iter().zip(out.iter_mut()) {
+                self.workers[0].infer_image_into(frame.bytes(), slot);
+            }
+            return Ok(());
+        }
+
+        let cursor = AtomicUsize::new(0);
+        let slots = OutSlots::new(out);
+        let mut panicked: Option<EngineError> = None;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .workers
+                .iter_mut()
+                .take(threads)
+                .map(|worker| {
+                    let cursor = &cursor;
+                    let slots = &slots;
+                    scope.spawn(move || chase_queue(worker, frames, cursor, slots))
+                })
+                .collect();
+            for (w, handle) in handles.into_iter().enumerate() {
+                if let Err(payload) = handle.join() {
+                    panicked =
+                        Some(EngineError::worker_panicked(format!("shard-{w}"), &*payload));
+                }
+            }
+        });
+        match panicked {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// The chase-the-queue worker loop: claim the next frame index, simulate
+/// it into the claimed output slot, repeat until the cursor passes the
+/// end of the batch. Allocation-free once the worker's scratch is warm.
+fn chase_queue(
+    worker: &mut Accelerator,
+    frames: &[Frame],
+    cursor: &AtomicUsize,
+    slots: &OutSlots<'_>,
+) {
+    loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= frames.len() {
+            return;
+        }
+        // SAFETY: `fetch_add` hands index `i` to exactly one worker, so
+        // this is the only live reference to slot `i` (see `OutSlots`).
+        let slot = unsafe { &mut *slots.cells[i].get() };
+        worker.infer_image_into(frames[i].bytes(), slot);
+    }
+}
+
+/// Shared view of the batch-output slice. Each slot is written by the
+/// single worker that claimed its index from the atomic cursor, so the
+/// aliasing discipline is: disjoint indices, exactly-once writes, reads
+/// only after `thread::scope` joins every writer.
+struct OutSlots<'a> {
+    cells: &'a [UnsafeCell<Inference>],
+}
+
+// SAFETY: `OutSlots` only enables access that the cursor protocol keeps
+// disjoint (no two workers ever receive the same index from `fetch_add`).
+unsafe impl Sync for OutSlots<'_> {}
+
+impl<'a> OutSlots<'a> {
+    fn new(out: &'a mut [Inference]) -> Self {
+        // SAFETY: `UnsafeCell<T>` is `repr(transparent)` over `T`, so the
+        // slice layouts are identical; the `&mut` borrow guarantees
+        // exclusive access for the lifetime `'a`.
+        let cells =
+            unsafe { &*(out as *mut [Inference] as *const [UnsafeCell<Inference>]) };
+        OutSlots { cells }
+    }
+}
+
+impl Backend for ShardedExecutor {
+    fn name(&self) -> &'static str {
+        BackendKind::Sim.name()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sim
+    }
+
+    fn cycle_model(&self) -> CycleModel {
+        self.workers[0].cycle_model()
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.workers[0].net.input_shape()
+    }
+
+    fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError> {
+        self.workers[0].infer(frame)
+    }
+
+    fn infer_batch(
+        &mut self,
+        frames: &[Frame],
+        out: &mut Vec<Inference>,
+    ) -> Result<(), EngineError> {
+        self.infer_batch_into(frames, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::network::testutil::random_network;
+    use crate::util::prng::Pcg;
+
+    fn frames(net: &Network, n: usize, seed: u64) -> Vec<Frame> {
+        let (h, w, c) = net.input_shape();
+        let mut rng = Pcg::new(seed);
+        (0..n)
+            .map(|_| {
+                let data = (0..h * w * c).map(|_| rng.below(256) as u8).collect();
+                Frame::from_u8(h, w, c, data).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_matches_sequential_bit_exact() {
+        let net = Arc::new(random_network(901));
+        let batch = frames(&net, 13, 5);
+        let mut seq = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want: Vec<Inference> =
+            batch.iter().map(|f| seq.infer(f).unwrap()).collect();
+        for threads in [1usize, 2, 4] {
+            let mut pool =
+                ShardedExecutor::new(Arc::clone(&net), AccelConfig::default(), threads);
+            let mut out = Vec::new();
+            pool.infer_batch_into(&batch, &mut out).unwrap();
+            assert_eq!(out.len(), batch.len());
+            for (i, (got, want)) in out.iter().zip(&want).enumerate() {
+                assert_eq!(got.pred, want.pred, "threads={threads} frame={i}");
+                assert_eq!(got.logits, want.logits, "threads={threads} frame={i}");
+                assert_eq!(got.stats, want.stats, "threads={threads} frame={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn output_vec_is_recycled_across_batches() {
+        let net = Arc::new(random_network(902));
+        let mut pool = ShardedExecutor::new(Arc::clone(&net), AccelConfig::default(), 2);
+        let mut out = Vec::new();
+        let big = frames(&net, 8, 1);
+        pool.infer_batch_into(&big, &mut out).unwrap();
+        assert_eq!(out.len(), 8);
+        let small = frames(&net, 3, 2);
+        pool.infer_batch_into(&small, &mut out).unwrap();
+        assert_eq!(out.len(), 3);
+        // correctness after shrink: entry 2 matches a fresh sequential run
+        let mut seq = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want = seq.infer(&small[2]).unwrap();
+        assert_eq!(out[2].logits, want.logits);
+    }
+
+    #[test]
+    fn empty_batch_is_ok_and_clears_out() {
+        let net = Arc::new(random_network(903));
+        let mut pool = ShardedExecutor::new(Arc::clone(&net), AccelConfig::default(), 4);
+        let mut out = vec![Inference::default(); 5];
+        pool.infer_batch_into(&[], &mut out).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn malformed_frame_rejected_before_dispatch() {
+        let net = Arc::new(random_network(904));
+        let mut pool = ShardedExecutor::new(Arc::clone(&net), AccelConfig::default(), 2);
+        let mut batch = frames(&net, 3, 9);
+        batch.push(Frame::from_u8(4, 4, 1, vec![0; 16]).unwrap());
+        let mut out = Vec::new();
+        let err = pool.infer_batch_into(&batch, &mut out).unwrap_err();
+        assert!(matches!(err, EngineError::ShapeMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn workers_share_one_plan() {
+        let net = Arc::new(random_network(905));
+        let pool = ShardedExecutor::new(Arc::clone(&net), AccelConfig::default(), 3);
+        assert_eq!(pool.threads(), 3);
+        let p0 = pool.workers[0].plan_handle();
+        for w in &pool.workers[1..] {
+            assert!(Arc::ptr_eq(&p0, &w.plan_handle()), "plan compiled more than once");
+        }
+    }
+
+    #[test]
+    fn backend_trait_batch_delegates_to_sharded_path() {
+        let net = Arc::new(random_network(906));
+        let mut pool: Box<dyn Backend> =
+            Box::new(ShardedExecutor::new(Arc::clone(&net), AccelConfig::default(), 4));
+        assert_eq!(pool.name(), "sim");
+        assert_eq!(pool.kind(), BackendKind::Sim);
+        let batch = frames(&net, 7, 11);
+        let mut out = Vec::new();
+        pool.infer_batch(&batch, &mut out).unwrap();
+        let want = pool.infer(&batch[0]).unwrap();
+        assert_eq!(out[0].logits, want.logits);
+        assert_eq!(out[0].stats, want.stats);
+    }
+}

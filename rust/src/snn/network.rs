@@ -219,6 +219,20 @@ pub mod testutil {
             bits: 8,
         }
     }
+
+    /// The seeded offline workload shared by `sacsnn bench` and the
+    /// `perf` bench harness when artifacts are missing: one fixed
+    /// network plus `n` random input images. A single definition keeps
+    /// the CLI bench and the CI-gated bench measuring the same thing.
+    pub fn synthetic_workload(n: usize) -> (std::sync::Arc<Network>, Vec<Vec<u8>>) {
+        let net = std::sync::Arc::new(random_network(42));
+        let (h, w, c) = net.input_shape();
+        let mut rng = Pcg::new(7);
+        let images = (0..n)
+            .map(|_| (0..h * w * c).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        (net, images)
+    }
 }
 
 #[cfg(test)]

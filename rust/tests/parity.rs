@@ -114,6 +114,49 @@ fn lanes_are_functionally_invariant_through_the_trait() {
 }
 
 #[test]
+fn infer_batch_is_bit_identical_to_sequential_infer() {
+    // The batched-inference contract: for EVERY registered local backend,
+    // `infer_batch` must equal a sequential `infer` loop bit for bit —
+    // preds, logits AND the full stats block — for batch sizes {0, 1, 7,
+    // 64} and (for the sharded sim executor) thread counts {1, 4}.
+    let net = Arc::new(random_network(909));
+    let builder = EngineBuilder::new(Arc::clone(&net)).lanes(4);
+    for batch_len in [0usize, 1, 7, 64] {
+        let seeds: Vec<u64> = (0..batch_len as u64).map(|i| 1000 + i).collect();
+        let frames = frames_for(&net, &seeds);
+        for &kind in &LOCAL_KINDS {
+            // sequential reference on a fresh backend
+            let mut seq = builder.build(kind).unwrap();
+            let want: Vec<_> = frames.iter().map(|f| seq.infer(f).unwrap()).collect();
+            for threads in [1usize, 4] {
+                // threads is a sim-only knob; other kinds ignore it and
+                // exercise the default infer_batch loop — both paths must
+                // hold the same contract.
+                let mut batched = builder.clone().threads(threads).build(kind).unwrap();
+                let mut out = Vec::new();
+                batched.infer_batch(&frames, &mut out).unwrap();
+                assert_eq!(out.len(), batch_len, "{kind} t={threads} n={batch_len}");
+                for (i, (got, want)) in out.iter().zip(&want).enumerate() {
+                    let ctx = format!("{kind} threads={threads} n={batch_len} frame={i}");
+                    assert_eq!(got.pred, want.pred, "{ctx}");
+                    assert_eq!(got.logits, want.logits, "{ctx}");
+                    assert_eq!(got.stats, want.stats, "{ctx}");
+                }
+                // the output vec must be reusable verbatim (recycled
+                // buffers can't leak previous results)
+                batched.infer_batch(&frames, &mut out).unwrap();
+                for (i, (got, want)) in out.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        got.logits, want.logits,
+                        "{kind} threads={threads} n={batch_len} frame={i} (recycled)"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn every_backend_rejects_misshapen_frames() {
     let net = Arc::new(random_network(707));
     let builder = EngineBuilder::new(Arc::clone(&net));

@@ -2,13 +2,19 @@
 //! accelerator's execute step (`infer_image_into`) performs ZERO heap
 //! allocations, and `infer_image` allocates only the returned
 //! `Inference`'s own small output vectors — never per-event traffic.
+//! The batched path inherits the property **per worker**: a warmed
+//! `ShardedExecutor` running a constant-size `infer_batch` on its
+//! worker loop allocates nothing either (spawning OS threads is the
+//! only allocating step of a multi-thread dispatch, which is why the
+//! proof drives the single-worker inline path — the per-worker loop is
+//! the same code the spawned shards run).
 //!
 //! This file contains exactly one test: the `#[global_allocator]`
 //! counter is process-wide, so concurrent tests in the same binary would
 //! pollute the measurement.
 
-use sacsnn::engine::Inference;
-use sacsnn::sim::{AccelConfig, Accelerator};
+use sacsnn::engine::{Frame, Inference};
+use sacsnn::sim::{AccelConfig, Accelerator, ShardedExecutor};
 use sacsnn::snn::network::testutil::random_network;
 use sacsnn::util::alloc_counter::{alloc_count as allocs, CountingAllocator};
 use sacsnn::util::prng::Pcg;
@@ -69,4 +75,49 @@ fn steady_state_inference_is_allocation_free() {
     accel.infer_image_into(&imgs[0], &mut out);
     assert_eq!(out.logits, want.logits);
     assert_eq!(out.stats.spike_counts, want.stats.spike_counts);
+
+    // ---- batched path: the per-worker loop of the sharded executor ----
+    // A warmed executor running a constant-size batch must not touch the
+    // allocator either: the output vec is recycled by resize_batch_out,
+    // each slot by infer_image_into, and the shape pre-check is
+    // allocation-free. (One worker → the inline path, i.e. exactly the
+    // chase-the-queue body without the thread spawns.)
+    let frames: Vec<Frame> = imgs
+        .iter()
+        .chain(std::iter::once(&bright))
+        .map(|img| Frame::from_u8(h, w, c, img.clone()).unwrap())
+        .collect();
+    let mut pool = ShardedExecutor::new(Arc::clone(&net), AccelConfig::default(), 1);
+    let mut batch_out = Vec::new();
+    for _ in 0..3 {
+        pool.infer_batch_into(&frames, &mut batch_out).unwrap(); // warm-up
+    }
+    let before = allocs();
+    for _ in 0..5 {
+        pool.infer_batch_into(&frames, &mut batch_out).unwrap();
+    }
+    let grew = allocs() - before;
+    assert_eq!(grew, 0, "steady-state batched infer allocated {grew} times");
+    assert_eq!(batch_out.len(), frames.len());
+    assert_eq!(batch_out[0].logits, want.logits, "batched worker must stay bit-exact");
+
+    // The multi-thread dispatch allocates only for the thread spawns —
+    // never per event: with 2 workers and a 4-frame batch, the whole
+    // dispatch must stay well under the pre-plan path's thousands of
+    // per-event allocations. Warm-up must be deterministic: the
+    // chase-the-queue cursor gives no guarantee which worker saw which
+    // frame, so `warm` runs every frame on EVERY worker inline.
+    let mut pool2 = ShardedExecutor::new(Arc::clone(&net), AccelConfig::default(), 2);
+    for frame in &frames {
+        pool2.warm(frame).unwrap();
+    }
+    pool2.infer_batch_into(&frames, &mut batch_out).unwrap(); // size batch_out
+    let before = allocs();
+    pool2.infer_batch_into(&frames, &mut batch_out).unwrap();
+    let spawn_overhead = allocs() - before;
+    assert!(
+        spawn_overhead <= 64,
+        "multi-thread dispatch allocated {spawn_overhead} times; \
+         expected only thread-spawn bookkeeping"
+    );
 }
