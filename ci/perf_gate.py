@@ -5,17 +5,18 @@ Usage:
     python3 ci/perf_gate.py [--current BENCH_sim.json] [--baseline BENCH_baseline.json]
 
 Rules (tolerances chosen for shared CI runners):
-  * ``frames_per_s``           — fail on a drop of more than 15% vs baseline
-  * ``images_per_sec_batched`` — fail on a drop of more than 15% vs baseline
-  * ``allocs_per_inference``   — fail on ANY increase (the zero-allocation
+  * ``frames_per_s``             — fail on a drop of more than 15% vs baseline
+  * ``images_per_sec_batched``   — fail on a drop of more than 15% vs baseline
+  * ``images_per_sec_pipelined`` — fail on a drop of more than 15% vs baseline
+  * ``allocs_per_inference``     — fail on ANY increase (the zero-allocation
     execute step is machine-independent: an increase is always a real
     regression, never runner noise)
 
-While the baseline carries ``"_provisional": true`` (floors not yet seeded
-from a real CI artifact), throughput drops are downgraded to warnings —
-only the alloc rule hard-fails. Seed real floors by copying the
-``BENCH_sim`` artifact of a green main run over the baseline and removing
-``_provisional``; refresh the same way whenever the hot path gets faster.
+Every throughput floor is a HARD gate: a drop below the tolerance fails
+the job. The committed floors are deliberately conservative (they catch
+order-of-magnitude regressions on any runner, not few-percent drift);
+ratchet them tighter by copying the ``BENCH_sim`` artifact of a green
+main run over ``BENCH_baseline.json`` whenever the hot path gets faster.
 
 The full field-by-field diff is printed and, when running inside GitHub
 Actions, appended to the step summary.
@@ -31,7 +32,11 @@ import os
 import sys
 
 THROUGHPUT_DROP_TOLERANCE = 0.15  # >15% drop fails
-THROUGHPUT_FIELDS = ("frames_per_s", "images_per_sec_batched")
+THROUGHPUT_FIELDS = (
+    "frames_per_s",
+    "images_per_sec_batched",
+    "images_per_sec_pipelined",
+)
 ALLOC_FIELD = "allocs_per_inference"
 
 
@@ -52,10 +57,8 @@ def main() -> int:
 
     cur = load(args.current)
     base = load(args.baseline)
-    provisional = bool(base.get("_provisional"))
 
     failures: list[str] = []
-    warnings: list[str] = []
     rows: list[tuple[str, str, str, str, str]] = []
 
     def row(field, baseline, current, delta, verdict):
@@ -64,23 +67,31 @@ def main() -> int:
     for field in THROUGHPUT_FIELDS:
         b, c = base.get(field), cur.get(field)
         if b is None or c is None:
-            row(field, str(b), str(c), "-", "skipped (missing)")
+            # A gated field going missing is itself a regression: the
+            # hard floor would otherwise silently stop being enforced.
+            row(field, str(b), str(c), "-", "FAIL (missing)")
+            failures.append(
+                f"{field}: missing from {'baseline' if b is None else 'current'} "
+                "(gated fields must be present in both files)"
+            )
             continue
         floor = b * (1.0 - THROUGHPUT_DROP_TOLERANCE)
         delta = (c - b) / b * 100.0 if b else float("inf")
         ok = c >= floor
-        verdict = "ok" if ok else ("WARN (provisional baseline)" if provisional else "FAIL")
-        row(field, f"{b:.1f}", f"{c:.1f}", f"{delta:+.1f}%", verdict)
+        row(field, f"{b:.1f}", f"{c:.1f}", f"{delta:+.1f}%", "ok" if ok else "FAIL")
         if not ok:
-            msg = (
+            failures.append(
                 f"{field}: {c:.1f} is below the {THROUGHPUT_DROP_TOLERANCE:.0%}"
                 f"-tolerance floor {floor:.1f} (baseline {b:.1f})"
             )
-            (warnings if provisional else failures).append(msg)
 
     b, c = base.get(ALLOC_FIELD), cur.get(ALLOC_FIELD)
     if b is None or c is None:
-        row(ALLOC_FIELD, str(b), str(c), "-", "skipped (missing)")
+        row(ALLOC_FIELD, str(b), str(c), "-", "FAIL (missing)")
+        failures.append(
+            f"{ALLOC_FIELD}: missing from {'baseline' if b is None else 'current'} "
+            "(gated fields must be present in both files)"
+        )
     else:
         ok = c <= b + 1e-9
         row(ALLOC_FIELD, f"{b:.3f}", f"{c:.3f}", f"{c - b:+.3f}", "ok" if ok else "FAIL")
@@ -104,13 +115,6 @@ def main() -> int:
     md += ["| " + " | ".join(r) + " |" for r in rows]
     verdict = "PASS" if not failures else "FAIL:\n  " + "\n  ".join(failures)
     report = "### Perf gate\n\n" + "\n".join(md) + f"\n\n**{verdict}**\n"
-    if warnings:
-        report += (
-            "\nWarnings (baseline is provisional — seed it from a real "
-            "BENCH_sim CI artifact to make these hard failures):\n  "
-            + "\n  ".join(warnings)
-            + "\n"
-        )
 
     print(report)
     summary = os.environ.get("GITHUB_STEP_SUMMARY")

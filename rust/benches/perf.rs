@@ -9,8 +9,9 @@
 
 mod common;
 
-use sacsnn::engine::{Frame, Inference};
+use sacsnn::engine::{Backend, Frame, Inference};
 use sacsnn::sim::parallel::ShardedExecutor;
+use sacsnn::sim::pipeline::PipelinedExecutor;
 use sacsnn::sim::{AccelConfig, Accelerator};
 use sacsnn::snn::network::testutil::synthetic_workload;
 use sacsnn::util::alloc_counter::{alloc_count, CountingAllocator};
@@ -115,6 +116,40 @@ fn main() {
         scaling_efficiency * 100.0
     );
 
+    // Self-timed layer pipeline (full depth: one stage per layer): the
+    // same batch streamed with inter-layer overlap, plus the pipeline's
+    // fill latency (stream start → first result out) and drain latency
+    // (last frame fed → stream complete), measured on an instrumented
+    // warm stream.
+    let mut pipe = PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), usize::MAX);
+    let pipeline_depth = pipe.depth();
+    let mut pipe_outs = Vec::new();
+    let (mean_p, _, _) = common::time_ms(warmup, iters, || {
+        pipe.run_stream_into(&batch, &mut pipe_outs).expect("pipelined stream");
+    });
+    let images_per_sec_pipelined = batch.len() as f64 * 1e3 / mean_p;
+
+    let fed_last = std::cell::Cell::new(std::time::Instant::now());
+    let first_out = std::cell::Cell::new(None::<f64>);
+    let t0 = std::time::Instant::now();
+    fed_last.set(t0);
+    let mut stream = batch.iter().cloned().inspect(|_| fed_last.set(std::time::Instant::now()));
+    Backend::infer_stream(&mut pipe, &mut stream, &mut |inf| {
+        if first_out.get().is_none() {
+            first_out.set(Some(t0.elapsed().as_secs_f64() * 1e3));
+        }
+        drop(inf);
+    })
+    .expect("instrumented pipelined stream");
+    let pipeline_fill_ms = first_out.get().unwrap_or(0.0);
+    let pipeline_drain_ms = fed_last.get().elapsed().as_secs_f64() * 1e3;
+
+    println!(
+        "pipelined ({pipeline_depth} stages): {images_per_sec_pipelined:.1} images/s \
+         (×{:.2} vs 1 thread), fill {pipeline_fill_ms:.2} ms, drain {pipeline_drain_ms:.2} ms",
+        images_per_sec_pipelined / images_per_sec_single
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"sim\",\n  \"mode\": \"{mode}\",\n  \"smoke\": {smoke},\n  \
          \"frames\": {},\n  \"mean_ms_per_batch\": {mean:.6},\n  \
@@ -124,6 +159,10 @@ fn main() {
          \"images_per_sec_single\": {images_per_sec_single:.3},\n  \
          \"images_per_sec_batched\": {images_per_sec_batched:.3},\n  \
          \"scaling_efficiency\": {scaling_efficiency:.4},\n  \
+         \"pipeline_depth\": {pipeline_depth},\n  \
+         \"images_per_sec_pipelined\": {images_per_sec_pipelined:.3},\n  \
+         \"pipeline_fill_ms\": {pipeline_fill_ms:.4},\n  \
+         \"pipeline_drain_ms\": {pipeline_drain_ms:.4},\n  \
          \"sim_conv_events_per_s\": {conv_events_per_s:.3},\n  \
          \"events_per_frame\": {ev_per_frame:.3},\n  \
          \"allocs_per_inference\": {allocs_per_inference:.3}\n}}\n",

@@ -19,9 +19,13 @@
 //! batch) and dispatch the whole batch through one
 //! [`Backend::infer_batch`] call — so a worker whose backend is a
 //! [`crate::sim::parallel::ShardedExecutor`] fans the batch out across
-//! host cores, and batch-native backends recycle their scratch arenas
-//! across dispatches. Per-batch service time and worker-side throughput
-//! are tracked in [`Metrics`].
+//! host cores, a worker built with [`ServerConfig::pipeline`] streams
+//! the drained batch through its self-timed layer pipeline
+//! ([`crate::sim::pipeline::PipelinedExecutor`]'s `infer_batch` IS its
+//! stream path, so consecutive requests of one batch overlap across
+//! layer stages), and batch-native backends recycle their scratch
+//! arenas across dispatches. Per-batch service time and worker-side
+//! throughput are tracked in [`Metrics`].
 //!
 //! Failure semantics are typed end to end: a misshapen frame is rejected
 //! at batch-admission time with [`EngineError::ShapeMismatch`] (it never
@@ -98,6 +102,12 @@ pub struct ServerConfig {
     /// drained batch out across this many cores (other backends ignore
     /// it). Total host parallelism is `workers × threads`.
     pub threads: usize,
+    /// Self-timed pipeline stages per sim worker: with `pipeline > 0`
+    /// each sim worker streams its drained batches through a
+    /// [`crate::sim::pipeline::PipelinedExecutor`] of this depth
+    /// (`usize::MAX` = one stage per layer; composes with `threads` into
+    /// a replicated-pipeline pool; other backends ignore it).
+    pub pipeline: usize,
     /// Bounded queue depth — the backpressure point.
     pub queue_depth: usize,
     /// Max requests a worker drains per batch.
@@ -111,6 +121,7 @@ impl Default for ServerConfig {
             backend: BackendKind::Sim,
             lanes: 8,
             threads: 1,
+            pipeline: 0,
             queue_depth: 256,
             batch_size: 16,
         }
@@ -132,6 +143,7 @@ impl Coordinator {
         let backends = EngineBuilder::new(net)
             .lanes(cfg.lanes)
             .threads(cfg.threads)
+            .pipeline(cfg.pipeline)
             .build_pool(cfg.backend, cfg.workers)?;
         Self::start_pool(backends, cfg)
     }
@@ -643,6 +655,39 @@ mod tests {
             assert_eq!(resp.logits, want.logits);
         }
         assert_eq!(coord.metrics.snapshot().completed, 24);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn pipelined_worker_streams_drained_batches() {
+        // A worker built with `pipeline` streams each drained batch
+        // through the self-timed layer pipeline; replies must stay
+        // bit-exact with direct sequential inference.
+        let net = Arc::new(random_network(40));
+        let coord = Coordinator::start(
+            Arc::clone(&net),
+            ServerConfig {
+                workers: 1,
+                lanes: 2,
+                pipeline: usize::MAX,
+                queue_depth: 64,
+                batch_size: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let f = frame(77);
+        let mut direct = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want = direct.infer_image(f.as_u8().unwrap());
+        let replies: Vec<_> = (0..20).map(|_| coord.submit(f.clone()).unwrap()).collect();
+        for rx in replies {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.backend, "sim");
+            assert_eq!(resp.pred, want.pred);
+            assert_eq!(resp.logits, want.logits);
+            assert_eq!(resp.sim_cycles, want.stats.total_cycles);
+        }
+        assert_eq!(coord.metrics.snapshot().completed, 20);
         coord.shutdown();
     }
 

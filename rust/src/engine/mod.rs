@@ -180,6 +180,33 @@ pub trait Backend: Send {
         }
         Ok(())
     }
+
+    /// Run an open-ended stream of frames, handing each [`Inference`] to
+    /// `sink` in input order.
+    ///
+    /// The default implementation pulls one frame at a time and runs
+    /// [`Self::infer`] to completion before sinking it. Streaming-native
+    /// backends override it for overlap: the pipelined simulator
+    /// ([`crate::sim::pipeline::PipelinedExecutor`]) keeps several
+    /// frames in flight across its self-timed layer stages, so `sink`
+    /// observes early frames while later ones are still being pulled
+    /// from the iterator. Results are bit-identical to sequential
+    /// `infer` regardless (the `parity` suite referees this). On error
+    /// the stream stops; inferences already delivered to `sink` remain
+    /// valid.
+    ///
+    /// (`&mut dyn Iterator` rather than `impl Iterator` so the trait
+    /// stays object-safe — the coordinator serves `Box<dyn Backend>`.)
+    fn infer_stream(
+        &mut self,
+        frames: &mut dyn Iterator<Item = Frame>,
+        sink: &mut dyn FnMut(Inference),
+    ) -> Result<(), EngineError> {
+        for frame in frames {
+            sink(self.infer(&frame)?);
+        }
+        Ok(())
+    }
 }
 
 /// Resize a batch-output vector to `n` entries while keeping the

@@ -9,7 +9,8 @@ use crate::baseline::{self, BaselineResult};
 use crate::cost::CLOCK_HZ;
 use crate::sim::conv_unit::HazardMode;
 use crate::sim::dense_ref::{DenseRef, DenseResult};
-use crate::sim::parallel::ShardedExecutor;
+use crate::sim::parallel::{PipelinePool, ShardedExecutor};
+use crate::sim::pipeline::PipelinedExecutor;
 use crate::sim::plan::NetworkPlan;
 use crate::sim::{AccelConfig, Accelerator, LayerStats, RunStats};
 use crate::snn::network::Network;
@@ -104,6 +105,7 @@ pub struct EngineBuilder {
     net: Arc<Network>,
     lanes: usize,
     threads: usize,
+    pipeline: usize,
     hazard_mode: HazardMode,
     clock_hz: f64,
     // Sim backends share ONE compiled NetworkPlan: it is a pure function
@@ -126,6 +128,7 @@ impl EngineBuilder {
             net,
             lanes: 1,
             threads: 1,
+            pipeline: 0,
             hazard_mode: HazardMode::ForwardAndStall,
             clock_hz: CLOCK_HZ,
             plan: Arc::new(OnceLock::new()),
@@ -152,11 +155,28 @@ impl EngineBuilder {
     /// Host worker threads for batched inference. With `threads > 1`,
     /// [`Self::build`] wraps the sim backend in a
     /// [`crate::sim::parallel::ShardedExecutor`] whose `infer_batch`
-    /// shards frames across this many cores (single-frame `infer` and
+    /// shards frames across this many cores — or, combined with
+    /// [`Self::pipeline`], in a [`crate::sim::parallel::PipelinePool`]
+    /// of that many replicated pipelines (single-frame `infer` and
     /// everything modeled are unchanged; other backends ignore it).
     /// Clamped to at least 1.
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Self-timed layer pipelining for the sim backend (§Pipelining in
+    /// `lib.rs`): with `depth > 0`, [`Self::build`] returns a
+    /// [`crate::sim::pipeline::PipelinedExecutor`] whose `infer_stream`
+    /// / `infer_batch` run the compiled plan's layers on `depth` stage
+    /// threads connected by bounded spike-queue channels, overlapping
+    /// consecutive frames. Pass `usize::MAX` for one stage per layer
+    /// (the executor clamps to the layer count). `0` (the default)
+    /// disables pipelining. Composes with [`Self::threads`]: both set
+    /// builds a pool of `threads` replicated pipelines. Other backends
+    /// ignore it. Results stay bit-identical to sequential inference.
+    pub fn pipeline(mut self, depth: usize) -> Self {
+        self.pipeline = depth;
         self
     }
 
@@ -187,6 +207,21 @@ impl EngineBuilder {
             clock_hz: self.clock_hz,
         };
         Ok(match kind {
+            BackendKind::Sim if self.pipeline > 0 && self.threads > 1 => {
+                Box::new(PipelinePool::with_plan(
+                    Arc::clone(&self.net),
+                    self.sim_plan(),
+                    accel_cfg,
+                    self.pipeline,
+                    self.threads,
+                ))
+            }
+            BackendKind::Sim if self.pipeline > 0 => Box::new(PipelinedExecutor::with_plan(
+                Arc::clone(&self.net),
+                self.sim_plan(),
+                accel_cfg,
+                self.pipeline,
+            )),
             BackendKind::Sim if self.threads > 1 => Box::new(ShardedExecutor::with_plan(
                 Arc::clone(&self.net),
                 self.sim_plan(),
@@ -559,6 +594,60 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.logits, y.logits);
             assert_eq!(x.stats, y.stats);
+        }
+    }
+
+    #[test]
+    fn pipeline_knob_builds_streaming_sim() {
+        // pipeline(d) alone → PipelinedExecutor; pipeline(d)+threads(T)
+        // → replicated PipelinePool. Either way the serving identity is
+        // "sim" and every result is bit-identical to the plain backend.
+        let net = Arc::new(random_network(17));
+        let builder = EngineBuilder::new(Arc::clone(&net)).lanes(2);
+        let mut plain = builder.build(BackendKind::Sim).unwrap();
+        let frames: Vec<Frame> = (0..5)
+            .map(|i| Frame::from_u8(28, 28, 1, vec![50 * i as u8 + 5; 784]).unwrap())
+            .collect();
+        let mut want = Vec::new();
+        plain.infer_batch(&frames, &mut want).unwrap();
+        for (depth, threads) in [(usize::MAX, 1usize), (2, 1), (usize::MAX, 2)] {
+            let mut piped = builder
+                .clone()
+                .pipeline(depth)
+                .threads(threads)
+                .build(BackendKind::Sim)
+                .unwrap();
+            assert_eq!(piped.name(), "sim");
+            assert_eq!(piped.kind(), BackendKind::Sim);
+            let mut got = Vec::new();
+            piped.infer_batch(&frames, &mut got).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.logits, w.logits, "depth={depth} threads={threads}");
+                assert_eq!(g.stats, w.stats, "depth={depth} threads={threads}");
+            }
+        }
+        // the pipelined builds share the builder's cached plan too
+        assert!(Arc::ptr_eq(&builder.sim_plan(), &builder.clone().pipeline(2).sim_plan()));
+    }
+
+    #[test]
+    fn default_infer_stream_matches_infer() {
+        // The trait's default streaming path (non-pipelined backends)
+        // must agree with per-frame inference.
+        let net = Arc::new(random_network(18));
+        let mut backend =
+            EngineBuilder::new(Arc::clone(&net)).build(BackendKind::DenseRef).unwrap();
+        let frames: Vec<Frame> = (0..3)
+            .map(|i| Frame::from_u8(28, 28, 1, vec![70 * i as u8 + 9; 784]).unwrap())
+            .collect();
+        let mut got = Vec::new();
+        backend
+            .infer_stream(&mut frames.iter().cloned(), &mut |inf| got.push(inf))
+            .unwrap();
+        assert_eq!(got.len(), 3);
+        for (frame, g) in frames.iter().zip(&got) {
+            assert_eq!(g.logits, backend.infer(frame).unwrap().logits);
         }
     }
 

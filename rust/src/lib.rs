@@ -101,6 +101,50 @@
 //! images/sec and scaling efficiency for any combination, with no
 //! artifacts required.
 //!
+//! ### Pipelining
+//!
+//! The third throughput axis is the paper's own scheduling idea applied
+//! *between* layers: **`--pipeline D` /
+//! [`engine::EngineBuilder::pipeline`]** turns the sim backend into a
+//! [`sim::pipeline::PipelinedExecutor`] — each stage of the compiled
+//! plan runs on its own worker thread, stages are connected by bounded
+//! spike-queue channels, and a slow stage backpressures its producers
+//! exactly as the hardware's inter-layer queue compression self-times
+//! the PE array. Frames then overlap: while frame *i* is in conv2,
+//! frame *i+1* is in conv1 and frame *i+2* is being encoded.
+//! [`engine::Backend::infer_stream`] is the natural entry point
+//! (iterator in, sink out, results in input order); `infer_batch` on a
+//! pipelined backend streams the batch through the same path, which is
+//! how coordinator workers built with `ServerConfig::pipeline` dispatch
+//! their drained batches. Results stay bit-identical to sequential
+//! `infer` for every depth (parity suite: batches {0, 1, 7, 64} ×
+//! depths {1, 2, full}). On the batch path the warmed pipeline is
+//! allocation-free per frame — results swap into recycled containers,
+//! and `zero_alloc` proves the marginal cost of an extra streamed
+//! frame is zero allocations (`infer_stream` hands each `Inference` to
+//! the sink by value, so that path allocates the one small output
+//! container per frame, never per-event traffic).
+//!
+//! Choosing between the axes:
+//!
+//! * **Sharding** (`threads`) scales *independent* frames across cores
+//!   — best when batches are large and per-frame latency is secondary.
+//!   Near-linear until memory bandwidth saturates.
+//! * **Pipelining** (`pipeline`) overlaps the layers of *consecutive*
+//!   frames — best when batches are small or arrive as a stream, and
+//!   for time-to-first-result: speedup is bounded by the slowest layer
+//!   (conv1 usually dominates, so expect less than ×depth), but it
+//!   needs only `depth` threads and keeps each core's working set to
+//!   one stage's scratch partition.
+//! * **Both** (`pipeline` + `threads`) builds a
+//!   [`sim::parallel::PipelinePool`] of `threads` replicated pipelines,
+//!   each streaming a contiguous chunk of the batch — the right shape
+//!   when cores outnumber layers. `sacsnn bench --pipeline full
+//!   --threads T` prints all four configurations side by side;
+//!   `benches/perf.rs` tracks `images_per_sec_pipelined` plus the
+//!   pipeline's fill/drain latency in `BENCH_sim.json`, hard-gated in
+//!   CI.
+//!
 //! ## Module map
 //!
 //! * [`engine`] — the unified serving surface: `Backend` trait, `Frame` /
@@ -138,8 +182,10 @@
 //! * [`coordinator`] — an inference service (router, dynamic batcher,
 //!   worker pool) that dispatches whole batches through
 //!   `Backend::infer_batch` to any `Box<dyn Backend>` — including
-//!   heterogeneous pools and multi-core
-//!   [`sim::parallel::ShardedExecutor`] workers — with typed failure
+//!   heterogeneous pools, multi-core
+//!   [`sim::parallel::ShardedExecutor`] workers and self-timed
+//!   [`sim::pipeline::PipelinedExecutor`] workers (whose batch dispatch
+//!   streams through the layer pipeline) — with typed failure
 //!   containment (`EngineError::WorkerPanicked`) and per-batch
 //!   latency/throughput metrics.
 //! * [`artifact`] — readers for the build-time artifacts (tensor archives,

@@ -5,12 +5,13 @@
 //!
 //! ```text
 //! sacsnn run        [--backend sim] [--dataset mnist] [--bits 8] [--lanes 8] [--index 0]
-//!                   [--batch 1] [--threads 1]
+//!                   [--batch 1] [--threads 1] [--pipeline 0|N|full]
 //! sacsnn eval       [--backend sim] [--dataset mnist] [--bits 8] [--lanes 8] [--n 200]
-//!                   [--batch 16] [--threads 1]
+//!                   [--batch 16] [--threads 1] [--pipeline 0|N|full]
 //! sacsnn serve      [--backend sim] [--workers 4] [--lanes 8] [--threads 1]
-//!                   [--batch 16] [--requests 200] [--json]
+//!                   [--pipeline 0|N|full] [--batch 16] [--requests 200] [--json]
 //! sacsnn bench      [--backend sim] [--lanes 8] [--threads 4] [--batch 64] [--n 128]
+//!                   [--pipeline 0|N|full]
 //! sacsnn golden     [--backend sim] [--n 10]   backend vs AOT JAX model (PJRT)
 //! sacsnn backends                              list registered backends
 //! sacsnn table1|table2|table3|table4|table5|fig12|ablate
@@ -23,9 +24,13 @@
 //! Throughput knobs (see `lib.rs` §Throughput): `--batch N` groups frames
 //! into one `infer_batch` dispatch; `--threads N` shards each sim batch
 //! across N host cores (`run`/`eval`/`bench`) or per coordinator worker
-//! (`serve`). `bench` measures single- vs multi-thread images/sec and
-//! reports the scaling efficiency — it always runs, falling back to a
-//! seeded synthetic workload when artifacts are missing.
+//! (`serve`); `--pipeline N` (or `full`, or the bare flag) runs the sim
+//! backend as a self-timed layer pipeline of N stages so consecutive
+//! frames overlap across layers — combined with `--threads` it becomes a
+//! replicated-pipeline pool. `bench` measures single- vs multi-thread
+//! (and, with `--pipeline`, pipelined) images/sec and reports scaling
+//! efficiency — it always runs, falling back to a seeded synthetic
+//! workload when artifacts are missing.
 
 use sacsnn::coordinator::{Coordinator, ServerConfig};
 use sacsnn::data::Dataset;
@@ -82,6 +87,21 @@ impl Args {
         BackendKind::parse(&self.get_str("backend", "sim"))
     }
 
+    /// The `--pipeline` flag: `0`/`off` disables (default), `full` (or
+    /// the bare flag) means one stage per layer, `N` sets the stage
+    /// count (the executor clamps to the layer count).
+    fn pipeline(&self) -> Result<usize> {
+        match self.get_str("pipeline", "0").as_str() {
+            "0" | "off" => Ok(0),
+            "true" | "full" => Ok(usize::MAX),
+            v => v.parse().map_err(|_| {
+                EngineError::msg(format!(
+                    "invalid value '{v}' for --pipeline (expected a stage count, 'full' or 'off')"
+                ))
+            }),
+        }
+    }
+
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
@@ -99,11 +119,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     let index: usize = args.get("index", 0)?;
     let batch: usize = args.get("batch", 1)?;
     let threads: usize = args.get("threads", 1)?;
+    let pipeline = args.pipeline()?;
     let kind = args.backend()?;
     let (net, ds) = load_env(&dataset, bits)?;
     let mut backend = EngineBuilder::new(Arc::clone(&net))
         .lanes(lanes)
         .threads(threads)
+        .pipeline(pipeline)
         .build(kind)?;
     if batch > 1 {
         // Batched mode: run `batch` consecutive test images through one
@@ -174,6 +196,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let lanes: usize = args.get("lanes", 8)?;
     let batch: usize = args.get("batch", 16)?.max(1);
     let threads: usize = args.get("threads", 1)?;
+    let pipeline = args.pipeline()?;
     let kind = args.backend()?;
     let (net, ds) = load_env(&dataset, bits)?;
     let n: usize = args.get("n", 200.min(ds.n_test()))?;
@@ -181,6 +204,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let mut backend = EngineBuilder::new(Arc::clone(&net))
         .lanes(lanes)
         .threads(threads)
+        .pipeline(pipeline)
         .build(kind)?;
     let cm = backend.cycle_model();
     let mut correct = 0usize;
@@ -235,6 +259,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         backend: args.backend()?,
         lanes: args.get("lanes", 8)?,
         threads: args.get("threads", 1)?,
+        pipeline: args.pipeline()?,
         queue_depth: args.get("queue-depth", 256)?,
         batch_size: args.get("batch", 16)?,
     };
@@ -298,6 +323,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let threads: usize = args.get("threads", 4)?.max(1);
     let batch: usize = args.get("batch", 64)?.max(1);
     let n: usize = args.get("n", 128)?.max(1);
+    let pipeline = args.pipeline()?;
     let kind = args.backend()?;
 
     let dataset = args.get_str("dataset", "mnist");
@@ -325,8 +351,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let builder = EngineBuilder::new(Arc::clone(&net)).lanes(lanes);
     // One warm-up pass + one timed pass per configuration; every frame
     // goes through infer_batch in chunks of `batch`.
-    let mut run = |threads: usize| -> Result<f64> {
-        let mut backend = builder.clone().threads(threads).build(kind)?;
+    let mut run = |threads: usize, pipeline: usize| -> Result<f64> {
+        let mut backend = builder
+            .clone()
+            .threads(threads)
+            .pipeline(pipeline)
+            .build(kind)?;
         let mut outs = Vec::new();
         for chunk in frames.chunks(batch).take(1) {
             backend.infer_batch(chunk, &mut outs)?; // warm-up
@@ -343,20 +373,43 @@ fn cmd_bench(args: &Args) -> Result<()> {
         kind.name(),
         frames.len()
     );
-    let single = run(1)?;
+    let single = run(1, 0)?;
     println!("  1 thread : {single:>9.1} images/s");
-    // --threads only shards the sim backend; printing a "speedup" for a
-    // backend that ignores the knob would present noise as scaling data.
-    if threads > 1 && kind == BackendKind::Sim {
-        let multi = run(threads)?;
+    // --threads / --pipeline only apply to the sim backend; printing a
+    // "speedup" for a backend that ignores the knobs would present noise
+    // as scaling data.
+    if kind != BackendKind::Sim {
+        if threads > 1 || pipeline > 0 {
+            println!(
+                "  ({} ignores --threads/--pipeline; remaining rows skipped)",
+                kind.name()
+            );
+        }
+        return Ok(());
+    }
+    if threads > 1 {
+        let multi = run(threads, 0)?;
         let speedup = multi / single;
         println!(
             "  {threads} threads: {multi:>9.1} images/s   speedup ×{speedup:.2}   \
              scaling efficiency {:.0}%",
             100.0 * speedup / threads as f64
         );
-    } else if threads > 1 {
-        println!("  ({} ignores --threads; multi-thread row skipped)", kind.name());
+    }
+    if pipeline > 0 {
+        let piped = run(1, pipeline)?;
+        println!(
+            "  pipelined: {piped:>9.1} images/s   speedup ×{:.2}   (self-timed layer stages)",
+            piped / single
+        );
+        if threads > 1 {
+            let both = run(threads, pipeline)?;
+            println!(
+                "  {threads} pipelines: {both:>9.1} images/s   speedup ×{:.2}   \
+                 (replicated-pipeline pool)",
+                both / single
+            );
+        }
     }
     Ok(())
 }

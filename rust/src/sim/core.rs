@@ -143,16 +143,8 @@ impl Accelerator {
         // leave channels 1.. silently empty.
         assert!(c <= 1, "m-TTFS input encoding supports 1 channel, network has {c}");
         assert_eq!(img.len(), h * w, "image length mismatch");
-        let t_steps = self.net.t_steps;
         let Scratch { input, bufs, events_t } = &mut self.scratch;
-        input.clear_events();
-        let mut input_events = 0u64;
-        for (t, aeq) in input.q[0].iter_mut().enumerate() {
-            // step 0 uses the LARGEST threshold (m-TTFS reversed order;
-            // bit-identical to `encode_mttfs` + `frames_to_events`).
-            let thr = self.net.thresholds[t_steps - 1 - t];
-            input_events += encode_frame_into(img, h, w, thr, aeq);
-        }
+        let input_events = encode_image_into_queues(img, h, w, &self.net.thresholds, input);
         run_pipeline(
             &self.net,
             &self.plan,
@@ -191,6 +183,30 @@ impl Accelerator {
     }
 }
 
+/// m-TTFS encode of a whole image into channel 0 of (cleared) input
+/// queues, one timestep per AEQ with the thresholds applied in reversed
+/// order (step 0 uses the LARGEST threshold; bit-identical to
+/// `encode_mttfs` + `frames_to_events`). Returns the events written.
+/// THE single encode entry point, shared by the sequential execute step
+/// and the [`crate::sim::pipeline`] feed/warm paths so they cannot
+/// drift apart.
+pub(crate) fn encode_image_into_queues(
+    img: &[u8],
+    h: usize,
+    w: usize,
+    thresholds: &[f32],
+    queues: &mut LayerQueues,
+) -> u64 {
+    queues.clear_events();
+    let t_steps = thresholds.len();
+    let mut events = 0u64;
+    for (t, aeq) in queues.q[0].iter_mut().enumerate() {
+        let thr = thresholds[t_steps - 1 - t];
+        events += encode_frame_into(img, h, w, thr, aeq);
+    }
+    events
+}
+
 /// Direct m-TTFS encode of one timestep into a scratch AEQ: cell scan
 /// order with the 9 column comparators per cell, exactly as the
 /// thresholding-unit write side would emit it (and bit-identical to
@@ -219,8 +235,14 @@ fn encode_frame_into(img: &[u8], h: usize, w: usize, thr: f32, aeq: &mut Aeq) ->
 /// adds, one event per cycle, plus one bias cycle per timestep. Reads
 /// the first `n_ch` channel rows (scratch buffers may be wider than the
 /// boundary), accumulates into `acc` (cleared and reused) and returns
-/// the classifier cycle count.
-fn classify_into(net: &Network, queues: &LayerQueues, n_ch: usize, acc: &mut Vec<i64>) -> u64 {
+/// the classifier cycle count. Shared with the last stage of the
+/// self-timed [`crate::sim::pipeline`].
+pub(crate) fn classify_into(
+    net: &Network,
+    queues: &LayerQueues,
+    n_ch: usize,
+    acc: &mut Vec<i64>,
+) -> u64 {
     acc.clear();
     acc.resize(net.n_classes, 0);
     let mut cycles = 0u64;
@@ -265,18 +287,7 @@ fn run_pipeline(
     let t_steps = plan.t_steps;
     let n_layers = plan.layers.len();
 
-    // Recycle the output container (no-ops at steady state).
-    out.stats.layers.clear();
-    out.stats.classifier_cycles = 0;
-    out.stats.redistribution_cycles = 0;
-    out.stats.total_cycles = 0;
-    if out.stats.spike_counts.len() != t_steps {
-        out.stats.spike_counts.resize_with(t_steps, Vec::new);
-    }
-    for row in &mut out.stats.spike_counts {
-        row.clear();
-        row.resize(n_layers, 0);
-    }
+    reset_inference(out, t_steps, n_layers);
 
     // Host interface loads the input AEQs serially (1 event/cycle).
     out.stats.redistribution_cycles += input_events;
@@ -326,7 +337,25 @@ fn run_pipeline(
     out.pred = argmax(&out.logits);
 }
 
-fn argmax(acc: &[i64]) -> usize {
+/// Recycle an [`Inference`] container for a fresh run: clear every
+/// counter and (re)shape `spike_counts` to `t_steps × n_layers` while
+/// keeping all grown capacity — a no-op for the allocator at steady
+/// state. Shared by the sequential execute step and the pipeline feed.
+pub(crate) fn reset_inference(out: &mut Inference, t_steps: usize, n_layers: usize) {
+    out.stats.layers.clear();
+    out.stats.classifier_cycles = 0;
+    out.stats.redistribution_cycles = 0;
+    out.stats.total_cycles = 0;
+    if out.stats.spike_counts.len() != t_steps {
+        out.stats.spike_counts.resize_with(t_steps, Vec::new);
+    }
+    for row in &mut out.stats.spike_counts {
+        row.clear();
+        row.resize(n_layers, 0);
+    }
+}
+
+pub(crate) fn argmax(acc: &[i64]) -> usize {
     acc.iter()
         .enumerate()
         .max_by_key(|(_, v)| **v)

@@ -173,6 +173,84 @@ mod tests {
     }
 
     #[test]
+    fn interlaced_map_is_a_bijection_onto_bank_slots() {
+        // For randomized (H, W, C) — including non-multiples of 3 — the
+        // address map (x, y, ch) → (column s, cell (i, j), ch) must be
+        // injective into the 9 bank-local RAMs (no two neurons share a
+        // RAM slot), land inside the ceil(H/3)×ceil(W/3) cell grid, and
+        // round-trip through `position`. When H and W are multiples of 3
+        // the map is a full bijection: every bank-local slot is hit.
+        prop::check("interlace bijection onto bank slots", 60, |rng| {
+            let h = 1 + rng.below(40);
+            let w = 1 + rng.below(40);
+            let c = 1 + rng.below(8);
+            let (ci, cj) = cell_grid(h, w);
+            let mut seen = vec![false; COLUMNS * ci * cj * c];
+            for ch in 0..c {
+                for x in 0..h {
+                    for y in 0..w {
+                        let s = column(x, y);
+                        let (i, j) = cell(x, y);
+                        if s >= COLUMNS || i >= ci || j >= cj {
+                            return Err(format!(
+                                "({x},{y}) maps outside the {ci}x{cj} grid: s={s} i={i} j={j}"
+                            ));
+                        }
+                        if position(i, j, s) != (x, y) {
+                            return Err(format!("roundtrip failed for ({x},{y})"));
+                        }
+                        let slot = ((s * ci + i) * cj + j) * c + ch;
+                        if seen[slot] {
+                            return Err(format!(
+                                "two neurons share RAM slot (s={s}, i={i}, j={j}, ch={ch}) \
+                                 in a {h}x{w}x{c} fmap"
+                            ));
+                        }
+                        seen[slot] = true;
+                    }
+                }
+            }
+            if h % 3 == 0 && w % 3 == 0 && !seen.iter().all(|&b| b) {
+                return Err(format!("{h}x{w}x{c}: map is not surjective onto the banks"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn neighborhood_never_maps_two_neurons_to_one_ram() {
+        // The hazard-freedom invariant the 9-port design rests on: the
+        // 3×3 neighborhood of ANY pixel (clipped at the fmap borders for
+        // non-multiple-of-3 shapes) touches 9 distinct column RAMs — so
+        // the 9 PEs can read/write a whole window in one cycle with no
+        // bank conflict.
+        prop::check("3x3 neighborhood bank-disjoint", 150, |rng| {
+            let h = 1 + rng.below(40);
+            let w = 1 + rng.below(40);
+            let x0 = rng.below(h);
+            let y0 = rng.below(w);
+            let mut seen = [false; COLUMNS];
+            for dx in 0..3 {
+                for dy in 0..3 {
+                    let (x, y) = (x0 + dx, y0 + dy);
+                    if x >= h || y >= w {
+                        continue;
+                    }
+                    let s = column(x, y);
+                    if seen[s] {
+                        return Err(format!(
+                            "neighborhood of ({x0},{y0}) in {h}x{w} maps two neurons \
+                             to RAM {s}"
+                        ));
+                    }
+                    seen[s] = true;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn cell_grid_dims() {
         assert_eq!(cell_grid(26, 26), (9, 9));
         assert_eq!(cell_grid(24, 24), (8, 8));

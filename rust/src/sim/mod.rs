@@ -28,7 +28,14 @@
 //! * [`parallel`] — host-side batched throughput: the
 //!   [`parallel::ShardedExecutor`] shards an `infer_batch` across worker
 //!   threads that share one compiled plan (chase-the-queue scheduling,
-//!   per-worker scratch; §Throughput in `lib.rs`).
+//!   per-worker scratch; §Throughput in `lib.rs`), and the
+//!   [`parallel::PipelinePool`] replicates whole pipelines for the
+//!   `threads × pipeline` composition.
+//! * [`pipeline`] — the self-timed layer pipeline
+//!   ([`pipeline::PipelinedExecutor`]): one worker thread per stage of
+//!   the compiled plan, connected by bounded spike-queue channels with
+//!   backpressure, streaming frames with inter-layer overlap
+//!   (§Pipelining in `lib.rs`).
 //! * [`stats`] — cycle/stall/utilization counters (paper Table III).
 //! * [`dense_ref`] — frame-based integer reference implementation used to
 //!   validate the event-driven datapath end-to-end.
@@ -40,11 +47,13 @@ pub mod dense_ref;
 pub mod interlace;
 pub mod mempot;
 pub mod parallel;
+pub mod pipeline;
 pub mod plan;
 pub mod scheduler;
 pub mod stats;
 pub mod threshold_unit;
 
 pub use self::core::{AccelConfig, Accelerator};
-pub use parallel::ShardedExecutor;
+pub use parallel::{PipelinePool, ShardedExecutor};
+pub use pipeline::PipelinedExecutor;
 pub use stats::{LayerStats, RunStats};

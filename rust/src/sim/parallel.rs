@@ -46,6 +46,7 @@
 use crate::engine::{
     check_frame, resize_batch_out, Backend, BackendKind, CycleModel, EngineError, Frame, Inference,
 };
+use crate::sim::pipeline::PipelinedExecutor;
 use crate::sim::plan::NetworkPlan;
 use crate::sim::{AccelConfig, Accelerator};
 use crate::snn::network::Network;
@@ -208,6 +209,149 @@ impl<'a> OutSlots<'a> {
     }
 }
 
+/// A pool of `T` replicated self-timed layer pipelines — the
+/// composition of both host-throughput axes ([`EngineBuilder::pipeline`]
+/// × [`EngineBuilder::threads`], see `lib.rs` §Pipelining): each worker
+/// is a whole [`PipelinedExecutor`] (layer-parallel *within* its
+/// frames), and a batch is split into contiguous chunks across the
+/// workers (data-parallel *across* frames). All pipelines share one
+/// compiled [`NetworkPlan`] behind an `Arc`.
+///
+/// Chunking is contiguous rather than chase-the-queue because each
+/// pipeline is a *stream* consumer: handing it a contiguous run of
+/// frames preserves input order per pipeline for free and keeps its
+/// stages continuously fed, which is where the pipeline's throughput
+/// comes from. The trade-off versus work stealing (a straggler chunk
+/// can finish last) is acceptable because chunk sizes are balanced and
+/// each chunk's cost averages over many frames.
+///
+/// [`EngineBuilder::pipeline`]: crate::engine::EngineBuilder::pipeline
+/// [`EngineBuilder::threads`]: crate::engine::EngineBuilder::threads
+pub struct PipelinePool {
+    pipes: Vec<PipelinedExecutor>,
+}
+
+impl PipelinePool {
+    /// Build `threads` pipelines of `depth` stages around one shared
+    /// compiled plan (both knobs clamped to at least 1).
+    pub fn with_plan(
+        net: Arc<Network>,
+        plan: Arc<NetworkPlan>,
+        cfg: AccelConfig,
+        depth: usize,
+        threads: usize,
+    ) -> Self {
+        let pipes = (0..threads.max(1))
+            .map(|_| {
+                PipelinedExecutor::with_plan(Arc::clone(&net), Arc::clone(&plan), cfg, depth)
+            })
+            .collect();
+        PipelinePool { pipes }
+    }
+
+    /// Number of replicated pipelines.
+    pub fn threads(&self) -> usize {
+        self.pipes.len()
+    }
+
+    /// Stage count of each pipeline.
+    pub fn depth(&self) -> usize {
+        self.pipes[0].depth()
+    }
+
+    /// Split `frames` into contiguous balanced chunks, stream each chunk
+    /// through its own pipeline concurrently, and write `out[i]` for
+    /// `frames[i]` (containers recycled; order preserved).
+    pub fn infer_batch_into(
+        &mut self,
+        frames: &[Frame],
+        out: &mut Vec<Inference>,
+    ) -> Result<(), EngineError> {
+        // Same admission rule as the sharded executor: a malformed frame
+        // yields a typed error before any chunk is dispatched.
+        let expected = self.pipes[0].input_shape();
+        for frame in frames {
+            check_frame(frame, expected)?;
+        }
+        resize_batch_out(out, frames.len());
+        let workers = self.pipes.len().min(frames.len());
+        if workers <= 1 {
+            return self.pipes[0].run_stream_slice(frames, out);
+        }
+        // Balanced contiguous partition: the first `extra` chunks take
+        // one more frame. `split_at_mut` keeps the output slices
+        // disjoint, so no unsafe aliasing is needed.
+        let base = frames.len() / workers;
+        let extra = frames.len() % workers;
+        let mut result: Result<(), EngineError> = Ok(());
+        std::thread::scope(|scope| {
+            let mut rest_frames = frames;
+            let mut rest_out: &mut [Inference] = out;
+            let mut handles = Vec::with_capacity(workers);
+            for (w, pipe) in self.pipes.iter_mut().take(workers).enumerate() {
+                let n = base + usize::from(w < extra);
+                let (chunk, fr) = rest_frames.split_at(n);
+                let (slots, or) = rest_out.split_at_mut(n);
+                rest_frames = fr;
+                rest_out = or;
+                handles.push(scope.spawn(move || pipe.run_stream_slice(chunk, slots)));
+            }
+            for (w, handle) in handles.into_iter().enumerate() {
+                match handle.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => result = Err(e),
+                    Err(payload) => {
+                        result =
+                            Err(EngineError::worker_panicked(format!("pipeline-{w}"), &*payload));
+                    }
+                }
+            }
+        });
+        result
+    }
+}
+
+impl Backend for PipelinePool {
+    fn name(&self) -> &'static str {
+        BackendKind::Sim.name()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sim
+    }
+
+    fn cycle_model(&self) -> CycleModel {
+        self.pipes[0].cycle_model()
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.pipes[0].input_shape()
+    }
+
+    fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError> {
+        self.pipes[0].infer(frame)
+    }
+
+    fn infer_batch(
+        &mut self,
+        frames: &[Frame],
+        out: &mut Vec<Inference>,
+    ) -> Result<(), EngineError> {
+        self.infer_batch_into(frames, out)
+    }
+
+    /// A single totally-ordered stream cannot be replicated without
+    /// reordering, so it flows through one pipeline with full overlap;
+    /// replication pays off on the batch path.
+    fn infer_stream(
+        &mut self,
+        frames: &mut dyn Iterator<Item = Frame>,
+        sink: &mut dyn FnMut(Inference),
+    ) -> Result<(), EngineError> {
+        self.pipes[0].infer_stream(frames, sink)
+    }
+}
+
 impl Backend for ShardedExecutor {
     fn name(&self) -> &'static str {
         BackendKind::Sim.name()
@@ -322,6 +466,75 @@ mod tests {
         for w in &pool.workers[1..] {
             assert!(Arc::ptr_eq(&p0, &w.plan_handle()), "plan compiled more than once");
         }
+    }
+
+    #[test]
+    fn pipeline_pool_matches_sequential_bit_exact() {
+        // threads × pipeline composition: every chunk of the batch runs
+        // on its own self-timed pipeline, results land in input order,
+        // bit-identical to a sequential loop.
+        let net = Arc::new(random_network(907));
+        let plan = Arc::new(NetworkPlan::compile(&net));
+        let batch = frames(&net, 11, 21);
+        let mut seq = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want: Vec<Inference> = batch.iter().map(|f| seq.infer(f).unwrap()).collect();
+        for threads in [1usize, 3] {
+            let mut pool = PipelinePool::with_plan(
+                Arc::clone(&net),
+                Arc::clone(&plan),
+                AccelConfig::default(),
+                usize::MAX,
+                threads,
+            );
+            assert_eq!(pool.threads(), threads);
+            let mut out = Vec::new();
+            pool.infer_batch_into(&batch, &mut out).unwrap();
+            assert_eq!(out.len(), batch.len());
+            for (i, (got, want)) in out.iter().zip(&want).enumerate() {
+                assert_eq!(got.pred, want.pred, "threads={threads} frame={i}");
+                assert_eq!(got.logits, want.logits, "threads={threads} frame={i}");
+                assert_eq!(got.stats, want.stats, "threads={threads} frame={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_pool_shares_one_plan() {
+        let net = Arc::new(random_network(908));
+        let plan = Arc::new(NetworkPlan::compile(&net));
+        let pool = PipelinePool::with_plan(
+            Arc::clone(&net),
+            Arc::clone(&plan),
+            AccelConfig::default(),
+            2,
+            3,
+        );
+        assert_eq!(pool.depth(), 2);
+        for pipe in &pool.pipes {
+            assert!(Arc::ptr_eq(&plan, &pipe.plan_handle()), "plan recompiled");
+        }
+    }
+
+    #[test]
+    fn pipeline_pool_rejects_malformed_before_dispatch() {
+        let net = Arc::new(random_network(909));
+        let plan = Arc::new(NetworkPlan::compile(&net));
+        let mut pool = PipelinePool::with_plan(
+            Arc::clone(&net),
+            plan,
+            AccelConfig::default(),
+            usize::MAX,
+            2,
+        );
+        let mut batch = frames(&net, 3, 31);
+        batch.push(Frame::from_u8(4, 4, 1, vec![0; 16]).unwrap());
+        let mut out = Vec::new();
+        let err = pool.infer_batch_into(&batch, &mut out).unwrap_err();
+        assert!(matches!(err, EngineError::ShapeMismatch { .. }), "{err}");
+        // empty batches are fine and clear the output
+        let mut out = vec![Inference::default(); 2];
+        pool.infer_batch_into(&[], &mut out).unwrap();
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -1,0 +1,776 @@
+//! Self-timed layer pipeline (§Throughput → Pipelining): a streaming
+//! inference engine that overlaps the layers of ONE frame with the
+//! layers of the frames behind it.
+//!
+//! The paper's scheduling idea is *self-timed* processing: compressed
+//! spike queues flow between stages, every PE works for exactly as long
+//! as spikes exist, and a stage that runs dry simply waits on its input
+//! queue. The sequential [`crate::sim::Accelerator`] models that within
+//! a layer but still drains conv1 completely before conv2 starts; this
+//! module applies the same discipline *between* layers on the host:
+//!
+//! ```text
+//!   frames ──▶ feed(encode) ══▶ stage 0 ══▶ stage 1 ══▶ … ══▶ sink
+//!              (caller thread)   (thread)    (thread)
+//! ```
+//!
+//! * Each `══▶` is a **bounded spike-queue channel** (capacity
+//!   [`STAGE_QUEUE_BOUND`]): when a slow stage falls behind, `send`
+//!   blocks and the producers upstream self-time to its pace — the host
+//!   analogue of the paper's inter-layer queue compression circuitry
+//!   providing backpressure by construction.
+//! * What flows is a [`Slab`]: the boundary [`LayerQueues`] (compressed
+//!   AER events), the running event total, and the partially-filled
+//!   [`Inference`]. Slabs are handed off **by move** (slab-style) and
+//!   recycled through a free list, so the steady state moves pointers,
+//!   never event payloads. On the batch path (`infer_batch` /
+//!   [`PipelinedExecutor::run_stream_into`]), results are *swapped*
+//!   into the recycled output vec, so a warmed constant-size batch
+//!   performs no heap allocation at all (the `zero_alloc` suite proves
+//!   the marginal cost of an extra streamed frame is exactly zero
+//!   allocations). `infer_stream` hands *ownership* of each
+//!   [`Inference`] to the sink, so it allocates that one small output
+//!   container per frame — O(layers + t_steps), never per-event.
+//! * Each stage owns a private **partition of the scratch state** —
+//!   its own [`MultiMem`] (sized for just its layers), conv/threshold
+//!   units and two local ping-pong queue buffers — replacing the
+//!   sequential accelerator's single double-buffered arena. Stage
+//!   `k`'s [`LayerStats`] are merged into the slab's `RunStats` as the
+//!   slab passes through, so per-stage lane accounting composes into
+//!   the exact same totals the sequential path produces even though
+//!   stages complete at their own (self-timed) rates.
+//!
+//! Results are **bit-identical** to sequential [`Accelerator::infer`]
+//! for every network shape, batch size and pipeline depth (the `parity`
+//! suite sweeps {0, 1, 7, 64} frames × depths {1, 2, full}); the
+//! pipeline changes host wall-clock only, never anything modeled.
+//!
+//! Design note: stage threads are scoped per stream call
+//! (`std::thread::scope`) rather than persistent. One call serves many
+//! frames, so the O(depth) spawn/channel setup amortizes to ~zero per
+//! frame, and scoping lets stages borrow the executor's stage state
+//! and the compiled plan directly — no `Arc` cloning, no shutdown
+//! protocol (channel closure is the whole protocol, exactly like the
+//! coordinator). If profiling ever shows call setup mattering (many
+//! tiny streams), a persistent stage pool behind the same entry points
+//! is the upgrade path.
+
+use crate::engine::{
+    check_frame, resize_batch_out, Backend, BackendKind, CycleModel, EngineError, Frame, Inference,
+};
+use crate::sim::conv_unit::ConvUnit;
+use crate::sim::core::{argmax, classify_into, encode_image_into_queues, reset_inference};
+use crate::sim::interlace;
+use crate::sim::mempot::MultiMem;
+use crate::sim::plan::NetworkPlan;
+use crate::sim::scheduler::{process_layer_planned, LayerQueues};
+use crate::sim::threshold_unit::ThresholdUnit;
+use crate::sim::AccelConfig;
+use crate::snn::network::Network;
+use std::borrow::Borrow;
+use std::ops::Range;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+
+/// Bounded capacity of each inter-stage spike-queue channel: one slab
+/// may wait at each boundary while the stage works on another — the
+/// classic two-deep self-timed handshake. Raising this adds slack (and
+/// in-flight memory) without changing results.
+const STAGE_QUEUE_BOUND: usize = 1;
+
+/// One unit of work flowing through the pipeline: the current layer
+/// boundary's compressed spike queues plus the inference being built.
+/// Handed between stages by move and recycled through the executor's
+/// free list.
+struct Slab {
+    /// Feed-order index of the frame (delivery is FIFO, but the index
+    /// lets batch sinks write results by position).
+    seq: usize,
+    /// The boundary events: the m-TTFS input queues when leaving the
+    /// feed, layer `r.end-1`'s output queues after stage `r`. Sized for
+    /// the widest boundary so one buffer serves every role it rotates
+    /// through.
+    queues: LayerQueues,
+    /// Total events currently in `queues` (carried forward in place of
+    /// re-scanning, exactly like the sequential path's `cur_events`).
+    events: u64,
+    /// The partially-accumulated result; stages append their layers'
+    /// stats as the slab passes through.
+    out: Inference,
+}
+
+impl Slab {
+    fn for_plan(plan: &NetworkPlan) -> Self {
+        Slab {
+            seq: 0,
+            queues: LayerQueues::new(plan.max_queue_channels.max(1), plan.t_steps),
+            events: 0,
+            out: Inference::default(),
+        }
+    }
+}
+
+/// One pipeline stage: a contiguous run of layers plus the private
+/// partition of scratch state needed to execute them. This replaces the
+/// sequential accelerator's single [`crate::sim::plan::Scratch`] arena:
+/// the inter-stage boundaries live in the circulating slabs, while each
+/// stage keeps only what its own layers touch.
+struct Stage {
+    /// Layer indices this stage executes (contiguous; in pipeline order).
+    layers: Range<usize>,
+    /// True for the final stage, which also runs the FC classifier and
+    /// finalizes the slab's `RunStats`.
+    classify: bool,
+    /// Membrane memory sized for the largest interlaced capacity among
+    /// THIS stage's layers only (the per-stage scratch partition).
+    mem: MultiMem,
+    conv: ConvUnit,
+    thresh: ThresholdUnit,
+    /// Two local queue buffers for intra-stage ping-pong; the stage's
+    /// final output is swapped into the slab, so buffers rotate between
+    /// local and slab roles (all sized for the widest boundary).
+    locals: [LayerQueues; 2],
+    /// Per-timestep output spike counters for the layer in flight.
+    events_t: Vec<u64>,
+}
+
+impl Stage {
+    /// Execute this stage's layers on `slab`, merging stats exactly as
+    /// the sequential execute step does, and (on the last stage) run the
+    /// classifier. Allocation-free once all buffers are warm.
+    fn run(&mut self, net: &Network, plan: &NetworkPlan, lanes: usize, slab: &mut Slab) {
+        let n_layers = plan.layers.len();
+        // `cur` indexes the local buffer holding the latest output; the
+        // first layer of the stage reads from the incoming slab queues.
+        let mut cur: Option<usize> = None;
+        for li in self.layers.clone() {
+            let lp = &plan.layers[li];
+            let (src, dst): (&LayerQueues, &mut LayerQueues) = match cur {
+                None => (&slab.queues, &mut self.locals[0]),
+                Some(c) => {
+                    let (a, b) = self.locals.split_at_mut(1);
+                    if c == 0 {
+                        (&a[0], &mut b[0])
+                    } else {
+                        (&b[0], &mut a[0])
+                    }
+                }
+            };
+            dst.clear_events();
+            let ls = process_layer_planned(
+                lp,
+                src,
+                slab.events,
+                dst,
+                &mut self.events_t,
+                &mut self.mem,
+                &self.conv,
+                &self.thresh,
+                net.sat,
+                lanes,
+            );
+            cur = Some(match cur {
+                None => 0,
+                Some(c) => 1 - c,
+            });
+            // Same accounting as the sequential `run_pipeline`: wall
+            // cycles into the total, inter-layer redistribution for all
+            // but the last layer, per-(t, layer) spike counts from the
+            // layer's own counters.
+            slab.out.stats.total_cycles += ls.wall_cycles;
+            if li + 1 < n_layers {
+                slab.out.stats.redistribution_cycles += ls.spikes_out;
+            }
+            for (row, &n) in slab.out.stats.spike_counts.iter_mut().zip(self.events_t.iter()) {
+                row[li] = n;
+            }
+            slab.events = ls.spikes_out;
+            slab.out.stats.layers.push(ls);
+        }
+        // Hand this stage's final boundary downstream; the incoming
+        // buffer stays behind as a local (slab-style rotation).
+        if let Some(c) = cur {
+            std::mem::swap(&mut slab.queues, &mut self.locals[c]);
+        }
+        if self.classify {
+            slab.out.stats.total_cycles += slab.out.stats.redistribution_cycles;
+            let n_ch = if n_layers == 0 {
+                plan.in_shape.2.max(1)
+            } else {
+                plan.layers[n_layers - 1].queue_shape.2
+            };
+            slab.out.stats.classifier_cycles =
+                classify_into(net, &slab.queues, n_ch, &mut slab.out.logits);
+            slab.out.stats.total_cycles += slab.out.stats.classifier_cycles;
+            slab.out.pred = argmax(&slab.out.logits);
+        }
+    }
+}
+
+/// The self-timed streaming engine: each stage of the compiled
+/// [`NetworkPlan`] runs on its own worker thread, connected by bounded
+/// spike-queue channels with backpressure (module docs). Construct via
+/// [`crate::engine::EngineBuilder::pipeline`] or directly.
+///
+/// Implements [`Backend`]: `infer_stream`/`infer_batch` overlap layers
+/// across consecutive frames; `infer` runs a single frame through the
+/// same machinery. `name()`/`kind()` stay `"sim"` — the pipeline changes
+/// host throughput only, never what is modeled.
+pub struct PipelinedExecutor {
+    net: Arc<Network>,
+    plan: Arc<NetworkPlan>,
+    cfg: AccelConfig,
+    stages: Vec<Stage>,
+    /// Recycled slabs (all slabs return here between stream calls).
+    free: Vec<Slab>,
+    /// Hard cap on slabs in circulation: stages in flight + queued at
+    /// each bounded boundary + feed/drain slack.
+    slab_cap: usize,
+}
+
+impl PipelinedExecutor {
+    /// Compile the plan and build a pipeline of `depth` stages (clamped
+    /// to `[1, n_layers]`; pass `usize::MAX` for one stage per layer).
+    pub fn new(net: Arc<Network>, cfg: AccelConfig, depth: usize) -> Self {
+        let plan = Arc::new(NetworkPlan::compile(&net));
+        Self::with_plan(net, plan, cfg, depth)
+    }
+
+    /// Build around an already-compiled shared plan (e.g. one cached by
+    /// [`crate::engine::EngineBuilder`], so replicated pipelines compile
+    /// the network exactly once).
+    pub fn with_plan(
+        net: Arc<Network>,
+        plan: Arc<NetworkPlan>,
+        cfg: AccelConfig,
+        depth: usize,
+    ) -> Self {
+        // The m-TTFS encoder produces a single-channel queue set; fail
+        // loudly at construction rather than leave channels 1.. silently
+        // empty in every entry point (same guard as the sequential
+        // execute step, hoisted so `warm` and the streams all inherit it).
+        assert!(
+            plan.in_shape.2 <= 1,
+            "m-TTFS input encoding supports 1 channel, network has {}",
+            plan.in_shape.2
+        );
+        let n_layers = plan.layers.len();
+        let depth = depth.clamp(1, n_layers.max(1));
+        let qch = plan.max_queue_channels.max(1);
+        let t_steps = plan.t_steps;
+        // Contiguous near-even partition: the first `n_layers % depth`
+        // stages take one extra layer.
+        let base = n_layers / depth;
+        let extra = n_layers % depth;
+        let mut stages = Vec::with_capacity(depth);
+        let mut lo = 0usize;
+        for k in 0..depth {
+            let len = base + usize::from(k < extra);
+            let layers = lo..lo + len;
+            lo += len;
+            // Per-stage membrane partition: sized by the largest
+            // interlaced capacity among this stage's layers (the same
+            // rule NetworkPlan::mem_shape applies globally).
+            let (mh, mw, mc) = plan.layers[layers.clone()]
+                .iter()
+                .map(|l| l.out_shape)
+                .max_by_key(|&(h, w, c)| {
+                    let (ci, cj) = interlace::cell_grid(h, w);
+                    ci * cj * c
+                })
+                .unwrap_or((0, 0, 0));
+            stages.push(Stage {
+                layers,
+                classify: k == depth - 1,
+                mem: MultiMem::new(mh, mw, mc),
+                conv: ConvUnit::new(cfg.hazard_mode),
+                thresh: ThresholdUnit,
+                locals: [
+                    LayerQueues::new(qch, t_steps),
+                    LayerQueues::new(qch, t_steps),
+                ],
+                events_t: vec![0; t_steps],
+            });
+        }
+        let slab_cap = depth * (1 + STAGE_QUEUE_BOUND) + 2;
+        PipelinedExecutor {
+            net,
+            plan,
+            cfg,
+            stages,
+            free: Vec::with_capacity(slab_cap),
+            slab_cap,
+        }
+    }
+
+    /// Number of pipeline stages.
+    pub fn depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Deterministic warm-up: allocate the full slab complement and run
+    /// `frame` through EVERY slab and every stage, inline on the calling
+    /// thread. Stream scheduling gives no guarantee which slab serves
+    /// which frame (completion timing decides), so a pipeline that must
+    /// hit its steady-state zero-allocation property from the first real
+    /// stream should be warmed with the densest expected frame — the
+    /// mirror of [`super::parallel::ShardedExecutor::warm`]; the
+    /// `zero_alloc` suite relies on this.
+    ///
+    /// Two passes over the slabs on purpose: queue buffers rotate roles
+    /// as they circulate (input queues → each layer boundary → back),
+    /// and one pass leaves the buffers parked in stage locals at its end
+    /// without their downstream-role capacities (and the buffers parked
+    /// in the first `depth` slab slots without their input-role
+    /// capacity). The second pass pushes every buffer through every
+    /// remaining role, so capacities reach the frame's high-water mark
+    /// in ALL roles regardless of how a later stream rotates them.
+    pub fn warm(&mut self, frame: &Frame) -> Result<(), EngineError> {
+        let img = check_frame(frame, self.net.input_shape())?;
+        while self.free.len() < self.slab_cap {
+            self.free.push(Slab::for_plan(&self.plan));
+        }
+        let PipelinedExecutor { net, plan, cfg, stages, free, .. } = self;
+        let net: &Network = &**net;
+        let plan: &NetworkPlan = &**plan;
+        let lanes = cfg.lanes;
+        let (h, w, _) = plan.in_shape;
+        for _pass in 0..2 {
+            for slab in free.iter_mut() {
+                reset_inference(&mut slab.out, plan.t_steps, plan.layers.len());
+                slab.seq = 0;
+                slab.events =
+                    encode_image_into_queues(img, h, w, &net.thresholds, &mut slab.queues);
+                slab.out.stats.redistribution_cycles += slab.events;
+                for stage in stages.iter_mut() {
+                    stage.run(net, plan, lanes, slab);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A cheap handle to the compiled plan (for replicated pipelines).
+    pub fn plan_handle(&self) -> Arc<NetworkPlan> {
+        Arc::clone(&self.plan)
+    }
+
+    /// Stream `frames` through the pipeline, writing `out[i]` for frame
+    /// `i` (containers recycled via [`resize_batch_out`] / slab swap, so
+    /// a warmed constant-size batch allocates nothing end to end).
+    pub fn run_stream_into(
+        &mut self,
+        frames: &[Frame],
+        out: &mut Vec<Inference>,
+    ) -> Result<(), EngineError> {
+        resize_batch_out(out, frames.len());
+        self.run_stream_slice(frames, out)
+    }
+
+    /// As [`Self::run_stream_into`], but into a caller-partitioned slice
+    /// (`out.len()` must equal `frames.len()`) — the entry point a
+    /// replicated-pipeline pool uses to hand each pipeline a disjoint
+    /// chunk of one batch.
+    pub fn run_stream_slice(
+        &mut self,
+        frames: &[Frame],
+        out: &mut [Inference],
+    ) -> Result<(), EngineError> {
+        debug_assert_eq!(frames.len(), out.len());
+        self.stream_core(frames.iter(), &mut |slab| {
+            std::mem::swap(&mut slab.out, &mut out[slab.seq]);
+        })
+    }
+
+    /// The shared streaming core: feed (encode) on the calling thread,
+    /// one scoped worker per stage, deliver finished slabs in feed order
+    /// through `deliver` (which extracts/swaps the result and must leave
+    /// the slab reusable).
+    fn stream_core<F: Borrow<Frame>>(
+        &mut self,
+        frames: impl Iterator<Item = F>,
+        deliver: &mut dyn FnMut(&mut Slab),
+    ) -> Result<(), EngineError> {
+        let PipelinedExecutor { net, plan, cfg, stages, free, slab_cap } = self;
+        // Shared reborrows for the whole call: stage threads and the
+        // feed loop below only ever read the network and the plan.
+        let net: &Network = &**net;
+        let plan: &NetworkPlan = &**plan;
+        let slab_cap: usize = *slab_cap;
+        let expected = net.input_shape();
+        let depth = stages.len();
+        let lanes = cfg.lanes;
+        let (done_tx, done_rx) = sync_channel::<Slab>(slab_cap);
+
+        std::thread::scope(|scope| -> Result<(), EngineError> {
+            // Inter-stage channels: stage k reads rxs[k]; its successor
+            // sender is cloned below, after which the originals for
+            // stages 1.. are dropped so each is owned solely by its
+            // upstream stage (channel closure then cascades shutdown).
+            let mut txs: Vec<SyncSender<Slab>> = Vec::with_capacity(depth);
+            let mut rxs: Vec<Receiver<Slab>> = Vec::with_capacity(depth);
+            for _ in 0..depth {
+                let (tx, rx) = sync_channel::<Slab>(STAGE_QUEUE_BOUND);
+                txs.push(tx);
+                rxs.push(rx);
+            }
+            let senders: Vec<SyncSender<Slab>> = (0..depth)
+                .map(|k| {
+                    if k + 1 < depth {
+                        txs[k + 1].clone()
+                    } else {
+                        done_tx.clone()
+                    }
+                })
+                .collect();
+            let feed_tx = txs.remove(0);
+            drop(txs);
+            drop(done_tx);
+
+            for ((stage, rx), tx_next) in stages.iter_mut().zip(rxs).zip(senders) {
+                scope.spawn(move || {
+                    // Self-timed worker: blocked on an empty input queue
+                    // or a full output queue, busy exactly while spikes
+                    // exist — and gone as soon as upstream hangs up.
+                    while let Ok(mut slab) = rx.recv() {
+                        stage.run(net, plan, lanes, &mut slab);
+                        if tx_next.send(slab).is_err() {
+                            return; // downstream vanished (drain/panic)
+                        }
+                    }
+                });
+            }
+
+            // Feed loop (caller thread): encode each frame into a
+            // recycled slab and push it into stage 0. `send` blocking on
+            // a full queue IS the backpressure path — the feed self-times
+            // to the slowest stage.
+            let mut total_slabs = free.len();
+            let mut fed = 0usize;
+            let mut delivered = 0usize;
+            let mut feed_err: Option<EngineError> = None;
+            for f in frames {
+                let frame = f.borrow();
+                // Opportunistically bank finished slabs (non-blocking).
+                while let Ok(mut slab) = done_rx.try_recv() {
+                    deliver(&mut slab);
+                    delivered += 1;
+                    free.push(slab);
+                }
+                let img = match check_frame(frame, expected) {
+                    Ok(img) => img,
+                    Err(e) => {
+                        feed_err = Some(e);
+                        break;
+                    }
+                };
+                let mut slab = match free.pop() {
+                    Some(slab) => slab,
+                    None if total_slabs < slab_cap => {
+                        total_slabs += 1;
+                        Slab::for_plan(plan)
+                    }
+                    None => match done_rx.recv() {
+                        // Every slab is in flight: block until the
+                        // pipeline finishes one (it always will — the
+                        // done channel can hold every slab, so the last
+                        // stage never blocks).
+                        Ok(mut slab) => {
+                            deliver(&mut slab);
+                            delivered += 1;
+                            slab
+                        }
+                        Err(_) => {
+                            feed_err = Some(EngineError::Backend(
+                                "pipeline stage exited early".to_string(),
+                            ));
+                            break;
+                        }
+                    },
+                };
+                // Encode (the feed is pipeline stage "-1"): reset the
+                // recycled result container, write the m-TTFS queues.
+                reset_inference(&mut slab.out, plan.t_steps, plan.layers.len());
+                slab.seq = fed;
+                let (h, w, _) = expected;
+                slab.events =
+                    encode_image_into_queues(img, h, w, &net.thresholds, &mut slab.queues);
+                slab.out.stats.redistribution_cycles += slab.events;
+                if feed_tx.send(slab).is_err() {
+                    feed_err = Some(EngineError::Backend(
+                        "pipeline stage exited early".to_string(),
+                    ));
+                    break;
+                }
+                fed += 1;
+            }
+            drop(feed_tx); // cascade shutdown through the stages
+
+            // Drain: everything fed comes back in feed order.
+            while delivered < fed {
+                match done_rx.recv() {
+                    Ok(mut slab) => {
+                        deliver(&mut slab);
+                        delivered += 1;
+                        free.push(slab);
+                    }
+                    // A stage died (panic): stop draining; the scope
+                    // join below propagates the panic to the caller.
+                    Err(_) => break,
+                }
+            }
+            match feed_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })
+    }
+}
+
+impl Backend for PipelinedExecutor {
+    fn name(&self) -> &'static str {
+        BackendKind::Sim.name()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sim
+    }
+
+    fn cycle_model(&self) -> CycleModel {
+        CycleModel {
+            n_pes: 9 * self.cfg.lanes,
+            clock_hz: self.cfg.clock_hz,
+            event_driven: true,
+            cycle_accurate: true,
+        }
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.net.input_shape()
+    }
+
+    fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError> {
+        let mut result = None;
+        self.stream_core(std::iter::once(frame), &mut |slab| {
+            result = Some(std::mem::take(&mut slab.out));
+        })?;
+        result.ok_or_else(|| EngineError::Backend("pipeline produced no result".to_string()))
+    }
+
+    /// The coordinator's dispatch path: a drained batch streams through
+    /// the self-timed pipeline with full inter-layer overlap (and all
+    /// containers recycled — see [`PipelinedExecutor::run_stream_into`]).
+    fn infer_batch(
+        &mut self,
+        frames: &[Frame],
+        out: &mut Vec<Inference>,
+    ) -> Result<(), EngineError> {
+        self.run_stream_into(frames, out)
+    }
+
+    /// Streaming override: frames overlap across layers as they are
+    /// pulled from the iterator; `sink` observes results in input order
+    /// while later frames are still in flight upstream. Each delivered
+    /// [`Inference`] is handed to the sink by value, so this path
+    /// allocates one output container per frame (the batch path swaps
+    /// into recycled containers instead and allocates nothing).
+    fn infer_stream(
+        &mut self,
+        frames: &mut dyn Iterator<Item = Frame>,
+        sink: &mut dyn FnMut(Inference),
+    ) -> Result<(), EngineError> {
+        self.stream_core(frames, &mut |slab| sink(std::mem::take(&mut slab.out)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Accelerator;
+    use crate::snn::network::testutil::random_network;
+    use crate::util::prng::Pcg;
+
+    fn frames(net: &Network, n: usize, seed: u64) -> Vec<Frame> {
+        let (h, w, c) = net.input_shape();
+        let mut rng = Pcg::new(seed);
+        (0..n)
+            .map(|_| {
+                let data = (0..h * w * c).map(|_| rng.below(256) as u8).collect();
+                Frame::from_u8(h, w, c, data).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn depth_is_clamped_to_layer_count() {
+        let net = Arc::new(random_network(700));
+        let full = PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), usize::MAX);
+        assert_eq!(full.depth(), net.conv.len());
+        let one = PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), 0);
+        assert_eq!(one.depth(), 1);
+    }
+
+    #[test]
+    fn stages_partition_the_layers_contiguously() {
+        let net = Arc::new(random_network(701));
+        for depth in 1..=3 {
+            let pipe = PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), depth);
+            let mut next = 0usize;
+            for (k, stage) in pipe.stages.iter().enumerate() {
+                assert_eq!(stage.layers.start, next, "depth={depth} stage={k}");
+                assert!(!stage.layers.is_empty(), "depth={depth} stage={k}");
+                assert_eq!(stage.classify, k == depth - 1);
+                next = stage.layers.end;
+            }
+            assert_eq!(next, net.conv.len(), "depth={depth}");
+        }
+    }
+
+    #[test]
+    fn stream_matches_sequential_bit_exact() {
+        let net = Arc::new(random_network(702));
+        let batch = frames(&net, 9, 11);
+        let mut seq = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want: Vec<Inference> = batch.iter().map(|f| seq.infer(f).unwrap()).collect();
+        for depth in [1usize, 2, usize::MAX] {
+            let mut pipe =
+                PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), depth);
+            let mut out = Vec::new();
+            pipe.run_stream_into(&batch, &mut out).unwrap();
+            assert_eq!(out.len(), batch.len());
+            for (i, (got, want)) in out.iter().zip(&want).enumerate() {
+                assert_eq!(got.pred, want.pred, "depth={depth} frame={i}");
+                assert_eq!(got.logits, want.logits, "depth={depth} frame={i}");
+                assert_eq!(got.stats, want.stats, "depth={depth} frame={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn slabs_are_recycled_across_stream_calls() {
+        let net = Arc::new(random_network(703));
+        let batch = frames(&net, 12, 13);
+        let mut pipe =
+            PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), usize::MAX);
+        // Warm pins the pool at its hard cap; streams must neither leak
+        // slabs nor grow past it, however the rotation plays out.
+        pipe.warm(&batch[0]).unwrap();
+        assert_eq!(pipe.free.len(), pipe.slab_cap);
+        let mut out = Vec::new();
+        for _ in 0..2 {
+            pipe.run_stream_into(&batch, &mut out).unwrap();
+            assert_eq!(pipe.free.len(), pipe.slab_cap, "stream leaked or grew slabs");
+        }
+        // recycled results stay bit-exact
+        let mut seq = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want = seq.infer(&batch[5]).unwrap();
+        assert_eq!(out[5].logits, want.logits);
+        assert_eq!(out[5].stats, want.stats);
+    }
+
+    #[test]
+    fn single_frame_infer_matches_sequential() {
+        let net = Arc::new(random_network(704));
+        let frame = &frames(&net, 1, 17)[0];
+        let mut seq = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want = seq.infer(frame).unwrap();
+        let mut pipe = PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), 2);
+        let got = pipe.infer(frame).unwrap();
+        assert_eq!(got.pred, want.pred);
+        assert_eq!(got.logits, want.logits);
+        assert_eq!(got.stats, want.stats);
+    }
+
+    #[test]
+    fn infer_stream_delivers_in_input_order() {
+        let net = Arc::new(random_network(705));
+        let batch = frames(&net, 7, 19);
+        let mut seq = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want: Vec<Inference> = batch.iter().map(|f| seq.infer(f).unwrap()).collect();
+        let mut pipe =
+            PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), usize::MAX);
+        let mut got = Vec::new();
+        Backend::infer_stream(
+            &mut pipe,
+            &mut batch.iter().cloned(),
+            &mut |inf| got.push(inf),
+        )
+        .unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.logits, w.logits, "frame {i}");
+            assert_eq!(g.stats, w.stats, "frame {i}");
+        }
+    }
+
+    #[test]
+    fn empty_stream_is_ok() {
+        let net = Arc::new(random_network(706));
+        let mut pipe = PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), 2);
+        let mut out = vec![Inference::default(); 3];
+        pipe.run_stream_into(&[], &mut out).unwrap();
+        assert!(out.is_empty());
+        let mut n = 0;
+        Backend::infer_stream(&mut pipe, &mut std::iter::empty(), &mut |_| n += 1).unwrap();
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn misshapen_frame_yields_typed_error_and_keeps_earlier_results() {
+        let net = Arc::new(random_network(707));
+        let mut batch = frames(&net, 3, 23);
+        batch.push(Frame::from_u8(4, 4, 1, vec![0; 16]).unwrap());
+        let mut pipe = PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), 2);
+        let mut got = Vec::new();
+        let err = Backend::infer_stream(
+            &mut pipe,
+            &mut batch.iter().cloned(),
+            &mut |inf| got.push(inf),
+        )
+        .unwrap_err();
+        assert!(matches!(err, EngineError::ShapeMismatch { .. }), "{err}");
+        // the three well-formed frames fed before the bad one still land
+        assert_eq!(got.len(), 3);
+        let mut seq = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        assert_eq!(got[2].logits, seq.infer(&batch[2]).unwrap().logits);
+        // and the executor remains serviceable afterwards
+        let ok = pipe.infer(&batch[0]).unwrap();
+        assert_eq!(ok.logits, seq.infer(&batch[0]).unwrap().logits);
+    }
+
+    #[test]
+    fn warm_allocates_the_full_slab_complement_and_stays_exact() {
+        let net = Arc::new(random_network(709));
+        let mut pipe =
+            PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), usize::MAX);
+        let frame = &frames(&net, 1, 37)[0];
+        pipe.warm(frame).unwrap();
+        assert_eq!(pipe.free.len(), pipe.slab_cap);
+        let mut seq = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want = seq.infer(frame).unwrap();
+        let got = pipe.infer(frame).unwrap();
+        assert_eq!(got.logits, want.logits, "warm-up must not perturb results");
+        assert_eq!(got.stats, want.stats);
+    }
+
+    #[test]
+    fn backpressure_bounds_slabs_in_flight() {
+        // Stream far more frames than the slab cap: circulation must
+        // stay bounded (the free list never exceeds slab_cap), proving
+        // the bounded channels throttle the feed rather than buffering
+        // arbitrarily.
+        let net = Arc::new(random_network(708));
+        let batch = frames(&net, 40, 29);
+        let mut pipe =
+            PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), usize::MAX);
+        let mut out = Vec::new();
+        pipe.run_stream_into(&batch, &mut out).unwrap();
+        assert!(
+            pipe.free.len() <= pipe.slab_cap,
+            "{} slabs allocated, cap {}",
+            pipe.free.len(),
+            pipe.slab_cap
+        );
+        assert_eq!(out.len(), 40);
+    }
+}

@@ -161,6 +161,68 @@ mod tests {
     }
 
     #[test]
+    fn mttfs_single_onset_monotone_in_intensity() {
+        // The defining m-TTFS properties, over randomized shapes,
+        // timestep counts and (strictly increasing) threshold sets:
+        //  * single onset: each input neuron turns on AT MOST once and
+        //    never turns off again — i.e. one first-spike event per
+        //    neuron encodes its intensity;
+        //  * monotone timing: a brighter pixel never spikes later than a
+        //    darker one (equal intensities spike together).
+        prop::check("m-TTFS single onset, monotone timing", 40, |rng| {
+            let h = 1 + rng.below(28);
+            let w = 1 + rng.below(28);
+            let mut thresholds: Vec<f32> =
+                (0..1 + rng.below(7)).map(|_| rng.f64() as f32).collect();
+            thresholds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            thresholds.dedup(); // strict increase, like the paper's P set
+            let img: Vec<u8> = (0..h * w).map(|_| rng.below(256) as u8).collect();
+            let frames = encode_mttfs(&img, h, w, &thresholds);
+
+            // single onset per neuron
+            for p in 0..h * w {
+                for t in 1..frames.len() {
+                    if frames[t - 1][p] && !frames[t][p] {
+                        return Err(format!("pixel {p} spiked at t={} then stopped", t - 1));
+                    }
+                }
+            }
+            // onset time: first step the neuron fires (usize::MAX = never)
+            let onset = |p: usize| -> usize {
+                frames.iter().position(|f| f[p]).unwrap_or(usize::MAX)
+            };
+            for _ in 0..200 {
+                let p = rng.below(h * w);
+                let q = rng.below(h * w);
+                if img[p] >= img[q] && onset(p) > onset(q) {
+                    return Err(format!(
+                        "intensity {} (onset {}) spikes after intensity {} (onset {})",
+                        img[p],
+                        onset(p),
+                        img[q],
+                        onset(q)
+                    ));
+                }
+            }
+            // and per timestep, the AER conversion emits each spiking
+            // neuron exactly once (at most one event per neuron per step)
+            let t = rng.below(frames.len());
+            let queues = frames_to_events(&frames[t], h, w);
+            let mut seen = vec![false; h * w];
+            for q in &queues {
+                for ev in q {
+                    let flat = ev.x as usize * w + ev.y as usize;
+                    if seen[flat] {
+                        return Err(format!("neuron ({},{}) emitted twice at t={t}", ev.x, ev.y));
+                    }
+                    seen[flat] = true;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn sparsity_counts_zeros() {
         let frame = vec![true, false, false, false];
         assert!((sparsity(&frame) - 0.75).abs() < 1e-12);

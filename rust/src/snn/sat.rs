@@ -113,6 +113,51 @@ mod tests {
     }
 
     #[test]
+    fn saturating_add_never_wraps_at_i32_extremes() {
+        // The anti-wrap theorem the hardware argument rests on: for ANY
+        // accumulator width and ANY operands — including values at and
+        // around `i32::MIN`/`i32::MAX`, where a two's-complement add
+        // would wrap — the result equals the i64-exact sum clamped to
+        // the range, stays inside the range, and never flips sign
+        // against both operands.
+        prop::check("saturating add never wraps", 600, |rng| {
+            fn edgy(rng: &mut crate::util::prng::Pcg) -> i32 {
+                match rng.below(4) {
+                    0 => i32::MIN.wrapping_add(rng.below(1000) as i32),
+                    1 => i32::MAX - rng.below(1000) as i32,
+                    2 => rng.range_i32(-100_000, 100_000),
+                    _ => rng.next_u64() as i32, // arbitrary bit pattern
+                }
+            }
+            let bits = 2 + rng.below(30) as u32; // every legal width 2..=31
+            let s = Sat::from_bits(bits);
+            let (a, b) = (edgy(rng), edgy(rng));
+            let exact = a as i64 + b as i64;
+            let got = s.add(a, b);
+            let want = exact.clamp(s.min as i64, s.max as i64) as i32;
+            if got != want {
+                return Err(format!("bits={bits} a={a} b={b}: got {got}, want {want}"));
+            }
+            if got < s.min || got > s.max {
+                return Err(format!("bits={bits} a={a} b={b}: {got} escaped the range"));
+            }
+            if a >= 0 && b >= 0 && got < 0 {
+                return Err(format!("bits={bits} a={a} b={b}: wrapped positive→negative"));
+            }
+            if a <= 0 && b <= 0 && got > 0 {
+                return Err(format!("bits={bits} a={a} b={b}: wrapped negative→positive"));
+            }
+            // the overflow detector must agree with what happened
+            if s.would_saturate(a, b) != (got as i64 != exact) {
+                return Err(format!(
+                    "bits={bits} a={a} b={b}: would_saturate disagrees with add"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn no_clamp_inside_range_property() {
         let s = Sat::from_bits(16);
         prop::check("exact inside range", 500, |rng| {

@@ -157,6 +157,71 @@ fn infer_batch_is_bit_identical_to_sequential_infer() {
 }
 
 #[test]
+fn pipelined_stream_is_bit_identical_to_sequential_infer() {
+    // The self-timed layer pipeline contract: for batch sizes {0, 1, 7,
+    // 64} × pipeline depths {1, 2, full}, BOTH streaming entry points —
+    // `infer_stream` (iterator → sink, results in input order) and
+    // `infer_batch` (the coordinator's dispatch, which the pipelined sim
+    // routes through its stream path) — must equal sequential `infer`
+    // bit for bit: preds, logits AND the full stats block. The recycled
+    // output vec must also stay exact across dispatches.
+    let net = Arc::new(random_network(1212));
+    let builder = EngineBuilder::new(Arc::clone(&net)).lanes(4);
+    for batch_len in [0usize, 1, 7, 64] {
+        let seeds: Vec<u64> = (0..batch_len as u64).map(|i| 2000 + i).collect();
+        let frames = frames_for(&net, &seeds);
+        let mut seq = builder.build(BackendKind::Sim).unwrap();
+        let want: Vec<_> = frames.iter().map(|f| seq.infer(f).unwrap()).collect();
+        for depth in [1usize, 2, usize::MAX] {
+            let dname = if depth == usize::MAX { "full".to_string() } else { depth.to_string() };
+            let mut pipe = builder.clone().pipeline(depth).build(BackendKind::Sim).unwrap();
+
+            // streaming path: sink observes results in input order
+            let mut streamed = Vec::new();
+            pipe.infer_stream(&mut frames.iter().cloned(), &mut |inf| streamed.push(inf))
+                .unwrap();
+            assert_eq!(streamed.len(), batch_len, "depth={dname} n={batch_len}");
+            for (i, (got, want)) in streamed.iter().zip(&want).enumerate() {
+                let ctx = format!("stream depth={dname} n={batch_len} frame={i}");
+                assert_eq!(got.pred, want.pred, "{ctx}");
+                assert_eq!(got.logits, want.logits, "{ctx}");
+                assert_eq!(got.stats, want.stats, "{ctx}");
+            }
+
+            // batch path, twice (recycled containers must not leak state)
+            let mut out = Vec::new();
+            for round in 0..2 {
+                pipe.infer_batch(&frames, &mut out).unwrap();
+                assert_eq!(out.len(), batch_len, "depth={dname} n={batch_len}");
+                for (i, (got, want)) in out.iter().zip(&want).enumerate() {
+                    let ctx =
+                        format!("batch depth={dname} n={batch_len} frame={i} round={round}");
+                    assert_eq!(got.pred, want.pred, "{ctx}");
+                    assert_eq!(got.logits, want.logits, "{ctx}");
+                    assert_eq!(got.stats, want.stats, "{ctx}");
+                }
+            }
+        }
+        // the threads × pipeline composition (replicated-pipeline pool)
+        let mut pool = builder
+            .clone()
+            .pipeline(usize::MAX)
+            .threads(3)
+            .build(BackendKind::Sim)
+            .unwrap();
+        let mut out = Vec::new();
+        pool.infer_batch(&frames, &mut out).unwrap();
+        assert_eq!(out.len(), batch_len, "pool n={batch_len}");
+        for (i, (got, want)) in out.iter().zip(&want).enumerate() {
+            let ctx = format!("pool n={batch_len} frame={i}");
+            assert_eq!(got.pred, want.pred, "{ctx}");
+            assert_eq!(got.logits, want.logits, "{ctx}");
+            assert_eq!(got.stats, want.stats, "{ctx}");
+        }
+    }
+}
+
+#[test]
 fn every_backend_rejects_misshapen_frames() {
     let net = Arc::new(random_network(707));
     let builder = EngineBuilder::new(Arc::clone(&net));

@@ -14,7 +14,7 @@
 //! pollute the measurement.
 
 use sacsnn::engine::{Frame, Inference};
-use sacsnn::sim::{AccelConfig, Accelerator, ShardedExecutor};
+use sacsnn::sim::{AccelConfig, Accelerator, PipelinedExecutor, ShardedExecutor};
 use sacsnn::snn::network::testutil::random_network;
 use sacsnn::util::alloc_counter::{alloc_count as allocs, CountingAllocator};
 use sacsnn::util::prng::Pcg;
@@ -120,4 +120,56 @@ fn steady_state_inference_is_allocation_free() {
         "multi-thread dispatch allocated {spawn_overhead} times; \
          expected only thread-spawn bookkeeping"
     );
+
+    // ---- self-timed pipeline: stage workers at steady state ----
+    // A stream call has a fixed O(depth) dispatch cost (scoped stage
+    // threads + bounded channels), but the warmed stage workers, slab
+    // rotation and output recycling must be allocation-free PER FRAME.
+    // The proof is marginal cost: with every container warmed, a stream
+    // of 2N identical frames must allocate exactly as much as a stream
+    // of N — i.e. the extra N frames cost zero allocations. Identical
+    // frames make the measurement rotation-proof: slabs and output
+    // containers circulate nondeterministically (completion timing
+    // decides which slab serves which frame), but every container sees
+    // the same high-water marks.
+    let bright_frame = Frame::from_u8(h, w, c, bright.clone()).unwrap();
+    let small: Vec<Frame> = vec![bright_frame.clone(); 8];
+    let large: Vec<Frame> = vec![bright_frame.clone(); 16];
+    let mut pipe = PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), usize::MAX);
+    let (mut out_small, mut out_large) = (Vec::new(), Vec::new());
+    // `warm` pushes the frame through EVERY slab and stage buffer
+    // deterministically; the stream rounds then warm the two output vecs
+    // and exercise the rotation itself.
+    pipe.warm(&bright_frame).unwrap();
+    for _ in 0..3 {
+        pipe.run_stream_into(&large, &mut out_large).unwrap();
+        pipe.run_stream_into(&small, &mut out_small).unwrap();
+    }
+    let before = allocs();
+    pipe.run_stream_into(&small, &mut out_small).unwrap();
+    let cost_small = allocs() - before;
+    let before = allocs();
+    pipe.run_stream_into(&large, &mut out_large).unwrap();
+    let cost_large = allocs() - before;
+    assert_eq!(
+        cost_large, cost_small,
+        "8 extra streamed frames allocated {} times — warmed stage workers \
+         must be allocation-free per frame",
+        cost_large as i64 - cost_small as i64
+    );
+    assert!(
+        cost_small <= 96,
+        "pipeline dispatch allocated {cost_small} times; expected only \
+         O(depth) thread-spawn + channel bookkeeping"
+    );
+    // and the streamed results are still bit-exact
+    let bright_want = {
+        let mut fresh = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        fresh.infer_image(&bright)
+    };
+    assert_eq!(out_large.len(), 16);
+    for inf in &out_large {
+        assert_eq!(inf.logits, bright_want.logits, "pipelined result must stay bit-exact");
+        assert_eq!(inf.stats, bright_want.stats);
+    }
 }
