@@ -1,23 +1,24 @@
-//! Batched serving demo: start the coordinator over a **heterogeneous**
-//! pool — a multi-core sharded simulator worker, a plain ×8 simulator
-//! worker, and one dense-reference shadow worker behind the same queue —
-//! fire a bursty synthetic request stream at it, and report latency
-//! percentiles, batch-dispatch behaviour (sizes, per-batch service time,
-//! worker-side images/sec), backpressure events and which backends
-//! served the traffic.
+//! Multi-tenant serving demo: one persistent [`Server`], two tenants
+//! over the **same weights** (sharing a single compiled plan through the
+//! server's plan cache) with a 3:1 weighted-fair split, streamed to by
+//! long-lived [`Session`]s under a bursty open loop.
 //!
-//! Every worker drains dynamic batches and serves them through one
-//! `Backend::infer_batch` call; the sharded worker additionally fans its
-//! batch out across host cores (see `lib.rs` §Throughput).
+//! Shows the serving layer end to end:
+//!   * typed admission (quota rejections become
+//!     `EngineError::TenantOverQuota`, handled by taking a result first),
+//!   * ordered per-session results bit-exact with the network,
+//!   * workers staying filled across batch boundaries (`stream_pulls`),
+//!   * per-tenant metrics (completed / failed / quota rejections /
+//!     queue depth / images-per-sec) plus the JSON snapshot `serve
+//!     --json` emits.
 //!
 //! Run with: `cargo run --release --example serve [n_requests]`
 
-use sacsnn::coordinator::{Coordinator, ServerConfig};
-use sacsnn::engine::{BackendKind, EngineBuilder, EngineError};
+use sacsnn::coordinator::{Server, ServerConfig, Session, TenantConfig};
+use sacsnn::engine::EngineError;
 use sacsnn::report;
 use sacsnn::util::prng::Pcg;
 use sacsnn::Result;
-use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -27,101 +28,120 @@ fn main() -> Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
     let (net, ds, _) = report::env("mnist", 8)?;
-    let cfg = ServerConfig { lanes: 8, queue_depth: 64, batch_size: 8, ..Default::default() };
 
-    // Heterogeneous pool behind one queue:
-    //   worker 0: sim sharded over 4 host cores (batches fan out),
-    //   worker 1: plain single-core ×8 sim,
-    //   worker 2: functional dense-ref shadow (online cross-check).
-    let builder = EngineBuilder::new(Arc::clone(&net)).lanes(cfg.lanes);
-    let backends = vec![
-        builder.clone().threads(4).build(BackendKind::Sim)?,
-        builder.build(BackendKind::Sim)?,
-        builder.build(BackendKind::DenseRef)?,
-    ];
+    let server = Server::start(ServerConfig {
+        workers: 3,
+        lanes: 8,
+        batch_size: 8,
+        ..Default::default()
+    })?;
+
+    // Two tenants, same weights, 3:1 weighted-fair share and a tight
+    // quota on the light tenant so backpressure is observable.
+    let heavy = server.register_tenant(
+        Arc::clone(&net),
+        TenantConfig { weight: 3, max_inflight: 64, ..Default::default() },
+    )?;
+    let light = server.register_tenant(
+        Arc::clone(&net),
+        TenantConfig { weight: 1, max_inflight: 16, ..Default::default() },
+    )?;
+    // same weights → the plan cache hands both tenants ONE compiled plan
+    assert!(Arc::ptr_eq(
+        &server.tenant_plan(heavy)?,
+        &server.tenant_plan(light)?
+    ));
     println!(
-        "coordinator: {} workers (1×sim sharded ×4 threads + 1×sim + 1×dense-ref shadow), \
-         queue depth {}, max batch {}",
-        backends.len(),
-        cfg.queue_depth,
-        cfg.batch_size
+        "server: 3 workers, 2 tenants (weights 3:1, quotas 64/16), \
+         {} compiled plan(s) for 2 registrations",
+        server.cached_plans()
     );
-    let coord = Coordinator::start_pool(backends, cfg)?;
 
-    // Bursty open-loop load: Poisson-ish bursts with think time, so the
-    // dynamic batcher sees everything from singletons to full batches.
+    let mut sessions: Vec<Session> =
+        vec![server.open_session(heavy)?, server.open_session(light)?];
+    let mut latencies: Vec<Vec<u64>> = vec![Vec::new(), Vec::new()];
+    let mut quota_hits = [0usize; 2];
+
+    // Bursty open-loop load, biased 2:1 toward the heavy tenant, with
+    // think time so the injector sees everything from singletons to
+    // full batches.
     let mut rng = Pcg::new(2024);
-    let mut pending = Vec::new();
-    let mut rejected = 0usize;
     let t0 = Instant::now();
     let mut sent = 0usize;
     while sent < n {
         let burst = 1 + rng.below(12);
         for _ in 0..burst.min(n - sent) {
+            let which = usize::from(rng.below(3) == 0); // 0 = heavy, 1 = light
             let frame = report::frame_for(&net, &ds, rng.below(ds.n_test()))?;
-            match coord.try_submit(frame) {
-                Ok(rx) => pending.push(rx),
-                Err(EngineError::Busy) => rejected += 1,
-                Err(e) => return Err(e),
+            // typed backpressure: the canonical loop takes one finished
+            // result per quota rejection, then retries the feed
+            let mut reply_err: Option<EngineError> = None;
+            let lat = &mut latencies[which];
+            let hits = &mut quota_hits[which];
+            sessions[which].feed_yielding(&frame, &mut |reply| {
+                *hits += 1;
+                match reply {
+                    Ok(r) => lat.push(r.queue_wait_us + r.service_us),
+                    Err(e) => reply_err = Some(e),
+                }
+            })?;
+            if let Some(e) = reply_err {
+                return Err(e);
             }
             sent += 1;
         }
         std::thread::sleep(Duration::from_micros(200 + rng.below(800) as u64));
     }
-
-    let mut lat = Vec::with_capacity(pending.len());
-    let mut served_by: BTreeMap<&'static str, usize> = BTreeMap::new();
-    let mut batch_sizes: BTreeMap<usize, usize> = BTreeMap::new();
-    for rx in pending {
-        let r = rx.recv().expect("reply")?;
-        *served_by.entry(r.backend).or_insert(0) += 1;
-        *batch_sizes.entry(r.batch_size).or_insert(0) += 1;
-        lat.push(r.queue_wait_us + r.service_us);
+    for (which, session) in sessions.drain(..).enumerate() {
+        for reply in session.finish() {
+            let r = reply?;
+            latencies[which].push(r.queue_wait_us + r.service_us);
+        }
     }
     let wall = t0.elapsed();
-    lat.sort_unstable();
-    let pct = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize];
-    let snap = coord.metrics.snapshot();
+
+    let served: usize = latencies.iter().map(Vec::len).sum();
     println!(
-        "\nserved {} / {} requests in {:.2} s ({:.0} req/s), {} rejected by backpressure",
-        lat.len(),
-        n,
+        "\nserved {served} / {n} requests in {:.2} s ({:.0} req/s); \
+         quota backpressure events: heavy {}, light {}",
         wall.as_secs_f64(),
-        lat.len() as f64 / wall.as_secs_f64(),
-        rejected
+        served as f64 / wall.as_secs_f64(),
+        quota_hits[0],
+        quota_hits[1],
     );
-    print!("served by:");
-    for (name, count) in &served_by {
-        print!("  {name} ×{count}");
+    for (name, lat) in ["heavy", "light"].iter().zip(latencies.iter_mut()) {
+        lat.sort_unstable();
+        if lat.is_empty() {
+            continue;
+        }
+        let pct = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize];
+        println!(
+            "  {name}: {} served, latency p50 {} µs, p90 {} µs, p99 {} µs",
+            lat.len(),
+            pct(0.50),
+            pct(0.90),
+            pct(0.99),
+        );
     }
-    println!();
-    print!("request batch sizes:");
-    for (size, count) in &batch_sizes {
-        print!("  {size}→{count}");
+
+    let snap = server.snapshot();
+    println!(
+        "dispatch: {} batches (mean size {:.2}), {} stream pulls kept workers \
+         filled across batch boundaries, worker-side {:.1} images/s",
+        snap.service.batches,
+        snap.service.mean_batch,
+        snap.service.stream_pulls,
+        snap.service.batch_images_per_sec,
+    );
+    for t in &snap.tenants {
+        println!(
+            "  tenant {} (weight {}): completed {}, failed {}, quota rejections {}, \
+             queue depth {}, {:.1} images/s",
+            t.tenant, t.weight, t.completed, t.failed, t.quota_rejected, t.queue_depth,
+            t.images_per_sec,
+        );
     }
-    println!();
-    println!(
-        "latency (queue+batch service): p50 {} µs, p90 {} µs, p99 {} µs, max {} µs",
-        pct(0.50),
-        pct(0.90),
-        pct(0.99),
-        lat.last().unwrap()
-    );
-    println!(
-        "batch dispatch: {} batches, mean size {:.2}, mean service {:.0} µs \
-         (max {} µs), worker-side {:.1} images/s",
-        snap.batches,
-        snap.mean_batch,
-        snap.mean_batch_service_us,
-        snap.max_batch_service_us,
-        snap.batch_images_per_sec
-    );
-    println!(
-        "mean simulated cycles/frame: {:.0} (→ {:.0} device-FPS @333 MHz)",
-        snap.mean_sim_cycles,
-        333e6 / snap.mean_sim_cycles
-    );
     println!("metrics json: {}", snap.to_json());
-    coord.shutdown();
+    server.shutdown();
     Ok(())
 }

@@ -134,11 +134,13 @@ fn main() {
     let t0 = std::time::Instant::now();
     fed_last.set(t0);
     let mut stream = batch.iter().cloned().inspect(|_| fed_last.set(std::time::Instant::now()));
-    Backend::infer_stream(&mut pipe, &mut stream, &mut |inf| {
+    Backend::infer_stream(&mut pipe, &mut stream, &mut |_frame, inf| {
         if first_out.get().is_none() {
             first_out.set(Some(t0.elapsed().as_secs_f64() * 1e3));
         }
-        drop(inf);
+        // hand the container straight back — the instrumented stream is
+        // allocation-free like the serving path
+        inf
     })
     .expect("instrumented pipelined stream");
     let pipeline_fill_ms = first_out.get().unwrap_or(0.0);

@@ -13,6 +13,7 @@ pub struct Metrics {
     failed: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
+    stream_pulls: AtomicU64,
     batches_served: AtomicU64,
     batch_service_us_sum: AtomicU64,
     max_batch_service_us: AtomicU64,
@@ -33,12 +34,18 @@ pub struct MetricsSnapshot {
     pub failed: u64,
     pub batches: u64,
     pub mean_batch: f64,
-    /// Batches whose dispatch succeeded (`batches` counts every formed
-    /// batch, including ones that failed or panicked).
+    /// Frames pulled INTO an already-running stream dispatch (beyond its
+    /// initial batch) — the observable for workers staying filled across
+    /// batch boundaries instead of draining at every batch edge.
+    pub stream_pulls: u64,
+    /// Dispatches that delivered at least one result (`batches` counts
+    /// every formed batch, including wholly failed or panicked ones,
+    /// which record no service time).
     pub batches_served: u64,
-    /// Mean wall time a worker spent inside one *successful*
-    /// `infer_batch` dispatch (failed batches record no service time,
-    /// so they must not dilute the mean).
+    /// Mean wall time a worker spent inside one dispatch that delivered
+    /// results (wholly failed dispatches record no service time, so
+    /// they must not dilute the mean; partially failed ones do — their
+    /// completions are real and their time was spent).
     pub mean_batch_service_us: f64,
     /// Worst-case batch dispatch time.
     pub max_batch_service_us: u64,
@@ -70,8 +77,14 @@ impl Metrics {
         self.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
     }
 
-    /// Record one successfully completed `infer_batch` dispatch (wall
-    /// time of the whole batch).
+    /// Record one frame pulled into a running stream dispatch past its
+    /// initial batch (workers staying filled across batch boundaries).
+    pub fn stream_pulled(&self) {
+        self.stream_pulls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one dispatch that delivered at least one result (wall
+    /// time of the whole dispatch).
     pub fn batch_served(&self, service_us: u64) {
         self.batches_served.fetch_add(1, Ordering::Relaxed);
         self.batch_service_us_sum.fetch_add(service_us, Ordering::Relaxed);
@@ -99,6 +112,7 @@ impl Metrics {
             failed: self.failed.load(Ordering::Relaxed),
             batches,
             mean_batch: div(self.batched_requests.load(Ordering::Relaxed), batches),
+            stream_pulls: self.stream_pulls.load(Ordering::Relaxed),
             batches_served: self.batches_served.load(Ordering::Relaxed),
             mean_batch_service_us: div(batch_us, self.batches_served.load(Ordering::Relaxed)),
             max_batch_service_us: self.max_batch_service_us.load(Ordering::Relaxed),
@@ -123,6 +137,7 @@ impl MetricsSnapshot {
         m.insert("failed".into(), Json::Num(self.failed as f64));
         m.insert("batches".into(), Json::Num(self.batches as f64));
         m.insert("mean_batch".into(), Json::Num(self.mean_batch));
+        m.insert("stream_pulls".into(), Json::Num(self.stream_pulls as f64));
         m.insert("batches_served".into(), Json::Num(self.batches_served as f64));
         m.insert("mean_batch_service_us".into(), Json::Num(self.mean_batch_service_us));
         m.insert("max_batch_service_us".into(), Json::Num(self.max_batch_service_us as f64));
@@ -148,6 +163,7 @@ mod tests {
         m.rejected();
         m.failed();
         m.batch_formed(2);
+        m.stream_pulled();
         m.batch_served(500);
         m.completed(10, 100, 1000);
         m.completed(30, 300, 3000);
@@ -161,6 +177,7 @@ mod tests {
         assert!((s.mean_sim_cycles - 2000.0).abs() < 1e-9);
         assert_eq!(s.max_service_us, 300);
         assert!((s.mean_batch - 2.0).abs() < 1e-9);
+        assert_eq!(s.stream_pulls, 1);
         assert_eq!(s.batches_served, 1);
         assert!((s.mean_batch_service_us - 500.0).abs() < 1e-9);
         assert_eq!(s.max_batch_service_us, 500);

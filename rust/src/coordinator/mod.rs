@@ -1,409 +1,226 @@
-//! Inference coordinator: the serving layer (request router, dynamic
-//! batcher, worker pool, backpressure, metrics) over the unified
-//! [`Backend`] surface.
+//! Multi-tenant inference serving: a persistent [`Server`] hosting many
+//! registered networks behind per-tenant queues, streamed to by
+//! long-lived [`Session`]s.
 //!
-//! The paper's prototype is a single-tenant FPGA; a deployable system
-//! needs the surrounding service. Rust owns the event loop and process
-//! topology (threads — the offline vendor set has no tokio; the
-//! coordinator is synchronous but concurrent):
+//! The paper's accelerator is *self-timed*: it stays busy for exactly as
+//! long as spikes keep arriving. This layer applies the same principle
+//! to serving — instead of one-shot request/reply batches that drain the
+//! pipeline dry at every batch boundary, clients hold open sessions and
+//! the worker pool keeps streaming for as long as frames are queued:
 //!
 //! ```text
-//!   clients ──▶ bounded queue (backpressure) ──▶ N workers
-//!                                                  │  each owns one
-//!                                                  ▼  Box<dyn Backend>
-//!                                            per-request reply channel
+//!   register_tenant(net, TenantConfig) ─▶ TenantId      (plan cache:
+//!                                                        same weights ⇒
+//!   open_session(tenant) ─▶ Session                      ONE compiled plan)
+//!
+//!   Session::feed(&frame) ─▶ tenant queue ─▶ persistent worker pool
+//!   Session::poll()/recv() ◀── ordered results ◀── Backend::infer_stream
 //! ```
 //!
-//! Workers drain up to `batch_size` requests at once (dynamic batching:
-//! a batch forms from whatever is queued, never waiting for a full
-//! batch) and dispatch the whole batch through one
-//! [`Backend::infer_batch`] call — so a worker whose backend is a
-//! [`crate::sim::parallel::ShardedExecutor`] fans the batch out across
-//! host cores, a worker built with [`ServerConfig::pipeline`] streams
-//! the drained batch through its self-timed layer pipeline
-//! ([`crate::sim::pipeline::PipelinedExecutor`]'s `infer_batch` IS its
-//! stream path, so consecutive requests of one batch overlap across
-//! layer stages), and batch-native backends recycle their scratch
-//! arenas across dispatches. Per-batch service time and worker-side
-//! throughput are tracked in [`Metrics`].
+//! * [`Server`] — the persistent, injector-fed worker pool with
+//!   weighted-fair draining across tenants ([`server`] module docs show
+//!   the full architecture).
+//! * [`Session`] — ordered, backpressured streaming ingress with typed
+//!   admission errors ([`EngineError::TenantOverQuota`],
+//!   [`EngineError::ShapeMismatch`], [`EngineError::Shutdown`]).
+//! * [`TenantConfig`] / [`TenantId`] — per-tenant policy: admission
+//!   quota (`max_inflight`), weighted-fair share (`weight`), and which
+//!   backend serves the tenant's network.
+//! * [`Metrics`] / [`ServerSnapshot`] — global service counters plus the
+//!   per-tenant breakdown (queue depth, images/s, quota rejections, and
+//!   a per-tenant `failed` so one misbehaving tenant is attributable).
 //!
-//! Failure semantics are typed end to end: a misshapen frame is rejected
-//! at batch-admission time with [`EngineError::ShapeMismatch`] (it never
-//! fails the batch it would have joined), and a backend that *panics*
-//! mid-dispatch fails every in-flight request of that batch with
-//! [`EngineError::WorkerPanicked`] — the panic is caught, typed replies
-//! are sent, and the worker retires (its state can no longer be
-//! trusted); surviving workers keep draining the queue.
+//! Failure semantics are typed end to end: misshapen frames are rejected
+//! at `feed` (nothing enqueues), a panicking backend fails its in-flight
+//! frames with [`EngineError::WorkerPanicked`] and retires its worker
+//! (the last live worker becomes a fail-fast drainer), and
+//! [`Server::shutdown`] replies [`EngineError::Shutdown`] to everything
+//! still queued before joining the pool — no reply is ever silently
+//! dropped.
 //!
-//! Any [`Backend`] can serve, and pools may be **heterogeneous**: e.g.
-//! [`Coordinator::start_pool`] with seven simulator workers plus one
-//! PJRT golden worker gives online cross-checking capacity inside the
-//! same queue, and each [`Response`] names the backend that served it.
+//! The single-tenant [`Coordinator`] from earlier revisions remains as a
+//! **deprecated shim** over a one-tenant `Server` (same `submit` /
+//! `try_submit` / per-request reply channels); new code should use
+//! `Server`/`Session` directly.
 
 pub mod metrics;
+pub mod server;
+pub mod session;
+pub mod tenants;
 
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{Server, ServerConfig, ServerSnapshot};
+pub use session::Session;
+pub use tenants::{TenantConfig, TenantId, TenantMetrics, TenantSnapshot};
 
-use crate::engine::{Backend, BackendKind, EngineBuilder, EngineError, Frame, Inference};
+use crate::engine::{Backend, EngineError, Frame};
 use crate::snn::network::Network;
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use tenants::TenantState;
 
-/// An inference request: one shape-checked [`Frame`].
-pub struct Request {
-    pub id: u64,
-    pub frame: Frame,
-    pub reply: Sender<Reply>,
-    enqueued: Instant,
-}
-
-/// What a worker sends back: the response, or the typed engine error the
-/// backend raised (e.g. [`EngineError::ShapeMismatch`] for a frame that
-/// does not match the served network).
+/// What a served frame resolves to: the response, or the typed engine
+/// error the serving layer raised for it.
 pub type Reply = Result<Response, EngineError>;
 
-/// The reply sent to the request's channel.
-#[derive(Clone, Debug)]
+/// One served frame's result.
+#[derive(Clone, Debug, Default)]
 pub struct Response {
+    /// Session mode: the frame's feed-order sequence number in its
+    /// session. Shim mode: a coordinator-global request id.
     pub id: u64,
     pub pred: usize,
     /// One logit per class (Vec-backed; no fixed class-count assumption).
     pub logits: Vec<i64>,
-    /// Name of the backend that served this request (heterogeneous pools
-    /// mix backends behind one queue).
+    /// Name of the backend that served this frame (pools may be
+    /// heterogeneous; tenants may use different backends).
     pub backend: &'static str,
     /// Modeled device cycles for this frame (0 for functional-only
     /// backends — check the backend's `cycle_model()`).
     pub sim_cycles: u64,
-    /// Wall-clock time spent queued before a worker picked it up.
+    /// Wall-clock time spent queued before a worker picked the frame up.
     pub queue_wait_us: u64,
-    /// Wall-clock service time of the `infer_batch` dispatch this
-    /// request rode in — the request's reply is sent when its batch
-    /// completes, so this is the latency it actually experienced.
+    /// Wall-clock time from pickup to completion of THIS frame (replies
+    /// stream per frame; a frame no longer waits for its whole batch).
     pub service_us: u64,
-    /// Size of the dynamic batch this request was served in.
+    /// Size of the initial batch of the stream dispatch this frame rode
+    /// in (frames pulled into a running stream report the same value;
+    /// `MetricsSnapshot::stream_pulls` counts those).
     pub batch_size: usize,
 }
 
-/// Coordinator configuration.
-#[derive(Clone, Debug)]
-pub struct ServerConfig {
-    /// Worker threads (each owns one backend instance).
-    pub workers: usize,
-    /// Which backend [`Coordinator::start`] builds for every worker
-    /// (heterogeneous pools use [`Coordinator::start_pool`] instead).
-    pub backend: BackendKind,
-    /// ×P parallelization of each simulated accelerator.
-    pub lanes: usize,
-    /// Host shard threads per worker: with `threads > 1` each sim worker
-    /// is a [`crate::sim::parallel::ShardedExecutor`] that fans its
-    /// drained batch out across this many cores (other backends ignore
-    /// it). Total host parallelism is `workers × threads`.
-    pub threads: usize,
-    /// Self-timed pipeline stages per sim worker: with `pipeline > 0`
-    /// each sim worker streams its drained batches through a
-    /// [`crate::sim::pipeline::PipelinedExecutor`] of this depth
-    /// (`usize::MAX` = one stage per layer; composes with `threads` into
-    /// a replicated-pipeline pool; other backends ignore it).
-    pub pipeline: usize,
-    /// Bounded queue depth — the backpressure point.
-    pub queue_depth: usize,
-    /// Max requests a worker drains per batch.
-    pub batch_size: usize,
-}
-
-impl Default for ServerConfig {
-    fn default() -> Self {
-        ServerConfig {
-            workers: 4,
-            backend: BackendKind::Sim,
-            lanes: 8,
-            threads: 1,
-            pipeline: 0,
-            queue_depth: 256,
-            batch_size: 16,
-        }
-    }
-}
-
-/// The running coordinator.
+/// Deprecated single-tenant shim over [`Server`]: the pre-multi-tenant
+/// coordinator API (`start`/`start_pool`, `submit`/`try_submit` with
+/// per-request reply channels, drain-everything `shutdown`).
+///
+/// Kept so existing callers migrate gradually; new code should register
+/// tenants on a [`Server`] and stream through [`Session`]s — sessions
+/// reuse reply containers (this shim allocates a channel and a response
+/// per request) and expose the typed quota errors directly (this shim
+/// maps them to [`EngineError::Busy`]).
+///
+/// Semantic shift from the pre-multi-tenant coordinator:
+/// `ServerConfig::queue_depth` now bounds **queued + in-flight**
+/// requests (the tenant admission quota; a slot frees when the reply is
+/// delivered) rather than queued requests only (the old bounded
+/// channel, whose slot freed when a worker *drained* the request) — so
+/// backpressure under load is slightly tighter than before at the same
+/// number. Callers tuning for the old behaviour should add their
+/// expected in-service depth (≈ workers × batch) to `queue_depth`.
 pub struct Coordinator {
-    tx: SyncSender<Request>,
-    workers: Vec<JoinHandle<()>>,
+    server: Server,
+    tenant: Arc<TenantState>,
     pub metrics: Arc<Metrics>,
-    next_id: std::sync::atomic::AtomicU64,
+    next_id: AtomicU64,
 }
 
 impl Coordinator {
-    /// Start a homogeneous pool: `cfg.workers` instances of
-    /// `cfg.backend` built from `net` through the engine registry.
+    /// Start a single-tenant server: `cfg.workers` persistent workers,
+    /// one tenant built from `net` with `cfg`'s backend knobs and
+    /// `cfg.queue_depth` as its admission quota.
     pub fn start(net: Arc<Network>, cfg: ServerConfig) -> Result<Self, EngineError> {
-        let backends = EngineBuilder::new(net)
-            .lanes(cfg.lanes)
-            .threads(cfg.threads)
-            .pipeline(cfg.pipeline)
-            .build_pool(cfg.backend, cfg.workers)?;
-        Self::start_pool(backends, cfg)
+        let tenant_cfg = cfg.tenant_defaults();
+        let server = Server::start(cfg)?;
+        let tenant_id = server.register_tenant(net, tenant_cfg)?;
+        Ok(Self::wrap(server, tenant_id))
     }
 
-    /// Start one worker per provided backend. The pool may be
-    /// heterogeneous (e.g. sim workers plus a PJRT shadow worker for
-    /// online golden cross-checks); `cfg.workers` is ignored in favour
-    /// of `backends.len()`. An empty pool is rejected — it would accept
-    /// requests that nothing ever serves.
+    /// Start one worker per provided backend, all serving one implicit
+    /// tenant. The pool may be heterogeneous (e.g. sim workers plus a
+    /// functional shadow worker); `cfg.workers` is ignored in favour of
+    /// `backends.len()`. An empty pool is rejected.
     pub fn start_pool(
         backends: Vec<Box<dyn Backend>>,
         cfg: ServerConfig,
     ) -> Result<Self, EngineError> {
-        if backends.is_empty() {
-            return Err(EngineError::msg(
-                "coordinator needs at least one backend worker (got 0)",
-            ));
-        }
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
-        let metrics = Arc::new(Metrics::default());
-        let live = Arc::new(std::sync::atomic::AtomicUsize::new(backends.len()));
-        let mut workers = Vec::with_capacity(backends.len());
-        for backend in backends {
-            let rx = Arc::clone(&rx);
-            let metrics = Arc::clone(&metrics);
-            let live = Arc::clone(&live);
-            let batch_size = cfg.batch_size;
-            workers.push(std::thread::spawn(move || {
-                worker_loop(backend, rx, metrics, batch_size, live);
-            }));
-        }
-        Ok(Coordinator {
-            tx,
-            workers,
-            metrics,
-            next_id: std::sync::atomic::AtomicU64::new(0),
-        })
+        let (server, tenant_id) = Server::start_with_pool(backends, cfg)?;
+        Ok(Self::wrap(server, tenant_id))
     }
 
-    fn request(&self, frame: Frame) -> (Request, Receiver<Reply>) {
-        let (reply, rx) = std::sync::mpsc::channel();
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        (Request { id, frame, reply, enqueued: Instant::now() }, rx)
+    fn wrap(server: Server, tenant_id: TenantId) -> Self {
+        let tenant = server
+            .tenant_state(tenant_id)
+            .expect("freshly registered tenant must resolve");
+        let metrics = Arc::clone(&server.metrics);
+        Coordinator { server, tenant, metrics, next_id: AtomicU64::new(0) }
+    }
+
+    /// Shape-check, then enqueue with a per-request reply channel. A
+    /// misshapen frame is answered through the channel with a typed
+    /// [`EngineError::ShapeMismatch`] (the legacy contract).
+    fn enqueue(&self, frame: Frame) -> Result<Receiver<Reply>, EngineError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        match self
+            .server
+            .shared()
+            .enqueue_channel_frame(&self.tenant, frame, id)
+        {
+            Ok(rx) => Ok(rx),
+            Err(e) => {
+                self.tenant.release();
+                // the legacy API signalled a shut-down pool as Closed
+                Err(match e {
+                    EngineError::Shutdown => EngineError::Closed,
+                    e => e,
+                })
+            }
+        }
+    }
+
+    fn reject_shape(&self, frame: &Frame) -> Option<Receiver<Reply>> {
+        if frame.shape() == self.tenant.input_shape {
+            return None;
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.metrics.failed();
+        self.tenant.metrics.failed();
+        let _ = tx.send(Err(EngineError::ShapeMismatch {
+            expected: self.tenant.input_shape,
+            got: frame.shape(),
+        }));
+        Some(rx)
     }
 
     /// Submit without blocking; `Err(EngineError::Busy)` signals
-    /// backpressure, `Err(EngineError::Closed)` a shut-down pool.
+    /// backpressure (the tenant quota is full), `Err(EngineError::Closed)`
+    /// a shut-down pool.
     pub fn try_submit(&self, frame: Frame) -> Result<Receiver<Reply>, EngineError> {
-        let (req, rx) = self.request(frame);
-        match self.tx.try_send(req) {
-            Ok(()) => {
-                self.metrics.submitted();
-                Ok(rx)
-            }
-            Err(TrySendError::Full(_)) => {
-                self.metrics.rejected();
-                Err(EngineError::Busy)
-            }
-            Err(TrySendError::Disconnected(_)) => Err(EngineError::Closed),
+        if let Some(rx) = self.reject_shape(&frame) {
+            return Ok(rx);
         }
+        if !self.tenant.try_acquire() {
+            self.metrics.rejected();
+            self.tenant.metrics.quota_rejected();
+            return Err(EngineError::Busy);
+        }
+        self.enqueue(frame)
     }
 
-    /// Submit, blocking while the queue is full.
+    /// Submit, blocking while the quota is full.
     pub fn submit(&self, frame: Frame) -> Result<Receiver<Reply>, EngineError> {
-        let (req, rx) = self.request(frame);
-        self.tx.send(req).map_err(|_| EngineError::Closed)?;
-        self.metrics.submitted();
-        Ok(rx)
+        if let Some(rx) = self.reject_shape(&frame) {
+            return Ok(rx);
+        }
+        self.tenant.acquire_blocking();
+        self.enqueue(frame)
     }
 
-    /// Drain and stop all workers.
-    ///
-    /// Drain guarantee: dropping the sender closes the channel, and
-    /// `mpsc` delivers every already-queued request before `recv()`
-    /// reports disconnection — so each worker finishes (and replies to)
-    /// everything submitted before this call, then exits. No flag or
-    /// sentinel is involved; channel closure is the entire shutdown
-    /// protocol.
+    /// Drain and stop: everything submitted before this call is served
+    /// (and replied to), then the persistent pool is joined — the legacy
+    /// drain guarantee, now implemented by [`Server::drain`]. For the
+    /// fail-fast variant that answers queued work with typed
+    /// [`EngineError::Shutdown`] replies instead, use [`Server::shutdown`]
+    /// on the new API.
     pub fn shutdown(self) {
-        drop(self.tx);
-        for h in self.workers {
-            let _ = h.join();
-        }
-    }
-}
-
-/// Metadata of one drained request (its frame has been moved into the
-/// worker's batch buffer).
-type Pending = (u64, Sender<Reply>, Instant);
-
-/// Admit one drained request into the forming batch — or reject it
-/// immediately with a typed [`EngineError::ShapeMismatch`] reply, so a
-/// single malformed frame can never fail the whole `infer_batch`
-/// dispatch it would have joined.
-fn admit(
-    req: Request,
-    expected: (usize, usize, usize),
-    frames: &mut Vec<Frame>,
-    pending: &mut Vec<Pending>,
-    metrics: &Metrics,
-) {
-    let Request { id, frame, reply, enqueued } = req;
-    if frame.shape() != expected {
-        metrics.failed();
-        let _ = reply.send(Err(EngineError::ShapeMismatch { expected, got: frame.shape() }));
-    } else {
-        frames.push(frame);
-        pending.push((id, reply, enqueued));
-    }
-}
-
-fn worker_loop(
-    mut backend: Box<dyn Backend>,
-    rx: Arc<Mutex<Receiver<Request>>>,
-    metrics: Arc<Metrics>,
-    batch_size: usize,
-    live: Arc<std::sync::atomic::AtomicUsize>,
-) {
-    let expected = backend.input_shape();
-    // Reusable per-worker buffers: the frames handed to `infer_batch`,
-    // the drained request metadata, and the recycled inference outputs
-    // (batch-native backends keep `outs` warm across dispatches).
-    let mut frames: Vec<Frame> = Vec::with_capacity(batch_size);
-    let mut pending: Vec<Pending> = Vec::with_capacity(batch_size);
-    let mut outs: Vec<Inference> = Vec::new();
-    loop {
-        frames.clear();
-        pending.clear();
-        {
-            // Dynamic batching: block for one request, then
-            // opportunistically drain whatever else is queued (up to
-            // batch_size). Misshapen frames are rejected with a typed
-            // reply here, so one bad request can never fail a batch.
-            let guard = rx.lock().expect("rx mutex poisoned");
-            match guard.recv() {
-                Ok(req) => admit(req, expected, &mut frames, &mut pending, &metrics),
-                // Channel closed; every queued request has already been
-                // received (see `Coordinator::shutdown`), so exiting here
-                // cannot strand work.
-                Err(_) => return,
-            }
-            while frames.len() < batch_size {
-                match guard.try_recv() {
-                    Ok(req) => admit(req, expected, &mut frames, &mut pending, &metrics),
-                    Err(_) => break,
-                }
-            }
-        } // release the lock before the (long) simulation
-
-        let n = frames.len();
-        if n == 0 {
-            continue; // everything drained was misshapen
-        }
-        metrics.batch_formed(n);
-        let picked = Instant::now();
-
-        // One `infer_batch` dispatch for the whole drained batch. A
-        // panicking backend must surface as a typed reply on every
-        // in-flight request — not as a silently dropped channel — so the
-        // dispatch runs under `catch_unwind` and the worker retires
-        // afterwards (its backend state can no longer be trusted).
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            backend.infer_batch(&frames, &mut outs)
-        }));
-        let batch_us = picked.elapsed().as_micros() as u64;
-        match result {
-            // `infer_batch` must fill exactly one output per frame; an
-            // implementation that returns Ok with a short (or long) outs
-            // is a contract violation and fails the batch typed below
-            // instead of silently dropping the unmatched reply channels.
-            Ok(Ok(())) if outs.len() == n => {
-                metrics.batch_served(batch_us);
-                for ((id, reply, enqueued), inf) in pending.drain(..).zip(outs.iter()) {
-                    let queue_wait_us =
-                        picked.duration_since(enqueued).as_micros() as u64;
-                    metrics.completed(queue_wait_us, batch_us, inf.stats.total_cycles);
-                    let _ = reply.send(Ok(Response {
-                        id,
-                        pred: inf.pred,
-                        logits: inf.logits.clone(),
-                        backend: backend.name(),
-                        sim_cycles: inf.stats.total_cycles,
-                        queue_wait_us,
-                        // the request completes when its batch completes
-                        service_us: batch_us,
-                        batch_size: n,
-                    }));
-                }
-            }
-            Ok(Ok(())) => {
-                let e = EngineError::Backend(format!(
-                    "{}: infer_batch returned {} outputs for {} frames",
-                    backend.name(),
-                    outs.len(),
-                    n,
-                ));
-                fail_batch(&mut pending, &metrics, e);
-            }
-            Ok(Err(e)) => fail_batch(&mut pending, &metrics, e),
-            Err(payload) => {
-                let panic = EngineError::worker_panicked(backend.name(), &*payload);
-                fail_batch(&mut pending, &metrics, panic);
-                // Retire this worker — its backend state can no longer
-                // be trusted. If other workers are still live they keep
-                // draining the queue; the LAST worker to die instead
-                // becomes a fail-fast drainer, so queued and future
-                // requests get typed replies rather than hanging on a
-                // channel nobody will ever answer.
-                if live.fetch_sub(1, std::sync::atomic::Ordering::AcqRel) > 1 {
-                    return;
-                }
-                drain_and_fail(backend.name(), &rx, &metrics, &*payload);
-                return;
-            }
-        }
-    }
-}
-
-/// Reply a typed error to every member of the in-flight batch.
-///
-/// The error is [`EngineError::replicate`]d per member, so every
-/// batchmate — not just the first — receives the matchable variant
-/// (`WorkerPanicked`, `ShapeMismatch`, …; only `Io` degrades to a
-/// `Backend` wrapper, as its `io::Error` cannot be cloned). `infer_batch`
-/// is all-or-nothing by contract, which is why the coordinator
-/// pre-validates frame shapes at admission: the only per-request error
-/// the built-in backends can raise never reaches a batch.
-fn fail_batch(pending: &mut Vec<Pending>, metrics: &Metrics, e: EngineError) {
-    for (_, reply, _) in pending.drain(..) {
-        metrics.failed();
-        let _ = reply.send(Err(e.replicate()));
-    }
-}
-
-/// Fail-fast drain mode of the last live worker after a panic: keep
-/// receiving and reply [`EngineError::WorkerPanicked`] to everything
-/// until the coordinator shuts the channel down — no request ever
-/// blocks forever on a pool with zero serving capacity.
-fn drain_and_fail(
-    worker: &'static str,
-    rx: &Mutex<Receiver<Request>>,
-    metrics: &Metrics,
-    payload: &(dyn std::any::Any + Send),
-) {
-    loop {
-        let req = match rx.lock().expect("rx mutex poisoned").recv() {
-            Ok(req) => req,
-            Err(_) => return, // channel closed by shutdown
-        };
-        metrics.failed();
-        let _ = req.reply.send(Err(EngineError::worker_panicked(worker, payload)));
+        self.server.drain();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{BackendKind, EngineBuilder, Inference};
     use crate::sim::{AccelConfig, Accelerator};
     use crate::snn::network::testutil::random_network;
     use crate::util::prng::Pcg;
@@ -534,15 +351,15 @@ mod tests {
 
     #[test]
     fn worker_panic_propagates_as_typed_error() {
-        // One panicking worker, several queued requests: every request of
-        // the drained batch must receive a typed WorkerPanicked reply —
-        // not a silently dropped channel.
+        // One panicking worker, several queued requests: every request
+        // must receive a typed WorkerPanicked reply — not a silently
+        // dropped channel.
         let coord = Coordinator::start_pool(
             vec![Box::new(PanickingBackend) as Box<dyn Backend>],
             ServerConfig { queue_depth: 8, batch_size: 4, ..Default::default() },
         )
         .unwrap();
-        // EVERY batchmate must get the matchable WorkerPanicked variant,
+        // EVERY request must get the matchable WorkerPanicked variant,
         // whether it rode in the panicking dispatch or was drained after.
         let replies: Vec<_> = (0..4).map(|i| coord.submit(frame(i)).unwrap()).collect();
         for rx in replies {
@@ -581,7 +398,7 @@ mod tests {
 
     #[test]
     fn panicked_worker_does_not_kill_survivors() {
-        // Heterogeneous pool: the panicker retires on its first batch,
+        // Heterogeneous pool: the panicker retires on its first dispatch,
         // the healthy sim worker keeps draining the queue.
         let net = Arc::new(random_network(37));
         let healthy = EngineBuilder::new(Arc::clone(&net)).build(BackendKind::Sim).unwrap();
@@ -619,12 +436,21 @@ mod tests {
         for rx in replies {
             let resp = rx.recv().unwrap().unwrap();
             assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
-            // a request's service time is its batch's wall time
             assert!(resp.service_us > 0);
         }
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.completed, 12);
-        assert!(snap.batches >= 2, "12 requests, max batch 8 → at least 2 batches");
+        // 12 requests through max-8 visits: either several dispatches
+        // formed, or one stream dispatch kept pulling past its initial
+        // batch (stream_pulls counts those) — both keep workers filled.
+        assert!(snap.batches >= 1);
+        assert!(
+            snap.batches >= 2 || snap.stream_pulls >= 1,
+            "batches={} stream_pulls={}",
+            snap.batches,
+            snap.stream_pulls
+        );
+        assert!(snap.mean_batch >= 1.0);
         assert!(snap.mean_batch_service_us > 0.0);
         assert!(snap.batch_images_per_sec > 0.0);
         coord.shutdown();
@@ -632,7 +458,7 @@ mod tests {
 
     #[test]
     fn sharded_backend_pool_serves_batches() {
-        // A coordinator worker can itself be a multi-core ShardedExecutor:
+        // A server worker can itself be a multi-core ShardedExecutor:
         // one queue, one worker, four shard threads under it.
         let net = Arc::new(random_network(39));
         let sharded = EngineBuilder::new(Arc::clone(&net))
@@ -660,9 +486,9 @@ mod tests {
 
     #[test]
     fn pipelined_worker_streams_drained_batches() {
-        // A worker built with `pipeline` streams each drained batch
-        // through the self-timed layer pipeline; replies must stay
-        // bit-exact with direct sequential inference.
+        // A worker built with `pipeline` streams its dispatches through
+        // the self-timed layer pipeline; replies must stay bit-exact
+        // with direct sequential inference.
         let net = Arc::new(random_network(40));
         let coord = Coordinator::start(
             Arc::clone(&net),
@@ -677,7 +503,9 @@ mod tests {
         )
         .unwrap();
         let f = frame(77);
-        let mut direct = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        // lanes must match the served config: cycle counts scale with ×P
+        let mut direct =
+            Accelerator::new(Arc::clone(&net), AccelConfig { lanes: 2, ..Default::default() });
         let want = direct.infer_image(f.as_u8().unwrap());
         let replies: Vec<_> = (0..20).map(|_| coord.submit(f.clone()).unwrap()).collect();
         for rx in replies {
@@ -700,7 +528,7 @@ mod tests {
     #[test]
     fn backpressure_rejects_when_full() {
         let net = Arc::new(random_network(33));
-        // one slow worker, tiny queue
+        // one slow worker, tiny quota
         let coord = Coordinator::start(
             Arc::clone(&net),
             ServerConfig { workers: 1, lanes: 1, queue_depth: 2, batch_size: 1, ..Default::default() },
@@ -718,7 +546,7 @@ mod tests {
                 Err(e) => panic!("unexpected: {e}"),
             }
         }
-        assert!(busy_seen, "bounded queue must reject under load");
+        assert!(busy_seen, "bounded quota must reject under load");
         for rx in pending {
             let _ = rx.recv();
         }

@@ -1,0 +1,268 @@
+//! Long-lived serving sessions: the streaming ingress of the
+//! multi-tenant [`crate::coordinator::Server`].
+//!
+//! A [`Session`] is an ordered, backpressured frame stream bound to one
+//! tenant: [`Session::feed`] copies a frame into a recycled container
+//! and enqueues it, [`Session::poll`] / [`Session::recv`] hand results
+//! back **in feed order**, and [`Session::finish`] drains everything
+//! outstanding. Admission is typed — feeding past the tenant's
+//! `max_inflight` quota yields [`EngineError::TenantOverQuota`] rather
+//! than blocking or dropping.
+//!
+//! Delivery runs through a pre-sized **reorder ring** instead of
+//! per-request channels: workers (which may complete a session's frames
+//! out of order when several serve one tenant) copy each result into
+//! the slot `seq % cap` and the session reads slots in sequence. Slots
+//! keep their [`Response`] containers across reuse, and
+//! [`Session::recv_into`] *swaps* the slot's response with a
+//! caller-recycled one — so a warmed session adds **zero heap
+//! allocations per frame** end to end (frame copy into a pooled
+//! container, injector queue, worker stream, ring slot, swap out; the
+//! `zero_alloc` suite referees the whole path).
+
+use super::server::ServerShared;
+use super::tenants::TenantState;
+use super::{Reply, Response};
+use crate::engine::{EngineError, Frame, Inference};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One reply slot of the reorder ring.
+pub(crate) struct Slot {
+    filled: bool,
+    err: Option<EngineError>,
+    resp: Response,
+}
+
+/// The delivery side of a session, shared between the session handle
+/// and every worker serving its frames.
+pub(crate) struct SessionShared {
+    ring: Mutex<Vec<Slot>>,
+    cv: Condvar,
+}
+
+impl SessionShared {
+    pub(crate) fn with_capacity(cap: usize) -> Self {
+        let mut slots = Vec::with_capacity(cap);
+        slots.resize_with(cap, || Slot {
+            filled: false,
+            err: None,
+            resp: Response::default(),
+        });
+        SessionShared { ring: Mutex::new(slots), cv: Condvar::new() }
+    }
+
+    /// Copy a successful inference into the slot for `seq`, reusing the
+    /// slot's response buffers (allocation-free once warmed).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn deliver_ok(
+        &self,
+        seq: u64,
+        inf: &Inference,
+        backend: &'static str,
+        queue_wait_us: u64,
+        service_us: u64,
+        batch_size: usize,
+    ) {
+        let mut ring = self.ring.lock().expect("session ring poisoned");
+        let cap = ring.len() as u64;
+        let slot = &mut ring[(seq % cap) as usize];
+        debug_assert!(!slot.filled, "ring slot for seq {seq} overwritten before poll");
+        slot.err = None;
+        let r = &mut slot.resp;
+        r.id = seq;
+        r.pred = inf.pred;
+        r.logits.clone_from(&inf.logits);
+        r.backend = backend;
+        r.sim_cycles = inf.stats.total_cycles;
+        r.queue_wait_us = queue_wait_us;
+        r.service_us = service_us;
+        r.batch_size = batch_size;
+        slot.filled = true;
+        drop(ring);
+        self.cv.notify_all();
+    }
+
+    /// Deliver a typed error for `seq` (shutdown, worker panic, backend
+    /// failure).
+    pub(crate) fn deliver_err(&self, seq: u64, e: EngineError) {
+        let mut ring = self.ring.lock().expect("session ring poisoned");
+        let cap = ring.len() as u64;
+        let slot = &mut ring[(seq % cap) as usize];
+        debug_assert!(!slot.filled, "ring slot for seq {seq} overwritten before poll");
+        slot.err = Some(e);
+        slot.filled = true;
+        drop(ring);
+        self.cv.notify_all();
+    }
+}
+
+/// An ordered, backpressured inference stream over one tenant of a
+/// [`crate::coordinator::Server`]. Obtained from
+/// [`crate::coordinator::Server::open_session`]; safe to move to another
+/// thread (all state is `Arc`-shared with the server).
+///
+/// ```text
+///   feed(&frame) ─▶ tenant queue ─▶ worker pool (infer_stream) ─▶ ring
+///                                                                  │
+///         recv()/poll() ◀── results in feed order, typed errors ◀──┘
+/// ```
+pub struct Session {
+    server: Arc<ServerShared>,
+    tenant: Arc<TenantState>,
+    shared: Arc<SessionShared>,
+    /// Frames fed so far (`seq` of the next feed).
+    fed: u64,
+    /// Results taken so far (`seq` of the next poll).
+    polled: u64,
+}
+
+impl Session {
+    pub(crate) fn new(
+        server: Arc<ServerShared>,
+        tenant: Arc<TenantState>,
+    ) -> Self {
+        let shared = Arc::new(SessionShared::with_capacity(tenant.max_inflight));
+        Session { server, tenant, shared, fed: 0, polled: 0 }
+    }
+
+    /// The tenant this session streams to.
+    pub fn tenant(&self) -> super::TenantId {
+        self.tenant.id
+    }
+
+    /// Results fed but not yet taken with `poll`/`recv`.
+    pub fn outstanding(&self) -> usize {
+        (self.fed - self.polled) as usize
+    }
+
+    /// Feed one frame, returning its sequence number in this session's
+    /// result order. The frame is copied into a pooled container (no
+    /// allocation once the pool is warm); typed admission errors:
+    ///
+    /// * [`EngineError::ShapeMismatch`] — the frame does not match the
+    ///   tenant's network (nothing is enqueued).
+    /// * [`EngineError::TenantOverQuota`] — the tenant already has
+    ///   `max_inflight` frames queued or in flight; take some results
+    ///   with [`Self::poll`] / [`Self::recv`] and retry.
+    /// * [`EngineError::Shutdown`] — the server has shut down.
+    pub fn feed(&mut self, frame: &Frame) -> Result<u64, EngineError> {
+        if frame.shape() != self.tenant.input_shape {
+            return Err(EngineError::ShapeMismatch {
+                expected: self.tenant.input_shape,
+                got: frame.shape(),
+            });
+        }
+        // The reorder ring has exactly `max_inflight` slots, so the
+        // session-local outstanding gate doubles as the slot-collision
+        // guard: a new seq only ever maps to a polled (free) slot.
+        if self.outstanding() >= self.tenant.max_inflight || !self.tenant.try_acquire() {
+            self.server.metrics.rejected();
+            self.tenant.metrics.quota_rejected();
+            return Err(self.tenant.over_quota());
+        }
+        let seq = self.fed;
+        if let Err(e) = self.server.enqueue_session_frame(
+            &self.tenant,
+            frame,
+            Arc::clone(&self.shared),
+            seq,
+        ) {
+            self.tenant.release();
+            return Err(e);
+        }
+        self.fed += 1;
+        Ok(seq)
+    }
+
+    /// [`Self::feed`] with built-in backpressure handling: on a typed
+    /// [`EngineError::TenantOverQuota`], take one finished result
+    /// (handing it to `on_result`) and retry. This is the canonical
+    /// quota-handling loop — it lives here, next to the code that
+    /// guarantees its invariant: the quota slot of a frame is released
+    /// *before* its reply is delivered, so for a single-session tenant,
+    /// over-quota implies this session has something outstanding to
+    /// take. If the quota is held elsewhere (other sessions of the same
+    /// tenant) and nothing is outstanding here, the typed
+    /// `TenantOverQuota` is returned instead of spinning.
+    pub fn feed_yielding(
+        &mut self,
+        frame: &Frame,
+        on_result: &mut dyn FnMut(Reply),
+    ) -> Result<u64, EngineError> {
+        loop {
+            match self.feed(frame) {
+                Ok(seq) => return Ok(seq),
+                Err(EngineError::TenantOverQuota { .. }) => match self.recv() {
+                    Some(reply) => on_result(reply),
+                    None => return Err(self.tenant.over_quota()),
+                },
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Non-blocking: the next result in feed order, if it has arrived.
+    /// Allocates the returned [`Response`]; use [`Self::poll_into`] on
+    /// allocation-sensitive paths.
+    pub fn poll(&mut self) -> Option<Reply> {
+        let mut resp = Response::default();
+        Some(self.poll_into(&mut resp)?.map(|()| resp))
+    }
+
+    /// Non-blocking, allocation-free variant of [`Self::poll`]: when the
+    /// next in-order result is ready, *swap* it into `out` (the slot
+    /// keeps `out`'s old buffers for reuse) and return `Some(Ok(()))`;
+    /// `Some(Err(_))` delivers that frame's typed error instead.
+    pub fn poll_into(&mut self, out: &mut Response) -> Option<Result<(), EngineError>> {
+        self.take_front(out, false)
+    }
+
+    /// Blocking: the next result in feed order, or `None` when nothing
+    /// is outstanding.
+    pub fn recv(&mut self) -> Option<Reply> {
+        let mut resp = Response::default();
+        Some(self.recv_into(&mut resp)?.map(|()| resp))
+    }
+
+    /// Blocking, allocation-free variant of [`Self::recv`] (see
+    /// [`Self::poll_into`] for the swap contract).
+    pub fn recv_into(&mut self, out: &mut Response) -> Option<Result<(), EngineError>> {
+        self.take_front(out, true)
+    }
+
+    fn take_front(&mut self, out: &mut Response, block: bool) -> Option<Result<(), EngineError>> {
+        if self.fed == self.polled {
+            return None;
+        }
+        let mut ring = self.shared.ring.lock().expect("session ring poisoned");
+        let cap = ring.len() as u64;
+        let idx = (self.polled % cap) as usize;
+        while !ring[idx].filled {
+            if !block {
+                return None;
+            }
+            ring = self.shared.cv.wait(ring).expect("session ring poisoned");
+        }
+        let slot = &mut ring[idx];
+        slot.filled = false;
+        let result = match slot.err.take() {
+            Some(e) => Err(e),
+            None => {
+                std::mem::swap(&mut slot.resp, out);
+                Ok(())
+            }
+        };
+        drop(ring);
+        self.polled += 1;
+        Some(result)
+    }
+
+    /// Drain every outstanding result in feed order and end the stream.
+    pub fn finish(mut self) -> Vec<Reply> {
+        let mut out = Vec::with_capacity(self.outstanding());
+        while let Some(reply) = self.recv() {
+            out.push(reply);
+        }
+        out
+    }
+}

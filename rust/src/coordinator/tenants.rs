@@ -1,0 +1,356 @@
+//! Tenant registry types: identity, per-tenant serving policy (quota,
+//! weighted-fair share, backend knobs) and per-tenant metrics.
+//!
+//! One [`crate::coordinator::Server`] serves many tenants. Each tenant
+//! is a registered [`crate::snn::network::Network`] plus a
+//! [`TenantConfig`]; sessions ([`crate::coordinator::Session`]) feed
+//! frames *into* a tenant's bounded queue, and the shared worker pool
+//! drains tenants in weighted round-robin order. Two tenants registered
+//! with identical weights share one compiled
+//! [`crate::sim::plan::NetworkPlan`] through the server's
+//! [`crate::engine::PlanCache`].
+
+use crate::engine::{Backend, BackendKind, EngineBuilder, EngineError};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Opaque tenant identity handed out by
+/// [`crate::coordinator::Server::register_tenant`].
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub u64);
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tenant-{}", self.0)
+    }
+}
+
+/// Per-tenant serving policy.
+#[derive(Clone, Debug)]
+pub struct TenantConfig {
+    /// Admission quota: at most this many of the tenant's frames may be
+    /// queued or in flight at once, across all of its sessions. Feeding
+    /// past it yields a typed [`EngineError::TenantOverQuota`].
+    pub max_inflight: usize,
+    /// Weighted-fair share of the worker pool (clamped to
+    /// `1..=MAX_TENANT_WEIGHT`): under contention a weight-3 tenant's
+    /// queue is visited three times for every visit a weight-1 tenant
+    /// gets. Only the ratio between tenants matters; the clamp keeps
+    /// the scheduler's weighted visit list O(tenants).
+    pub weight: u32,
+    /// Which backend serves this tenant's network.
+    pub backend: BackendKind,
+    /// ×P parallelization of each simulated accelerator.
+    pub lanes: usize,
+    /// Host shard threads per worker backend (sim only; see
+    /// [`EngineBuilder::threads`]).
+    pub threads: usize,
+    /// Self-timed pipeline stages per worker backend (sim only; see
+    /// [`EngineBuilder::pipeline`]). Pipelined workers profit most from
+    /// session streaming: the server keeps one `infer_stream` call
+    /// alive while the tenant's queue has frames, so stages stay
+    /// filled across batch boundaries.
+    pub pipeline: usize,
+}
+
+/// Upper bound on [`TenantConfig::weight`]: the injector realizes
+/// weights as repeated entries in its round-robin visit list, so the
+/// clamp bounds both that list's memory and the per-dispatch scan cost
+/// (an unclamped `u32::MAX` weight would attempt a multi-gigabyte
+/// allocation under the injector lock). Ratios up to 64:1 cover any
+/// sane fair-share policy.
+pub const MAX_TENANT_WEIGHT: u32 = 64;
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        TenantConfig {
+            max_inflight: 256,
+            weight: 1,
+            backend: BackendKind::Sim,
+            lanes: 8,
+            threads: 1,
+            pipeline: 0,
+        }
+    }
+}
+
+/// Where a worker obtains its per-tenant backend instance.
+pub(crate) enum BackendSource {
+    /// Built on first dispatch from the tenant's engine builder (which
+    /// shares the server's plan cache).
+    Builder(EngineBuilder),
+    /// The tenant implicit in [`crate::coordinator::Server::start_with_pool`]:
+    /// every pool worker already owns a caller-provided backend for it.
+    Preset,
+}
+
+/// Registered tenant state shared between sessions, the injector and
+/// the worker pool.
+pub(crate) struct TenantState {
+    pub id: TenantId,
+    pub weight: u32,
+    pub max_inflight: usize,
+    pub input_shape: (usize, usize, usize),
+    pub kind: BackendKind,
+    pub source: BackendSource,
+    pub metrics: TenantMetrics,
+    /// Frames currently queued or being served (admission quota state).
+    /// Mutex + condvar rather than an atomic so blocking submitters
+    /// (the deprecated `Coordinator::submit`) can park on it.
+    inflight: Mutex<usize>,
+    inflight_cv: Condvar,
+}
+
+impl TenantState {
+    pub fn new(
+        id: TenantId,
+        cfg: &TenantConfig,
+        input_shape: (usize, usize, usize),
+        source: BackendSource,
+    ) -> Self {
+        TenantState {
+            id,
+            weight: cfg.weight.clamp(1, MAX_TENANT_WEIGHT),
+            max_inflight: cfg.max_inflight.max(1),
+            input_shape,
+            kind: cfg.backend,
+            source,
+            metrics: TenantMetrics::default(),
+            inflight: Mutex::new(0),
+            inflight_cv: Condvar::new(),
+        }
+    }
+
+    /// Claim one in-flight slot if the quota allows it.
+    pub fn try_acquire(&self) -> bool {
+        let mut n = self.inflight.lock().expect("quota mutex poisoned");
+        if *n >= self.max_inflight {
+            false
+        } else {
+            *n += 1;
+            true
+        }
+    }
+
+    /// Claim one in-flight slot, parking until the quota allows it.
+    pub fn acquire_blocking(&self) {
+        let mut n = self.inflight.lock().expect("quota mutex poisoned");
+        while *n >= self.max_inflight {
+            n = self.inflight_cv.wait(n).expect("quota mutex poisoned");
+        }
+        *n += 1;
+    }
+
+    /// Release one in-flight slot (called exactly once per delivered
+    /// reply, success or error).
+    pub fn release(&self) {
+        let mut n = self.inflight.lock().expect("quota mutex poisoned");
+        debug_assert!(*n > 0, "quota released more often than acquired");
+        *n = n.saturating_sub(1);
+        drop(n);
+        self.inflight_cv.notify_one();
+    }
+
+    pub fn inflight(&self) -> usize {
+        *self.inflight.lock().expect("quota mutex poisoned")
+    }
+
+    /// The typed admission error for this tenant.
+    pub fn over_quota(&self) -> EngineError {
+        EngineError::TenantOverQuota { tenant: self.id.0, max_inflight: self.max_inflight }
+    }
+
+    /// Build a fresh backend instance for a worker (one per worker, not
+    /// per frame; sim builds share the server's cached plan).
+    pub fn build_backend(&self) -> Result<Box<dyn Backend>, EngineError> {
+        match &self.source {
+            BackendSource::Builder(builder) => builder.build(self.kind),
+            BackendSource::Preset => Err(EngineError::msg(
+                "preset tenants are served only by their pool's own workers",
+            )),
+        }
+    }
+}
+
+/// Per-tenant counters (atomics only, mirroring the global
+/// [`crate::coordinator::Metrics`]): the global `failed` counter tells
+/// you *that* something misbehaves, these tell you *which tenant*.
+#[derive(Debug, Default)]
+pub struct TenantMetrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    quota_rejected: AtomicU64,
+    /// Wall time of successful dispatches that served this tenant
+    /// (dispatch-level, NOT summed per-frame service times — frames
+    /// overlap inside pipelined/sharded dispatches, so a per-frame sum
+    /// would understate throughput by the overlap factor).
+    dispatch_us_sum: AtomicU64,
+    sim_cycles_sum: AtomicU64,
+}
+
+impl TenantMetrics {
+    pub fn submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn completed(&self, sim_cycles: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.sim_cycles_sum.fetch_add(sim_cycles, Ordering::Relaxed);
+    }
+
+    /// Record one successful stream dispatch that served this tenant
+    /// (wall time of the whole dispatch).
+    pub fn dispatch_served(&self, dispatch_us: u64) {
+        self.dispatch_us_sum.fetch_add(dispatch_us, Ordering::Relaxed);
+    }
+
+    pub fn failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn quota_rejected(&self) {
+        self.quota_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time copy of one tenant's serving state, as reported in the
+/// `serve` JSON snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSnapshot {
+    pub tenant: u64,
+    pub weight: u32,
+    pub max_inflight: usize,
+    /// Frames currently waiting in this tenant's injector queue.
+    pub queue_depth: usize,
+    /// Frames queued or being served right now (quota occupancy).
+    pub inflight: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    /// Replies delivered as typed errors (which tenant misbehaves —
+    /// the per-tenant split of the global `failed` counter).
+    pub failed: u64,
+    /// Feeds rejected at admission with [`EngineError::TenantOverQuota`].
+    pub quota_rejected: u64,
+    /// Completed frames per second of cumulative dispatch wall time
+    /// across workers (the worker-side throughput figure, same
+    /// semantics as the global `batch_images_per_sec`; queue wait
+    /// excluded, concurrent workers' times sum).
+    pub images_per_sec: f64,
+    pub mean_sim_cycles: f64,
+}
+
+impl TenantSnapshot {
+    pub(crate) fn collect(state: &TenantState, queue_depth: usize) -> Self {
+        let m = &state.metrics;
+        let completed = m.completed.load(Ordering::Relaxed);
+        let dispatch_us = m.dispatch_us_sum.load(Ordering::Relaxed);
+        let div = |a: u64, b: u64| if b == 0 { 0.0 } else { a as f64 / b as f64 };
+        TenantSnapshot {
+            tenant: state.id.0,
+            weight: state.weight,
+            max_inflight: state.max_inflight,
+            queue_depth,
+            inflight: state.inflight(),
+            submitted: m.submitted.load(Ordering::Relaxed),
+            completed,
+            failed: m.failed.load(Ordering::Relaxed),
+            quota_rejected: m.quota_rejected.load(Ordering::Relaxed),
+            images_per_sec: div(completed * 1_000_000, dispatch_us),
+            mean_sim_cycles: div(m.sim_cycles_sum.load(Ordering::Relaxed), completed),
+        }
+    }
+
+    /// JSON rendering for the `serve --json` snapshot's `tenants` array.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("tenant".into(), Json::Num(self.tenant as f64));
+        m.insert("weight".into(), Json::Num(self.weight as f64));
+        m.insert("max_inflight".into(), Json::Num(self.max_inflight as f64));
+        m.insert("queue_depth".into(), Json::Num(self.queue_depth as f64));
+        m.insert("inflight".into(), Json::Num(self.inflight as f64));
+        m.insert("submitted".into(), Json::Num(self.submitted as f64));
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("failed".into(), Json::Num(self.failed as f64));
+        m.insert("quota_rejected".into(), Json::Num(self.quota_rejected as f64));
+        m.insert("images_per_sec".into(), Json::Num(self.images_per_sec));
+        m.insert("mean_sim_cycles".into(), Json::Num(self.mean_sim_cycles));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(max_inflight: usize) -> TenantState {
+        TenantState::new(
+            TenantId(7),
+            &TenantConfig { max_inflight, ..Default::default() },
+            (28, 28, 1),
+            BackendSource::Preset,
+        )
+    }
+
+    #[test]
+    fn quota_acquire_release() {
+        let t = state(2);
+        assert!(t.try_acquire());
+        assert!(t.try_acquire());
+        assert!(!t.try_acquire(), "third acquire must hit the quota");
+        assert_eq!(t.inflight(), 2);
+        t.release();
+        assert!(t.try_acquire());
+        assert!(matches!(
+            t.over_quota(),
+            EngineError::TenantOverQuota { tenant: 7, max_inflight: 2 }
+        ));
+    }
+
+    #[test]
+    fn snapshot_aggregates() {
+        let t = state(4);
+        t.metrics.submitted();
+        t.metrics.submitted();
+        t.metrics.completed(1000);
+        t.metrics.completed(3000);
+        // both frames rode ONE 1000 µs dispatch (overlapping service)
+        t.metrics.dispatch_served(1000);
+        t.metrics.failed();
+        t.metrics.quota_rejected();
+        let snap = TenantSnapshot::collect(&t, 3);
+        assert_eq!(snap.tenant, 7);
+        assert_eq!(snap.queue_depth, 3);
+        assert_eq!(snap.submitted, 2);
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.quota_rejected, 1);
+        // 2 completed over 1000 µs of dispatch wall time → 2000 img/s
+        assert!((snap.images_per_sec - 2000.0).abs() < 1e-6);
+        assert!((snap.mean_sim_cycles - 2000.0).abs() < 1e-9);
+        let j = snap.to_json();
+        assert_eq!(j.get(&["quota_rejected"]).unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn weights_and_quotas_are_clamped() {
+        let t = TenantState::new(
+            TenantId(1),
+            &TenantConfig { max_inflight: 0, weight: 0, ..Default::default() },
+            (28, 28, 1),
+            BackendSource::Preset,
+        );
+        assert_eq!(t.weight, 1);
+        assert_eq!(t.max_inflight, 1);
+        // an absurd weight must not blow up the scheduler's visit list
+        let t = TenantState::new(
+            TenantId(2),
+            &TenantConfig { weight: u32::MAX, ..Default::default() },
+            (28, 28, 1),
+            BackendSource::Preset,
+        );
+        assert_eq!(t.weight, MAX_TENANT_WEIGHT);
+    }
+}

@@ -32,6 +32,17 @@ pub enum EngineError {
     Busy,
     /// Serving: the coordinator has shut down.
     Closed,
+    /// Serving: a tenant hit its admission quota — `max_inflight` frames
+    /// of tenant `tenant` are already queued or being served. Poll some
+    /// results (or raise the quota) before feeding more.
+    TenantOverQuota { tenant: u64, max_inflight: usize },
+    /// Serving: the [`crate::coordinator::TenantId`] did not resolve to a
+    /// registered tenant of this server.
+    UnknownTenant { tenant: u64 },
+    /// Serving: the server shut down before this request was served (the
+    /// typed reply [`crate::coordinator::Server::shutdown`] sends to
+    /// everything still queued, so no request is ever silently dropped).
+    Shutdown,
     /// A backend failed while executing an inference.
     Backend(String),
     /// A worker thread panicked mid-inference. Carries the worker's
@@ -75,6 +86,13 @@ impl EngineError {
             EngineError::Unavailable(m) => EngineError::Unavailable(m.clone()),
             EngineError::Busy => EngineError::Busy,
             EngineError::Closed => EngineError::Closed,
+            EngineError::TenantOverQuota { tenant, max_inflight } => {
+                EngineError::TenantOverQuota { tenant: *tenant, max_inflight: *max_inflight }
+            }
+            EngineError::UnknownTenant { tenant } => {
+                EngineError::UnknownTenant { tenant: *tenant }
+            }
+            EngineError::Shutdown => EngineError::Shutdown,
             EngineError::Backend(m) => EngineError::Backend(m.clone()),
             EngineError::WorkerPanicked { worker, payload } => EngineError::WorkerPanicked {
                 worker: worker.clone(),
@@ -122,6 +140,17 @@ impl fmt::Display for EngineError {
             EngineError::Unavailable(m) => write!(f, "unavailable: {m}"),
             EngineError::Busy => write!(f, "queue full (backpressure)"),
             EngineError::Closed => write!(f, "server is shut down"),
+            EngineError::TenantOverQuota { tenant, max_inflight } => write!(
+                f,
+                "tenant {tenant} is over its admission quota \
+                 ({max_inflight} frames already in flight)"
+            ),
+            EngineError::UnknownTenant { tenant } => {
+                write!(f, "unknown tenant id {tenant} (not registered with this server)")
+            }
+            EngineError::Shutdown => {
+                write!(f, "server shut down before this request was served")
+            }
             EngineError::Backend(m) => write!(f, "backend error: {m}"),
             EngineError::WorkerPanicked { worker, payload } => {
                 write!(f, "worker '{worker}' panicked: {payload}")
@@ -240,6 +269,22 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("gpu") && s.contains("sim") && s.contains("dense-ref"));
         assert!(EngineError::Busy.to_string().contains("backpressure"));
+    }
+
+    #[test]
+    fn serving_variants_render_and_replicate() {
+        let quota = EngineError::TenantOverQuota { tenant: 3, max_inflight: 64 };
+        let s = quota.to_string();
+        assert!(s.contains('3') && s.contains("64") && s.contains("quota"), "{s}");
+        assert!(matches!(
+            quota.replicate(),
+            EngineError::TenantOverQuota { tenant: 3, max_inflight: 64 }
+        ));
+        let unknown = EngineError::UnknownTenant { tenant: 9 };
+        assert!(unknown.to_string().contains("unknown tenant id 9"));
+        assert!(matches!(unknown.replicate(), EngineError::UnknownTenant { tenant: 9 }));
+        assert!(EngineError::Shutdown.to_string().contains("shut down"));
+        assert!(matches!(EngineError::Shutdown.replicate(), EngineError::Shutdown));
     }
 
     #[test]

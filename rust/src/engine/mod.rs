@@ -22,7 +22,7 @@ pub mod error;
 pub mod registry;
 
 pub use error::{Context, EngineError};
-pub use registry::{BackendKind, EngineBuilder};
+pub use registry::{BackendKind, EngineBuilder, PlanCache};
 
 use crate::sim::RunStats;
 
@@ -97,6 +97,26 @@ impl Frame {
             Dtype::U8 => Ok(&self.data),
         }
     }
+
+    /// Turn `self` into a copy of `src`, reusing the existing byte buffer
+    /// when its capacity suffices — the recycling step of the serving
+    /// layer's frame pool (a warmed pool copies frames with zero heap
+    /// allocations).
+    pub(crate) fn copy_from(&mut self, src: &Frame) {
+        self.shape = src.shape;
+        self.dtype = src.dtype;
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
+    }
+}
+
+/// The empty 0×0×0 frame — the recyclable container value (a frame pool
+/// starts from `Frame::default()` and grows each container to its
+/// workload's high-water mark via [`Frame::copy_from`]).
+impl Default for Frame {
+    fn default() -> Self {
+        Frame { shape: (0, 0, 0), dtype: Dtype::U8, data: Vec::new() }
+    }
 }
 
 /// Result of one inference through any [`Backend`].
@@ -157,35 +177,65 @@ pub trait Backend: Send {
     /// Run one frame end to end.
     fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError>;
 
+    /// Run one frame into a caller-recycled output container.
+    ///
+    /// The default implementation delegates to [`Self::infer`] (one fresh
+    /// [`Inference`] per call); allocation-free backends override it —
+    /// the simulator writes straight into `out`'s recycled buffers
+    /// ([`crate::sim::Accelerator::infer_image_into`]), so a warmed
+    /// container costs zero heap allocations per frame. This is the
+    /// per-frame primitive under both the default [`Self::infer_batch`]
+    /// recycling path and the default [`Self::infer_stream`].
+    fn infer_into(&mut self, frame: &Frame, out: &mut Inference) -> Result<(), EngineError> {
+        *out = self.infer(frame)?;
+        Ok(())
+    }
+
     /// Run a whole batch of frames, writing one [`Inference`] per frame
     /// into `out` (resized to `frames.len()`, existing entries recycled
     /// where the implementation supports it).
     ///
-    /// The default implementation loops [`Self::infer`] sequentially;
-    /// batch-native backends override it — the simulator recycles its
-    /// scratch arenas per frame, and [`crate::sim::parallel::ShardedExecutor`]
-    /// shards the batch across worker threads. Output order always
-    /// matches input order, and results are bit-identical to calling
-    /// `infer` per frame (the `parity` suite referees this for every
-    /// registered backend).
+    /// The default implementation recycles each `out` slot through
+    /// [`Self::infer_into`] sequentially; batch-native backends override
+    /// it — the simulator recycles its scratch arenas per frame, and
+    /// [`crate::sim::parallel::ShardedExecutor`] shards the batch across
+    /// worker threads. Output order always matches input order, and
+    /// results are bit-identical to calling `infer` per frame (the
+    /// `parity` suite referees this for every registered backend).
     fn infer_batch(
         &mut self,
         frames: &[Frame],
         out: &mut Vec<Inference>,
     ) -> Result<(), EngineError> {
-        out.clear();
-        out.reserve(frames.len());
-        for frame in frames {
-            out.push(self.infer(frame)?);
+        resize_batch_out(out, frames.len());
+        for (frame, slot) in frames.iter().zip(out.iter_mut()) {
+            self.infer_into(frame, slot)?;
         }
         Ok(())
     }
 
-    /// Run an open-ended stream of frames, handing each [`Inference`] to
-    /// `sink` in input order.
+    /// Run an open-ended stream of frames, handing each consumed
+    /// [`Frame`] back to `sink` together with its [`Inference`], in
+    /// input order. The sink *returns* an output container for the
+    /// engine to reuse — the full container round trip that makes warmed
+    /// streaming allocation-free:
+    ///
+    /// ```text
+    ///   caller ──frames──▶ backend ──(frame, inference)──▶ sink
+    ///     ▲                   ▲                              │
+    ///     └── recycle frame ──┼───── recycled Inference ─────┘
+    /// ```
+    ///
+    /// A sink that does not recycle simply returns
+    /// `Inference::default()` (an empty container; the backend grows it
+    /// as needed). A sink that does — e.g. the serving layer's session
+    /// workers, which copy results into pre-sized reply slots and give
+    /// the same container straight back — keeps the steady state at
+    /// **zero heap allocations per frame** end to end, frames included
+    /// (the consumed `Frame` comes back through the sink for pooling).
     ///
     /// The default implementation pulls one frame at a time and runs
-    /// [`Self::infer`] to completion before sinking it. Streaming-native
+    /// [`Self::infer_into`] on the rotating container. Streaming-native
     /// backends override it for overlap: the pipelined simulator
     /// ([`crate::sim::pipeline::PipelinedExecutor`]) keeps several
     /// frames in flight across its self-timed layer stages, so `sink`
@@ -195,15 +245,18 @@ pub trait Backend: Send {
     /// the stream stops; inferences already delivered to `sink` remain
     /// valid.
     ///
-    /// (`&mut dyn Iterator` rather than `impl Iterator` so the trait
-    /// stays object-safe — the coordinator serves `Box<dyn Backend>`.)
+    /// (`&mut dyn Iterator` / `&mut dyn FnMut` rather than generics so
+    /// the trait stays object-safe — the coordinator serves
+    /// `Box<dyn Backend>`.)
     fn infer_stream(
         &mut self,
         frames: &mut dyn Iterator<Item = Frame>,
-        sink: &mut dyn FnMut(Inference),
+        sink: &mut dyn FnMut(Frame, Inference) -> Inference,
     ) -> Result<(), EngineError> {
+        let mut out = Inference::default();
         for frame in frames {
-            sink(self.infer(&frame)?);
+            self.infer_into(&frame, &mut out)?;
+            out = sink(frame, std::mem::take(&mut out));
         }
         Ok(())
     }
@@ -247,6 +300,21 @@ mod tests {
     #[test]
     fn frame_length_validated() {
         assert!(Frame::from_u8(2, 2, 1, vec![0; 3]).is_err());
+    }
+
+    #[test]
+    fn frame_copy_from_recycles_capacity() {
+        let src = Frame::from_u8(2, 2, 1, vec![9; 4]).unwrap();
+        let mut pooled = Frame::default();
+        assert_eq!(pooled.shape(), (0, 0, 0));
+        pooled.copy_from(&src);
+        assert_eq!(pooled, src);
+        // shrink and regrow through the same container
+        let small = Frame::from_u8(1, 1, 1, vec![3]).unwrap();
+        pooled.copy_from(&small);
+        assert_eq!(pooled, small);
+        pooled.copy_from(&src);
+        assert_eq!(pooled, src);
     }
 
     #[test]

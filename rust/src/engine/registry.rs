@@ -14,8 +14,57 @@ use crate::sim::pipeline::PipelinedExecutor;
 use crate::sim::plan::NetworkPlan;
 use crate::sim::{AccelConfig, Accelerator, LayerStats, RunStats};
 use crate::snn::network::Network;
+use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex};
+
+/// A process-wide cache of compiled [`NetworkPlan`]s keyed by
+/// [`Network::content_hash`].
+///
+/// The plan is a pure function of the network, so any two backends —
+/// across builders, worker pools, and *tenants* — that serve the same
+/// weights can share one compiled plan behind an `Arc`. The serving
+/// layer ([`crate::coordinator::Server`]) owns one `PlanCache` and hands
+/// it to every tenant's builder, so registering a second tenant with
+/// identical weights costs zero recompiles (`Arc::ptr_eq` provable; the
+/// coordinator test suite referees it). Cloning a `PlanCache` clones a
+/// handle to the same cache.
+///
+/// Compilation happens under the cache lock: two threads racing to
+/// register the same network serialize, guaranteeing exactly one
+/// compile per distinct network (plan compiles are milliseconds and
+/// happen only at registration time, never on the serving hot path).
+#[derive(Clone, Default)]
+pub struct PlanCache {
+    plans: Arc<Mutex<HashMap<u64, Arc<NetworkPlan>>>>,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The shared compiled plan for `net`: compiled on first request,
+    /// the cached `Arc` afterwards.
+    pub fn get_or_compile(&self, net: &Network) -> Arc<NetworkPlan> {
+        let key = net.content_hash();
+        let mut plans = self.plans.lock().expect("plan cache poisoned");
+        Arc::clone(
+            plans
+                .entry(key)
+                .or_insert_with(|| Arc::new(NetworkPlan::compile(net))),
+        )
+    }
+
+    /// Number of distinct compiled plans currently cached.
+    pub fn len(&self) -> usize {
+        self.plans.lock().expect("plan cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
 
 /// Every backend the registry can construct.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
@@ -109,13 +158,15 @@ pub struct EngineBuilder {
     hazard_mode: HazardMode,
     clock_hz: f64,
     // Sim backends share ONE compiled NetworkPlan: it is a pure function
-    // of the network, so the builder caches it on first sim build and
-    // every later build (e.g. a whole coordinator pool) reuses the Arc
-    // instead of recompiling the weight banks per worker. The cell is
-    // itself behind an Arc so builder CLONES share the cache too — the
-    // idiomatic `builder.clone().threads(T).build(..)` pattern must not
-    // recompile (`clones_share_the_plan_cache` referees this).
-    plan: Arc<OnceLock<Arc<NetworkPlan>>>,
+    // of the network, so the builder resolves it through a PlanCache
+    // (keyed by network content hash) and every later build — a whole
+    // coordinator pool, a clone, or another builder handed the same
+    // cache — reuses the Arc instead of recompiling the weight banks per
+    // worker. The cache handle is Arc-backed, so builder CLONES share it
+    // (`clones_share_the_plan_cache` referees this), and the serving
+    // layer injects its server-wide cache via `plan_cache` so same-weight
+    // TENANTS share one plan too.
+    plans: PlanCache,
     // Only the PJRT backend reads this; keep the builder API identical
     // in both configurations.
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
@@ -131,18 +182,23 @@ impl EngineBuilder {
             pipeline: 0,
             hazard_mode: HazardMode::ForwardAndStall,
             clock_hz: CLOCK_HZ,
-            plan: Arc::new(OnceLock::new()),
+            plans: PlanCache::new(),
             artifacts: None,
         }
     }
 
     /// The shared compiled plan for sim backends (compiled once per
-    /// builder, however many workers are built from it).
-    fn sim_plan(&self) -> Arc<NetworkPlan> {
-        Arc::clone(
-            self.plan
-                .get_or_init(|| Arc::new(NetworkPlan::compile(&self.net))),
-        )
+    /// plan cache, however many workers or builders share it).
+    pub fn sim_plan(&self) -> Arc<NetworkPlan> {
+        self.plans.get_or_compile(&self.net)
+    }
+
+    /// Resolve compiled plans through a shared [`PlanCache`] instead of
+    /// this builder's private one — how the multi-tenant server makes
+    /// same-weight tenants share a single compiled plan.
+    pub fn plan_cache(mut self, cache: PlanCache) -> Self {
+        self.plans = cache;
+        self
     }
 
     /// ×P parallelization of the simulated accelerator (ignored by the
@@ -642,13 +698,41 @@ mod tests {
             .map(|i| Frame::from_u8(28, 28, 1, vec![70 * i as u8 + 9; 784]).unwrap())
             .collect();
         let mut got = Vec::new();
+        let mut returned = Vec::new();
         backend
-            .infer_stream(&mut frames.iter().cloned(), &mut |inf| got.push(inf))
+            .infer_stream(&mut frames.iter().cloned(), &mut |frame, inf| {
+                returned.push(frame);
+                got.push(inf);
+                Inference::default()
+            })
             .unwrap();
         assert_eq!(got.len(), 3);
+        // the stream hands every consumed frame back through the sink
+        assert_eq!(returned, frames);
         for (frame, g) in frames.iter().zip(&got) {
             assert_eq!(g.logits, backend.infer(frame).unwrap().logits);
         }
+    }
+
+    #[test]
+    fn plan_cache_shares_plans_by_content() {
+        // Two distinct Network allocations with identical parameters
+        // resolve to ONE compiled plan; different parameters do not.
+        let cache = PlanCache::new();
+        let a = random_network(21);
+        let b = random_network(21);
+        let c = random_network(22);
+        let pa = cache.get_or_compile(&a);
+        let pb = cache.get_or_compile(&b);
+        let pc = cache.get_or_compile(&c);
+        assert!(Arc::ptr_eq(&pa, &pb), "same weights must share one plan");
+        assert!(!Arc::ptr_eq(&pa, &pc), "different weights must not alias");
+        assert_eq!(cache.len(), 2);
+        // builders handed the same cache share plans across builders too
+        let builder_a = EngineBuilder::new(Arc::new(a)).plan_cache(cache.clone());
+        let builder_b = EngineBuilder::new(Arc::new(b)).plan_cache(cache.clone());
+        assert!(Arc::ptr_eq(&builder_a.sim_plan(), &builder_b.sim_plan()));
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

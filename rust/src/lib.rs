@@ -113,17 +113,18 @@
 //! the PE array. Frames then overlap: while frame *i* is in conv2,
 //! frame *i+1* is in conv1 and frame *i+2* is being encoded.
 //! [`engine::Backend::infer_stream`] is the natural entry point
-//! (iterator in, sink out, results in input order); `infer_batch` on a
-//! pipelined backend streams the batch through the same path, which is
-//! how coordinator workers built with `ServerConfig::pipeline` dispatch
-//! their drained batches. Results stay bit-identical to sequential
-//! `infer` for every depth (parity suite: batches {0, 1, 7, 64} ×
-//! depths {1, 2, full}). On the batch path the warmed pipeline is
-//! allocation-free per frame — results swap into recycled containers,
-//! and `zero_alloc` proves the marginal cost of an extra streamed
-//! frame is zero allocations (`infer_stream` hands each `Inference` to
-//! the sink by value, so that path allocates the one small output
-//! container per frame, never per-event traffic).
+//! (iterator in, sink out, results in input order — the sink receives
+//! each consumed frame back with its result and returns a container for
+//! the engine to recycle); `infer_batch` on a pipelined backend streams
+//! the batch through the same path, and serving-layer workers built
+//! with [`coordinator::TenantConfig`]`::pipeline` keep one stream call
+//! alive for as long as their tenant has frames queued (§Serving).
+//! Results stay bit-identical to sequential `infer` for every depth
+//! (parity suite: batches {0, 1, 7, 64} × depths {1, 2, full}). Warmed
+//! streaming is allocation-free per frame on both paths — batch results
+//! swap into recycled containers, stream results ride the sink's
+//! container round trip — and `zero_alloc` proves the marginal cost of
+//! an extra streamed frame is zero allocations.
 //!
 //! Choosing between the axes:
 //!
@@ -144,6 +145,83 @@
 //!   `benches/perf.rs` tracks `images_per_sec_pipelined` plus the
 //!   pipeline's fill/drain latency in `BENCH_sim.json`, hard-gated in
 //!   CI.
+//!
+//! ## Serving
+//!
+//! The serving layer ([`coordinator`]) turns the engine into a
+//! **multi-tenant streaming service**, following the paper's self-timed
+//! principle end to end: hardware stays busy while spikes keep
+//! arriving, so the serving layer keeps frames arriving — long-lived
+//! sessions instead of one-shot request/reply batches, and a
+//! **persistent** worker pool parked on a shared injector instead of
+//! per-dispatch thread spawns.
+//!
+//! * [`coordinator::Server::register_tenant`] registers a network plus
+//!   a [`coordinator::TenantConfig`]: an admission quota
+//!   (`max_inflight` — feeding past it is a typed
+//!   [`engine::EngineError::TenantOverQuota`], never a hang), a
+//!   weighted-fair share (`weight` — the injector visits a weight-3
+//!   tenant's queue three times per weight-1 visit, so one chatty
+//!   tenant cannot starve the rest), and the backend knobs
+//!   (`backend`/`lanes`/`threads`/`pipeline`). Compiled plans resolve
+//!   through a server-wide [`engine::PlanCache`] keyed by network
+//!   content hash: **two tenants with the same weights share one
+//!   compiled plan** (`Arc::ptr_eq`-provable).
+//! * [`coordinator::Server::open_session`] returns a
+//!   [`coordinator::Session`]: `feed(&frame)` → ordered
+//!   `poll()`/`recv()` → `finish()`. Results are delivered through a
+//!   pre-sized reorder ring with recycled response containers, so a
+//!   warmed session adds **zero heap allocations per frame** (the
+//!   `zero_alloc` suite referees the full path).
+//! * Dispatch routes through [`engine::Backend::infer_stream`]: a
+//!   worker keeps pulling from its tenant's queue while no other tenant
+//!   is waiting, so pipelined workers stay filled **across batch and
+//!   session boundaries** (`MetricsSnapshot::stream_pulls` counts it).
+//! * Shutdown is typed: [`coordinator::Server::shutdown`] answers
+//!   everything still queued with [`engine::EngineError::Shutdown`] and
+//!   joins the pool; [`coordinator::Server::drain`] serves the backlog
+//!   first. The single-tenant `Coordinator` remains as a deprecated
+//!   shim over a one-tenant server.
+//!
+//! ```
+//! use sacsnn::coordinator::{Server, ServerConfig, TenantConfig};
+//! use sacsnn::engine::Frame;
+//! use sacsnn::snn::network::testutil::random_network;
+//! use std::sync::Arc;
+//!
+//! # fn main() -> sacsnn::Result<()> {
+//! let server = Server::start(ServerConfig { workers: 2, batch_size: 4, ..Default::default() })?;
+//!
+//! // Two tenants registered with IDENTICAL weights share one compiled plan.
+//! let cfg = TenantConfig { max_inflight: 8, lanes: 2, ..Default::default() };
+//! let a = server.register_tenant(Arc::new(random_network(7)), cfg.clone())?;
+//! let b = server.register_tenant(Arc::new(random_network(7)), cfg.clone())?;
+//! assert!(Arc::ptr_eq(&server.tenant_plan(a)?, &server.tenant_plan(b)?));
+//!
+//! // Stream frames through a session; results come back in feed order.
+//! let mut session = server.open_session(a)?;
+//! let frame = Frame::from_u8(28, 28, 1, vec![64; 784])?;
+//! for _ in 0..3 {
+//!     session.feed(&frame)?; // typed admission: quota → TenantOverQuota
+//! }
+//! let mut seqs = Vec::new();
+//! while let Some(reply) = session.recv() {
+//!     let resp = reply?; // typed errors — a reply is never silently dropped
+//!     assert!(resp.pred < 10);
+//!     seqs.push(resp.id);
+//! }
+//! assert_eq!(seqs, vec![0, 1, 2]);
+//! server.shutdown();
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Quota and fairness semantics in one line each: `max_inflight` bounds
+//! a tenant's queued + in-flight frames (admission control, enforced at
+//! `feed`); `weight` sets the tenant's share of worker visits under
+//! contention (weighted round-robin, `batch_size` frames per visit).
+//! `sacsnn serve --tenants N` (and `bench --tenants N`) exercise all of
+//! it from the CLI, with per-tenant metrics in the JSON snapshot.
 //!
 //! ## Module map
 //!
@@ -179,15 +257,16 @@
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas golden
 //!   model (HLO text artifacts), used for spike-exact cross-checks.
 //!   Gated behind the `pjrt` cargo feature; stubbed otherwise.
-//! * [`coordinator`] — an inference service (router, dynamic batcher,
-//!   worker pool) that dispatches whole batches through
-//!   `Backend::infer_batch` to any `Box<dyn Backend>` — including
+//! * [`coordinator`] — the multi-tenant serving layer (§Serving): a
+//!   persistent [`coordinator::Server`] with per-tenant queues,
+//!   weighted-fair draining, a content-hash plan cache, and streaming
+//!   [`coordinator::Session`]s that route through
+//!   `Backend::infer_stream` to any `Box<dyn Backend>` — including
 //!   heterogeneous pools, multi-core
 //!   [`sim::parallel::ShardedExecutor`] workers and self-timed
-//!   [`sim::pipeline::PipelinedExecutor`] workers (whose batch dispatch
-//!   streams through the layer pipeline) — with typed failure
-//!   containment (`EngineError::WorkerPanicked`) and per-batch
-//!   latency/throughput metrics.
+//!   [`sim::pipeline::PipelinedExecutor`] workers — with typed failure
+//!   containment (`EngineError::WorkerPanicked`, typed `Shutdown`
+//!   drains) and global + per-tenant metrics.
 //! * [`artifact`] — readers for the build-time artifacts (tensor archives,
 //!   `meta.json`).
 //! * [`report`] — the paper's tables/figures plus golden cross-checks,

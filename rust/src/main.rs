@@ -9,9 +9,10 @@
 //! sacsnn eval       [--backend sim] [--dataset mnist] [--bits 8] [--lanes 8] [--n 200]
 //!                   [--batch 16] [--threads 1] [--pipeline 0|N|full]
 //! sacsnn serve      [--backend sim] [--workers 4] [--lanes 8] [--threads 1]
-//!                   [--pipeline 0|N|full] [--batch 16] [--requests 200] [--json]
+//!                   [--pipeline 0|N|full] [--batch 16] [--requests 200]
+//!                   [--tenants 1] [--queue-depth 256] [--json]
 //! sacsnn bench      [--backend sim] [--lanes 8] [--threads 4] [--batch 64] [--n 128]
-//!                   [--pipeline 0|N|full]
+//!                   [--pipeline 0|N|full] [--tenants 0]
 //! sacsnn golden     [--backend sim] [--n 10]   backend vs AOT JAX model (PJRT)
 //! sacsnn backends                              list registered backends
 //! sacsnn table1|table2|table3|table4|table5|fig12|ablate
@@ -31,8 +32,16 @@
 //! (and, with `--pipeline`, pipelined) images/sec and reports scaling
 //! efficiency — it always runs, falling back to a seeded synthetic
 //! workload when artifacts are missing.
+//!
+//! Multi-tenant serving (see `lib.rs` §Serving): `serve --tenants N`
+//! registers N tenants over the same weights on one `Server` — sharing
+//! ONE compiled plan — streams the request load round-robin through N
+//! sessions, and reports per-tenant metrics (queue depth, images/s,
+//! quota rejections) in the text summary and the `--json` snapshot.
+//! `bench --tenants N` adds a served-throughput row over the same
+//! multi-tenant setup.
 
-use sacsnn::coordinator::{Coordinator, ServerConfig};
+use sacsnn::coordinator::{Server, ServerConfig, Session};
 use sacsnn::data::Dataset;
 use sacsnn::engine::{Backend as _, BackendKind, EngineBuilder, EngineError};
 use sacsnn::report;
@@ -251,6 +260,25 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Feed `frame` into `session` via the canonical backpressure loop
+/// ([`Session::feed_yielding`]), recording the latency of any result
+/// taken along the way and propagating its error, if one arrives.
+fn feed_with_backpressure(
+    session: &mut Session,
+    frame: &sacsnn::engine::Frame,
+    latencies: &mut Vec<u64>,
+) -> Result<()> {
+    let mut failed: Option<EngineError> = None;
+    session.feed_yielding(frame, &mut |reply| match reply {
+        Ok(r) => latencies.push(r.queue_wait_us + r.service_us),
+        Err(e) => failed = Some(e),
+    })?;
+    match failed {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let dataset = args.get_str("dataset", "mnist");
     let bits: u32 = args.get("bits", 8)?;
@@ -263,51 +291,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_depth: args.get("queue-depth", 256)?,
         batch_size: args.get("batch", 16)?,
     };
+    let tenants: usize = args.get("tenants", 1)?;
+    let tenants = tenants.max(1);
     let requests: usize = args.get("requests", 200)?;
     let (net, ds) = load_env(&dataset, bits)?;
-    let coord = Coordinator::start(Arc::clone(&net), cfg.clone())?;
+
+    // One Server, N tenants over the SAME weights: the plan cache
+    // compiles exactly one NetworkPlan however many tenants register.
+    let server = Server::start(cfg.clone())?;
+    let tenant_cfg = cfg.tenant_defaults();
+    let mut sessions: Vec<Session> = Vec::with_capacity(tenants);
+    for _ in 0..tenants {
+        let tenant = server.register_tenant(Arc::clone(&net), tenant_cfg.clone())?;
+        sessions.push(server.open_session(tenant)?);
+    }
+
     let t0 = Instant::now();
-    let mut replies = Vec::with_capacity(requests);
+    let mut latencies = Vec::with_capacity(requests);
     for i in 0..requests {
         let frame = report::frame_for(&net, &ds, i % ds.n_test())?;
-        replies.push(coord.submit(frame)?);
+        feed_with_backpressure(&mut sessions[i % tenants], &frame, &mut latencies)?;
     }
-    let mut latencies = Vec::with_capacity(replies.len());
-    for rx in replies {
-        let r = rx.recv().map_err(|_| EngineError::Closed)??;
-        latencies.push(r.queue_wait_us + r.service_us);
+    for session in sessions {
+        for reply in session.finish() {
+            let r = reply?;
+            latencies.push(r.queue_wait_us + r.service_us);
+        }
     }
     let wall = t0.elapsed();
     latencies.sort_unstable();
     let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
-    let snap = coord.metrics.snapshot();
+    let snap = server.snapshot();
     if args.has("json") {
         println!("{}", snap.to_json());
     } else {
         println!(
-            "served {requests} requests in {:.2} s  ({:.0} req/s) with {} × [{}] workers \
-             (×{} lanes, {} shard threads each)",
+            "served {requests} requests in {:.2} s  ({:.0} req/s): {} workers × [{}] \
+             (×{} lanes, {} shard threads, pipeline {}), {} tenant(s) sharing {} compiled plan(s)",
             wall.as_secs_f64(),
             requests as f64 / wall.as_secs_f64(),
             cfg.workers,
             cfg.backend,
             cfg.lanes,
             cfg.threads.max(1),
+            cfg.pipeline,
+            tenants,
+            server.cached_plans(),
         );
         println!(
-            "latency p50 {} µs, p95 {} µs, p99 {} µs; mean batch {:.2}; mean sim cycles {:.0}",
+            "latency p50 {} µs, p95 {} µs, p99 {} µs; mean batch {:.2}; \
+             stream pulls {}; mean sim cycles {:.0}",
             pct(0.50),
             pct(0.95),
             pct(0.99),
-            snap.mean_batch,
-            snap.mean_sim_cycles,
+            snap.service.mean_batch,
+            snap.service.stream_pulls,
+            snap.service.mean_sim_cycles,
         );
         println!(
             "batch dispatch: mean {:.0} µs, max {} µs, worker-side {:.1} images/s",
-            snap.mean_batch_service_us, snap.max_batch_service_us, snap.batch_images_per_sec,
+            snap.service.mean_batch_service_us,
+            snap.service.max_batch_service_us,
+            snap.service.batch_images_per_sec,
         );
+        for t in &snap.tenants {
+            println!(
+                "  tenant {}: completed {}, failed {}, quota rejections {}, \
+                 queue depth {}, {:.1} images/s",
+                t.tenant, t.completed, t.failed, t.quota_rejected, t.queue_depth, t.images_per_sec,
+            );
+        }
     }
-    coord.shutdown();
+    server.shutdown();
     Ok(())
 }
 
@@ -378,38 +433,76 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // --threads / --pipeline only apply to the sim backend; printing a
     // "speedup" for a backend that ignores the knobs would present noise
     // as scaling data.
-    if kind != BackendKind::Sim {
-        if threads > 1 || pipeline > 0 {
-            println!(
-                "  ({} ignores --threads/--pipeline; remaining rows skipped)",
-                kind.name()
-            );
-        }
-        return Ok(());
-    }
-    if threads > 1 {
-        let multi = run(threads, 0)?;
-        let speedup = multi / single;
-        println!(
-            "  {threads} threads: {multi:>9.1} images/s   speedup ×{speedup:.2}   \
-             scaling efficiency {:.0}%",
-            100.0 * speedup / threads as f64
-        );
-    }
-    if pipeline > 0 {
-        let piped = run(1, pipeline)?;
-        println!(
-            "  pipelined: {piped:>9.1} images/s   speedup ×{:.2}   (self-timed layer stages)",
-            piped / single
-        );
+    if kind == BackendKind::Sim {
         if threads > 1 {
-            let both = run(threads, pipeline)?;
+            let multi = run(threads, 0)?;
+            let speedup = multi / single;
             println!(
-                "  {threads} pipelines: {both:>9.1} images/s   speedup ×{:.2}   \
-                 (replicated-pipeline pool)",
-                both / single
+                "  {threads} threads: {multi:>9.1} images/s   speedup ×{speedup:.2}   \
+                 scaling efficiency {:.0}%",
+                100.0 * speedup / threads as f64
             );
         }
+        if pipeline > 0 {
+            let piped = run(1, pipeline)?;
+            println!(
+                "  pipelined: {piped:>9.1} images/s   speedup ×{:.2}   (self-timed layer stages)",
+                piped / single
+            );
+            if threads > 1 {
+                let both = run(threads, pipeline)?;
+                println!(
+                    "  {threads} pipelines: {both:>9.1} images/s   speedup ×{:.2}   \
+                     (replicated-pipeline pool)",
+                    both / single
+                );
+            }
+        }
+    } else if threads > 1 || pipeline > 0 {
+        println!(
+            "  ({} ignores --threads/--pipeline; shard/pipeline rows skipped)",
+            kind.name()
+        );
+    }
+
+    // --tenants N: the served-throughput row — the same frames pushed
+    // through a multi-tenant Server (N tenants over the same weights →
+    // one compiled plan) with `threads` persistent workers.
+    let tenants: usize = args.get("tenants", 0)?;
+    if tenants > 0 {
+        let quota = (batch * 4).max(16);
+        let server_cfg = ServerConfig {
+            workers: threads,
+            backend: kind,
+            lanes,
+            threads: 1,
+            pipeline,
+            queue_depth: quota,
+            batch_size: batch,
+        };
+        let tenant_cfg = server_cfg.tenant_defaults();
+        let server = Server::start(server_cfg)?;
+        let mut sessions: Vec<Session> = Vec::with_capacity(tenants);
+        for _ in 0..tenants {
+            let tenant = server.register_tenant(Arc::clone(&net), tenant_cfg.clone())?;
+            sessions.push(server.open_session(tenant)?);
+        }
+        let mut sink = Vec::new();
+        let t0 = Instant::now();
+        for (i, frame) in frames.iter().enumerate() {
+            feed_with_backpressure(&mut sessions[i % tenants], frame, &mut sink)?;
+        }
+        let mut served = sink.len();
+        for session in sessions {
+            served += session.finish().into_iter().filter(|r| r.is_ok()).count();
+        }
+        let ips = served as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "  {tenants} tenants / {threads} workers (served): {ips:>9.1} images/s   \
+             ({} compiled plan(s) shared)",
+            server.cached_plans()
+        );
+        server.shutdown();
     }
     Ok(())
 }

@@ -63,6 +63,12 @@ pub struct Accelerator {
     mem: MultiMem,
     conv: ConvUnit,
     thresh: ThresholdUnit,
+    /// Rotating output container of the streaming path, persistent
+    /// across `infer_stream` calls so repeated warmed streams stay
+    /// allocation-free (a fresh per-call container would cost one grow
+    /// per dispatch — nondeterministically many under a serving layer
+    /// that splits a session into dispatches).
+    stream_out: Inference,
 }
 
 impl Accelerator {
@@ -91,6 +97,7 @@ impl Accelerator {
             scratch,
             net,
             cfg,
+            stream_out: Inference::default(),
         }
     }
 
@@ -389,6 +396,39 @@ impl Backend for Accelerator {
     fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError> {
         let img = check_frame(frame, self.input_shape())?;
         Ok(self.infer_image(img))
+    }
+
+    /// Zero-allocation override: the execute step writes straight into
+    /// the recycled container ([`Accelerator::infer_image_into`]), so a
+    /// warmed `out` costs no heap traffic — this is the primitive the
+    /// default `infer_stream` (and the serving layer's session workers)
+    /// rotate their containers through.
+    fn infer_into(&mut self, frame: &Frame, out: &mut Inference) -> Result<(), EngineError> {
+        let img = check_frame(frame, self.input_shape())?;
+        self.infer_image_into(img, out);
+        Ok(())
+    }
+
+    /// Streaming override: same per-frame rotation as the trait default,
+    /// but the rotating container persists on the accelerator across
+    /// calls — so a recycling sink keeps EVERY warmed stream dispatch at
+    /// zero heap allocations, not just frames after the first (the
+    /// `zero_alloc` suite measures the serving layer through this path).
+    fn infer_stream(
+        &mut self,
+        frames: &mut dyn Iterator<Item = Frame>,
+        sink: &mut dyn FnMut(Frame, Inference) -> Inference,
+    ) -> Result<(), EngineError> {
+        let mut out = std::mem::take(&mut self.stream_out);
+        let result = (|| -> Result<(), EngineError> {
+            for frame in frames {
+                self.infer_into(&frame, &mut out)?;
+                out = sink(frame, std::mem::take(&mut out));
+            }
+            Ok(())
+        })();
+        self.stream_out = out;
+        result
     }
 
     /// Batch-native override: recycles each `out` slot through the

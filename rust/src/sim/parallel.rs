@@ -39,9 +39,12 @@
 //! tens of microseconds, amortized over multi-millisecond batches — in
 //! exchange for a pool with no idle threads, no shutdown protocol, and
 //! borrow-checked access to the caller's frames/outputs with no channel
-//! copies. If profiling ever shows dispatch overhead mattering (very
-//! small batches at very high rates), a persistent shard pool behind
-//! the same `infer_batch_into` signature is the upgrade path.
+//! copies. The *serving* layer has taken the persistent-pool upgrade
+//! path this note used to point at: [`crate::coordinator::Server`] keeps
+//! its workers parked on a shared injector across batches and sessions,
+//! so dispatch-level spawn cost is gone where small batches at high
+//! rates actually occur; the scoped spawns here remain the
+//! intra-dispatch mechanism, amortized over whole batches.
 
 use crate::engine::{
     check_frame, resize_batch_out, Backend, BackendKind, CycleModel, EngineError, Frame, Inference,
@@ -63,6 +66,10 @@ use std::sync::Arc;
 /// executor changes *host* throughput only, never what is modeled.
 pub struct ShardedExecutor {
     workers: Vec<Accelerator>,
+    /// Chunk buffers of the streaming override (persistent across calls
+    /// so a warmed stream stays allocation-free).
+    stream_frames: Vec<Frame>,
+    stream_outs: Vec<Inference>,
 }
 
 impl ShardedExecutor {
@@ -85,7 +92,7 @@ impl ShardedExecutor {
         let workers = (0..threads.max(1))
             .map(|_| Accelerator::with_plan(Arc::clone(&net), Arc::clone(&plan), cfg))
             .collect();
-        ShardedExecutor { workers }
+        ShardedExecutor { workers, stream_frames: Vec::new(), stream_outs: Vec::new() }
     }
 
     /// Number of worker threads the batch path shards across.
@@ -229,6 +236,10 @@ impl<'a> OutSlots<'a> {
 /// [`EngineBuilder::threads`]: crate::engine::EngineBuilder::threads
 pub struct PipelinePool {
     pipes: Vec<PipelinedExecutor>,
+    /// Chunk buffers of the streaming override (persistent across calls
+    /// so a warmed stream stays allocation-free).
+    stream_frames: Vec<Frame>,
+    stream_outs: Vec<Inference>,
 }
 
 impl PipelinePool {
@@ -246,7 +257,7 @@ impl PipelinePool {
                 PipelinedExecutor::with_plan(Arc::clone(&net), Arc::clone(&plan), cfg, depth)
             })
             .collect();
-        PipelinePool { pipes }
+        PipelinePool { pipes, stream_frames: Vec::new(), stream_outs: Vec::new() }
     }
 
     /// Number of replicated pipelines.
@@ -311,6 +322,38 @@ impl PipelinePool {
     }
 }
 
+/// The shared chunked streaming loop behind both pool executors'
+/// `infer_stream` overrides: pull up to `chunk_cap` frames from the
+/// stream, run the chunk through `dispatch` (the executor's batch
+/// fan-out), hand results — with their frames — to the sink in input
+/// order, repeat until the stream runs dry. `buf`/`outs` are the
+/// caller's persistent buffers, so a warmed stream recycles everything.
+fn chunked_stream(
+    chunk_cap: usize,
+    buf: &mut Vec<Frame>,
+    outs: &mut Vec<Inference>,
+    frames: &mut dyn Iterator<Item = Frame>,
+    sink: &mut dyn FnMut(Frame, Inference) -> Inference,
+    mut dispatch: impl FnMut(&[Frame], &mut Vec<Inference>) -> Result<(), EngineError>,
+) -> Result<(), EngineError> {
+    loop {
+        buf.clear();
+        while buf.len() < chunk_cap {
+            match frames.next() {
+                Some(frame) => buf.push(frame),
+                None => break,
+            }
+        }
+        if buf.is_empty() {
+            return Ok(());
+        }
+        dispatch(buf, outs)?;
+        for (frame, slot) in buf.drain(..).zip(outs.iter_mut()) {
+            *slot = sink(frame, std::mem::take(slot));
+        }
+    }
+}
+
 impl Backend for PipelinePool {
     fn name(&self) -> &'static str {
         BackendKind::Sim.name()
@@ -340,15 +383,29 @@ impl Backend for PipelinePool {
         self.infer_batch_into(frames, out)
     }
 
-    /// A single totally-ordered stream cannot be replicated without
-    /// reordering, so it flows through one pipeline with full overlap;
-    /// replication pays off on the batch path.
+    /// Chunked replication override: the stream is consumed in chunks of
+    /// `pipes × 8` frames, each chunk split contiguously across the
+    /// replicated pipelines via [`PipelinePool::infer_batch_into`], and
+    /// results (with their frames) handed to the sink in input order —
+    /// so a `threads × pipeline` tenant keeps its full fan-out under the
+    /// serving layer's streaming dispatch (a plain `pipes[0]` delegate
+    /// would idle every other pipeline). Larger chunks than the sharded
+    /// executor's because each chunk dispatch spawns `pipes × depth`
+    /// scoped stage threads to amortize.
     fn infer_stream(
         &mut self,
         frames: &mut dyn Iterator<Item = Frame>,
-        sink: &mut dyn FnMut(Inference),
+        sink: &mut dyn FnMut(Frame, Inference) -> Inference,
     ) -> Result<(), EngineError> {
-        self.pipes[0].infer_stream(frames, sink)
+        let mut buf = std::mem::take(&mut self.stream_frames);
+        let mut outs = std::mem::take(&mut self.stream_outs);
+        let chunk_cap = self.pipes.len() * 8;
+        let result = chunked_stream(chunk_cap, &mut buf, &mut outs, frames, sink, |b, o| {
+            self.infer_batch_into(b, o)
+        });
+        self.stream_frames = buf;
+        self.stream_outs = outs;
+        result
     }
 }
 
@@ -373,12 +430,43 @@ impl Backend for ShardedExecutor {
         self.workers[0].infer(frame)
     }
 
+    /// Inline single-frame recycling path (worker 0) — keeps the
+    /// executor's `infer_into`/default-stream path allocation-free, same
+    /// as a plain sim backend.
+    fn infer_into(&mut self, frame: &Frame, out: &mut Inference) -> Result<(), EngineError> {
+        self.workers[0].infer_into(frame, out)
+    }
+
     fn infer_batch(
         &mut self,
         frames: &[Frame],
         out: &mut Vec<Inference>,
     ) -> Result<(), EngineError> {
         self.infer_batch_into(frames, out)
+    }
+
+    /// Chunked sharding override: the stream is consumed in chunks of
+    /// `threads × 4` frames, each chunk fanned across the worker pool
+    /// via [`ShardedExecutor::infer_batch_into`], and results (with
+    /// their frames) handed to the sink in input order. This keeps the
+    /// multi-core fan-out effective under the serving layer's streaming
+    /// dispatch while bounding reply latency per chunk; buffers and sink
+    /// containers are recycled, so a warmed stream adds no allocations
+    /// per frame beyond the scoped shard-thread spawns.
+    fn infer_stream(
+        &mut self,
+        frames: &mut dyn Iterator<Item = Frame>,
+        sink: &mut dyn FnMut(Frame, Inference) -> Inference,
+    ) -> Result<(), EngineError> {
+        let mut buf = std::mem::take(&mut self.stream_frames);
+        let mut outs = std::mem::take(&mut self.stream_outs);
+        let chunk_cap = self.workers.len() * 4;
+        let result = chunked_stream(chunk_cap, &mut buf, &mut outs, frames, sink, |b, o| {
+            self.infer_batch_into(b, o)
+        });
+        self.stream_frames = buf;
+        self.stream_outs = outs;
+        result
     }
 }
 
@@ -516,6 +604,39 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_pool_stream_matches_sequential() {
+        // The pool's chunked streaming override must keep every pipeline
+        // busy while staying bit-identical and in input order, frames
+        // riding back through the sink.
+        let net = Arc::new(random_network(911));
+        let plan = Arc::new(NetworkPlan::compile(&net));
+        let batch = frames(&net, 13, 61);
+        let mut seq = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want: Vec<Inference> = batch.iter().map(|f| seq.infer(f).unwrap()).collect();
+        let mut pool = PipelinePool::with_plan(
+            Arc::clone(&net),
+            plan,
+            AccelConfig::default(),
+            2,
+            3,
+        );
+        let mut got = Vec::new();
+        let mut back = Vec::new();
+        Backend::infer_stream(&mut pool, &mut batch.iter().cloned(), &mut |frame, inf| {
+            back.push(frame);
+            got.push(inf);
+            Inference::default()
+        })
+        .unwrap();
+        assert_eq!(back, batch, "frames must ride back through the sink in order");
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.logits, w.logits, "frame {i}");
+            assert_eq!(g.stats, w.stats, "frame {i}");
+        }
+    }
+
+    #[test]
     fn pipeline_pool_rejects_malformed_before_dispatch() {
         let net = Arc::new(random_network(909));
         let plan = Arc::new(NetworkPlan::compile(&net));
@@ -535,6 +656,32 @@ mod tests {
         let mut out = vec![Inference::default(); 2];
         pool.infer_batch_into(&[], &mut out).unwrap();
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn sharded_stream_chunks_match_sequential() {
+        // The streaming override shards in chunks but must stay
+        // bit-identical to sequential inference, deliver in input
+        // order, and hand every consumed frame back through the sink.
+        let net = Arc::new(random_network(910));
+        let batch = frames(&net, 11, 51);
+        let mut seq = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+        let want: Vec<Inference> = batch.iter().map(|f| seq.infer(f).unwrap()).collect();
+        let mut pool = ShardedExecutor::new(Arc::clone(&net), AccelConfig::default(), 3);
+        let mut got = Vec::new();
+        let mut back = Vec::new();
+        Backend::infer_stream(&mut pool, &mut batch.iter().cloned(), &mut |frame, inf| {
+            back.push(frame);
+            got.push(inf);
+            Inference::default()
+        })
+        .unwrap();
+        assert_eq!(back, batch, "frames must ride back through the sink in order");
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.logits, w.logits, "frame {i}");
+            assert_eq!(g.stats, w.stats, "frame {i}");
+        }
     }
 
     #[test]

@@ -28,9 +28,12 @@
 //!   into the recycled output vec, so a warmed constant-size batch
 //!   performs no heap allocation at all (the `zero_alloc` suite proves
 //!   the marginal cost of an extra streamed frame is exactly zero
-//!   allocations). `infer_stream` hands *ownership* of each
-//!   [`Inference`] to the sink, so it allocates that one small output
-//!   container per frame — O(layers + t_steps), never per-event.
+//!   allocations). `infer_stream` hands each consumed [`Frame`] back to
+//!   the sink with its [`Inference`] and takes the sink's returned
+//!   container into the slab, so a recycling sink (the serving layer's
+//!   session workers) streams with zero allocations per frame too; a
+//!   non-recycling sink costs one small output container per frame —
+//!   O(layers + t_steps), never per-event.
 //! * Each stage owns a private **partition of the scratch state** —
 //!   its own [`MultiMem`] (sized for just its layers), conv/threshold
 //!   units and two local ping-pong queue buffers — replacing the
@@ -51,9 +54,15 @@
 //! frame, and scoping lets stages borrow the executor's stage state
 //! and the compiled plan directly — no `Arc` cloning, no shutdown
 //! protocol (channel closure is the whole protocol, exactly like the
-//! coordinator). If profiling ever shows call setup mattering (many
-//! tiny streams), a persistent stage pool behind the same entry points
-//! is the upgrade path.
+//! coordinator). The *serving* layer has taken the persistent-pool
+//! upgrade path this note used to point at:
+//! [`crate::coordinator::Server`] parks its workers on a shared
+//! injector and keeps one `infer_stream` call alive for as long as a
+//! tenant has frames queued, so a pipelined worker's stages stay
+//! filled across batch and session boundaries instead of draining at
+//! every dispatch. Many tiny *independent* streams would still pay the
+//! per-call setup here; a persistent stage pool behind the same entry
+//! points remains the upgrade path for that shape.
 
 use crate::engine::{
     check_frame, resize_batch_out, Backend, BackendKind, CycleModel, EngineError, Frame, Inference,
@@ -67,7 +76,6 @@ use crate::sim::scheduler::{process_layer_planned, LayerQueues};
 use crate::sim::threshold_unit::ThresholdUnit;
 use crate::sim::AccelConfig;
 use crate::snn::network::Network;
-use std::borrow::Borrow;
 use std::ops::Range;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -97,6 +105,11 @@ struct Slab {
     /// The partially-accumulated result; stages append their layers'
     /// stats as the slab passes through.
     out: Inference,
+    /// The consumed input frame, riding along when the stream was fed
+    /// owned frames (`infer_stream`): the sink takes it back with the
+    /// result, closing the container round trip. `None` on the borrowed
+    /// batch paths.
+    frame: Option<Frame>,
 }
 
 impl Slab {
@@ -106,7 +119,37 @@ impl Slab {
             queues: LayerQueues::new(plan.max_queue_channels.max(1), plan.t_steps),
             events: 0,
             out: Inference::default(),
+            frame: None,
         }
+    }
+}
+
+/// Frames enter a stream either **borrowed** (batch slices — the caller
+/// keeps them; nothing to hand back) or **owned** (`infer_stream` — the
+/// consumed [`Frame`] rides its slab to the delivery point so the sink
+/// can take ownership back and recycle the container).
+trait StreamInput {
+    fn frame(&self) -> &Frame;
+    fn into_owned(self) -> Option<Frame>;
+}
+
+impl StreamInput for &Frame {
+    fn frame(&self) -> &Frame {
+        self
+    }
+
+    fn into_owned(self) -> Option<Frame> {
+        None
+    }
+}
+
+impl StreamInput for Frame {
+    fn frame(&self) -> &Frame {
+        self
+    }
+
+    fn into_owned(self) -> Option<Frame> {
+        Some(self)
     }
 }
 
@@ -386,7 +429,7 @@ impl PipelinedExecutor {
     /// one scoped worker per stage, deliver finished slabs in feed order
     /// through `deliver` (which extracts/swaps the result and must leave
     /// the slab reusable).
-    fn stream_core<F: Borrow<Frame>>(
+    fn stream_core<F: StreamInput>(
         &mut self,
         frames: impl Iterator<Item = F>,
         deliver: &mut dyn FnMut(&mut Slab),
@@ -450,14 +493,13 @@ impl PipelinedExecutor {
             let mut delivered = 0usize;
             let mut feed_err: Option<EngineError> = None;
             for f in frames {
-                let frame = f.borrow();
                 // Opportunistically bank finished slabs (non-blocking).
                 while let Ok(mut slab) = done_rx.try_recv() {
                     deliver(&mut slab);
                     delivered += 1;
                     free.push(slab);
                 }
-                let img = match check_frame(frame, expected) {
+                let img = match check_frame(f.frame(), expected) {
                     Ok(img) => img,
                     Err(e) => {
                         feed_err = Some(e);
@@ -496,6 +538,10 @@ impl PipelinedExecutor {
                 slab.events =
                     encode_image_into_queues(img, h, w, &net.thresholds, &mut slab.queues);
                 slab.out.stats.redistribution_cycles += slab.events;
+                // Owned frames ride the slab to the sink (borrowed batch
+                // paths store None); `img`'s borrow of `f` ends at the
+                // encode above, so the move is safe here.
+                slab.frame = f.into_owned();
                 if feed_tx.send(slab).is_err() {
                     feed_err = Some(EngineError::Backend(
                         "pipeline stage exited early".to_string(),
@@ -570,16 +616,22 @@ impl Backend for PipelinedExecutor {
 
     /// Streaming override: frames overlap across layers as they are
     /// pulled from the iterator; `sink` observes results in input order
-    /// while later frames are still in flight upstream. Each delivered
-    /// [`Inference`] is handed to the sink by value, so this path
-    /// allocates one output container per frame (the batch path swaps
-    /// into recycled containers instead and allocates nothing).
+    /// while later frames are still in flight upstream. The consumed
+    /// [`Frame`] rides its slab to the sink, and the container the sink
+    /// returns goes straight back into the slab — so a sink that
+    /// recycles (the serving layer's session workers do) keeps warmed
+    /// streaming at **zero heap allocations per frame**; a sink that
+    /// returns `Inference::default()` costs one small output container
+    /// per frame, never per-event traffic.
     fn infer_stream(
         &mut self,
         frames: &mut dyn Iterator<Item = Frame>,
-        sink: &mut dyn FnMut(Inference),
+        sink: &mut dyn FnMut(Frame, Inference) -> Inference,
     ) -> Result<(), EngineError> {
-        self.stream_core(frames, &mut |slab| sink(std::mem::take(&mut slab.out)))
+        self.stream_core(frames, &mut |slab| {
+            let frame = slab.frame.take().unwrap_or_default();
+            slab.out = sink(frame, std::mem::take(&mut slab.out));
+        })
     }
 }
 
@@ -690,13 +742,16 @@ mod tests {
         let mut pipe =
             PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), usize::MAX);
         let mut got = Vec::new();
-        Backend::infer_stream(
-            &mut pipe,
-            &mut batch.iter().cloned(),
-            &mut |inf| got.push(inf),
-        )
+        let mut frames_back = Vec::new();
+        Backend::infer_stream(&mut pipe, &mut batch.iter().cloned(), &mut |frame, inf| {
+            frames_back.push(frame);
+            got.push(inf);
+            Inference::default()
+        })
         .unwrap();
         assert_eq!(got.len(), want.len());
+        // the consumed frames come back with their results, in order
+        assert_eq!(frames_back, batch);
         for (i, (g, w)) in got.iter().zip(&want).enumerate() {
             assert_eq!(g.logits, w.logits, "frame {i}");
             assert_eq!(g.stats, w.stats, "frame {i}");
@@ -711,7 +766,11 @@ mod tests {
         pipe.run_stream_into(&[], &mut out).unwrap();
         assert!(out.is_empty());
         let mut n = 0;
-        Backend::infer_stream(&mut pipe, &mut std::iter::empty(), &mut |_| n += 1).unwrap();
+        Backend::infer_stream(&mut pipe, &mut std::iter::empty(), &mut |_, inf| {
+            n += 1;
+            inf
+        })
+        .unwrap();
         assert_eq!(n, 0);
     }
 
@@ -722,11 +781,10 @@ mod tests {
         batch.push(Frame::from_u8(4, 4, 1, vec![0; 16]).unwrap());
         let mut pipe = PipelinedExecutor::new(Arc::clone(&net), AccelConfig::default(), 2);
         let mut got = Vec::new();
-        let err = Backend::infer_stream(
-            &mut pipe,
-            &mut batch.iter().cloned(),
-            &mut |inf| got.push(inf),
-        )
+        let err = Backend::infer_stream(&mut pipe, &mut batch.iter().cloned(), &mut |_, inf| {
+            got.push(inf);
+            Inference::default()
+        })
         .unwrap_err();
         assert!(matches!(err, EngineError::ShapeMismatch { .. }), "{err}");
         // the three well-formed frames fed before the bad one still land

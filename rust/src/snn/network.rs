@@ -174,6 +174,81 @@ impl Network {
         let (_, wo, co) = self.conv.last().unwrap().queue_shape();
         (x * wo + y) * co + c
     }
+
+    /// Content hash over everything that determines inference behaviour:
+    /// layer shapes, weights, biases, thresholds, encoding parameters and
+    /// arithmetic range. Two `Network`s with equal hashes compile to the
+    /// same [`crate::sim::plan::NetworkPlan`], which is what the serving
+    /// layer's plan cache ([`crate::engine::PlanCache`]) keys on — so two
+    /// tenants registered with the same weights share one compiled plan.
+    /// (FNV-1a 64 over every parameter: accidental collision probability
+    /// is ~2^-64 per pair — acceptable for a trusted-registry cache whose
+    /// keys come from the operator's own model set, not from adversarial
+    /// input.)
+    pub fn content_hash(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.push_usize(self.conv.len());
+        for l in &self.conv {
+            h.push_usize(l.in_shape.0);
+            h.push_usize(l.in_shape.1);
+            h.push_usize(l.in_shape.2);
+            h.push_usize(l.out_shape.0);
+            h.push_usize(l.out_shape.1);
+            h.push_usize(l.out_shape.2);
+            h.push_u64(l.pool as u64);
+            h.push_i32(l.vt);
+            h.push_i32s(&l.w);
+            h.push_i32s(&l.b);
+        }
+        h.push_i32s(&self.fc_w);
+        h.push_i32s(&self.fc_b);
+        h.push_usize(self.n_classes);
+        h.push_usize(self.thresholds.len());
+        for &t in &self.thresholds {
+            h.push_u64(t.to_bits() as u64);
+        }
+        h.push_usize(self.t_steps);
+        h.push_i32(self.sat.min);
+        h.push_i32(self.sat.max);
+        h.push_u64(self.bits as u64);
+        h.finish()
+    }
+}
+
+/// Minimal FNV-1a 64 hasher (the crate carries zero external deps; this
+/// is only used for plan-cache keying, not for adversarial inputs).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn push_u64(&mut self, v: u64) {
+        for byte in v.to_le_bytes() {
+            self.0 ^= byte as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn push_usize(&mut self, v: usize) {
+        self.push_u64(v as u64);
+    }
+
+    fn push_i32(&mut self, v: i32) {
+        self.push_u64(v as u32 as u64);
+    }
+
+    fn push_i32s(&mut self, vs: &[i32]) {
+        self.push_usize(vs.len());
+        for &v in vs {
+            self.push_i32(v);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
 }
 
 /// Synthetic-network helpers. Compiled unconditionally (not just under
@@ -285,5 +360,21 @@ mod tests {
     fn max_channel_neurons_is_l1() {
         let net = testutil::random_network(3);
         assert_eq!(net.max_channel_neurons(), 26 * 26);
+    }
+
+    #[test]
+    fn content_hash_keys_on_parameters() {
+        // Same seed → identical parameters → identical hash (even across
+        // distinct allocations); any parameter change must move the hash.
+        let a = testutil::random_network(4);
+        let b = testutil::random_network(4);
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_ne!(a.content_hash(), testutil::random_network(5).content_hash());
+        let mut c = testutil::random_network(4);
+        c.conv[0].w[0] += 1;
+        assert_ne!(a.content_hash(), c.content_hash());
+        let mut d = testutil::random_network(4);
+        d.t_steps += 1;
+        assert_ne!(a.content_hash(), d.content_hash());
     }
 }

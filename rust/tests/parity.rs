@@ -176,10 +176,14 @@ fn pipelined_stream_is_bit_identical_to_sequential_infer() {
             let dname = if depth == usize::MAX { "full".to_string() } else { depth.to_string() };
             let mut pipe = builder.clone().pipeline(depth).build(BackendKind::Sim).unwrap();
 
-            // streaming path: sink observes results in input order
+            // streaming path: sink observes results in input order (and
+            // hands back a container for the engine to recycle)
             let mut streamed = Vec::new();
-            pipe.infer_stream(&mut frames.iter().cloned(), &mut |inf| streamed.push(inf))
-                .unwrap();
+            pipe.infer_stream(&mut frames.iter().cloned(), &mut |_, inf| {
+                streamed.push(inf);
+                sacsnn::engine::Inference::default()
+            })
+            .unwrap();
             assert_eq!(streamed.len(), batch_len, "depth={dname} n={batch_len}");
             for (i, (got, want)) in streamed.iter().zip(&want).enumerate() {
                 let ctx = format!("stream depth={dname} n={batch_len} frame={i}");
@@ -217,6 +221,66 @@ fn pipelined_stream_is_bit_identical_to_sequential_infer() {
             assert_eq!(got.pred, want.pred, "{ctx}");
             assert_eq!(got.logits, want.logits, "{ctx}");
             assert_eq!(got.stats, want.stats, "{ctx}");
+        }
+    }
+}
+
+#[test]
+fn session_stream_is_bit_identical_to_sequential_infer() {
+    // The multi-tenant serving contract: a Session stream over N frames
+    // must deliver — in feed order — results bit-identical to a
+    // sequential `infer` loop on a fresh backend, for EVERY local
+    // backend kind × pipeline depth {off, 2} (pipeline is a sim-only
+    // knob; other kinds ignore it and must hold the same contract).
+    use sacsnn::coordinator::{Server, ServerConfig, TenantConfig};
+
+    let net = Arc::new(random_network(1414));
+    let frames = frames_for(&net, &(0..10u64).map(|i| 3000 + i).collect::<Vec<_>>());
+    for &kind in &LOCAL_KINDS {
+        let mut seq = EngineBuilder::new(Arc::clone(&net))
+            .lanes(4)
+            .build(kind)
+            .unwrap();
+        let want: Vec<_> = frames.iter().map(|f| seq.infer(f).unwrap()).collect();
+        // (pipeline, threads): plain, self-timed-pipelined, and sharded
+        // tenant backends — all through the same session surface.
+        for (pipeline, threads) in [(0usize, 1usize), (2, 1), (0, 3)] {
+            let server = Server::start(ServerConfig {
+                workers: 2,
+                batch_size: 4,
+                ..Default::default()
+            })
+            .unwrap();
+            let tenant = server
+                .register_tenant(
+                    Arc::clone(&net),
+                    TenantConfig {
+                        max_inflight: 64,
+                        backend: kind,
+                        lanes: 4,
+                        threads,
+                        pipeline,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            let mut session = server.open_session(tenant).unwrap();
+            for f in &frames {
+                session.feed(f).unwrap();
+            }
+            for (i, want) in want.iter().enumerate() {
+                let ctx = format!("{kind} pipeline={pipeline} threads={threads} frame={i}");
+                let got = session.recv().expect("outstanding result").unwrap();
+                assert_eq!(got.id, i as u64, "feed order: {ctx}");
+                assert_eq!(got.pred, want.pred, "{ctx}");
+                assert_eq!(got.logits, want.logits, "{ctx}");
+                assert_eq!(got.sim_cycles, want.stats.total_cycles, "{ctx}");
+            }
+            assert!(
+                session.recv().is_none(),
+                "{kind} pipeline={pipeline} threads={threads}: drained"
+            );
+            server.shutdown();
         }
     }
 }
