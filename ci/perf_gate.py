@@ -8,8 +8,10 @@ Modes:
     python3 ci/perf_gate.py --ratchet BENCH_sim.json [--baseline ...] [--out ...]
         Ratchet: emit a TIGHTENED baseline from a green run's artifact —
         each throughput floor becomes ``0.85 × measured`` (but floors
-        never loosen: the old floor wins if it is already higher), and
-        the alloc ceiling becomes ``min(old, measured)``. This is the
+        never loosen: the old floor wins if it is already higher), each
+        latency ceiling becomes ``measured / 0.85`` (but ceilings never
+        rise: the old ceiling wins if it is already lower), and the
+        alloc ceiling becomes ``min(old, measured)``. This is the
         mechanized version of the procedure the baseline's ``_note``
         documents.
     python3 ci/perf_gate.py --selftest
@@ -21,13 +23,16 @@ Gate rules (tolerances chosen for shared CI runners):
   * ``frames_per_s``             — fail on a drop of more than 15% vs baseline
   * ``images_per_sec_batched``   — fail on a drop of more than 15% vs baseline
   * ``images_per_sec_pipelined`` — fail on a drop of more than 15% vs baseline
+  * ``replay_p99_us``            — fail on a RISE of more than 50% vs baseline
+    (trace-replay p99 submit→reply latency; tail latency is noisier than
+    mean throughput on shared runners, hence the wider tolerance)
   * ``allocs_per_inference``     — fail on ANY increase (the zero-allocation
     execute step is machine-independent: an increase is always a real
     regression, never runner noise)
 
-Every throughput floor is a HARD gate; a gated field missing from either
-file also fails (a renamed bench field cannot silently un-enforce its
-floor). The full field-by-field diff is printed and, when running inside
+Every throughput floor and latency ceiling is a HARD gate; a gated field
+missing from either file also fails (a renamed bench field cannot
+silently un-enforce its floor or ceiling). The full field-by-field diff is printed and, when running inside
 GitHub Actions, appended to the step summary.
 
 Exit status: 0 = pass, 1 = regression/selftest failure, 2 = bad input.
@@ -41,22 +46,28 @@ import os
 import sys
 
 THROUGHPUT_DROP_TOLERANCE = 0.15  # >15% drop fails
-RATCHET_HEADROOM = 0.85  # ratcheted floor = 0.85 × measured
+LATENCY_RISE_TOLERANCE = 0.50  # >50% rise over a latency ceiling fails
+RATCHET_HEADROOM = 0.85  # ratcheted floor = 0.85 × measured; ceiling = measured / 0.85
 THROUGHPUT_FIELDS = (
     "frames_per_s",
     "images_per_sec_batched",
     "images_per_sec_pipelined",
 )
+# Tail-latency CEILINGS (lower is better): the trace-replay p99 of
+# submit→reply latency from the bench's seeded multi-tenant replay.
+LATENCY_FIELDS = ("replay_p99_us",)
 ALLOC_FIELD = "allocs_per_inference"
 
 RATCHET_NOTE = (
     "Perf-gate baseline (see ci/perf_gate.py). allocs_per_inference is exact "
     "and machine-independent: any increase always fails the gate. The "
     "throughput floors are HARD gates: >15% below any of them fails CI. "
+    "replay_p99_us is a HARD tail-latency ceiling: >50% above it fails CI. "
     "Ratcheted from a green run's BENCH_sim artifact via "
     "`python3 ci/perf_gate.py --ratchet BENCH_sim.json`: each floor is 0.85 x "
-    "the measured value of that run (floors never loosen), so the gate "
-    "tightens as the hot path gets faster."
+    "the measured value of that run (floors never loosen) and each latency "
+    "ceiling is measured / 0.85 (ceilings never rise), so the gate tightens "
+    "as the hot path gets faster."
 )
 
 
@@ -98,6 +109,25 @@ def evaluate(cur: dict, base: dict):
                 f"-tolerance floor {floor:.1f} (baseline {b:.1f})"
             )
 
+    for field in LATENCY_FIELDS:
+        b, c = base.get(field), cur.get(field)
+        if b is None or c is None:
+            row(field, str(b), str(c), "-", "FAIL (missing)")
+            failures.append(
+                f"{field}: missing from {'baseline' if b is None else 'current'} "
+                "(gated fields must be present in both files)"
+            )
+            continue
+        ceiling = b * (1.0 + LATENCY_RISE_TOLERANCE)
+        delta = (c - b) / b * 100.0 if b else float("inf")
+        ok = c <= ceiling
+        row(field, f"{b:.1f}", f"{c:.1f}", f"{delta:+.1f}%" if b else "-", "ok" if ok else "FAIL")
+        if not ok:
+            failures.append(
+                f"{field}: {c:.1f} is above the {LATENCY_RISE_TOLERANCE:.0%}"
+                f"-tolerance ceiling {ceiling:.1f} (baseline {b:.1f})"
+            )
+
     b, c = base.get(ALLOC_FIELD), cur.get(ALLOC_FIELD)
     if b is None or c is None:
         row(ALLOC_FIELD, str(b), str(c), "-", "FAIL (missing)")
@@ -116,7 +146,7 @@ def evaluate(cur: dict, base: dict):
 
     # Informational fields: everything numeric the two files share.
     for field in sorted(set(cur) & set(base)):
-        if field in THROUGHPUT_FIELDS or field == ALLOC_FIELD:
+        if field in THROUGHPUT_FIELDS or field in LATENCY_FIELDS or field == ALLOC_FIELD:
             continue
         b, c = base[field], cur[field]
         if isinstance(b, (int, float)) and isinstance(c, (int, float)) and not isinstance(b, bool):
@@ -129,12 +159,13 @@ def evaluate(cur: dict, base: dict):
 def ratchet(measured: dict, base: dict) -> dict:
     """Tightened baseline from a green run's artifact.
 
-    Floors become ``RATCHET_HEADROOM × measured`` but never loosen; the
-    alloc ceiling becomes ``min(old, measured)``. Informational fields
-    are refreshed from the measured artifact. Raises ValueError if a
-    gated field is missing from the measurement.
+    Floors become ``RATCHET_HEADROOM × measured`` but never loosen;
+    latency ceilings become ``measured / RATCHET_HEADROOM`` but never
+    rise; the alloc ceiling becomes ``min(old, measured)``.
+    Informational fields are refreshed from the measured artifact.
+    Raises ValueError if a gated field is missing from the measurement.
     """
-    missing = [f for f in (*THROUGHPUT_FIELDS, ALLOC_FIELD) if f not in measured]
+    missing = [f for f in (*THROUGHPUT_FIELDS, *LATENCY_FIELDS, ALLOC_FIELD) if f not in measured]
     if missing:
         raise ValueError(f"measured artifact is missing gated fields: {missing}")
     out = dict(measured)
@@ -146,6 +177,12 @@ def ratchet(measured: dict, base: dict) -> dict:
         if isinstance(old, (int, float)) and not isinstance(old, bool):
             floor = max(floor, float(old))  # a ratchet only tightens
         new_base[field] = floor
+    for field in LATENCY_FIELDS:
+        ceiling = round(float(measured[field]) / RATCHET_HEADROOM, 3)
+        old = base.get(field)
+        if isinstance(old, (int, float)) and not isinstance(old, bool):
+            ceiling = min(ceiling, float(old))  # a ratchet only tightens
+        new_base[field] = ceiling
     old_alloc = base.get(ALLOC_FIELD)
     alloc = float(measured[ALLOC_FIELD])
     if isinstance(old_alloc, (int, float)) and not isinstance(old_alloc, bool):
@@ -172,6 +209,7 @@ def selftest() -> int:
         "frames_per_s": 100.0,
         "images_per_sec_batched": 200.0,
         "images_per_sec_pipelined": 150.0,
+        "replay_p99_us": 1000.0,
         "allocs_per_inference": 0.0,
         "frames": 20,
     }
@@ -204,10 +242,24 @@ def selftest() -> int:
     faster = dict(base, frames_per_s=1000.0)
     check("faster run passes", not gate_fails(faster))
 
+    at_ceiling = dict(base, replay_p99_us=1500.0)
+    check("p99 rise of exactly 50% passes (ceiling is inclusive)", not gate_fails(at_ceiling))
+
+    over_ceiling = dict(base, replay_p99_us=1500.1)
+    check("p99 rise past 50% fails", gate_fails(over_ceiling))
+
+    lower_p99 = dict(base, replay_p99_us=1.0)
+    check("lower tail latency passes", not gate_fails(lower_p99))
+
+    missing_lat = dict(base)
+    del missing_lat["replay_p99_us"]
+    check("missing latency field fails", gate_fails(missing_lat))
+
     measured = {
         "frames_per_s": 200.0,
         "images_per_sec_batched": 100.0,  # slower than the old 200 floor
         "images_per_sec_pipelined": 300.0,
+        "replay_p99_us": 425.0,  # faster than the old 1000 µs ceiling
         "allocs_per_inference": 0.0,
         "frames": 20,
         "smoke": True,
@@ -223,10 +275,19 @@ def selftest() -> int:
     )
     check("ratchet keeps the alloc ceiling at min(old, measured)",
           new_base[ALLOC_FIELD] == 0.0)
+    check(
+        "ratchet latency ceiling = measured / 0.85 when tightening",
+        new_base["replay_p99_us"] == round(425.0 / 0.85, 3),
+    )
+    check(
+        "ratchet never raises an existing latency ceiling",
+        ratchet(dict(measured, replay_p99_us=10_000.0), base)["replay_p99_us"] == 1000.0,
+    )
     check("ratchet carries informational fields", new_base["frames"] == 20)
     check("ratchet writes the procedure note", "_note" in new_base)
     # a measured run faster on every axis passes the baseline it ratchets
     all_faster = {f: 10.0 * base[f] for f in THROUGHPUT_FIELDS}
+    all_faster["replay_p99_us"] = 100.0  # tail latency: faster = lower
     all_faster[ALLOC_FIELD] = 0.0
     all_faster["frames"] = 20
     check(
@@ -283,6 +344,8 @@ def main() -> int:
         print(f"ratcheted baseline written to {args.out}:")
         for field in THROUGHPUT_FIELDS:
             print(f"  {field}: floor {new_base[field]}")
+        for field in LATENCY_FIELDS:
+            print(f"  {field}: ceiling {new_base[field]}")
         print(f"  {ALLOC_FIELD}: ceiling {new_base[ALLOC_FIELD]}")
         return 0
 

@@ -152,6 +152,47 @@ fn main() {
         images_per_sec_pipelined / images_per_sec_single
     );
 
+    // Trace-replay tail latency (§Traffic & tail latency): a seeded
+    // bursty multi-tenant trace replayed through a live server, with
+    // submit→reply latency quantiles landing in BENCH_sim.json —
+    // ci/perf_gate.py holds replay_p99_us as a hard ceiling, so tail
+    // latency regressions on the serving path fail CI like throughput
+    // regressions do.
+    use sacsnn::coordinator::{Server, ServerConfig, Session, TenantConfig};
+    use sacsnn::traffic::{generate, replay, TraceSpec};
+
+    let replay_tenants = 4usize;
+    let spec = TraceSpec {
+        tenants: replay_tenants,
+        frames_per_tenant: if smoke { 24 } else { 96 },
+        shape: net.input_shape(),
+        ..Default::default()
+    };
+    let trace = generate(&spec);
+    let server = Server::start(ServerConfig { workers: 2, batch_size: 8, ..Default::default() })
+        .expect("replay server");
+    let mut sessions: Vec<Session> = Vec::with_capacity(replay_tenants);
+    for _ in 0..replay_tenants {
+        let tenant = server
+            .register_tenant(
+                Arc::clone(&net),
+                TenantConfig { max_inflight: 32, lanes: 2, ..Default::default() },
+            )
+            .expect("replay tenant");
+        sessions.push(server.open_session(tenant).expect("replay session"));
+    }
+    let replay_report = replay(&mut sessions, &trace, 0.0).expect("trace replay");
+    server.shutdown();
+    let replay_frames = replay_report.frames();
+    let replay_p50_us = replay_report.total.quantile(0.50);
+    let replay_p99_us = replay_report.total.quantile(0.99);
+    let replay_p999_us = replay_report.total.quantile(0.999);
+    let replay_frames_per_s = replay_report.frames_per_s();
+    println!(
+        "replay ({replay_frames} frames / {replay_tenants} tenants): p50 {replay_p50_us} µs, \
+         p99 {replay_p99_us} µs, p999 {replay_p999_us} µs → {replay_frames_per_s:.0} frames/s served"
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"sim\",\n  \"mode\": \"{mode}\",\n  \"smoke\": {smoke},\n  \
          \"frames\": {},\n  \"mean_ms_per_batch\": {mean:.6},\n  \
@@ -167,6 +208,12 @@ fn main() {
          \"pipeline_drain_ms\": {pipeline_drain_ms:.4},\n  \
          \"sim_conv_events_per_s\": {conv_events_per_s:.3},\n  \
          \"events_per_frame\": {ev_per_frame:.3},\n  \
+         \"replay_tenants\": {replay_tenants},\n  \
+         \"replay_frames\": {replay_frames},\n  \
+         \"replay_p50_us\": {replay_p50_us},\n  \
+         \"replay_p99_us\": {replay_p99_us},\n  \
+         \"replay_p999_us\": {replay_p999_us},\n  \
+         \"replay_frames_per_s\": {replay_frames_per_s:.3},\n  \
          \"allocs_per_inference\": {allocs_per_inference:.3}\n}}\n",
         images.len(),
         batch.len()

@@ -22,6 +22,7 @@ pub struct Metrics {
     sim_cycles_sum: AtomicU64,
     max_queue_wait_us: AtomicU64,
     max_service_us: AtomicU64,
+    evictions: AtomicU64,
 }
 
 /// A point-in-time copy of the metrics.
@@ -57,6 +58,9 @@ pub struct MetricsSnapshot {
     pub mean_sim_cycles: f64,
     pub max_queue_wait_us: u64,
     pub max_service_us: u64,
+    /// Per-worker backend caches dropped for idle tenants (the
+    /// idle-tenant eviction sweep; see `ServerConfig::idle_evict_dispatches`).
+    pub backend_evictions: u64,
 }
 
 impl Metrics {
@@ -91,6 +95,11 @@ impl Metrics {
         self.max_batch_service_us.fetch_max(service_us, Ordering::Relaxed);
     }
 
+    /// Record one idle tenant's backend dropped from a worker's cache.
+    pub fn evicted(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn completed(&self, queue_wait_us: u64, service_us: u64, sim_cycles: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.queue_wait_us_sum.fetch_add(queue_wait_us, Ordering::Relaxed);
@@ -123,6 +132,7 @@ impl Metrics {
             mean_sim_cycles: div(self.sim_cycles_sum.load(Ordering::Relaxed), completed),
             max_queue_wait_us: self.max_queue_wait_us.load(Ordering::Relaxed),
             max_service_us: self.max_service_us.load(Ordering::Relaxed),
+            backend_evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
 }
@@ -147,6 +157,7 @@ impl MetricsSnapshot {
         m.insert("mean_sim_cycles".into(), Json::Num(self.mean_sim_cycles));
         m.insert("max_queue_wait_us".into(), Json::Num(self.max_queue_wait_us as f64));
         m.insert("max_service_us".into(), Json::Num(self.max_service_us as f64));
+        m.insert("backend_evictions".into(), Json::Num(self.backend_evictions as f64));
         Json::Obj(m)
     }
 }
@@ -165,6 +176,7 @@ mod tests {
         m.batch_formed(2);
         m.stream_pulled();
         m.batch_served(500);
+        m.evicted();
         m.completed(10, 100, 1000);
         m.completed(30, 300, 3000);
         let s = m.snapshot();
@@ -181,6 +193,7 @@ mod tests {
         assert_eq!(s.batches_served, 1);
         assert!((s.mean_batch_service_us - 500.0).abs() < 1e-9);
         assert_eq!(s.max_batch_service_us, 500);
+        assert_eq!(s.backend_evictions, 1);
         // a formed-but-failed batch must not dilute the service mean
         m.batch_formed(3);
         let s = m.snapshot();

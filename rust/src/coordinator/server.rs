@@ -43,6 +43,7 @@ use super::{Reply, Response};
 use crate::engine::{Backend, BackendKind, EngineBuilder, EngineError, Frame, Inference, PlanCache};
 use crate::sim::plan::NetworkPlan;
 use crate::snn::network::Network;
+use crate::traffic::{CostModel, FRAME_COST_UNIT};
 use crate::util::json::Json;
 use std::cell::RefCell;
 use std::collections::hash_map::Entry;
@@ -73,8 +74,27 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Max frames a worker drains per injector visit (the weighted-fair
     /// scheduling quantum; streams may keep pulling past it while no
-    /// other tenant is waiting).
+    /// other tenant is waiting). With cost-aware ingress this is the
+    /// visit's *budget* in frame equivalents: `batch_size ×`
+    /// [`FRAME_COST_UNIT`] estimated cycles of work per dispatch.
     pub batch_size: usize,
+    /// Pack injector visits by estimated sparsity cost instead of raw
+    /// frame count: sim tenants get a [`CostModel`] at registration that
+    /// tags every admitted frame with its estimated cost in
+    /// [`FRAME_COST_UNIT`] fixed-point frame equivalents, and each WRR
+    /// visit takes frames while the tags fit the visit budget — more
+    /// sparse frames per dispatch, fewer dense ones. Results are
+    /// bit-identical either way (only dispatch *membership* changes,
+    /// never per-tenant order); off, every frame costs exactly one unit
+    /// and visits degrade to frame-count batching.
+    pub cost_aware: bool,
+    /// Idle-tenant eviction threshold: a tenant that has gone this many
+    /// pool dispatches without being served has its per-worker backend
+    /// instances dropped (and its compiled plan, unless another
+    /// recently-active tenant shares it). `0` disables the sweep. A
+    /// returning tenant rebuilds transparently on its next dispatch;
+    /// evictions are counted in `MetricsSnapshot::backend_evictions`.
+    pub idle_evict_dispatches: u64,
 }
 
 impl Default for ServerConfig {
@@ -87,6 +107,8 @@ impl Default for ServerConfig {
             pipeline: 0,
             queue_depth: 256,
             batch_size: 16,
+            cost_aware: true,
+            idle_evict_dispatches: 1024,
         }
     }
 }
@@ -120,6 +142,11 @@ pub(crate) enum ReplyTo {
 pub(crate) struct WorkItem {
     pub tenant: Arc<TenantState>,
     pub frame: Frame,
+    /// Estimated serving cost in [`FRAME_COST_UNIT`] fixed-point frame
+    /// equivalents, stamped at admission from the tenant's
+    /// [`CostModel`] (the unit value when the tenant has none). The
+    /// injector packs dispatches against this.
+    pub cost: u64,
     pub enqueued: Instant,
     pub reply_to: ReplyTo,
 }
@@ -213,11 +240,22 @@ impl Injector {
         Ok(())
     }
 
-    /// Park until work (or shutdown), then move up to `max` frames of
-    /// ONE tenant — the next non-empty queue in weighted round-robin
-    /// order — into `into`.
+    /// Park until work (or shutdown), then move frames of ONE tenant —
+    /// the next non-empty queue in weighted round-robin order — into
+    /// `into`, packing the visit by estimated cost: frames are taken
+    /// from the queue's front while their cumulative admission tags
+    /// ([`WorkItem::cost`]) fit a budget of `max ×`
+    /// [`FRAME_COST_UNIT`], and at least one frame is always taken so a
+    /// single over-budget dense frame still dispatches. With unit tags
+    /// (cost-aware ingress off, or tenants without a model) this is
+    /// exactly "up to `max` frames"; with sparsity-aware tags a visit
+    /// packs more sparse frames and fewer dense ones, equalizing
+    /// estimated *work* per dispatch. Per-tenant FIFO order never
+    /// changes — only dispatch membership — so results stay
+    /// bit-identical to frame-count batching (the `traffic` parity
+    /// suite referees this).
     fn pop_dispatch(&self, max: usize, into: &mut VecDeque<WorkItem>) -> Dispatch {
-        let max = max.max(1);
+        let budget = (max.max(1) as u64).saturating_mul(FRAME_COST_UNIT);
         let mut st = self.state.lock().expect("injector poisoned");
         loop {
             if st.queued > 0 {
@@ -227,9 +265,15 @@ impl Injector {
                     st.cursor = (st.cursor + 1) % n;
                     let take = {
                         let q = st.queues.get_mut(&tid).expect("rr lists unknown tenant");
-                        let take = q.len().min(max);
-                        for _ in 0..take {
-                            into.push_back(q.pop_front().expect("length checked"));
+                        let mut take = 0usize;
+                        let mut spent = 0u64;
+                        while let Some(front) = q.front() {
+                            if take > 0 && spent.saturating_add(front.cost) > budget {
+                                break;
+                            }
+                            spent = spent.saturating_add(front.cost);
+                            into.push_back(q.pop_front().expect("front checked"));
+                            take += 1;
                         }
                         take
                     };
@@ -313,6 +357,14 @@ pub(crate) struct ServerShared {
     /// stream sink — zero allocations per frame once warm.
     frame_pool: Mutex<Vec<Frame>>,
     live_workers: AtomicUsize,
+    /// Monotone count of pool dispatches — the clock the idle-eviction
+    /// sweep measures tenant staleness against (wall time would couple
+    /// eviction to load; dispatch counts make it purely relative).
+    dispatch_seq: AtomicU64,
+    /// Copy of [`ServerConfig::idle_evict_dispatches`] (0 = off).
+    idle_evict: u64,
+    /// Copy of [`ServerConfig::cost_aware`].
+    cost_aware: bool,
 }
 
 impl ServerShared {
@@ -347,9 +399,14 @@ impl ServerShared {
     ) -> Result<(), EngineError> {
         let mut pooled = self.pooled_frame();
         pooled.copy_from(frame);
+        // Admission-time cost tag: the tenant's model maps the frame's
+        // event count to frame equivalents through a per-byte LUT — no
+        // allocation, so the warmed feed path stays zero-alloc.
+        let cost = tenant.cost.as_ref().map_or(FRAME_COST_UNIT, |m| m.frame_cost(frame));
         let item = WorkItem {
             tenant: Arc::clone(tenant),
             frame: pooled,
+            cost,
             enqueued: Instant::now(),
             reply_to: ReplyTo::Session { shared, seq },
         };
@@ -369,9 +426,11 @@ impl ServerShared {
         id: u64,
     ) -> Result<Receiver<Reply>, EngineError> {
         let (tx, rx) = std::sync::mpsc::channel();
+        let cost = tenant.cost.as_ref().map_or(FRAME_COST_UNIT, |m| m.frame_cost(&frame));
         let item = WorkItem {
             tenant: Arc::clone(tenant),
             frame,
+            cost,
             enqueued: Instant::now(),
             reply_to: ReplyTo::Channel { id, tx },
         };
@@ -452,6 +511,9 @@ impl Server {
             plans: PlanCache::new(),
             frame_pool: Mutex::new(Vec::new()),
             live_workers: AtomicUsize::new(0),
+            dispatch_seq: AtomicU64::new(0),
+            idle_evict: cfg.idle_evict_dispatches,
+            cost_aware: cfg.cost_aware,
         });
         let metrics = Arc::clone(&shared.metrics);
         let batch = cfg.batch_size.max(1);
@@ -473,7 +535,10 @@ impl Server {
                 ..cfg.tenant_defaults()
             };
             let shape = preset_backends[0].input_shape();
-            preset_tenant = register_state(&shared, &tenant_cfg, shape, BackendSource::Preset);
+            // Preset tenants carry no Network, so no cost model (unit
+            // tags → frame-count batching) and no evictable plan.
+            preset_tenant =
+                register_state(&shared, &tenant_cfg, shape, BackendSource::Preset, None, None);
             shared.live_workers.store(preset_backends.len(), Ordering::Release);
             for backend in preset_backends {
                 let shared = Arc::clone(&shared);
@@ -510,11 +575,20 @@ impl Server {
         // through the shared cache, so same-weights tenants still
         // resolve to one plan.
         drop(builder.build(cfg.backend)?);
+        // Sparsity cost tags only make sense where serving time is
+        // event-driven — the simulated accelerator. Functional backends
+        // (dense reference, baselines) do constant work per frame, so
+        // they keep unit tags (= exact frame-count batching).
+        let cost = (self.shared.cost_aware && cfg.backend == BackendKind::Sim)
+            .then(|| Arc::new(CostModel::from_network(&net)));
+        let plan_key = (cfg.backend == BackendKind::Sim).then(|| net.content_hash());
         Ok(register_state(
             &self.shared,
             &cfg,
             net.input_shape(),
             BackendSource::Builder(builder),
+            cost,
+            plan_key,
         ))
     }
 
@@ -622,9 +696,18 @@ fn register_state(
     cfg: &TenantConfig,
     input_shape: (usize, usize, usize),
     source: BackendSource,
+    cost: Option<Arc<CostModel>>,
+    plan_key: Option<u64>,
 ) -> TenantId {
     let id = TenantId(shared.next_tenant.fetch_add(1, Ordering::Relaxed));
-    let state = Arc::new(TenantState::new(id, cfg, input_shape, source));
+    let mut state = TenantState::new(id, cfg, input_shape, source);
+    state.cost = cost;
+    state.plan_key = plan_key;
+    // A fresh tenant is "active now": staleness is measured from its
+    // registration, not from dispatch zero (which would evict a tenant
+    // registered late on a long-lived server before it ever ran).
+    state.last_active = AtomicU64::new(shared.dispatch_seq.load(Ordering::Relaxed));
+    let state = Arc::new(state);
     shared.injector.register(id, state.weight);
     shared
         .tenants
@@ -739,10 +822,11 @@ fn drain_and_fail(shared: &ServerShared, e: &EngineError, inbox: &mut VecDeque<W
 /// reply per frame as results arrive. Panics are contained per the
 /// module docs.
 ///
-/// Each worker keeps one built backend per tenant it has served; with
-/// no tenant deregistration yet, that map grows with the tenant count
-/// (the ROADMAP's idle-tenant eviction item covers reclaiming both
-/// these backends and the plan cache for churning-tenant servers).
+/// Each worker keeps one built backend per tenant it has served; the
+/// idle-eviction sweep ([`sweep_idle`], gated by
+/// [`ServerConfig::idle_evict_dispatches`]) reclaims entries — and the
+/// plan cache — for tenants that stop dispatching, so churning-tenant
+/// servers no longer grow without bound.
 fn worker_loop(
     shared: Arc<ServerShared>,
     preset: Option<(TenantId, Box<dyn Backend>)>,
@@ -764,6 +848,10 @@ fn worker_loop(
             Dispatch::Exit => return,
         };
         let tstate = Arc::clone(&inbox.front().expect("dispatch without items").tenant);
+        // Tick the pool's dispatch clock and stamp the served tenant as
+        // active — the staleness signal the idle-eviction sweep reads.
+        let now_seq = shared.dispatch_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        tstate.last_active.store(now_seq, Ordering::Relaxed);
         let backend = match backends.entry(tid) {
             Entry::Occupied(entry) => entry.into_mut(),
             Entry::Vacant(slot) => {
@@ -891,6 +979,65 @@ fn worker_loop(
                 }
                 drain_and_fail(&shared, &e, &mut inbox);
                 return;
+            }
+        }
+
+        // Idle-tenant eviction: off the per-frame path, cheap when
+        // nothing is stale, and skipped entirely while this worker only
+        // caches the tenant it just served (which is fresh by
+        // construction).
+        if shared.idle_evict > 0 && backends.len() > 1 {
+            sweep_idle(&shared, &mut backends, now_seq);
+        }
+    }
+}
+
+/// The idle-tenant eviction sweep (see
+/// [`ServerConfig::idle_evict_dispatches`]): drop this worker's built
+/// backends for tenants whose last dispatch is more than the threshold
+/// behind `now` on the pool's dispatch clock (or that are no longer
+/// registered), counting each drop in the global metrics; then release
+/// the compiled plan of any swept tenant whose content-hash key no
+/// recently-active tenant shares. Everything rebuilds transparently on
+/// the tenant's return — the backend through the worker's lazy
+/// `Entry::Vacant` build, the plan through the builder's shared
+/// [`PlanCache`].
+fn sweep_idle(
+    shared: &ServerShared,
+    backends: &mut HashMap<TenantId, Box<dyn Backend>>,
+    now: u64,
+) {
+    let threshold = shared.idle_evict;
+    let tenants = shared.tenants.read().expect("tenant registry poisoned");
+    let stale_by = |tid: &TenantId| match tenants.get(tid) {
+        Some(t) => now.saturating_sub(t.last_active.load(Ordering::Relaxed)) > threshold,
+        None => true,
+    };
+    // Fast path: nothing stale → no allocation, no retain, no metrics.
+    if !backends.keys().any(&stale_by) {
+        return;
+    }
+    let mut swept: Vec<TenantId> = Vec::new();
+    backends.retain(|tid, _| {
+        if stale_by(tid) {
+            swept.push(*tid);
+            false
+        } else {
+            true
+        }
+    });
+    for tid in swept {
+        shared.metrics.evicted();
+        // Release the swept tenant's compiled plan too — unless some
+        // recently-active tenant serves the same network (plans are
+        // content-hash keyed and shared).
+        if let Some(key) = tenants.get(&tid).and_then(|t| t.plan_key) {
+            let shared_by_live = tenants.values().any(|t| {
+                t.plan_key == Some(key)
+                    && now.saturating_sub(t.last_active.load(Ordering::Relaxed)) <= threshold
+            });
+            if !shared_by_live {
+                shared.plans.remove(key);
             }
         }
     }
@@ -1177,6 +1324,7 @@ mod tests {
         let item = |t: &Arc<TenantState>| WorkItem {
             tenant: Arc::clone(t),
             frame: Frame::default(),
+            cost: FRAME_COST_UNIT,
             enqueued: Instant::now(),
             reply_to: ReplyTo::Channel { id: 0, tx: std::sync::mpsc::channel().0 },
         };
@@ -1211,6 +1359,96 @@ mod tests {
     }
 
     #[test]
+    fn dispatches_pack_by_cost_budget() {
+        // Injector-level: a batch_size-2 visit has a 2×FRAME_COST_UNIT
+        // budget. Half-unit (sparse) items pack 4 per dispatch,
+        // double-unit (dense) items go 1 per dispatch (at-least-one
+        // semantics), unit items reproduce frame-count batching exactly.
+        let injector = Injector::new();
+        let t = Arc::new(TenantState::new(
+            TenantId(0),
+            &TenantConfig::default(),
+            (28, 28, 1),
+            BackendSource::Preset,
+        ));
+        injector.register(t.id, 1);
+        let item = |cost: u64| WorkItem {
+            tenant: Arc::clone(&t),
+            frame: Frame::default(),
+            cost,
+            enqueued: Instant::now(),
+            reply_to: ReplyTo::Channel { id: 0, tx: std::sync::mpsc::channel().0 },
+        };
+        let batches = |costs: &[u64]| {
+            for &c in costs {
+                injector.push(t.id, item(c)).unwrap();
+            }
+            let mut inbox = VecDeque::new();
+            let mut sizes = Vec::new();
+            while injector.queue_depth(t.id) > 0 {
+                match injector.pop_dispatch(2, &mut inbox) {
+                    Dispatch::Serve { batch, .. } => sizes.push(batch),
+                    Dispatch::Exit => break,
+                }
+                inbox.clear();
+            }
+            sizes
+        };
+        let u = FRAME_COST_UNIT;
+        assert_eq!(batches(&[u; 5]), vec![2, 2, 1], "unit tags = frame-count batching");
+        assert_eq!(batches(&[u / 2; 8]), vec![4, 4], "sparse frames pack denser");
+        assert_eq!(batches(&[2 * u; 3]), vec![1, 1, 1], "dense frames go alone");
+        // an over-budget single frame must still dispatch
+        assert_eq!(batches(&[10 * u, u]), vec![1, 1]);
+        // mixed: 512+512+1024 fills the 2048 budget exactly, then 2048
+        assert_eq!(batches(&[u / 2, u / 2, u, 2 * u]), vec![3, 1]);
+    }
+
+    #[test]
+    fn idle_tenants_are_evicted_and_rebuilt() {
+        let net_a = Arc::new(random_network(71));
+        let net_b = Arc::new(random_network(72));
+        let server = Server::start(ServerConfig {
+            workers: 1,
+            batch_size: 1,
+            idle_evict_dispatches: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let ta = server.register_tenant(Arc::clone(&net_a), sim_tenant(8)).unwrap();
+        let tb = server.register_tenant(Arc::clone(&net_b), sim_tenant(8)).unwrap();
+        assert_eq!(server.cached_plans(), 2);
+        let mut sa = server.open_session(ta).unwrap();
+        let mut sb = server.open_session(tb).unwrap();
+        let f = frame(5);
+        let mut direct_b = crate::sim::Accelerator::new(
+            Arc::clone(&net_b),
+            crate::sim::AccelConfig { lanes: 2, ..Default::default() },
+        );
+        let want_b = direct_b.infer_image(f.as_u8().unwrap());
+        // serve B once so the sole worker caches backends for both...
+        sb.feed(&f).unwrap();
+        assert_eq!(sb.recv().unwrap().unwrap().logits, want_b.logits);
+        // ...then keep A busy far past the threshold while B idles
+        for i in 0..12 {
+            sa.feed(&frame(i)).unwrap();
+            sa.recv().unwrap().unwrap();
+        }
+        let snap = server.snapshot();
+        assert!(
+            snap.service.backend_evictions >= 1,
+            "idle tenant must be swept, got {:?}",
+            snap.service
+        );
+        assert_eq!(server.cached_plans(), 1, "the idle tenant's unshared plan is released");
+        // the returning tenant rebuilds transparently, results intact
+        sb.feed(&f).unwrap();
+        assert_eq!(sb.recv().unwrap().unwrap().logits, want_b.logits);
+        assert_eq!(server.cached_plans(), 2, "the returning tenant recompiles its plan");
+        server.shutdown();
+    }
+
+    #[test]
     fn streaming_pull_respects_other_tenants() {
         let injector = Injector::new();
         let a = Arc::new(TenantState::new(
@@ -1230,6 +1468,7 @@ mod tests {
         let item = |t: &Arc<TenantState>| WorkItem {
             tenant: Arc::clone(t),
             frame: Frame::default(),
+            cost: FRAME_COST_UNIT,
             enqueued: Instant::now(),
             reply_to: ReplyTo::Channel { id: 0, tx: std::sync::mpsc::channel().0 },
         };

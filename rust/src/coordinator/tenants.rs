@@ -11,10 +11,11 @@
 //! [`crate::engine::PlanCache`].
 
 use crate::engine::{Backend, BackendKind, EngineBuilder, EngineError};
+use crate::traffic::CostModel;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Opaque tenant identity handed out by
 /// [`crate::coordinator::Server::register_tenant`].
@@ -96,6 +97,23 @@ pub(crate) struct TenantState {
     pub kind: BackendKind,
     pub source: BackendSource,
     pub metrics: TenantMetrics,
+    /// Sparsity cost model built once at registration (sim tenants with
+    /// cost-aware ingress enabled): tags every admitted frame with its
+    /// estimated cost in [`crate::traffic::FRAME_COST_UNIT`] frame
+    /// equivalents. `None` (preset tenants, or `cost_aware` off) means
+    /// every frame is tagged with the unit value, which reproduces
+    /// frame-count batching exactly.
+    pub cost: Option<Arc<CostModel>>,
+    /// The tenant's key in the server's [`crate::engine::PlanCache`]
+    /// (`Network::content_hash`), so the idle-eviction sweep can drop
+    /// the compiled plan once no recently-active tenant shares it.
+    pub plan_key: Option<u64>,
+    /// Global dispatch sequence number at this tenant's last dispatch
+    /// (or registration). The idle-eviction sweep compares it against
+    /// the server's running dispatch counter: tenants more than
+    /// `ServerConfig::idle_evict_dispatches` dispatches stale get their
+    /// per-worker backends (and, if unshared, cached plan) dropped.
+    pub last_active: AtomicU64,
     /// Frames currently queued or being served (admission quota state).
     /// Mutex + condvar rather than an atomic so blocking submitters
     /// (the deprecated `Coordinator::submit`) can park on it.
@@ -118,6 +136,9 @@ impl TenantState {
             kind: cfg.backend,
             source,
             metrics: TenantMetrics::default(),
+            cost: None,
+            plan_key: None,
+            last_active: AtomicU64::new(0),
             inflight: Mutex::new(0),
             inflight_cv: Condvar::new(),
         }

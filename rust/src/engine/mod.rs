@@ -98,6 +98,25 @@ impl Frame {
         }
     }
 
+    /// Count the m-TTFS events this frame will produce under the given
+    /// encoding thresholds: one event per (pixel, threshold) pair whose
+    /// normalized intensity `byte / 255` strictly exceeds the threshold
+    /// — exactly what the simulator's encoder
+    /// (`sim::core::encode_image_into_queues`) later emits, summed over
+    /// timesteps (the per-timestep threshold *order* does not affect the
+    /// total, so this admission-time count needs no queue state).
+    /// Allocation-free: safe on the warmed zero-alloc serving path,
+    /// where [`crate::traffic::CostModel`] turns it into a dispatch-cost
+    /// tag (via an equivalent per-byte LUT).
+    pub fn event_estimate(&self, thresholds: &[f32]) -> u64 {
+        let mut events = 0u64;
+        for &b in &self.data {
+            let v = b as f32 / 255.0;
+            events += thresholds.iter().filter(|&&t| v > t).count() as u64;
+        }
+        events
+    }
+
     /// Turn `self` into a copy of `src`, reusing the existing byte buffer
     /// when its capacity suffices — the recycling step of the serving
     /// layer's frame pool (a warmed pool copies frames with zero heap
@@ -315,6 +334,17 @@ mod tests {
         assert_eq!(pooled, small);
         pooled.copy_from(&src);
         assert_eq!(pooled, src);
+    }
+
+    #[test]
+    fn event_estimate_counts_threshold_crossings() {
+        // 0 crosses nothing; 255 crosses everything; 128 (≈0.502)
+        // crosses 0.15/0.30/0.45 but not 0.60/0.75.
+        let thresholds = [0.15f32, 0.30, 0.45, 0.60, 0.75];
+        let f = Frame::from_u8(1, 3, 1, vec![0, 128, 255]).unwrap();
+        assert_eq!(f.event_estimate(&thresholds), 3 + 5);
+        assert_eq!(f.event_estimate(&[]), 0);
+        assert_eq!(Frame::default().event_estimate(&thresholds), 0);
     }
 
     #[test]

@@ -56,6 +56,18 @@ impl PlanCache {
         )
     }
 
+    /// Drop the cached plan for `key` (a [`Network::content_hash`]),
+    /// returning whether an entry was removed. The eviction half of the
+    /// cache contract: the serving layer calls this for plans whose
+    /// tenants have all gone idle (see the coordinator's idle-tenant
+    /// eviction), and the next [`Self::get_or_compile`] for the same
+    /// network transparently recompiles. Backends already holding the
+    /// plan's `Arc` are unaffected — eviction only frees the cache's
+    /// reference.
+    pub fn remove(&self, key: u64) -> bool {
+        self.plans.lock().expect("plan cache poisoned").remove(&key).is_some()
+    }
+
     /// Number of distinct compiled plans currently cached.
     pub fn len(&self) -> usize {
         self.plans.lock().expect("plan cache poisoned").len()

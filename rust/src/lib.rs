@@ -223,6 +223,53 @@
 //! `sacsnn serve --tenants N` (and `bench --tenants N`) exercise all of
 //! it from the CLI, with per-tenant metrics in the JSON snapshot.
 //!
+//! ## Traffic & tail latency
+//!
+//! Sparse activity is the paper's whole premise, and it shows up at the
+//! serving layer too: a dense frame costs the event-driven datapath far
+//! more cycles than a sparse one, so batching by **frame count** packs
+//! wildly uneven work into "equal" dispatches. The [`traffic`] module
+//! makes ingress sparsity-aware and makes the resulting tail latency
+//! measurable:
+//!
+//! * [`traffic::CostModel`] tags every admitted frame with an estimated
+//!   cycle cost (a per-byte threshold-crossing LUT — allocation-free, so
+//!   the warmed session path stays zero-alloc). With
+//!   `ServerConfig::cost_aware` (the default), the injector packs each
+//!   worker visit by **cycle budget** (`batch_size ×`
+//!   [`traffic::FRAME_COST_UNIT`]) instead of frame count. Packing only
+//!   regroups work — per-tenant FIFO order is untouched, so results are
+//!   bit-identical to frame-count dispatch (the `traffic` parity suite
+//!   proves it).
+//! * [`traffic::TraceSpec`] / [`traffic::generate`] build seeded,
+//!   deterministic multi-tenant traces (bursty on/off arrivals, mixed
+//!   dense/sparse frames); [`traffic::replay`] drives them through live
+//!   [`coordinator::Session`]s and records every frame's submit→reply
+//!   latency in an HDR-style [`traffic::LatencyHistogram`] (≤ ~3%
+//!   relative error; quantiles bounded by min/max and monotone in rank).
+//!   `sacsnn bench --replay` reports p50/p99/p999 per tenant and merges
+//!   `replay_*` fields into `BENCH_sim.json`, where `ci/perf_gate.py`
+//!   holds `replay_p99_us` as a hard tail-latency ceiling.
+//!
+//! ```
+//! use sacsnn::traffic::{generate, LatencyHistogram, TraceSpec};
+//!
+//! // Seeded trace generation is deterministic: same spec → same trace.
+//! let spec = TraceSpec { tenants: 2, frames_per_tenant: 8, ..Default::default() };
+//! let (a, b) = (generate(&spec), generate(&spec));
+//! assert_eq!(a.len(), 16);
+//! assert!(a.iter().zip(&b).all(|(x, y)| x.at_us == y.at_us && x.frame == y.frame));
+//!
+//! // Quantiles are bounded by [min, max] and monotone in rank.
+//! let mut h = LatencyHistogram::new();
+//! for v in [3u64, 5, 8, 13, 21, 1000] {
+//!     h.record(v);
+//! }
+//! assert_eq!(h.quantile(0.0), 3);
+//! assert!(h.quantile(0.5) <= h.quantile(0.99));
+//! assert!(h.quantile(1.0) >= 969 && h.quantile(1.0) <= 1000);
+//! ```
+//!
 //! ## Module map
 //!
 //! * [`engine`] — the unified serving surface: `Backend` trait, `Frame` /
@@ -267,6 +314,14 @@
 //!   [`sim::pipeline::PipelinedExecutor`] workers — with typed failure
 //!   containment (`EngineError::WorkerPanicked`, typed `Shutdown`
 //!   drains) and global + per-tenant metrics.
+//! * [`traffic`] — sparsity-adaptive ingress and tail-latency
+//!   measurement (§Traffic & tail latency): per-frame cycle-cost
+//!   estimation ([`traffic::CostModel`]) behind the injector's
+//!   budget-packed dispatch, seeded bursty trace generation
+//!   ([`traffic::TraceSpec`]), trace replay through live sessions
+//!   ([`traffic::replay`]) and the HDR-style
+//!   [`traffic::LatencyHistogram`] behind `bench --replay`'s
+//!   p50/p99/p999 and the CI p99 ceiling.
 //! * [`artifact`] — readers for the build-time artifacts (tensor archives,
 //!   `meta.json`).
 //! * [`report`] — the paper's tables/figures plus golden cross-checks,
@@ -287,6 +342,7 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod snn;
+pub mod traffic;
 pub mod util;
 
 pub use engine::EngineError;

@@ -13,6 +13,8 @@
 //!                   [--tenants 1] [--queue-depth 256] [--json]
 //! sacsnn bench      [--backend sim] [--lanes 8] [--threads 4] [--batch 64] [--n 128]
 //!                   [--pipeline 0|N|full] [--tenants 0]
+//! sacsnn bench --replay [--tenants 4] [--frames 64] [--seed 1] [--workers 4]
+//!                   [--batch 8] [--pace 0.0] [--cost-aware true] [--out BENCH_sim.json]
 //! sacsnn golden     [--backend sim] [--n 10]   backend vs AOT JAX model (PJRT)
 //! sacsnn backends                              list registered backends
 //! sacsnn table1|table2|table3|table4|table5|fig12|ablate
@@ -40,6 +42,12 @@
 //! quota rejections) in the text summary and the `--json` snapshot.
 //! `bench --tenants N` adds a served-throughput row over the same
 //! multi-tenant setup.
+//!
+//! Tail latency (see `lib.rs` §Traffic & tail latency): `bench --replay`
+//! generates a seeded bursty multi-tenant trace, replays it through live
+//! sessions, prints p50/p99/p999 submit→reply latency per tenant, and
+//! merges the `replay_*` fields into `BENCH_sim.json` so
+//! `ci/perf_gate.py` can hold the p99 ceiling.
 
 use sacsnn::coordinator::{Server, ServerConfig, Session};
 use sacsnn::data::Dataset;
@@ -290,6 +298,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         pipeline: args.pipeline()?,
         queue_depth: args.get("queue-depth", 256)?,
         batch_size: args.get("batch", 16)?,
+        cost_aware: args.get("cost-aware", true)?,
+        idle_evict_dispatches: args.get("idle-evict", 1024)?,
     };
     let tenants: usize = args.get("tenants", 1)?;
     let tenants = tenants.max(1);
@@ -373,6 +383,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     use sacsnn::engine::Frame;
     use sacsnn::snn::network::testutil::synthetic_workload;
+
+    if args.has("replay") {
+        return cmd_bench_replay(args);
+    }
 
     let lanes: usize = args.get("lanes", 8)?;
     let threads: usize = args.get("threads", 4)?.max(1);
@@ -479,6 +493,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             pipeline,
             queue_depth: quota,
             batch_size: batch,
+            ..Default::default()
         };
         let tenant_cfg = server_cfg.tenant_defaults();
         let server = Server::start(server_cfg)?;
@@ -504,6 +519,105 @@ fn cmd_bench(args: &Args) -> Result<()> {
         );
         server.shutdown();
     }
+    Ok(())
+}
+
+/// `bench --replay`: the trace-replay tail-latency harness. Generates a
+/// seeded bursty multi-tenant trace ([`sacsnn::traffic::generate`]),
+/// replays it through live sessions on a fresh server, prints
+/// p50/p99/p999 submit→reply latency per tenant and in aggregate, and
+/// merges the `replay_*` fields into the `--out` JSON artifact (default
+/// `BENCH_sim.json`, preserving whatever the perf bench already wrote
+/// there) so `ci/perf_gate.py` can hold the p99 ceiling.
+fn cmd_bench_replay(args: &Args) -> Result<()> {
+    use sacsnn::coordinator::TenantConfig;
+    use sacsnn::snn::network::testutil::random_network;
+    use sacsnn::traffic::{generate, replay, LatencyHistogram, TraceSpec};
+    use sacsnn::util::json::Json;
+
+    let tenants: usize = args.get("tenants", 4)?.max(1);
+    let frames: usize = args.get("frames", 64)?.max(1);
+    let seed: u64 = args.get("seed", 1)?;
+    let workers: usize = args.get("workers", 4)?.max(1);
+    let batch: usize = args.get("batch", 8)?.max(1);
+    let pace: f64 = args.get("pace", 0.0)?;
+    let cost_aware: bool = args.get("cost-aware", true)?;
+
+    let spec = TraceSpec { tenants, frames_per_tenant: frames, seed, ..Default::default() };
+    let trace = generate(&spec);
+    // The seeded synthetic network: deterministic with no artifacts,
+    // the same weights the CI perf bench measures.
+    let net = Arc::new(random_network(42));
+    let server = Server::start(ServerConfig {
+        workers,
+        batch_size: batch,
+        cost_aware,
+        ..Default::default()
+    })?;
+    let mut sessions: Vec<Session> = Vec::with_capacity(tenants);
+    for _ in 0..tenants {
+        let tenant = server.register_tenant(
+            Arc::clone(&net),
+            TenantConfig { max_inflight: 64, lanes: 2, ..Default::default() },
+        )?;
+        sessions.push(server.open_session(tenant)?);
+    }
+    let report = replay(&mut sessions, &trace, pace)?;
+    server.shutdown();
+
+    let q = |h: &LatencyHistogram| (h.quantile(0.50), h.quantile(0.99), h.quantile(0.999));
+    let (p50, p99, p999) = q(&report.total);
+    println!(
+        "replay: {} frames / {tenants} tenants (seed {seed}, cost-aware {cost_aware}, \
+         pace {pace}) in {:.2} s → {:.0} frames/s",
+        report.frames(),
+        report.wall_s,
+        report.frames_per_s(),
+    );
+    println!(
+        "  all tenants: p50 {p50} µs  p99 {p99} µs  p999 {p999} µs  max {} µs",
+        report.total.max()
+    );
+    for (i, h) in report.per_tenant.iter().enumerate() {
+        let (p50, p99, p999) = q(h);
+        println!(
+            "  tenant {i}: {} frames  p50 {p50} µs  p99 {p99} µs  p999 {p999} µs",
+            h.count()
+        );
+    }
+
+    // Merge into the bench artifact — existing throughput fields are
+    // preserved, so replay can run before or after the perf bench.
+    let path = args.get_str("out", "BENCH_sim.json");
+    let mut obj = match std::fs::read_to_string(&path).ok().and_then(|s| Json::parse(&s).ok()) {
+        Some(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    obj.insert("replay_tenants".into(), Json::Num(tenants as f64));
+    obj.insert("replay_frames".into(), Json::Num(report.frames() as f64));
+    obj.insert("replay_p50_us".into(), Json::Num(p50 as f64));
+    obj.insert("replay_p99_us".into(), Json::Num(p99 as f64));
+    obj.insert("replay_p999_us".into(), Json::Num(p999 as f64));
+    obj.insert("replay_frames_per_s".into(), Json::Num(report.frames_per_s()));
+    let per_tenant: Vec<Json> = report
+        .per_tenant
+        .iter()
+        .enumerate()
+        .map(|(i, h)| {
+            let (p50, p99, p999) = q(h);
+            let mut t = BTreeMap::new();
+            t.insert("tenant".into(), Json::Num(i as f64));
+            t.insert("frames".into(), Json::Num(h.count() as f64));
+            t.insert("p50_us".into(), Json::Num(p50 as f64));
+            t.insert("p99_us".into(), Json::Num(p99 as f64));
+            t.insert("p999_us".into(), Json::Num(p999 as f64));
+            Json::Obj(t)
+        })
+        .collect();
+    obj.insert("replay_per_tenant".into(), Json::Arr(per_tenant));
+    std::fs::write(&path, format!("{}\n", Json::Obj(obj)))
+        .map_err(|e| EngineError::msg(format!("cannot write {path}: {e}")))?;
+    println!("  merged replay_* fields into {path}");
     Ok(())
 }
 

@@ -495,6 +495,26 @@ mod tests {
     }
 
     #[test]
+    fn frame_event_estimate_matches_encoder_event_count() {
+        // The admission-time cost tag (`Frame::event_estimate`, used by
+        // `traffic::CostModel`) must count exactly the events the m-TTFS
+        // encoder will later emit — timestep threshold reversal cannot
+        // change the total, and the cell-scan order is count-neutral.
+        prop::check("event_estimate == encoded events", 12, |rng| {
+            let net = Arc::new(random_network(rng.next_u64()));
+            let img = random_image(rng.next_u64());
+            let accel = Accelerator::new(Arc::clone(&net), AccelConfig::default());
+            let encoded = accel.encode_input(&img).total_events();
+            let frame = Frame::from_u8(28, 28, 1, img).unwrap();
+            let estimated = frame.event_estimate(&net.thresholds);
+            if estimated != encoded {
+                return Err(format!("estimate {estimated} != encoder {encoded}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn planned_pipeline_matches_unplanned_reference() {
         // Regression referee for the compile/execute split: rebuild the
         // pre-plan inference loop verbatim (fresh queues per layer,

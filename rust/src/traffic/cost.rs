@@ -1,0 +1,224 @@
+//! Per-frame serving-cost estimation: the admission-time half of the
+//! sparsity-adaptive ingress.
+//!
+//! The paper's accelerator is event-driven — its cycle count scales with
+//! the number of input spikes, not the frame size — so two frames of the
+//! same shape can differ by an order of magnitude in service time. A
+//! [`CostModel`] maps a frame's m-TTFS **event count** (how many
+//! (pixel, threshold) pairs will spike, exactly what
+//! [`crate::engine::Frame::event_estimate`] counts and what the encoder
+//! in `sim::core` will later emit) to estimated device cycles, and
+//! normalizes that estimate into fixed-point **frame equivalents** so
+//! the injector can pack dispatches by cycle budget instead of frame
+//! count (see `coordinator::server`).
+//!
+//! Two constructors:
+//!
+//! * [`CostModel::from_network`] — analytic first-order model straight
+//!   from the network description, used at tenant registration (no
+//!   traffic needed). Only *relative* ordering between frames matters
+//!   for packing, so first-order is enough.
+//! * [`CostModel::calibrated`] — least-squares-free single-point fit
+//!   from the per-layer [`crate::sim::LayerStats`] of measured runs:
+//!   the event-independent base is everything that does not scale with
+//!   input spikes (thresholding sweeps, classifier, redistribution) and
+//!   the slope is measured conv cycles per input event.
+//!
+//! The admission hot path ([`CostModel::frame_cost`]) is allocation-free:
+//! a 256-entry per-byte threshold-count LUT (built once at construction)
+//! turns the event count into one table lookup per pixel.
+
+use crate::engine::Frame;
+use crate::sim::RunStats;
+use crate::snn::network::Network;
+
+/// Fixed-point scale of a cost tag: a frame of *nominal* cost carries a
+/// tag of exactly `FRAME_COST_UNIT`, so a dispatch budget of
+/// `batch_size × FRAME_COST_UNIT` reproduces classic frame-count
+/// batching when every tag is the unit value (which is exactly what
+/// untagged tenants get — see `WorkItem::cost` in `coordinator::server`).
+pub const FRAME_COST_UNIT: u64 = 1024;
+
+/// Maps m-TTFS event counts to estimated device cycles and normalized
+/// dispatch-cost tags. Cheap to share (`Arc`) across sessions; all
+/// methods after construction are allocation-free.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Estimated cycles for a frame that produces zero input events
+    /// (thresholding sweeps, classifier, queue redistribution).
+    base_cycles: f64,
+    /// Estimated cycles per m-TTFS input event.
+    per_event_cycles: f64,
+    /// Cycles of the *nominal* frame this model normalizes tags against
+    /// (the expected event count of a uniform-random frame).
+    nominal_cycles: f64,
+    /// `lut[b]` = how many encoding thresholds a pixel of byte value `b`
+    /// exceeds — the per-pixel event count of the m-TTFS encoder.
+    lut: [u16; 256],
+}
+
+impl CostModel {
+    fn build(net: &Network, base_cycles: f64, per_event_cycles: f64) -> CostModel {
+        let mut lut = [0u16; 256];
+        for (b, slot) in lut.iter_mut().enumerate() {
+            let v = b as f32 / 255.0;
+            *slot = net.thresholds.iter().filter(|&&t| v > t).count() as u16;
+        }
+        // Nominal event count: a uniform-random byte exceeds threshold t
+        // with probability ≈ (1 - t), so the expected events of a random
+        // frame are pixels × Σ(1 - t). Normalizing against this keeps
+        // typical tags near FRAME_COST_UNIT, sparse frames below it and
+        // dense frames above it.
+        let (h, w, c) = net.input_shape();
+        let pixels = (h * w * c) as f64;
+        let events_per_pixel: f64 = net
+            .thresholds
+            .iter()
+            .map(|&t| (1.0 - t as f64).clamp(0.0, 1.0))
+            .sum();
+        let nominal_events = (pixels * events_per_pixel).max(1.0);
+        let nominal_cycles = (base_cycles + nominal_events * per_event_cycles).max(1.0);
+        CostModel { base_cycles, per_event_cycles: per_event_cycles.max(0.0), nominal_cycles, lut }
+    }
+
+    /// Analytic first-order model from the network description alone.
+    ///
+    /// Per input event the conv unit performs one pass per output
+    /// channel of the layer the event lands in; downstream layers see an
+    /// attenuated spike count (thresholding rejects most candidates —
+    /// the paper's Table III reports >75% activation sparsity per layer,
+    /// hence the 0.25 carry). The event-independent base covers the
+    /// thresholding unit's full output sweep per timestep plus the
+    /// classifier's FC pass. First-order on purpose: the injector only
+    /// needs frames *ranked* by cost, not cycle-exact predictions.
+    pub fn from_network(net: &Network) -> CostModel {
+        let mut per_event = 0.0;
+        let mut carry = 1.0;
+        for layer in &net.conv {
+            per_event += carry * layer.out_shape.2 as f64;
+            carry *= 0.25;
+        }
+        let mut base = 0.0;
+        for layer in &net.conv {
+            let (ho, wo, co) = layer.out_shape;
+            base += (ho * wo * co * net.t_steps) as f64;
+        }
+        base += net.fc_w.len() as f64;
+        CostModel::build(net, base, per_event.max(1.0))
+    }
+
+    /// Fit from measured per-layer stats: `stats` accumulated over one
+    /// or more frames whose total m-TTFS event count was `input_events`.
+    /// Base = everything that does not scale with input spikes
+    /// (thresholding + classifier + redistribution); slope = measured
+    /// conv cycles per input event. Falls back to the analytic model's
+    /// shape when the measurement carried no events.
+    pub fn calibrated(net: &Network, stats: &RunStats, input_events: u64) -> CostModel {
+        if input_events == 0 {
+            return CostModel::from_network(net);
+        }
+        let conv: u64 = stats.layers.iter().map(|l| l.conv_cycles).sum();
+        let thresh: u64 = stats.layers.iter().map(|l| l.thresh_cycles).sum();
+        let base = (thresh + stats.classifier_cycles + stats.redistribution_cycles) as f64;
+        let per_event = (conv as f64 / input_events as f64).max(1.0);
+        CostModel::build(net, base, per_event)
+    }
+
+    /// Estimated device cycles for a frame producing `events` m-TTFS
+    /// input events. Monotone non-decreasing in `events` by construction
+    /// (non-negative slope).
+    pub fn estimate(&self, events: u64) -> u64 {
+        (self.base_cycles + events as f64 * self.per_event_cycles).round() as u64
+    }
+
+    /// Event count of `frame` under this model's thresholds — LUT-based,
+    /// allocation-free, equal to [`Frame::event_estimate`] for `u8`
+    /// frames.
+    pub fn frame_events(&self, frame: &Frame) -> u64 {
+        frame.bytes().iter().map(|&b| self.lut[b as usize] as u64).sum()
+    }
+
+    /// The dispatch-cost tag for `frame`: its estimated cycles in
+    /// fixed-point frame equivalents (`FRAME_COST_UNIT` = one nominal
+    /// frame), clamped to at least 1 so every frame spends budget.
+    /// Allocation-free — safe on the warmed zero-alloc admission path.
+    pub fn frame_cost(&self, frame: &Frame) -> u64 {
+        let cycles = self.base_cycles + self.frame_events(frame) as f64 * self.per_event_cycles;
+        let units = cycles / self.nominal_cycles * FRAME_COST_UNIT as f64;
+        (units.round() as u64).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::network::testutil::random_network;
+    use crate::util::prng::Pcg;
+    use crate::util::prop::check;
+
+    #[test]
+    fn estimate_is_monotone_in_event_count() {
+        let net = random_network(11);
+        let model = CostModel::from_network(&net);
+        check("cost estimate monotone", 100, |rng| {
+            let a = rng.below(10_000) as u64;
+            let b = a + rng.below(10_000) as u64;
+            let (ca, cb) = (model.estimate(a), model.estimate(b));
+            if ca <= cb {
+                Ok(())
+            } else {
+                Err(format!("estimate({a})={ca} > estimate({b})={cb}"))
+            }
+        });
+    }
+
+    #[test]
+    fn frame_cost_ranks_sparse_below_dense() {
+        let net = random_network(12);
+        let (h, w, c) = net.input_shape();
+        let model = CostModel::from_network(&net);
+        let dark = Frame::from_u8(h, w, c, vec![0; h * w * c]).unwrap();
+        let mid = Frame::from_u8(h, w, c, vec![128; h * w * c]).unwrap();
+        let bright = Frame::from_u8(h, w, c, vec![250; h * w * c]).unwrap();
+        let (cd, cm, cb) = (model.frame_cost(&dark), model.frame_cost(&mid), model.frame_cost(&bright));
+        assert!(cd < cm && cm < cb, "dark={cd} mid={cm} bright={cb}");
+        assert!(cd >= 1, "cost tags must spend at least one budget unit");
+        // an all-bright frame exceeds every threshold everywhere — the
+        // densest possible frame costs more than the nominal unit
+        assert!(cb > FRAME_COST_UNIT, "bright={cb}");
+    }
+
+    #[test]
+    fn lut_matches_frame_event_estimate() {
+        let net = random_network(13);
+        let (h, w, c) = net.input_shape();
+        let model = CostModel::from_network(&net);
+        let mut rng = Pcg::new(99);
+        let data: Vec<u8> = (0..h * w * c).map(|_| rng.below(256) as u8).collect();
+        let frame = Frame::from_u8(h, w, c, data).unwrap();
+        assert_eq!(model.frame_events(&frame), frame.event_estimate(&net.thresholds));
+    }
+
+    #[test]
+    fn calibrated_model_is_monotone_and_uses_measured_slope() {
+        let net = random_network(14);
+        let stats = RunStats {
+            layers: vec![crate::sim::LayerStats {
+                conv_cycles: 50_000,
+                thresh_cycles: 10_000,
+                ..Default::default()
+            }],
+            classifier_cycles: 4_000,
+            redistribution_cycles: 1_000,
+            total_cycles: 65_000,
+            ..Default::default()
+        };
+        let model = CostModel::calibrated(&net, &stats, 2_000);
+        // base = 10_000 + 4_000 + 1_000; slope = 50_000 / 2_000 = 25
+        assert_eq!(model.estimate(0), 15_000);
+        assert_eq!(model.estimate(100), 15_000 + 2_500);
+        // zero-event calibration falls back to the analytic model
+        let fallback = CostModel::calibrated(&net, &stats, 0);
+        assert_eq!(fallback.estimate(0), CostModel::from_network(&net).estimate(0));
+    }
+}

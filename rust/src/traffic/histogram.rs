@@ -1,0 +1,249 @@
+//! HDR-style latency histogram: log-bucketed recording of `u64` values
+//! (microseconds on the serving path) with bounded relative error and
+//! O(1) allocation-free `record`.
+//!
+//! Layout: values below 32 get exact unit buckets; above that, each
+//! power-of-two range is split into 32 sub-buckets, so any reported
+//! quantile is within `1/32 ≈ 3%` of the true value — the standard
+//! HDR-histogram trade (fixed memory, bounded relative error) without
+//! the external crate. The full `u64` range fits in 1920 buckets.
+//!
+//! [`LatencyHistogram::quantile`] returns the lower bound of the bucket
+//! holding the rank-`⌈q·n⌉` value, clamped to the recorded `[min, max]`
+//! — which makes two properties hold *by construction* (and by property
+//! test): every quantile lies within `[min(), max()]`, and quantiles are
+//! monotone non-decreasing in `q`.
+
+/// Sub-buckets per power-of-two range (2^5): 32 → ≤3.2% relative error.
+const SUB_BUCKETS: usize = 32;
+/// Unit-exact region `[0, 32)` plus 59 sub-divided power-of-two groups
+/// covers all of `u64`.
+const BUCKETS: usize = SUB_BUCKETS + 59 * SUB_BUCKETS;
+
+/// Fixed-memory log-bucketed histogram of `u64` samples.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bucket index of `v`: exact below 32, otherwise 32 sub-buckets per
+/// power-of-two group.
+fn bucket_index(v: u64) -> usize {
+    if v < SUB_BUCKETS as u64 {
+        return v as usize;
+    }
+    let top = 63 - v.leading_zeros() as usize; // >= 5
+    let group = top - 4; // 1-based power-of-two group
+    let within = (v >> (top - 5)) as usize - SUB_BUCKETS;
+    SUB_BUCKETS + (group - 1) * SUB_BUCKETS + within
+}
+
+/// Smallest value mapping to bucket `idx` (inverse of [`bucket_index`]).
+fn bucket_lower(idx: usize) -> u64 {
+    if idx < SUB_BUCKETS {
+        return idx as u64;
+    }
+    let group = (idx - SUB_BUCKETS) / SUB_BUCKETS + 1;
+    let within = (idx - SUB_BUCKETS) % SUB_BUCKETS;
+    ((SUB_BUCKETS + within) as u64) << (group - 1)
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { counts: vec![0; BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Record one sample. Allocation-free.
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min }
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of the recorded samples, exact (not bucket-quantized).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    /// The value at quantile `q ∈ [0, 1]`: the lower bound of the bucket
+    /// holding the rank-`⌈q·n⌉` sample (ranks clamp to `[1, n]`), itself
+    /// clamped to the recorded `[min, max]`. Returns 0 when empty.
+    /// Within ~3% of the true sample value (bucket resolution).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_lower(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Reset to empty, keeping the bucket array.
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.count = 0;
+        self.sum = 0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn bucket_index_lower_roundtrip() {
+        // bucket_lower(bucket_index(v)) <= v, and the lower bound of the
+        // NEXT bucket is > v — i.e. the index/inverse pair is consistent
+        // across the exact region, group boundaries and large values.
+        for v in (0u64..4096).chain([u64::MAX / 2, u64::MAX - 1, u64::MAX]) {
+            let idx = bucket_index(v);
+            assert!(idx < BUCKETS, "v={v} idx={idx}");
+            assert!(bucket_lower(idx) <= v, "v={v} lower={}", bucket_lower(idx));
+            if idx + 1 < BUCKETS {
+                assert!(bucket_lower(idx + 1) > v, "v={v} next={}", bucket_lower(idx + 1));
+            }
+        }
+        // exact region really is exact
+        for v in 0u64..32 {
+            assert_eq!(bucket_lower(bucket_index(v)), v);
+        }
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        for v in [100u64, 1_000, 65_537, 1 << 40, (1 << 50) + 12345] {
+            let lower = bucket_lower(bucket_index(v));
+            let err = (v - lower) as f64 / v as f64;
+            assert!(err <= 1.0 / 32.0 + 1e-12, "v={v} lower={lower} err={err}");
+        }
+    }
+
+    #[test]
+    fn quantiles_bounded_by_min_max_and_monotone_in_rank() {
+        check("histogram quantile bounds + monotonicity", 60, |rng| {
+            let n = 1 + rng.below(200);
+            let mut h = LatencyHistogram::new();
+            for _ in 0..n {
+                // mix of magnitudes so buckets from every group appear
+                let v = match rng.below(3) {
+                    0 => rng.below(32) as u64,
+                    1 => rng.below(10_000) as u64,
+                    _ => (rng.below(1_000_000) as u64) << rng.below(20),
+                };
+                h.record(v);
+            }
+            let (lo, hi) = (h.min(), h.max());
+            let mut prev = 0u64;
+            for i in 0..=100 {
+                let q = i as f64 / 100.0;
+                let v = h.quantile(q);
+                if v < lo || v > hi {
+                    return Err(format!("q={q}: {v} outside [{lo}, {hi}]"));
+                }
+                if v < prev {
+                    return Err(format!("q={q}: {v} < previous {prev} — not monotone"));
+                }
+                prev = v;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantile_tracks_true_rank_within_bucket_resolution() {
+        check("quantile vs true rank", 40, |rng| {
+            let n = 1 + rng.below(300);
+            let mut h = LatencyHistogram::new();
+            let mut samples: Vec<u64> = (0..n).map(|_| rng.below(1_000_000) as u64).collect();
+            for &s in &samples {
+                h.record(s);
+            }
+            samples.sort_unstable();
+            for &q in &[0.0, 0.5, 0.99, 0.999, 1.0] {
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let truth = samples[rank - 1];
+                let got = h.quantile(q);
+                // bucket lower bound: got <= truth, within 1/32 relative
+                let floor = truth.saturating_sub(truth / 32 + 1);
+                if got > truth || got < floor {
+                    return Err(format!("q={q}: got {got}, true rank value {truth}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_merge_clear_mean() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!((h.count(), h.min(), h.max()), (0, 0, 0));
+        assert_eq!(h.mean(), 0.0);
+        h.record(10);
+        h.record(30);
+        assert_eq!(h.mean(), 20.0);
+        let mut other = LatencyHistogram::new();
+        other.record(1_000_000);
+        h.merge(&other);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max(), 1_000_000);
+        assert_eq!(h.min(), 10);
+        assert!(h.quantile(1.0) <= 1_000_000 && h.quantile(1.0) > 900_000);
+        h.clear();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0);
+    }
+}

@@ -1,0 +1,42 @@
+//! Sparsity-adaptive ingress + tail-latency instrumentation: the layer
+//! between admission and dispatch.
+//!
+//! The paper's central property — processing time scales with **spike
+//! count**, not frame size — means frame-count batching is the wrong
+//! unit of work for the serving layer: one dense frame can stall a WRR
+//! visit that ten sparse frames would have flowed through. This module
+//! supplies both halves of the fix:
+//!
+//! * **Cost-aware ingress** ([`cost`]) — [`CostModel`] maps a frame's
+//!   m-TTFS event count ([`crate::engine::Frame::event_estimate`], or
+//!   the model's allocation-free per-byte LUT) to estimated device
+//!   cycles, normalized into fixed-point frame equivalents
+//!   ([`FRAME_COST_UNIT`]). Every admitted frame is tagged at
+//!   `Session::feed` time, and the injector in `coordinator::server`
+//!   packs each WRR visit by **cycle budget**
+//!   (`batch_size × FRAME_COST_UNIT`) instead of frame count — more
+//!   sparse frames per dispatch, fewer dense ones, same results
+//!   bit-for-bit (the `traffic` parity suite proves it; untagged
+//!   tenants degrade to exact frame-count batching because every tag is
+//!   the unit value).
+//! * **Tail-latency harness** ([`trace`], [`replay`], [`histogram`]) —
+//!   seeded deterministic [`TraceSpec`] traces (bursty on/off Poisson
+//!   arrivals, mixed-sparsity frames, many tenants), replayed through
+//!   live sessions with per-frame submit→reply latency recorded in an
+//!   HDR-style log-bucketed [`LatencyHistogram`] (≤3% relative error,
+//!   allocation-free recording). `sacsnn bench --replay` reports
+//!   p50/p99/p999 per tenant alongside throughput into `BENCH_sim.json`,
+//!   and `ci/perf_gate.py` gates the aggregate p99 as a hard ceiling.
+//!
+//! See the crate-level `## Traffic & tail latency` section for a
+//! runnable tour.
+
+pub mod cost;
+pub mod histogram;
+pub mod replay;
+pub mod trace;
+
+pub use cost::{CostModel, FRAME_COST_UNIT};
+pub use histogram::LatencyHistogram;
+pub use replay::{replay, ReplayReport};
+pub use trace::{generate, TraceEvent, TraceSpec};

@@ -1,0 +1,182 @@
+//! Traffic subsystem suite: the cost-aware dispatch equivalence contract
+//! and the property tests behind the trace-replay tail-latency harness.
+//!
+//! The load-bearing claim of cost-aware ingress is that budget-packed
+//! dispatch changes WHEN work is grouped, never WHAT is computed: for the
+//! same trace, a cost-aware server and a frame-count server must deliver
+//! bit-identical per-tenant response sequences, both equal to a
+//! sequential `infer` loop on a fresh backend. The property tests pin the
+//! pieces the harness's numbers rest on: histogram quantiles bounded by
+//! min/max and monotone in rank, cost estimates monotone in event count,
+//! and trace generation deterministic per seed.
+
+use sacsnn::coordinator::{Server, ServerConfig, TenantConfig};
+use sacsnn::engine::{Backend, BackendKind, EngineBuilder};
+use sacsnn::snn::network::testutil::random_network;
+use sacsnn::traffic::{generate, CostModel, LatencyHistogram, TraceEvent, TraceSpec};
+use sacsnn::util::prop;
+use std::sync::Arc;
+
+/// `(pred, logits, sim_cycles)` of one served frame.
+type Served = (usize, Vec<i64>, u64);
+
+/// Serve `trace` through a server with the given `cost_aware` setting and
+/// return, per tenant, the `(pred, logits, sim_cycles)` sequence in feed
+/// order. Cross-tenant interleave is scheduling-dependent by design, so
+/// the per-tenant sequence is the bit-identity observable.
+fn serve_trace(
+    net: &Arc<sacsnn::snn::network::Network>,
+    trace: &[TraceEvent],
+    tenants: usize,
+    cost_aware: bool,
+) -> Vec<Vec<Served>> {
+    let server = Server::start(ServerConfig {
+        workers: 2,
+        batch_size: 4,
+        cost_aware,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut sessions = Vec::with_capacity(tenants);
+    for _ in 0..tenants {
+        let tenant = server
+            .register_tenant(
+                Arc::clone(net),
+                TenantConfig { max_inflight: 256, lanes: 2, ..Default::default() },
+            )
+            .unwrap();
+        sessions.push(server.open_session(tenant).unwrap());
+    }
+    for ev in trace {
+        sessions[ev.tenant].feed(&ev.frame).unwrap();
+    }
+    let mut out: Vec<Vec<Served>> = Vec::with_capacity(tenants);
+    for session in &mut sessions {
+        let mut replies = Vec::new();
+        while let Some(reply) = session.recv() {
+            let r = reply.unwrap();
+            assert_eq!(r.id, replies.len() as u64, "feed order within a tenant");
+            replies.push((r.pred, r.logits, r.sim_cycles));
+        }
+        out.push(replies);
+    }
+    server.shutdown();
+    out
+}
+
+#[test]
+fn cost_packed_dispatch_is_bit_identical_to_frame_count_dispatch() {
+    let net = Arc::new(random_network(2024));
+    let spec = TraceSpec {
+        tenants: 3,
+        frames_per_tenant: 20,
+        shape: net.input_shape(),
+        ..Default::default()
+    };
+    let trace = generate(&spec);
+
+    let packed = serve_trace(&net, &trace, spec.tenants, true);
+    let counted = serve_trace(&net, &trace, spec.tenants, false);
+    assert_eq!(packed, counted, "cost-aware packing changed results");
+
+    // ...and both match a sequential infer loop on a fresh backend.
+    let mut seq = EngineBuilder::new(Arc::clone(&net)).lanes(2).build(BackendKind::Sim).unwrap();
+    for tenant in 0..spec.tenants {
+        let frames: Vec<_> = trace.iter().filter(|e| e.tenant == tenant).collect();
+        assert_eq!(packed[tenant].len(), frames.len(), "tenant {tenant}: every frame served");
+        for (i, ev) in frames.iter().enumerate() {
+            let want = seq.infer(&ev.frame).unwrap();
+            let (pred, logits, cycles) = &packed[tenant][i];
+            assert_eq!(*pred, want.pred, "tenant {tenant} frame {i}");
+            assert_eq!(*logits, want.logits, "tenant {tenant} frame {i}");
+            assert_eq!(*cycles, want.stats.total_cycles, "tenant {tenant} frame {i}");
+        }
+    }
+}
+
+#[test]
+fn histogram_quantiles_are_bounded_and_monotone() {
+    prop::check("histogram quantile bounds", 40, |rng| {
+        let mut h = LatencyHistogram::new();
+        let n = 1 + rng.below(400) as usize;
+        let mut lo = u64::MAX;
+        let mut hi = 0u64;
+        for _ in 0..n {
+            // span several power-of-two bucket groups, including exact
+            // sub-32 values and multi-million-µs outliers
+            let v = rng.below(1 << (1 + rng.below(22))) as u64;
+            lo = lo.min(v);
+            hi = hi.max(v);
+            h.record(v);
+        }
+        let mut prev = 0u64;
+        for step in 0..=20 {
+            let q = step as f64 / 20.0;
+            let got = h.quantile(q);
+            if got < lo || got > hi {
+                return Err(format!("q{q}: {got} outside [{lo}, {hi}]"));
+            }
+            if got < prev {
+                return Err(format!("q{q}: {got} < previous quantile {prev}"));
+            }
+            prev = got;
+        }
+        // q0 clamps exactly to min; q1 lands in max's bucket, whose lower
+        // bound is within one 1/32 sub-bucket of max.
+        if h.quantile(0.0) != lo {
+            return Err(format!("q0 {} must equal min {lo}", h.quantile(0.0)));
+        }
+        if h.quantile(1.0) < hi.saturating_sub(hi / 32 + 1) {
+            return Err(format!("q1 {} too far below max {hi}", h.quantile(1.0)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cost_estimate_is_monotone_in_event_count() {
+    prop::check("cost estimate monotone", 20, |rng| {
+        let model = CostModel::from_network(&random_network(rng.below(1 << 20) as u64));
+        let mut prev = model.estimate(0);
+        for events in [1u64, 2, 10, 100, 784, 10_000, 1 << 20] {
+            let e = model.estimate(events);
+            if e < prev {
+                return Err(format!("estimate({events}) = {e} < {prev}"));
+            }
+            prev = e;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trace_generation_is_deterministic_per_seed() {
+    prop::check("trace determinism", 10, |rng| {
+        let spec = TraceSpec {
+            tenants: 1 + rng.below(5) as usize,
+            frames_per_tenant: 1 + rng.below(30) as usize,
+            seed: rng.below(1 << 30) as u64,
+            ..Default::default()
+        };
+        let a = generate(&spec);
+        let b = generate(&spec);
+        if a.len() != b.len() {
+            return Err(format!("lengths differ: {} vs {}", a.len(), b.len()));
+        }
+        for (x, y) in a.iter().zip(&b) {
+            if (x.at_us, x.tenant, x.seq) != (y.at_us, y.tenant, y.seq) || x.frame != y.frame {
+                return Err(format!("event diverges: t{} seq{}", x.tenant, x.seq));
+            }
+        }
+        // a different seed must not reproduce the same arrival process
+        let other = generate(&TraceSpec { seed: spec.seed ^ 1, ..spec });
+        let same = a
+            .iter()
+            .zip(&other)
+            .all(|(x, y)| x.at_us == y.at_us && x.frame.bytes() == y.frame.bytes());
+        if same {
+            return Err("seed change did not change the trace".into());
+        }
+        Ok(())
+    });
+}
