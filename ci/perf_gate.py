@@ -26,6 +26,9 @@ Gate rules (tolerances chosen for shared CI runners):
   * ``replay_p99_us``            — fail on a RISE of more than 50% vs baseline
     (trace-replay p99 submit→reply latency; tail latency is noisier than
     mean throughput on shared runners, hence the wider tolerance)
+  * ``replay_availability``      — fail on ANY drop (served/fed ratio of the
+    gated fault-free replay; there is no runner noise in whether a frame
+    was answered, so the floor — 1.0 in the committed baseline — is exact)
   * ``allocs_per_inference``     — fail on ANY increase (the zero-allocation
     execute step is machine-independent: an increase is always a real
     regression, never runner noise)
@@ -56,6 +59,12 @@ THROUGHPUT_FIELDS = (
 # Tail-latency CEILINGS (lower is better): the trace-replay p99 of
 # submit→reply latency from the bench's seeded multi-tenant replay.
 LATENCY_FIELDS = ("replay_p99_us",)
+# Availability FLOORS with NO tolerance (the serving layer either
+# answered a fed frame with a result or it did not — there is no runner
+# noise in that ratio): current must be >= baseline exactly. The bench's
+# gated replay runs without fault injection, so the committed floor is
+# 1.0 — any frame failing typed in CI is a real serving regression.
+AVAILABILITY_FIELDS = ("replay_availability",)
 ALLOC_FIELD = "allocs_per_inference"
 
 RATCHET_NOTE = (
@@ -63,6 +72,8 @@ RATCHET_NOTE = (
     "and machine-independent: any increase always fails the gate. The "
     "throughput floors are HARD gates: >15% below any of them fails CI. "
     "replay_p99_us is a HARD tail-latency ceiling: >50% above it fails CI. "
+    "replay_availability is an exact zero-tolerance floor: any served-frame "
+    "failure in the gated replay fails CI. "
     "Ratcheted from a green run's BENCH_sim artifact via "
     "`python3 ci/perf_gate.py --ratchet BENCH_sim.json`: each floor is 0.85 x "
     "the measured value of that run (floors never loosen) and each latency "
@@ -128,6 +139,24 @@ def evaluate(cur: dict, base: dict):
                 f"-tolerance ceiling {ceiling:.1f} (baseline {b:.1f})"
             )
 
+    for field in AVAILABILITY_FIELDS:
+        b, c = base.get(field), cur.get(field)
+        if b is None or c is None:
+            row(field, str(b), str(c), "-", "FAIL (missing)")
+            failures.append(
+                f"{field}: missing from {'baseline' if b is None else 'current'} "
+                "(gated fields must be present in both files)"
+            )
+            continue
+        ok = c >= b - 1e-9
+        delta = f"{(c - b) * 100.0:+.2f}pp"
+        row(field, f"{b:.4f}", f"{c:.4f}", delta, "ok" if ok else "FAIL")
+        if not ok:
+            failures.append(
+                f"{field}: {c:.4f} is below the zero-tolerance floor {b:.4f} "
+                "(every fed frame must be answered with a result)"
+            )
+
     b, c = base.get(ALLOC_FIELD), cur.get(ALLOC_FIELD)
     if b is None or c is None:
         row(ALLOC_FIELD, str(b), str(c), "-", "FAIL (missing)")
@@ -146,7 +175,12 @@ def evaluate(cur: dict, base: dict):
 
     # Informational fields: everything numeric the two files share.
     for field in sorted(set(cur) & set(base)):
-        if field in THROUGHPUT_FIELDS or field in LATENCY_FIELDS or field == ALLOC_FIELD:
+        if (
+            field in THROUGHPUT_FIELDS
+            or field in LATENCY_FIELDS
+            or field in AVAILABILITY_FIELDS
+            or field == ALLOC_FIELD
+        ):
             continue
         b, c = base[field], cur[field]
         if isinstance(b, (int, float)) and isinstance(c, (int, float)) and not isinstance(b, bool):
@@ -165,7 +199,11 @@ def ratchet(measured: dict, base: dict) -> dict:
     Informational fields are refreshed from the measured artifact.
     Raises ValueError if a gated field is missing from the measurement.
     """
-    missing = [f for f in (*THROUGHPUT_FIELDS, *LATENCY_FIELDS, ALLOC_FIELD) if f not in measured]
+    missing = [
+        f
+        for f in (*THROUGHPUT_FIELDS, *LATENCY_FIELDS, *AVAILABILITY_FIELDS, ALLOC_FIELD)
+        if f not in measured
+    ]
     if missing:
         raise ValueError(f"measured artifact is missing gated fields: {missing}")
     out = dict(measured)
@@ -183,6 +221,12 @@ def ratchet(measured: dict, base: dict) -> dict:
         if isinstance(old, (int, float)) and not isinstance(old, bool):
             ceiling = min(ceiling, float(old))  # a ratchet only tightens
         new_base[field] = ceiling
+    for field in AVAILABILITY_FIELDS:
+        floor = float(measured[field])
+        old = base.get(field)
+        if isinstance(old, (int, float)) and not isinstance(old, bool):
+            floor = max(floor, float(old))  # a ratchet only tightens
+        new_base[field] = floor
     old_alloc = base.get(ALLOC_FIELD)
     alloc = float(measured[ALLOC_FIELD])
     if isinstance(old_alloc, (int, float)) and not isinstance(old_alloc, bool):
@@ -210,6 +254,7 @@ def selftest() -> int:
         "images_per_sec_batched": 200.0,
         "images_per_sec_pipelined": 150.0,
         "replay_p99_us": 1000.0,
+        "replay_availability": 1.0,
         "allocs_per_inference": 0.0,
         "frames": 20,
     }
@@ -255,11 +300,22 @@ def selftest() -> int:
     del missing_lat["replay_p99_us"]
     check("missing latency field fails", gate_fails(missing_lat))
 
+    dropped_avail = dict(base, replay_availability=0.9999)
+    check("ANY availability drop fails (zero tolerance)", gate_fails(dropped_avail))
+
+    at_avail_floor = dict(base, replay_availability=1.0)
+    check("availability exactly at the floor passes", not gate_fails(at_avail_floor))
+
+    missing_avail = dict(base)
+    del missing_avail["replay_availability"]
+    check("missing availability field fails", gate_fails(missing_avail))
+
     measured = {
         "frames_per_s": 200.0,
         "images_per_sec_batched": 100.0,  # slower than the old 200 floor
         "images_per_sec_pipelined": 300.0,
         "replay_p99_us": 425.0,  # faster than the old 1000 µs ceiling
+        "replay_availability": 1.0,
         "allocs_per_inference": 0.0,
         "frames": 20,
         "smoke": True,
@@ -283,11 +339,24 @@ def selftest() -> int:
         "ratchet never raises an existing latency ceiling",
         ratchet(dict(measured, replay_p99_us=10_000.0), base)["replay_p99_us"] == 1000.0,
     )
+    check(
+        "ratchet never lowers an existing availability floor",
+        ratchet(dict(measured, replay_availability=0.97), base)["replay_availability"] == 1.0,
+    )
+    check(
+        "ratchet availability floor rises to the measured value",
+        ratchet(
+            dict(measured, replay_availability=0.95),
+            dict(base, replay_availability=0.9),
+        )["replay_availability"]
+        == 0.95,
+    )
     check("ratchet carries informational fields", new_base["frames"] == 20)
     check("ratchet writes the procedure note", "_note" in new_base)
     # a measured run faster on every axis passes the baseline it ratchets
     all_faster = {f: 10.0 * base[f] for f in THROUGHPUT_FIELDS}
     all_faster["replay_p99_us"] = 100.0  # tail latency: faster = lower
+    all_faster["replay_availability"] = 1.0
     all_faster[ALLOC_FIELD] = 0.0
     all_faster["frames"] = 20
     check(
@@ -346,6 +415,8 @@ def main() -> int:
             print(f"  {field}: floor {new_base[field]}")
         for field in LATENCY_FIELDS:
             print(f"  {field}: ceiling {new_base[field]}")
+        for field in AVAILABILITY_FIELDS:
+            print(f"  {field}: floor {new_base[field]}")
         print(f"  {ALLOC_FIELD}: ceiling {new_base[ALLOC_FIELD]}")
         return 0
 

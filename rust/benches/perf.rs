@@ -159,7 +159,7 @@ fn main() {
     // latency regressions on the serving path fail CI like throughput
     // regressions do.
     use sacsnn::coordinator::{Server, ServerConfig, Session, TenantConfig};
-    use sacsnn::traffic::{generate, replay, TraceSpec};
+    use sacsnn::traffic::{generate, replay_tolerant, TraceSpec};
 
     let replay_tenants = 4usize;
     let spec = TraceSpec {
@@ -181,8 +181,16 @@ fn main() {
             .expect("replay tenant");
         sessions.push(server.open_session(tenant).expect("replay session"));
     }
-    let replay_report = replay(&mut sessions, &trace, 0.0).expect("trace replay");
+    // The fault-tolerant replay without any fault plan behaves exactly
+    // like the strict one on a healthy server, but measures availability
+    // (served / fed) instead of aborting on a serving error — so a
+    // regression that fails frames shows up as a readable
+    // replay_availability gate failure (hard floor 1.0 in the baseline)
+    // rather than a bench panic.
+    let chaos_replay = replay_tolerant(&mut sessions, &trace, 0.0).expect("trace replay");
     server.shutdown();
+    let replay_report = &chaos_replay.report;
+    let replay_availability = chaos_replay.availability();
     let replay_frames = replay_report.frames();
     let replay_p50_us = replay_report.total.quantile(0.50);
     let replay_p99_us = replay_report.total.quantile(0.99);
@@ -190,7 +198,8 @@ fn main() {
     let replay_frames_per_s = replay_report.frames_per_s();
     println!(
         "replay ({replay_frames} frames / {replay_tenants} tenants): p50 {replay_p50_us} µs, \
-         p99 {replay_p99_us} µs, p999 {replay_p999_us} µs → {replay_frames_per_s:.0} frames/s served"
+         p99 {replay_p99_us} µs, p999 {replay_p999_us} µs → {replay_frames_per_s:.0} frames/s \
+         served, availability {replay_availability:.4}"
     );
 
     let json = format!(
@@ -214,6 +223,7 @@ fn main() {
          \"replay_p99_us\": {replay_p99_us},\n  \
          \"replay_p999_us\": {replay_p999_us},\n  \
          \"replay_frames_per_s\": {replay_frames_per_s:.3},\n  \
+         \"replay_availability\": {replay_availability:.6},\n  \
          \"allocs_per_inference\": {allocs_per_inference:.3}\n}}\n",
         images.len(),
         batch.len()

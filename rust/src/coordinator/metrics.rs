@@ -23,6 +23,7 @@ pub struct Metrics {
     max_queue_wait_us: AtomicU64,
     max_service_us: AtomicU64,
     evictions: AtomicU64,
+    worker_restarts: AtomicU64,
 }
 
 /// A point-in-time copy of the metrics.
@@ -61,6 +62,9 @@ pub struct MetricsSnapshot {
     /// Per-worker backend caches dropped for idle tenants (the
     /// idle-tenant eviction sweep; see `ServerConfig::idle_evict_dispatches`).
     pub backend_evictions: u64,
+    /// Workers respawned by the supervisor after a panic or a missed
+    /// dispatch deadline (see `ServerConfig::max_worker_restarts`).
+    pub worker_restarts: u64,
 }
 
 impl Metrics {
@@ -100,6 +104,12 @@ impl Metrics {
         self.evictions.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one worker respawned by the supervisor (panic or missed
+    /// deadline).
+    pub fn worker_restarted(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn completed(&self, queue_wait_us: u64, service_us: u64, sim_cycles: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.queue_wait_us_sum.fetch_add(queue_wait_us, Ordering::Relaxed);
@@ -133,6 +143,7 @@ impl Metrics {
             max_queue_wait_us: self.max_queue_wait_us.load(Ordering::Relaxed),
             max_service_us: self.max_service_us.load(Ordering::Relaxed),
             backend_evictions: self.evictions.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
         }
     }
 }
@@ -158,6 +169,7 @@ impl MetricsSnapshot {
         m.insert("max_queue_wait_us".into(), Json::Num(self.max_queue_wait_us as f64));
         m.insert("max_service_us".into(), Json::Num(self.max_service_us as f64));
         m.insert("backend_evictions".into(), Json::Num(self.backend_evictions as f64));
+        m.insert("worker_restarts".into(), Json::Num(self.worker_restarts as f64));
         Json::Obj(m)
     }
 }
@@ -177,6 +189,7 @@ mod tests {
         m.stream_pulled();
         m.batch_served(500);
         m.evicted();
+        m.worker_restarted();
         m.completed(10, 100, 1000);
         m.completed(30, 300, 3000);
         let s = m.snapshot();
@@ -194,6 +207,7 @@ mod tests {
         assert!((s.mean_batch_service_us - 500.0).abs() < 1e-9);
         assert_eq!(s.max_batch_service_us, 500);
         assert_eq!(s.backend_evictions, 1);
+        assert_eq!(s.worker_restarts, 1);
         // a formed-but-failed batch must not dilute the service mean
         m.batch_formed(3);
         let s = m.snapshot();

@@ -30,13 +30,17 @@
 //!   per-tenant breakdown (queue depth, images/s, quota rejections, and
 //!   a per-tenant `failed` so one misbehaving tenant is attributable).
 //!
-//! Failure semantics are typed end to end: misshapen frames are rejected
-//! at `feed` (nothing enqueues), a panicking backend fails its in-flight
-//! frames with [`EngineError::WorkerPanicked`] and retires its worker
-//! (the last live worker becomes a fail-fast drainer), and
-//! [`Server::shutdown`] replies [`EngineError::Shutdown`] to everything
-//! still queued before joining the pool — no reply is ever silently
-//! dropped.
+//! Failure semantics are typed end to end — and self-healing: misshapen
+//! frames are rejected at `feed` (nothing enqueues); a panicking backend
+//! fails its in-flight frames with [`EngineError::WorkerPanicked`]
+//! (or retries them, per [`TenantConfig::max_retries`], quarantining
+//! repeat offenders with [`EngineError::PoisonFrame`]) while the worker
+//! heals in place, so the pool never shrinks; a dispatch that blows its
+//! tenant's [`TenantConfig::dispatch_timeout`] is reaped by the server
+//! watchdog with [`EngineError::DeadlineExceeded`] and the wedged worker
+//! replaced; and [`Server::shutdown`] replies [`EngineError::Shutdown`]
+//! to everything still queued before joining the pool — no reply is ever
+//! silently dropped.
 //!
 //! The single-tenant [`Coordinator`] from earlier revisions remains as a
 //! **deprecated shim** over a one-tenant `Server` (same `submit` /
@@ -49,7 +53,7 @@ pub mod session;
 pub mod tenants;
 
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{Server, ServerConfig, ServerSnapshot};
+pub use server::{Server, ServerConfig, ServerSnapshot, WATCHDOG_PERIOD};
 pub use session::Session;
 pub use tenants::{TenantConfig, TenantId, TenantMetrics, TenantSnapshot};
 
@@ -140,7 +144,7 @@ impl Coordinator {
 
     fn wrap(server: Server, tenant_id: TenantId) -> Self {
         let tenant = server
-            .tenant_state(tenant_id)
+            .tenant_arc(tenant_id)
             .expect("freshly registered tenant must resolve");
         let metrics = Arc::clone(&server.metrics);
         Coordinator { server, tenant, metrics, next_id: AtomicU64::new(0) }
@@ -376,8 +380,9 @@ mod tests {
     #[test]
     fn last_panicked_worker_drains_queue_with_typed_errors() {
         // A pool whose ONLY worker panics must not strand queued or
-        // later requests on a channel nobody answers: the last worker to
-        // die becomes a fail-fast drainer.
+        // later requests on a channel nobody answers: the worker heals in
+        // place and — its preset backend being irreplaceable — keeps
+        // answering every dispatch with its standing fault, typed.
         let coord = Coordinator::start_pool(
             vec![Box::new(PanickingBackend) as Box<dyn Backend>],
             ServerConfig { queue_depth: 16, batch_size: 1, ..Default::default() },
@@ -398,7 +403,8 @@ mod tests {
 
     #[test]
     fn panicked_worker_does_not_kill_survivors() {
-        // Heterogeneous pool: the panicker retires on its first dispatch,
+        // Heterogeneous pool: the panicker heals in place (its preset
+        // backend is gone for good, so its dispatches fail typed), while
         // the healthy sim worker keeps draining the queue.
         let net = Arc::new(random_network(37));
         let healthy = EngineBuilder::new(Arc::clone(&net)).build(BackendKind::Sim).unwrap();

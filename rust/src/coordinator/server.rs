@@ -29,10 +29,20 @@
 //!   compiled [`NetworkPlan`]s through a server-wide
 //!   [`PlanCache`] keyed by network content hash: two tenants with the
 //!   same weights share one plan (`Arc::ptr_eq`-provable).
-//! * **Typed failure, drained shutdown.** Worker panics retire the
-//!   worker and fail its in-flight frames with
-//!   [`EngineError::WorkerPanicked`] (the last live worker becomes a
-//!   fail-fast drainer); [`Server::shutdown`] replies
+//! * **Self-healing failure containment.** A panicking backend fails
+//!   (or retries, per [`super::TenantConfig::max_retries`]) its
+//!   in-flight frames with [`EngineError::WorkerPanicked`] and the
+//!   worker *heals in place*: it drops its backend cache (releasing
+//!   compiled plans no live tenant shares), backs off exponentially and
+//!   keeps serving — the pool never shrinks
+//!   ([`ServerConfig::max_worker_restarts`] caps consecutive heals; a
+//!   worker past the cap answers dispatches typed instead of
+//!   crash-looping). A server-wide watchdog enforces per-tenant
+//!   dispatch deadlines ([`super::TenantConfig::dispatch_timeout`]):
+//!   an overdue dispatch is reaped — its frames answered or retried
+//!   with [`EngineError::DeadlineExceeded`], the wedged thread
+//!   abandoned, a replacement spawned — so a hung backend cannot
+//!   freeze a tenant. [`Server::shutdown`] replies
 //!   [`EngineError::Shutdown`] to everything still queued and joins the
 //!   pool — nothing is ever silently dropped.
 
@@ -45,14 +55,12 @@ use crate::sim::plan::NetworkPlan;
 use crate::snn::network::Network;
 use crate::traffic::{CostModel, FRAME_COST_UNIT};
 use crate::util::json::Json;
-use std::cell::RefCell;
-use std::collections::hash_map::Entry;
 use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Server configuration (also the per-tenant defaults the deprecated
 /// [`super::Coordinator`] shim derives its single tenant from).
@@ -95,6 +103,16 @@ pub struct ServerConfig {
     /// returning tenant rebuilds transparently on its next dispatch;
     /// evictions are counted in `MetricsSnapshot::backend_evictions`.
     pub idle_evict_dispatches: u64,
+    /// Consecutive in-place heals a worker lineage may take before it
+    /// stops trusting itself: past the cap the worker answers every
+    /// dispatch with its last fault (typed, via the retry path) instead
+    /// of crash-looping. A clean dispatch resets the count. Each heal is
+    /// counted in `MetricsSnapshot::worker_restarts`.
+    pub max_worker_restarts: u32,
+    /// Base backoff a healed worker sleeps before serving again,
+    /// doubling per consecutive restart (capped at 64×). `0` disables
+    /// the backoff (useful in tests).
+    pub restart_backoff_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -109,6 +127,8 @@ impl Default for ServerConfig {
             batch_size: 16,
             cost_aware: true,
             idle_evict_dispatches: 1024,
+            max_worker_restarts: 16,
+            restart_backoff_ms: 5,
         }
     }
 }
@@ -126,6 +146,9 @@ impl ServerConfig {
             lanes: self.lanes,
             threads: self.threads,
             pipeline: self.pipeline,
+            // fault-tolerance knobs keep their per-tenant defaults
+            // (no deadline, no retries, no fault injection)
+            ..TenantConfig::default()
         }
     }
 }
@@ -149,6 +172,10 @@ pub(crate) struct WorkItem {
     pub cost: u64,
     pub enqueued: Instant,
     pub reply_to: ReplyTo,
+    /// Failed dispatch attempts this frame has already survived (see
+    /// [`super::TenantConfig::max_retries`]); fresh admissions start
+    /// at 0.
+    pub retries: u32,
 }
 
 /// Reply metadata of a frame already handed to the backend (its `Frame`
@@ -157,6 +184,15 @@ struct Meta {
     reply_to: ReplyTo,
     enqueued: Instant,
     picked: Instant,
+    /// Retry copy of the frame, kept ONLY for tenants with a retry
+    /// budget (`max_retries > 0`) — a faulty dispatch re-enqueues it.
+    /// Empty [`Frame::default`] otherwise, so default tenants keep the
+    /// exact zero-allocation hot path.
+    frame: Frame,
+    /// Admission cost tag, preserved across retries.
+    cost: u64,
+    /// Failed attempts so far (copied from the [`WorkItem`]).
+    retries: u32,
 }
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -291,6 +327,30 @@ impl Injector {
         }
     }
 
+    /// Re-enqueue retried frames at the FRONT of their tenant's queue,
+    /// preserving their relative order (the head of `items` ends up
+    /// first in line) — a replayed frame must still reach its session's
+    /// reorder ring in feed order. Allowed while running *or* draining
+    /// (a graceful drain still serves retried frames); `Err(Shutdown)`
+    /// once stopped, leaving `items` untouched for the caller to fail.
+    fn requeue_front(&self, tenant: TenantId, items: &mut Vec<WorkItem>) -> Result<(), EngineError> {
+        let mut st = self.state.lock().expect("injector poisoned");
+        if st.mode == Mode::Stopped {
+            return Err(EngineError::Shutdown);
+        }
+        let Some(q) = st.queues.get_mut(&tenant) else {
+            return Err(EngineError::UnknownTenant { tenant: tenant.0 });
+        };
+        let n = items.len();
+        for item in items.drain(..).rev() {
+            q.push_front(item);
+        }
+        st.queued += n;
+        drop(st);
+        self.cv.notify_all();
+        Ok(())
+    }
+
     /// Mid-stream pull: one more frame of `tenant`, but only while no
     /// OTHER tenant has work waiting (fairness beats overlap) and the
     /// server is not fast-stopping. This is what keeps a pipelined
@@ -344,6 +404,68 @@ impl Injector {
 /// floods sessions and never reuses; normal serving stays well under).
 const FRAME_POOL_CAP: usize = 1024;
 
+/// How often the watchdog scans the pool for overdue dispatches: an
+/// overdue dispatch is reaped at most this long after its
+/// [`super::TenantConfig::dispatch_timeout`] deadline passes.
+pub const WATCHDOG_PERIOD: Duration = Duration::from_millis(10);
+
+/// Per-dispatch bookkeeping of the current dispatch, visible to both
+/// the worker thread and the watchdog.
+struct SlotState {
+    /// Reply metadata of frames inside the backend's stream.
+    meta: VecDeque<Meta>,
+    /// Dispatched-but-unfed items (drained from the injector).
+    inbox: VecDeque<WorkItem>,
+    /// When the current dispatch becomes overdue (`None` = no deadline
+    /// armed — idle worker, or a tenant without `dispatch_timeout`).
+    /// Refreshed on every sunk result: the timeout bounds time *without
+    /// progress*, not total stream length.
+    deadline: Option<Instant>,
+    /// The armed tenant's `dispatch_timeout` (for the refresh and the
+    /// typed error's `timeout_ms`).
+    timeout: Option<Duration>,
+    /// The tenant being served (for the watchdog's retry resolution).
+    tenant: Option<Arc<TenantState>>,
+    /// Set once by the watchdog when it reaps this dispatch: the worker
+    /// thread is presumed wedged, its later pulls/sinks become no-ops,
+    /// and a replacement owns the lineage. Never cleared.
+    abandoned: bool,
+}
+
+/// One worker's supervision slot — the handle the watchdog scans. A
+/// reaped slot is swapped out of the registry for its replacement's, so
+/// the pool's slot list always has one live entry per configured
+/// worker.
+struct WorkerSlot {
+    state: Mutex<SlotState>,
+    /// Consecutive heals of this worker lineage (in-place panic
+    /// restarts + watchdog replacements); reset by a clean dispatch,
+    /// carried across replacements. Past
+    /// [`ServerConfig::max_worker_restarts`] the worker answers
+    /// dispatches typed instead of crash-looping.
+    restarts: AtomicU32,
+}
+
+impl WorkerSlot {
+    fn new(restarts: u32) -> Self {
+        WorkerSlot {
+            state: Mutex::new(SlotState {
+                meta: VecDeque::new(),
+                inbox: VecDeque::new(),
+                deadline: None,
+                timeout: None,
+                tenant: None,
+                abandoned: false,
+            }),
+            restarts: AtomicU32::new(restarts),
+        }
+    }
+
+    fn is_abandoned(&self) -> bool {
+        self.state.lock().expect("worker slot poisoned").abandoned
+    }
+}
+
 /// State shared between the `Server` handle, its sessions and the
 /// worker pool.
 pub(crate) struct ServerShared {
@@ -356,7 +478,6 @@ pub(crate) struct ServerShared {
     /// workers hand it back after the backend returns it through the
     /// stream sink — zero allocations per frame once warm.
     frame_pool: Mutex<Vec<Frame>>,
-    live_workers: AtomicUsize,
     /// Monotone count of pool dispatches — the clock the idle-eviction
     /// sweep measures tenant staleness against (wall time would couple
     /// eviction to load; dispatch counts make it purely relative).
@@ -365,6 +486,20 @@ pub(crate) struct ServerShared {
     idle_evict: u64,
     /// Copy of [`ServerConfig::cost_aware`].
     cost_aware: bool,
+    /// Live worker slots the watchdog scans (one per configured worker;
+    /// a reaped slot is swapped for its replacement's).
+    slots: Mutex<Vec<Arc<WorkerSlot>>>,
+    /// Join handles of every worker thread spawned so far (initial pool
+    /// plus watchdog replacements); drained at shutdown.
+    handles: Mutex<Vec<(JoinHandle<()>, Arc<WorkerSlot>)>>,
+    /// Watchdog park/stop flag (condvar-timed ticks, prompt shutdown).
+    watchdog_stop: Mutex<bool>,
+    watchdog_cv: Condvar,
+    /// Copies of the supervision knobs (the watchdog spawns replacement
+    /// workers, so it needs the same parameters `spawn` used).
+    batch_size: usize,
+    max_restarts: u32,
+    backoff_ms: u64,
 }
 
 impl ServerShared {
@@ -409,6 +544,7 @@ impl ServerShared {
             cost,
             enqueued: Instant::now(),
             reply_to: ReplyTo::Session { shared, seq },
+            retries: 0,
         };
         self.injector.push(tenant.id, item)?;
         self.metrics.submitted();
@@ -433,6 +569,7 @@ impl ServerShared {
             cost,
             enqueued: Instant::now(),
             reply_to: ReplyTo::Channel { id, tx },
+            retries: 0,
         };
         self.injector.push(tenant.id, item)?;
         self.metrics.submitted();
@@ -468,7 +605,9 @@ fn reply_err(reply_to: ReplyTo, e: EngineError) {
 /// architecture; see [`Session`] for the client API.
 pub struct Server {
     shared: Arc<ServerShared>,
-    workers: Vec<JoinHandle<()>>,
+    /// The supervision watchdog thread; `None` once stopped (the
+    /// idempotency latch for `stop_internal`).
+    watchdog: Option<JoinHandle<()>>,
     /// Global service metrics (per-tenant counters live in
     /// [`ServerSnapshot::tenants`]).
     pub metrics: Arc<Metrics>,
@@ -503,6 +642,7 @@ impl Server {
         cfg: ServerConfig,
         preset_backends: Vec<Box<dyn Backend>>,
     ) -> Result<(Self, TenantId), EngineError> {
+        let batch = cfg.batch_size.max(1);
         let shared = Arc::new(ServerShared {
             injector: Injector::new(),
             metrics: Arc::new(Metrics::default()),
@@ -510,22 +650,24 @@ impl Server {
             next_tenant: AtomicU64::new(0),
             plans: PlanCache::new(),
             frame_pool: Mutex::new(Vec::new()),
-            live_workers: AtomicUsize::new(0),
             dispatch_seq: AtomicU64::new(0),
             idle_evict: cfg.idle_evict_dispatches,
             cost_aware: cfg.cost_aware,
+            slots: Mutex::new(Vec::new()),
+            handles: Mutex::new(Vec::new()),
+            watchdog_stop: Mutex::new(false),
+            watchdog_cv: Condvar::new(),
+            batch_size: batch,
+            max_restarts: cfg.max_worker_restarts,
+            backoff_ms: cfg.restart_backoff_ms,
         });
         let metrics = Arc::clone(&shared.metrics);
-        let batch = cfg.batch_size.max(1);
 
         let mut preset_tenant = TenantId(0);
-        let mut workers = Vec::new();
         if preset_backends.is_empty() {
             let n = cfg.workers.max(1);
-            shared.live_workers.store(n, Ordering::Release);
             for _ in 0..n {
-                let shared = Arc::clone(&shared);
-                workers.push(std::thread::spawn(move || worker_loop(shared, None, batch)));
+                spawn_worker(&shared, None);
             }
         } else {
             // The implicit tenant every pool worker serves with its own
@@ -539,16 +681,15 @@ impl Server {
             // tags → frame-count batching) and no evictable plan.
             preset_tenant =
                 register_state(&shared, &tenant_cfg, shape, BackendSource::Preset, None, None);
-            shared.live_workers.store(preset_backends.len(), Ordering::Release);
             for backend in preset_backends {
-                let shared = Arc::clone(&shared);
-                let tid = preset_tenant;
-                workers.push(std::thread::spawn(move || {
-                    worker_loop(shared, Some((tid, backend)), batch)
-                }));
+                spawn_worker(&shared, Some((preset_tenant, backend)));
             }
         }
-        Ok((Server { shared, workers, metrics }, preset_tenant))
+        let watchdog = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || watchdog_loop(shared))
+        };
+        Ok((Server { shared, watchdog: Some(watchdog), metrics }, preset_tenant))
     }
 
     /// Register a tenant: a network plus its serving policy. Sim plans
@@ -563,11 +704,17 @@ impl Server {
         if !self.shared.injector.is_running() {
             return Err(EngineError::Shutdown);
         }
-        let builder = EngineBuilder::new(Arc::clone(&net))
+        let mut builder = EngineBuilder::new(Arc::clone(&net))
             .lanes(cfg.lanes)
             .threads(cfg.threads)
             .pipeline(cfg.pipeline)
             .plan_cache(self.shared.plans.clone());
+        // Fault injection (the chaos harness): every backend built for
+        // this tenant — including the probe below — is wrapped in a
+        // deterministic ChaosBackend.
+        if let Some(plan) = &cfg.fault_plan {
+            builder = builder.faults(Arc::clone(plan));
+        }
         // Fail fast: an unbuildable backend (e.g. PJRT without the
         // runtime) is an operator configuration error and must surface
         // HERE, typed, not per-request after frames were fed. The probe
@@ -642,9 +789,28 @@ impl Server {
         ServerSnapshot { service: self.metrics.snapshot(), tenants: rows }
     }
 
+    /// Point-in-time snapshot of one tenant's counters (completed,
+    /// failed, retries, quarantined, …) — the per-tenant view of
+    /// [`Self::snapshot`].
+    pub fn tenant_state(&self, tenant: TenantId) -> Result<TenantSnapshot, EngineError> {
+        let state = self
+            .shared
+            .tenant(tenant)
+            .ok_or(EngineError::UnknownTenant { tenant: tenant.0 })?;
+        Ok(TenantSnapshot::collect(&state, self.shared.injector.queue_depth(tenant)))
+    }
+
+    /// Number of live workers — threads whose supervision slot has not
+    /// been abandoned to a watchdog replacement. After any heal this
+    /// returns to the configured pool size (the pool never shrinks).
+    pub fn live_workers(&self) -> usize {
+        let slots = self.shared.slots.lock().expect("slot registry poisoned");
+        slots.iter().filter(|s| !s.is_abandoned()).count()
+    }
+
     /// Registered tenant state (quota handles, per-tenant metrics) for
     /// the deprecated `Coordinator` shim; `None` for unknown ids.
-    pub(crate) fn tenant_state(&self, tenant: TenantId) -> Option<Arc<TenantState>> {
+    pub(crate) fn tenant_arc(&self, tenant: TenantId) -> Option<Arc<TenantState>> {
         self.shared.tenant(tenant)
     }
 
@@ -668,17 +834,68 @@ impl Server {
     }
 
     fn stop_internal(&mut self, graceful: bool) {
-        if self.workers.is_empty() {
-            return;
-        }
+        let Some(watchdog) = self.watchdog.take() else {
+            return; // already stopped
+        };
         let flushed = self.shared.injector.stop(graceful);
         for item in flushed {
             self.shared.fail_item(item, EngineError::Shutdown);
         }
-        for handle in self.workers.drain(..) {
-            let _ = handle.join();
+        // Join the pool in rounds: the watchdog is still alive here (it
+        // must stay able to reap a dispatch that wedges mid-drain) and
+        // may spawn replacement workers while we join — a replacement
+        // spawned during shutdown observes the Draining/Stopped mode on
+        // its first injector visit and exits instead of parking, so
+        // each round terminates and the registry eventually stays
+        // empty.
+        loop {
+            let batch: Vec<(JoinHandle<()>, Arc<WorkerSlot>)> = {
+                let mut handles = self.shared.handles.lock().expect("handle registry poisoned");
+                handles.drain(..).collect()
+            };
+            if batch.is_empty() {
+                break;
+            }
+            for (handle, slot) in batch {
+                join_worker(handle, &slot);
+            }
+        }
+        // Stop the watchdog only after the pool is down...
+        {
+            let mut stop = self.shared.watchdog_stop.lock().expect("watchdog flag poisoned");
+            *stop = true;
+        }
+        self.shared.watchdog_cv.notify_all();
+        let _ = watchdog.join();
+        // ...and catch any replacement it spawned in its final moments
+        // (such a worker exits on its first injector visit).
+        let stragglers: Vec<(JoinHandle<()>, Arc<WorkerSlot>)> = {
+            let mut handles = self.shared.handles.lock().expect("handle registry poisoned");
+            handles.drain(..).collect()
+        };
+        for (handle, slot) in stragglers {
+            join_worker(handle, &slot);
         }
         self.shared.injector.mark_stopped();
+    }
+}
+
+/// Join one worker thread, with an escape hatch for wedged dispatches:
+/// a thread whose slot the watchdog abandoned may be stuck inside a
+/// hung backend indefinitely — it is detached (every shared structure
+/// it can still touch treats an abandoned slot as a no-op), not waited
+/// for.
+fn join_worker(handle: JoinHandle<()>, slot: &WorkerSlot) {
+    loop {
+        if handle.is_finished() {
+            let _ = handle.join();
+            return;
+        }
+        if slot.is_abandoned() {
+            drop(handle); // detach: the thread exits on its own schedule
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
     }
 }
 
@@ -741,21 +958,33 @@ impl ServerSnapshot {
 }
 
 /// The frame iterator a worker hands to [`Backend::infer_stream`]:
-/// drains the dispatched inbox, then keeps pulling from the tenant's
-/// injector queue while no other tenant is waiting — the mechanism that
-/// keeps pipelined workers filled across batch boundaries.
+/// drains the dispatched inbox (now living in the worker's supervision
+/// slot), then keeps pulling from the tenant's injector queue while no
+/// other tenant is waiting — the mechanism that keeps pipelined workers
+/// filled across batch boundaries. Every hand-off goes through the slot
+/// lock so the watchdog can reap a wedged dispatch consistently; an
+/// abandoned slot ends the stream.
 struct StreamFeed<'a> {
-    inbox: &'a mut VecDeque<WorkItem>,
-    meta: &'a RefCell<VecDeque<Meta>>,
+    slot: &'a WorkerSlot,
     shared: &'a ServerShared,
     tenant: TenantId,
+    tstate: &'a Arc<TenantState>,
 }
 
 impl Iterator for StreamFeed<'_> {
     type Item = Frame;
 
     fn next(&mut self) -> Option<Frame> {
-        let item = match self.inbox.pop_front() {
+        // Lock ordering: the slot lock is never held across an injector
+        // lock (and vice versa) — both are taken disjointly.
+        let item = {
+            let mut st = self.slot.state.lock().expect("worker slot poisoned");
+            if st.abandoned {
+                return None;
+            }
+            st.inbox.pop_front()
+        };
+        let item = match item {
             Some(item) => item,
             None => {
                 let pulled = self.shared.injector.pop_streaming(self.tenant)?;
@@ -763,64 +992,201 @@ impl Iterator for StreamFeed<'_> {
                 pulled
             }
         };
-        self.meta.borrow_mut().push_back(Meta {
+        // Keep a retry copy only when the tenant retries at all: the
+        // copy rides the frame pool, so default tenants keep the exact
+        // zero-allocation hot path.
+        let retry_frame = if self.tstate.max_retries > 0 {
+            let mut copy = self.shared.pooled_frame();
+            copy.copy_from(&item.frame);
+            copy
+        } else {
+            Frame::default()
+        };
+        let mut st = self.slot.state.lock().expect("worker slot poisoned");
+        if st.abandoned {
+            // The watchdog reaped this dispatch between the pop and
+            // here. Hand the item back at the queue front (it is still
+            // first in line) WITHOUT consuming a retry — the
+            // replacement worker picks it up. Rare path; the Vec is
+            // fine.
+            drop(st);
+            self.shared.recycle_frame(retry_frame);
+            let mut back = vec![item];
+            if let Err(shut) = self.shared.injector.requeue_front(self.tenant, &mut back) {
+                for item in back.drain(..) {
+                    self.shared.fail_item(item, shut.replicate());
+                }
+            }
+            return None;
+        }
+        st.meta.push_back(Meta {
             reply_to: item.reply_to,
             enqueued: item.enqueued,
             picked: Instant::now(),
+            frame: retry_frame,
+            cost: item.cost,
+            retries: item.retries,
         });
         Some(item.frame)
     }
 }
 
-/// Reply a typed error to every frame of the dispatch that has not been
-/// answered: first the fed-but-unserved metadata (in feed order), then
-/// the drained-but-unfed inbox items.
-fn fail_remaining(
+/// Answer — or retry — every frame of a faulty dispatch that has not
+/// been served: fed-but-unserved metadata first (feed order), then the
+/// drained-but-unfed inbox items. Frames with retry budget left
+/// ([`super::TenantConfig::max_retries`]) are re-enqueued at the FRONT
+/// of their tenant's queue in original order, quota slot still held and
+/// admission timestamp preserved; frames that exhausted the budget are
+/// quarantined with a typed [`EngineError::PoisonFrame`]. Tenants with
+/// no retry budget get the dispatch's own error — exactly the
+/// pre-supervision behavior.
+fn resolve_failed(
     shared: &ServerShared,
-    tstate: &TenantState,
-    meta: &RefCell<VecDeque<Meta>>,
+    tstate: &Arc<TenantState>,
+    meta: &mut VecDeque<Meta>,
     inbox: &mut VecDeque<WorkItem>,
     e: &EngineError,
 ) {
-    loop {
-        let m = meta.borrow_mut().pop_front();
-        match m {
-            Some(m) => {
-                shared.metrics.failed();
-                tstate.metrics.failed();
-                // quota released before the reply wakes the client
-                tstate.release();
-                reply_err(m.reply_to, e.replicate());
-            }
-            None => break,
+    let max = tstate.max_retries;
+    let mut retry: Vec<WorkItem> = Vec::new();
+    while let Some(m) = meta.pop_front() {
+        if m.retries < max {
+            tstate.metrics.retried();
+            retry.push(WorkItem {
+                tenant: Arc::clone(tstate),
+                frame: m.frame,
+                cost: m.cost,
+                enqueued: m.enqueued,
+                reply_to: m.reply_to,
+                retries: m.retries + 1,
+            });
+        } else {
+            let err = if max > 0 {
+                tstate.metrics.quarantined();
+                EngineError::PoisonFrame { tenant: tstate.id.0, retries: m.retries }
+            } else {
+                e.replicate()
+            };
+            shared.metrics.failed();
+            tstate.metrics.failed();
+            // quota released before the reply wakes the client
+            tstate.release();
+            reply_err(m.reply_to, err);
+            shared.recycle_frame(m.frame);
         }
     }
-    while let Some(item) = inbox.pop_front() {
-        shared.fail_item(item, e.replicate());
+    while let Some(mut item) = inbox.pop_front() {
+        if item.retries < max {
+            tstate.metrics.retried();
+            item.retries += 1;
+            retry.push(item);
+        } else if max > 0 {
+            tstate.metrics.quarantined();
+            let err = EngineError::PoisonFrame { tenant: tstate.id.0, retries: item.retries };
+            shared.fail_item(item, err);
+        } else {
+            shared.fail_item(item, e.replicate());
+        }
+    }
+    if !retry.is_empty() {
+        if let Err(shut) = shared.injector.requeue_front(tstate.id, &mut retry) {
+            for item in retry.drain(..) {
+                shared.fail_item(item, shut.replicate());
+            }
+        }
     }
 }
 
-/// Fail-fast drain mode of the last live worker after a panic: keep
-/// popping and reply [`EngineError::WorkerPanicked`] to everything until
-/// shutdown — no session or request ever blocks forever on a pool with
-/// zero serving capacity.
-fn drain_and_fail(shared: &ServerShared, e: &EngineError, inbox: &mut VecDeque<WorkItem>) {
-    loop {
-        match shared.injector.pop_dispatch(1, inbox) {
-            Dispatch::Exit => return,
-            Dispatch::Serve { .. } => {
-                while let Some(item) = inbox.pop_front() {
-                    shared.fail_item(item, e.replicate());
-                }
+/// Create a supervision slot + worker thread pair and register both
+/// with the pool (`restarts` seeds the lineage's consecutive-heal
+/// count; replacements inherit their predecessor's).
+fn spawn_worker(shared: &Arc<ServerShared>, preset: Option<(TenantId, Box<dyn Backend>)>) {
+    spawn_worker_healing(shared, preset, 0, None, 0);
+}
+
+fn spawn_worker_healing(
+    shared: &Arc<ServerShared>,
+    preset: Option<(TenantId, Box<dyn Backend>)>,
+    restarts: u32,
+    initial_fault: Option<EngineError>,
+    backoff_steps: u32,
+) {
+    let slot = Arc::new(WorkerSlot::new(restarts));
+    shared.slots.lock().expect("slot registry poisoned").push(Arc::clone(&slot));
+    let thread_shared = Arc::clone(shared);
+    let thread_slot = Arc::clone(&slot);
+    let backoff_ms = shared.backoff_ms;
+    let handle = std::thread::spawn(move || {
+        if backoff_steps > 0 {
+            backoff(backoff_ms, backoff_steps);
+        }
+        worker_loop(thread_shared, preset, thread_slot, initial_fault)
+    });
+    shared.handles.lock().expect("handle registry poisoned").push((handle, slot));
+}
+
+/// Exponential heal backoff: `base × 2^(consecutive−1)`, capped at 64×
+/// so a long crash streak never parks a worker for minutes.
+fn backoff(base_ms: u64, consecutive: u32) {
+    if base_ms == 0 {
+        return;
+    }
+    let factor = 1u64 << consecutive.saturating_sub(1).min(6);
+    std::thread::sleep(Duration::from_millis(base_ms.saturating_mul(factor)));
+}
+
+/// Drop every backend this worker caches (it is healing after a panic,
+/// or exiting after abandonment) and release compiled plans that no
+/// recently-active tenant still shares — the retired-worker leak fix,
+/// applying `sweep_idle`'s exact sharing rule. With the sweep disabled
+/// (`idle_evict == 0`) every registered tenant counts as live, so only
+/// unregistered tenants' plans are released.
+fn release_worker_cache(shared: &ServerShared, backends: &mut HashMap<TenantId, Box<dyn Backend>>) {
+    if backends.is_empty() {
+        return;
+    }
+    let now = shared.dispatch_seq.load(Ordering::Relaxed);
+    let threshold = shared.idle_evict;
+    let tenants = shared.tenants.read().expect("tenant registry poisoned");
+    let keys: Vec<TenantId> = backends.keys().copied().collect();
+    backends.clear();
+    for tid in keys {
+        if let Some(key) = tenants.get(&tid).and_then(|t| t.plan_key) {
+            let shared_by_live = tenants.values().any(|t| {
+                t.plan_key == Some(key)
+                    && (threshold == 0
+                        || now.saturating_sub(t.last_active.load(Ordering::Relaxed)) <= threshold)
+            });
+            if !shared_by_live {
+                shared.plans.remove(key);
             }
         }
     }
+}
+
+/// Move a finished (or failed) dispatch's remnants out of the slot and
+/// disarm its deadline. Returns whether the watchdog abandoned the slot
+/// meanwhile — if so the swapped-out queues are empty (the watchdog
+/// already answered them) and the caller must exit its thread.
+fn disarm_slot(
+    slot: &WorkerSlot,
+    meta_out: &mut VecDeque<Meta>,
+    inbox_out: &mut VecDeque<WorkItem>,
+) -> bool {
+    let mut st = slot.state.lock().expect("worker slot poisoned");
+    std::mem::swap(&mut st.meta, meta_out);
+    std::mem::swap(&mut st.inbox, inbox_out);
+    st.deadline = None;
+    st.timeout = None;
+    st.tenant = None;
+    st.abandoned
 }
 
 /// The persistent worker: park on the injector, drain one tenant's
 /// batch, stream it through the (lazily built, per-tenant) backend, and
-/// reply per frame as results arrive. Panics are contained per the
-/// module docs.
+/// reply per frame as results arrive. Failures heal in place per the
+/// module docs: the pool never shrinks, and the watchdog replaces a
+/// worker only when its dispatch blows its tenant's deadline.
 ///
 /// Each worker keeps one built backend per tenant it has served; the
 /// idle-eviction sweep ([`sweep_idle`], gated by
@@ -830,54 +1196,99 @@ fn drain_and_fail(shared: &ServerShared, e: &EngineError, inbox: &mut VecDeque<W
 fn worker_loop(
     shared: Arc<ServerShared>,
     preset: Option<(TenantId, Box<dyn Backend>)>,
-    batch_size: usize,
+    slot: Arc<WorkerSlot>,
+    mut last_fault: Option<EngineError>,
 ) {
+    let batch_size = shared.batch_size;
     let mut backends: HashMap<TenantId, Box<dyn Backend>> = HashMap::new();
+    let preset_tid = preset.as_ref().map(|(tid, _)| *tid);
     if let Some((tid, backend)) = preset {
         backends.insert(tid, backend);
     }
-    let mut inbox: VecDeque<WorkItem> = VecDeque::new();
-    // Reply metadata of frames currently inside the backend's stream;
-    // persistent across dispatches so the warmed steady state never
-    // touches the allocator.
-    let meta: RefCell<VecDeque<Meta>> = RefCell::new(VecDeque::new());
+    // Dispatch staging: pop_dispatch drains here, the items then move
+    // into the slot (so the watchdog can reap them) and failed-dispatch
+    // remnants move back out. Persistent across dispatches so the
+    // warmed steady state never touches the allocator.
+    let mut staging: VecDeque<WorkItem> = VecDeque::new();
+    let mut meta_scratch: VecDeque<Meta> = VecDeque::new();
 
     loop {
-        let (tid, initial) = match shared.injector.pop_dispatch(batch_size, &mut inbox) {
+        let (tid, initial) = match shared.injector.pop_dispatch(batch_size, &mut staging) {
             Dispatch::Serve { tenant, batch } => (tenant, batch),
-            Dispatch::Exit => return,
+            Dispatch::Exit => {
+                release_worker_cache(&shared, &mut backends);
+                return;
+            }
         };
-        let tstate = Arc::clone(&inbox.front().expect("dispatch without items").tenant);
+        let tstate = Arc::clone(&staging.front().expect("dispatch without items").tenant);
+        // Past its heal budget this lineage no longer trusts itself to
+        // serve: it answers dispatches with its standing fault (typed,
+        // through the retry path, so frames with budget left can still
+        // land on a healthy sibling) instead of crash-looping.
+        if slot.restarts.load(Ordering::Relaxed) > shared.max_restarts {
+            if let Some(e) = &last_fault {
+                let e = e.replicate();
+                meta_scratch.clear();
+                resolve_failed(&shared, &tstate, &mut meta_scratch, &mut staging, &e);
+                continue;
+            }
+        }
         // Tick the pool's dispatch clock and stamp the served tenant as
         // active — the staleness signal the idle-eviction sweep reads.
         let now_seq = shared.dispatch_seq.fetch_add(1, Ordering::Relaxed) + 1;
         tstate.last_active.store(now_seq, Ordering::Relaxed);
-        let backend = match backends.entry(tid) {
-            Entry::Occupied(entry) => entry.into_mut(),
-            Entry::Vacant(slot) => {
-                // The build runs under catch_unwind too: a panicking
-                // constructor must fail this dispatch typed, not kill
-                // the worker silently (no backend state exists yet, so
-                // the worker itself stays trustworthy and keeps going).
-                let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    tstate.build_backend()
-                }));
-                match built {
-                    Ok(Ok(backend)) => slot.insert(backend),
-                    Ok(Err(e)) => {
-                        // e.g. a Pjrt tenant without the runtime: every
-                        // frame of the dispatch gets the typed build error.
-                        fail_remaining(&shared, &tstate, &meta, &mut inbox, &e);
-                        continue;
-                    }
-                    Err(payload) => {
-                        let e = EngineError::worker_panicked("backend-build", &*payload);
-                        fail_remaining(&shared, &tstate, &meta, &mut inbox, &e);
-                        continue;
-                    }
+
+        // Arm the supervision slot: the staged items move in and the
+        // tenant's deadline (if any) starts ticking — covering the
+        // backend build too, since a build can hang like a dispatch.
+        {
+            let mut st = slot.state.lock().expect("worker slot poisoned");
+            std::mem::swap(&mut st.inbox, &mut staging);
+            st.tenant = Some(Arc::clone(&tstate));
+            if !tstate.dispatch_timeout.is_zero() {
+                st.timeout = Some(tstate.dispatch_timeout);
+                st.deadline = Some(Instant::now() + tstate.dispatch_timeout);
+            }
+        }
+
+        // Lazily build the tenant's backend. The build runs under
+        // catch_unwind: a panicking constructor must fail this dispatch
+        // typed, not kill the worker silently.
+        let mut build_err: Option<EngineError> = None;
+        if !backends.contains_key(&tid) {
+            let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                tstate.build_backend()
+            }));
+            match built {
+                Ok(Ok(backend)) => {
+                    backends.insert(tid, backend);
+                }
+                Ok(Err(e)) => {
+                    // A preset tenant that lost its caller-provided
+                    // backend to an earlier fault reports THAT fault
+                    // (e.g. WorkerPanicked), not the unhelpful "preset
+                    // tenants own their backends" build error.
+                    build_err = Some(match (preset_tid == Some(tid), &last_fault) {
+                        (true, Some(f)) => f.replicate(),
+                        _ => e,
+                    });
+                }
+                Err(payload) => {
+                    build_err = Some(EngineError::worker_panicked("backend-build", &*payload));
                 }
             }
-        };
+        }
+        if let Some(e) = build_err {
+            let abandoned = disarm_slot(&slot, &mut meta_scratch, &mut staging);
+            resolve_failed(&shared, &tstate, &mut meta_scratch, &mut staging, &e);
+            last_fault = Some(e);
+            if abandoned {
+                release_worker_cache(&shared, &mut backends);
+                return;
+            }
+            continue;
+        }
+        let backend = backends.get_mut(&tid).expect("backend built above");
         let name = backend.name();
         shared.metrics.batch_formed(initial);
         let t0 = Instant::now();
@@ -891,20 +1302,40 @@ fn worker_loop(
         // One streaming dispatch. A panicking backend must surface as a
         // typed reply on every unanswered frame — not a dropped ring
         // slot — so the stream runs under catch_unwind and the worker
-        // retires afterwards (its backend state can no longer be
+        // heals afterwards (its backend state can no longer be
         // trusted).
         let dispatch = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let mut feed = StreamFeed {
-                inbox: &mut inbox,
-                meta: &meta,
+                slot: &slot,
                 shared: &shared,
                 tenant: tid,
+                tstate: &tstate,
             };
             backend.infer_stream(&mut feed, &mut |frame: Frame, inf: Inference| {
-                let m = meta
-                    .borrow_mut()
-                    .pop_front()
-                    .expect("stream result without a fed frame");
+                let m = {
+                    let mut st = slot.state.lock().expect("worker slot poisoned");
+                    if st.abandoned {
+                        None
+                    } else {
+                        // Progress pushes the deadline out: the timeout
+                        // bounds time WITHOUT results, not stream length.
+                        if let Some(t) = st.timeout {
+                            st.deadline = Some(Instant::now() + t);
+                        }
+                        st.meta.pop_front()
+                    }
+                };
+                let m = match m {
+                    Some(m) => m,
+                    None => {
+                        // Abandoned mid-flight: the watchdog already
+                        // answered (or retried) this frame — the late
+                        // result is discarded, only the container comes
+                        // back.
+                        shared.recycle_frame(frame);
+                        return inf;
+                    }
+                };
                 let done = Instant::now();
                 let queue_wait_us = m.picked.duration_since(m.enqueued).as_micros() as u64;
                 let service_us = done.duration_since(m.picked).as_micros() as u64;
@@ -937,6 +1368,7 @@ fn worker_loop(
                         }));
                     }
                 }
+                shared.recycle_frame(m.frame);
                 shared.recycle_frame(frame);
                 inf // the output container goes straight back to the backend
             })
@@ -950,6 +1382,7 @@ fn worker_loop(
             tstate.metrics.dispatch_served(batch_us);
         }
 
+        let abandoned = disarm_slot(&slot, &mut meta_scratch, &mut staging);
         match dispatch {
             // `infer_stream` must exhaust the iterator and sink one
             // result per consumed frame. A nonconforming backend that
@@ -959,28 +1392,48 @@ fn worker_loop(
             // tenant) and hanging the starved session — so the
             // stragglers are failed typed here, exactly like the old
             // infer_batch output-count contract.
-            Ok(Ok(())) if meta.borrow().is_empty() && inbox.is_empty() => {}
+            Ok(Ok(())) if meta_scratch.is_empty() && staging.is_empty() => {
+                // Clean dispatch: the lineage is healthy again.
+                slot.restarts.store(0, Ordering::Relaxed);
+                last_fault = None;
+            }
             Ok(Ok(())) => {
                 let e = EngineError::Backend(format!(
                     "{name}: infer_stream returned Ok without sinking a result \
                      for every consumed frame"
                 ));
-                fail_remaining(&shared, &tstate, &meta, &mut inbox, &e);
+                resolve_failed(&shared, &tstate, &mut meta_scratch, &mut staging, &e);
+                last_fault = Some(e);
             }
-            Ok(Err(e)) => fail_remaining(&shared, &tstate, &meta, &mut inbox, &e),
+            Ok(Err(e)) => {
+                resolve_failed(&shared, &tstate, &mut meta_scratch, &mut staging, &e);
+                last_fault = Some(e);
+            }
             Err(payload) => {
                 let e = EngineError::worker_panicked(name, &*payload);
-                fail_remaining(&shared, &tstate, &meta, &mut inbox, &e);
-                // Retire this worker. If it was the last one alive, it
-                // becomes a fail-fast drainer so queued and future
-                // frames get typed replies instead of hanging.
-                if shared.live_workers.fetch_sub(1, Ordering::AcqRel) > 1 {
-                    return;
+                resolve_failed(&shared, &tstate, &mut meta_scratch, &mut staging, &e);
+                // Heal in place: this worker's backend state can no
+                // longer be trusted — drop the whole cache (releasing
+                // plans no live tenant shares), count the heal, back
+                // off, and keep serving. The pool never shrinks.
+                release_worker_cache(&shared, &mut backends);
+                let consecutive = slot.restarts.fetch_add(1, Ordering::Relaxed) + 1;
+                shared.metrics.worker_restarted();
+                last_fault = Some(e);
+                if !abandoned {
+                    backoff(shared.backoff_ms, consecutive);
                 }
-                drain_and_fail(&shared, &e, &mut inbox);
-                return;
             }
         }
+        if abandoned {
+            // The watchdog replaced this worker mid-dispatch; whatever
+            // survives of its cache is released and the thread exits
+            // (the replacement is already serving).
+            release_worker_cache(&shared, &mut backends);
+            return;
+        }
+        staging.clear();
+        meta_scratch.clear();
 
         // Idle-tenant eviction: off the per-frame path, cheap when
         // nothing is stale, and skipped entirely while this worker only
@@ -992,6 +1445,91 @@ fn worker_loop(
     }
 }
 
+/// The supervision watchdog: one thread per server, waking every
+/// [`WATCHDOG_PERIOD`] to scan worker slots for dispatches past their
+/// tenant's [`super::TenantConfig::dispatch_timeout`]. An overdue
+/// dispatch is reaped ([`reap`]); the scan itself is allocation-free on
+/// its fast path (the zero-alloc suite runs with a live watchdog).
+fn watchdog_loop(shared: Arc<ServerShared>) {
+    loop {
+        {
+            let stop = shared.watchdog_stop.lock().expect("watchdog flag poisoned");
+            if *stop {
+                return;
+            }
+            let (stop, _) = shared
+                .watchdog_cv
+                .wait_timeout(stop, WATCHDOG_PERIOD)
+                .expect("watchdog flag poisoned");
+            if *stop {
+                return;
+            }
+        }
+        loop {
+            let overdue = {
+                let now = Instant::now();
+                let slots = shared.slots.lock().expect("slot registry poisoned");
+                slots
+                    .iter()
+                    .find(|slot| {
+                        let st = slot.state.lock().expect("worker slot poisoned");
+                        !st.abandoned && st.deadline.is_some_and(|d| now >= d)
+                    })
+                    .cloned()
+            };
+            match overdue {
+                Some(slot) => reap(&shared, &slot),
+                None => break,
+            }
+        }
+    }
+}
+
+/// Reap one overdue dispatch: mark the slot abandoned (the wedged
+/// thread's later pulls and sinks become no-ops), answer or retry its
+/// frames with [`EngineError::DeadlineExceeded`], and spawn a
+/// replacement worker on a fresh slot — the pool stays at configured
+/// size even with a thread stuck inside a hung backend (that thread
+/// exits silently if it ever wakes).
+fn reap(shared: &Arc<ServerShared>, slot: &Arc<WorkerSlot>) {
+    let (mut meta, mut inbox, tstate, timeout) = {
+        let mut st = slot.state.lock().expect("worker slot poisoned");
+        let now = Instant::now();
+        if st.abandoned || !st.deadline.is_some_and(|d| now >= d) {
+            return; // raced with dispatch completion — nothing to reap
+        }
+        st.abandoned = true;
+        st.deadline = None;
+        (
+            std::mem::take(&mut st.meta),
+            std::mem::take(&mut st.inbox),
+            st.tenant.take(),
+            st.timeout.take().unwrap_or_default(),
+        )
+    };
+    let e = tstate.as_ref().map(|t| EngineError::DeadlineExceeded {
+        tenant: t.id.0,
+        timeout_ms: timeout.as_millis() as u64,
+    });
+    // The replacement inherits the lineage's consecutive-heal count and
+    // the deadline error as its standing fault (so an irreplaceable
+    // preset backend's future frames still answer typed), and swaps
+    // into the slot registry in the old slot's place — *before* the
+    // victim's frames are resolved, so the pool never observably
+    // shrinks (a retried frame's reply cannot land while the registry
+    // is one short).
+    let restarts = slot.restarts.load(Ordering::Relaxed).saturating_add(1);
+    {
+        let mut slots = shared.slots.lock().expect("slot registry poisoned");
+        slots.retain(|s| !Arc::ptr_eq(s, slot));
+    }
+    spawn_worker_healing(shared, None, restarts, e.as_ref().map(EngineError::replicate), restarts);
+    shared.metrics.worker_restarted();
+    if let (Some(tstate), Some(e)) = (&tstate, &e) {
+        resolve_failed(shared, tstate, &mut meta, &mut inbox, e);
+    }
+}
+
 /// The idle-tenant eviction sweep (see
 /// [`ServerConfig::idle_evict_dispatches`]): drop this worker's built
 /// backends for tenants whose last dispatch is more than the threshold
@@ -1000,7 +1538,7 @@ fn worker_loop(
 /// the compiled plan of any swept tenant whose content-hash key no
 /// recently-active tenant shares. Everything rebuilds transparently on
 /// the tenant's return — the backend through the worker's lazy
-/// `Entry::Vacant` build, the plan through the builder's shared
+/// first-dispatch build, the plan through the builder's shared
 /// [`PlanCache`].
 fn sweep_idle(
     shared: &ServerShared,
@@ -1327,6 +1865,7 @@ mod tests {
             cost: FRAME_COST_UNIT,
             enqueued: Instant::now(),
             reply_to: ReplyTo::Channel { id: 0, tx: std::sync::mpsc::channel().0 },
+            retries: 0,
         };
         for _ in 0..12 {
             injector.push(heavy.id, item(&heavy)).unwrap();
@@ -1378,6 +1917,7 @@ mod tests {
             cost,
             enqueued: Instant::now(),
             reply_to: ReplyTo::Channel { id: 0, tx: std::sync::mpsc::channel().0 },
+            retries: 0,
         };
         let batches = |costs: &[u64]| {
             for &c in costs {
@@ -1471,6 +2011,7 @@ mod tests {
             cost: FRAME_COST_UNIT,
             enqueued: Instant::now(),
             reply_to: ReplyTo::Channel { id: 0, tx: std::sync::mpsc::channel().0 },
+            retries: 0,
         };
         injector.push(a.id, item(&a)).unwrap();
         injector.push(a.id, item(&a)).unwrap();
@@ -1561,6 +2102,57 @@ mod tests {
             Err(e) => panic!("unexpected error kind: {e}"),
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn requeue_front_preserves_order_and_respects_modes() {
+        // Retried frames go back to the FRONT of their tenant's queue in
+        // original relative order, ahead of frames queued behind them —
+        // the invariant that keeps per-session feed order intact across
+        // retries. Allowed while draining, typed Shutdown once stopped.
+        let injector = Injector::new();
+        let t = Arc::new(TenantState::new(
+            TenantId(0),
+            &TenantConfig::default(),
+            (28, 28, 1),
+            BackendSource::Preset,
+        ));
+        injector.register(t.id, 1);
+        let item = |id: u64| WorkItem {
+            tenant: Arc::clone(&t),
+            frame: Frame::default(),
+            cost: FRAME_COST_UNIT,
+            enqueued: Instant::now(),
+            reply_to: ReplyTo::Channel { id, tx: std::sync::mpsc::channel().0 },
+            retries: 0,
+        };
+        injector.push(t.id, item(2)).unwrap(); // already queued behind
+        let mut retried = vec![item(0), item(1)];
+        injector.requeue_front(t.id, &mut retried).unwrap();
+        assert!(retried.is_empty(), "requeue consumes the items");
+        let mut inbox = VecDeque::new();
+        match injector.pop_dispatch(8, &mut inbox) {
+            Dispatch::Serve { batch, .. } => assert_eq!(batch, 3),
+            Dispatch::Exit => panic!("work is queued"),
+        }
+        let order: Vec<u64> = inbox
+            .drain(..)
+            .map(|i| match i.reply_to {
+                ReplyTo::Channel { id, .. } => id,
+                ReplyTo::Session { .. } => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![0, 1, 2], "retries lead, in original order");
+        // draining still accepts retries (a graceful drain must serve
+        // them); stopped rejects typed
+        injector.stop(true);
+        let mut one = vec![item(3)];
+        injector.requeue_front(t.id, &mut one).unwrap();
+        injector.stop(false);
+        let mut two = vec![item(4)];
+        let err = injector.requeue_front(t.id, &mut two).unwrap_err();
+        assert!(matches!(err, EngineError::Shutdown), "{err}");
+        assert_eq!(two.len(), 1, "rejected items stay with the caller");
     }
 
     #[test]

@@ -230,6 +230,53 @@ impl Session {
         self.take_front(out, true)
     }
 
+    /// [`Self::recv`] with a client-side deadline: wait up to `timeout`
+    /// for the next in-order result. `Ok(None)` means nothing is
+    /// outstanding; `Err(DeadlineExceeded)` means the wait timed out —
+    /// the result is *not* consumed and still arrives at a later
+    /// `recv`/`poll`. (This is the session-side counterpart of the
+    /// server-side [`super::TenantConfig::dispatch_timeout`] watchdog.)
+    pub fn recv_deadline(
+        &mut self,
+        timeout: std::time::Duration,
+    ) -> Result<Option<Reply>, EngineError> {
+        if self.fed == self.polled {
+            return Ok(None);
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        let mut ring = self.shared.ring.lock().expect("session ring poisoned");
+        let cap = ring.len() as u64;
+        let idx = (self.polled % cap) as usize;
+        while !ring[idx].filled {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(EngineError::DeadlineExceeded {
+                    tenant: self.tenant.id.0,
+                    timeout_ms: timeout.as_millis() as u64,
+                });
+            }
+            let (r, _) = self
+                .shared
+                .cv
+                .wait_timeout(ring, deadline - now)
+                .expect("session ring poisoned");
+            ring = r;
+        }
+        let slot = &mut ring[idx];
+        slot.filled = false;
+        let result = match slot.err.take() {
+            Some(e) => Err(e),
+            None => {
+                let mut out = Response::default();
+                std::mem::swap(&mut slot.resp, &mut out);
+                Ok(out)
+            }
+        };
+        drop(ring);
+        self.polled += 1;
+        Ok(Some(result))
+    }
+
     fn take_front(&mut self, out: &mut Response, block: bool) -> Option<Result<(), EngineError>> {
         if self.fed == self.polled {
             return None;

@@ -54,6 +54,24 @@ pub struct TenantConfig {
     /// alive while the tenant's queue has frames, so stages stay
     /// filled across batch boundaries.
     pub pipeline: usize,
+    /// Wall-time budget for one dispatch serving this tenant, enforced
+    /// by the server's watchdog thread: an overdue dispatch fails its
+    /// in-flight frames with [`EngineError::DeadlineExceeded`] and the
+    /// worker is replaced, so a wedged backend cannot freeze the
+    /// tenant. `Duration::ZERO` (the default) disables the deadline.
+    pub dispatch_timeout: std::time::Duration,
+    /// How many times a frame from a panicked/failed/timed-out dispatch
+    /// is re-enqueued (at the front of the tenant's queue, so the
+    /// reorder ring still delivers in feed order) before it is
+    /// quarantined with a typed [`EngineError::PoisonFrame`]. `0` (the
+    /// default) fails frames on their first faulty dispatch, exactly
+    /// the pre-supervision behavior.
+    pub max_retries: u32,
+    /// Deterministic fault injection for this tenant's backends (chaos
+    /// testing): every backend a worker builds is wrapped in a
+    /// [`crate::faults::ChaosBackend`] drawing from this plan. `None`
+    /// (the default) serves bare backends.
+    pub fault_plan: Option<Arc<crate::faults::FaultPlan>>,
 }
 
 /// Upper bound on [`TenantConfig::weight`]: the injector realizes
@@ -73,6 +91,9 @@ impl Default for TenantConfig {
             lanes: 8,
             threads: 1,
             pipeline: 0,
+            dispatch_timeout: std::time::Duration::ZERO,
+            max_retries: 0,
+            fault_plan: None,
         }
     }
 }
@@ -114,6 +135,11 @@ pub(crate) struct TenantState {
     /// `ServerConfig::idle_evict_dispatches` dispatches stale get their
     /// per-worker backends (and, if unshared, cached plan) dropped.
     pub last_active: AtomicU64,
+    /// Watchdog budget for one dispatch ([`TenantConfig::dispatch_timeout`];
+    /// zero disables).
+    pub dispatch_timeout: std::time::Duration,
+    /// Retry budget per frame before quarantine ([`TenantConfig::max_retries`]).
+    pub max_retries: u32,
     /// Frames currently queued or being served (admission quota state).
     /// Mutex + condvar rather than an atomic so blocking submitters
     /// (the deprecated `Coordinator::submit`) can park on it.
@@ -139,6 +165,8 @@ impl TenantState {
             cost: None,
             plan_key: None,
             last_active: AtomicU64::new(0),
+            dispatch_timeout: cfg.dispatch_timeout,
+            max_retries: cfg.max_retries,
             inflight: Mutex::new(0),
             inflight_cv: Condvar::new(),
         }
@@ -210,6 +238,8 @@ pub struct TenantMetrics {
     /// would understate throughput by the overlap factor).
     dispatch_us_sum: AtomicU64,
     sim_cycles_sum: AtomicU64,
+    retries: AtomicU64,
+    quarantined: AtomicU64,
 }
 
 impl TenantMetrics {
@@ -235,6 +265,16 @@ impl TenantMetrics {
     pub fn quota_rejected(&self) {
         self.quota_rejected.fetch_add(1, Ordering::Relaxed);
     }
+
+    /// Record one frame re-enqueued after a faulty dispatch.
+    pub fn retried(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one frame quarantined after exhausting its retry budget.
+    pub fn quarantined(&self) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// Point-in-time copy of one tenant's serving state, as reported in the
@@ -255,6 +295,12 @@ pub struct TenantSnapshot {
     pub failed: u64,
     /// Feeds rejected at admission with [`EngineError::TenantOverQuota`].
     pub quota_rejected: u64,
+    /// Frames re-enqueued after a panicked/failed/timed-out dispatch
+    /// (see [`TenantConfig::max_retries`]).
+    pub retries: u64,
+    /// Frames quarantined with [`EngineError::PoisonFrame`] after
+    /// exhausting their retry budget.
+    pub quarantined: u64,
     /// Completed frames per second of cumulative dispatch wall time
     /// across workers (the worker-side throughput figure, same
     /// semantics as the global `batch_images_per_sec`; queue wait
@@ -279,6 +325,8 @@ impl TenantSnapshot {
             completed,
             failed: m.failed.load(Ordering::Relaxed),
             quota_rejected: m.quota_rejected.load(Ordering::Relaxed),
+            retries: m.retries.load(Ordering::Relaxed),
+            quarantined: m.quarantined.load(Ordering::Relaxed),
             images_per_sec: div(completed * 1_000_000, dispatch_us),
             mean_sim_cycles: div(m.sim_cycles_sum.load(Ordering::Relaxed), completed),
         }
@@ -296,6 +344,8 @@ impl TenantSnapshot {
         m.insert("completed".into(), Json::Num(self.completed as f64));
         m.insert("failed".into(), Json::Num(self.failed as f64));
         m.insert("quota_rejected".into(), Json::Num(self.quota_rejected as f64));
+        m.insert("retries".into(), Json::Num(self.retries as f64));
+        m.insert("quarantined".into(), Json::Num(self.quarantined as f64));
         m.insert("images_per_sec".into(), Json::Num(self.images_per_sec));
         m.insert("mean_sim_cycles".into(), Json::Num(self.mean_sim_cycles));
         Json::Obj(m)
@@ -341,6 +391,9 @@ mod tests {
         t.metrics.dispatch_served(1000);
         t.metrics.failed();
         t.metrics.quota_rejected();
+        t.metrics.retried();
+        t.metrics.retried();
+        t.metrics.quarantined();
         let snap = TenantSnapshot::collect(&t, 3);
         assert_eq!(snap.tenant, 7);
         assert_eq!(snap.queue_depth, 3);
@@ -348,11 +401,15 @@ mod tests {
         assert_eq!(snap.completed, 2);
         assert_eq!(snap.failed, 1);
         assert_eq!(snap.quota_rejected, 1);
+        assert_eq!(snap.retries, 2);
+        assert_eq!(snap.quarantined, 1);
         // 2 completed over 1000 µs of dispatch wall time → 2000 img/s
         assert!((snap.images_per_sec - 2000.0).abs() < 1e-6);
         assert!((snap.mean_sim_cycles - 2000.0).abs() < 1e-9);
         let j = snap.to_json();
         assert_eq!(j.get(&["quota_rejected"]).unwrap().as_usize(), Some(1));
+        assert_eq!(j.get(&["retries"]).unwrap().as_usize(), Some(2));
+        assert_eq!(j.get(&["quarantined"]).unwrap().as_usize(), Some(1));
     }
 
     #[test]

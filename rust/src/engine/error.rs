@@ -50,6 +50,15 @@ pub enum EngineError {
     /// failure surfaces as a typed, matchable reply instead of a
     /// silently dropped channel.
     WorkerPanicked { worker: String, payload: String },
+    /// Serving: a dispatch exceeded the tenant's `dispatch_timeout` and
+    /// the watchdog failed its in-flight frames (the worker is replaced,
+    /// so a wedged backend cannot freeze the tenant). `timeout_ms` is the
+    /// configured budget the dispatch overran.
+    DeadlineExceeded { tenant: u64, timeout_ms: u64 },
+    /// Serving: a frame failed `retries` consecutive dispatch attempts
+    /// and was quarantined instead of crash-looping the pool. The caller
+    /// gets this typed reply through the normal reorder ring.
+    PoisonFrame { tenant: u64, retries: u32 },
     /// Filesystem error with the path that caused it.
     Io { path: String, source: std::io::Error },
     /// Free-form context wrapper (produced by [`Context`]).
@@ -98,6 +107,12 @@ impl EngineError {
                 worker: worker.clone(),
                 payload: payload.clone(),
             },
+            EngineError::DeadlineExceeded { tenant, timeout_ms } => {
+                EngineError::DeadlineExceeded { tenant: *tenant, timeout_ms: *timeout_ms }
+            }
+            EngineError::PoisonFrame { tenant, retries } => {
+                EngineError::PoisonFrame { tenant: *tenant, retries: *retries }
+            }
             EngineError::Io { .. } => EngineError::Backend(self.to_string()),
             EngineError::Msg(m) => EngineError::Msg(m.clone()),
         }
@@ -155,6 +170,16 @@ impl fmt::Display for EngineError {
             EngineError::WorkerPanicked { worker, payload } => {
                 write!(f, "worker '{worker}' panicked: {payload}")
             }
+            EngineError::DeadlineExceeded { tenant, timeout_ms } => write!(
+                f,
+                "tenant {tenant} dispatch exceeded its {timeout_ms} ms deadline \
+                 (in-flight frames failed, worker replaced)"
+            ),
+            EngineError::PoisonFrame { tenant, retries } => write!(
+                f,
+                "frame of tenant {tenant} quarantined after {retries} failed \
+                 dispatch attempts"
+            ),
             EngineError::Io { path, source } => write!(f, "{path}: {source}"),
             EngineError::Msg(m) => write!(f, "{m}"),
         }
@@ -285,6 +310,24 @@ mod tests {
         assert!(matches!(unknown.replicate(), EngineError::UnknownTenant { tenant: 9 }));
         assert!(EngineError::Shutdown.to_string().contains("shut down"));
         assert!(matches!(EngineError::Shutdown.replicate(), EngineError::Shutdown));
+    }
+
+    #[test]
+    fn fault_variants_render_and_replicate() {
+        let deadline = EngineError::DeadlineExceeded { tenant: 7, timeout_ms: 250 };
+        let s = deadline.to_string();
+        assert!(s.contains('7') && s.contains("250") && s.contains("deadline"), "{s}");
+        assert!(matches!(
+            deadline.replicate(),
+            EngineError::DeadlineExceeded { tenant: 7, timeout_ms: 250 }
+        ));
+        let poison = EngineError::PoisonFrame { tenant: 2, retries: 3 };
+        let s = poison.to_string();
+        assert!(s.contains('2') && s.contains('3') && s.contains("quarantined"), "{s}");
+        assert!(matches!(
+            poison.replicate(),
+            EngineError::PoisonFrame { tenant: 2, retries: 3 }
+        ));
     }
 
     #[test]

@@ -183,6 +183,11 @@ pub struct EngineBuilder {
     // in both configurations.
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     artifacts: Option<PathBuf>,
+    // Deterministic fault injection (chaos testing): when set, every
+    // built backend is wrapped in a `faults::ChaosBackend` drawing from
+    // this plan — and the build itself may fail typed if the plan's
+    // build-failure draw triggers.
+    faults: Option<Arc<crate::faults::FaultPlan>>,
 }
 
 impl EngineBuilder {
@@ -196,6 +201,7 @@ impl EngineBuilder {
             clock_hz: CLOCK_HZ,
             plans: PlanCache::new(),
             artifacts: None,
+            faults: None,
         }
     }
 
@@ -267,6 +273,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Wrap every built backend in a fault-injecting
+    /// [`crate::faults::ChaosBackend`] drawing from `plan` (chaos
+    /// testing; see the `faults` module). Builds may then fail typed
+    /// when the plan's build-failure draw triggers.
+    pub fn faults(mut self, plan: Arc<crate::faults::FaultPlan>) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Construct one backend of the given kind.
     pub fn build(&self, kind: BackendKind) -> Result<Box<dyn Backend>, EngineError> {
         let accel_cfg = AccelConfig {
@@ -274,7 +289,7 @@ impl EngineBuilder {
             hazard_mode: self.hazard_mode,
             clock_hz: self.clock_hz,
         };
-        Ok(match kind {
+        let inner: Box<dyn Backend> = match kind {
             BackendKind::Sim if self.pipeline > 0 && self.threads > 1 => {
                 Box::new(PipelinePool::with_plan(
                     Arc::clone(&self.net),
@@ -310,6 +325,10 @@ impl EngineBuilder {
                 })
             }
             BackendKind::Pjrt => Box::new(self.build_pjrt()?),
+        };
+        Ok(match &self.faults {
+            Some(plan) => Box::new(plan.wrap(inner)?),
+            None => inner,
         })
     }
 

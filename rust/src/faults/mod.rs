@@ -1,0 +1,478 @@
+//! Deterministic fault injection for the serving layer: [`FaultPlan`]
+//! describes *which* faults to inject (seeded, so every run of the same
+//! plan injects the identical sequence) and [`ChaosBackend`] wraps any
+//! [`Backend`] to act them out — panics mid-stream, stalls that outlive
+//! a dispatch deadline, build failures, and truncated streams that
+//! swallow frames without answering them.
+//!
+//! The point is to *prove* the self-healing serving contract (see
+//! `## Fault tolerance` in `lib.rs`): the chaos soak in `tests/chaos.rs`
+//! replays a `traffic` trace through a server whose tenant carries a
+//! `FaultPlan` and asserts that every fed frame is answered exactly
+//! once, the worker pool heals back to its configured size, and
+//! non-faulted frames stay bit-identical to a fault-free run.
+//!
+//! Determinism contract: each wrapped backend instance draws from its
+//! own PRNG, sub-seeded from the plan's seed and the instance's index
+//! (the same sub-seeding idiom as `traffic::trace`). Every frame draws
+//! all fault kinds in a fixed order whether or not they trigger, so the
+//! draw stream — and therefore the injected sequence — depends only on
+//! `(seed, instance, frame index)`, never on timing. A plan-wide
+//! `max_faults` budget caps total injections so a soak converges.
+
+use crate::engine::{Backend, CycleModel, EngineError, Frame, Inference};
+use crate::util::prng::Pcg;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One injected fault kind, as recorded in a [`ChaosBackend`]'s log and
+/// counted in the plan-wide [`FaultCounts`].
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum InjectedFault {
+    /// `panic!` mid-stream (the serving layer's worker catches it,
+    /// fails/retries the in-flight frames and heals the worker).
+    Panic,
+    /// Sleep for [`FaultPlan::stall_ms`] before serving the frame (long
+    /// enough to trip a tenant's `dispatch_timeout`).
+    Stall,
+    /// Swallow the pulled frame and end the stream early — the frames
+    /// behind it are left unanswered ("without sinking"), exercising the
+    /// server's straggler accounting.
+    Truncate,
+    /// Fail [`FaultPlan::wrap`] itself with a typed error (a backend
+    /// that cannot even be built).
+    BuildFail,
+}
+
+/// Plan-wide injection totals (one counter per [`InjectedFault`] kind).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub panics: u64,
+    pub stalls: u64,
+    pub truncations: u64,
+    pub build_failures: u64,
+}
+
+impl FaultCounts {
+    /// Total faults injected across all kinds.
+    pub fn total(&self) -> u64 {
+        self.panics + self.stalls + self.truncations + self.build_failures
+    }
+}
+
+/// A seeded, deterministic fault-injection plan shared (via `Arc`) by
+/// every [`ChaosBackend`] it wraps.
+///
+/// Chances are per-opportunity Bernoulli draws: `build_fail_chance` is
+/// drawn once per [`Self::wrap`], the other three once per frame, in a
+/// fixed order (panic, stall, truncate). A triggered draw only *acts*
+/// if the plan-wide `max_faults` budget still has room, so a plan can
+/// promise "exactly one panic" (`panic_chance: 1.0` + `max_faults(1)`)
+/// or bound a chaos soak's total damage.
+///
+/// `FaultPlan::new(seed)` is benign (all chances zero, unlimited
+/// budget); chain the builder methods to arm it:
+///
+/// ```
+/// use sacsnn::faults::FaultPlan;
+/// let plan = FaultPlan::new(42).panics(0.05).stalls(0.02, 100).truncations(0.02);
+/// assert_eq!(plan.counts().total(), 0); // nothing injected yet
+/// ```
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// Base seed; each wrapped instance sub-seeds its own PRNG from it.
+    pub seed: u64,
+    /// Per-frame probability of an injected panic.
+    pub panic_chance: f64,
+    /// Per-frame probability of an injected stall.
+    pub stall_chance: f64,
+    /// Stall duration in milliseconds.
+    pub stall_ms: u64,
+    /// Per-frame probability of truncating the stream.
+    pub truncate_chance: f64,
+    /// Per-[`Self::wrap`] probability of a typed build failure.
+    pub build_fail_chance: f64,
+    /// Remaining injection budget (shared across all instances).
+    budget: AtomicU64,
+    /// Next wrapped-instance index (sub-seed input).
+    next_instance: AtomicU64,
+    panics: AtomicU64,
+    stalls: AtomicU64,
+    truncations: AtomicU64,
+    build_failures: AtomicU64,
+}
+
+impl FaultPlan {
+    /// A benign plan: all chances zero, unlimited budget.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            panic_chance: 0.0,
+            stall_chance: 0.0,
+            stall_ms: 0,
+            truncate_chance: 0.0,
+            build_fail_chance: 0.0,
+            budget: AtomicU64::new(u64::MAX),
+            next_instance: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            truncations: AtomicU64::new(0),
+            build_failures: AtomicU64::new(0),
+        }
+    }
+
+    /// Arm per-frame panics.
+    pub fn panics(mut self, chance: f64) -> Self {
+        self.panic_chance = chance;
+        self
+    }
+
+    /// Arm per-frame stalls of `ms` milliseconds.
+    pub fn stalls(mut self, chance: f64, ms: u64) -> Self {
+        self.stall_chance = chance;
+        self.stall_ms = ms;
+        self
+    }
+
+    /// Arm per-frame stream truncation.
+    pub fn truncations(mut self, chance: f64) -> Self {
+        self.truncate_chance = chance;
+        self
+    }
+
+    /// Arm per-wrap build failures.
+    pub fn build_failures(mut self, chance: f64) -> Self {
+        self.build_fail_chance = chance;
+        self
+    }
+
+    /// Cap the total number of injected faults across all instances.
+    pub fn max_faults(self, n: u64) -> Self {
+        self.budget.store(n, Ordering::Relaxed);
+        self
+    }
+
+    /// Injection totals so far.
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts {
+            panics: self.panics.load(Ordering::Relaxed),
+            stalls: self.stalls.load(Ordering::Relaxed),
+            truncations: self.truncations.load(Ordering::Relaxed),
+            build_failures: self.build_failures.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Claim one unit of the injection budget.
+    fn claim(&self) -> bool {
+        self.budget
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+            .is_ok()
+    }
+
+    /// Wrap `inner` in a [`ChaosBackend`] drawing from this plan — or
+    /// fail with a typed error if the build-failure draw triggers
+    /// (within budget). Each wrap consumes one instance index; the
+    /// instance's whole draw stream is a pure function of
+    /// `(plan.seed, instance)`.
+    pub fn wrap(
+        self: &Arc<Self>,
+        inner: Box<dyn Backend>,
+    ) -> Result<ChaosBackend, EngineError> {
+        let instance = self.next_instance.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Pcg::new(
+            self.seed ^ (instance + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        if rng.chance(self.build_fail_chance) && self.claim() {
+            self.build_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(EngineError::msg(format!(
+                "chaos: injected build failure (instance {instance})"
+            )));
+        }
+        Ok(ChaosBackend {
+            inner,
+            plan: Arc::clone(self),
+            rng,
+            instance,
+            seen: 0,
+            log: Vec::new(),
+        })
+    }
+}
+
+/// A fault-injecting wrapper over any [`Backend`]: metadata and results
+/// delegate to the inner backend; the frame path additionally draws
+/// from its [`FaultPlan`] and may panic, stall, or truncate. Frames the
+/// plan leaves alone are served bit-identically to the bare backend.
+pub struct ChaosBackend {
+    inner: Box<dyn Backend>,
+    plan: Arc<FaultPlan>,
+    rng: Pcg,
+    instance: u64,
+    /// Frames this instance has drawn faults for so far.
+    seen: u64,
+    log: Vec<(u64, InjectedFault)>,
+}
+
+impl ChaosBackend {
+    /// The faults this instance injected, as `(frame index, kind)` in
+    /// injection order.
+    pub fn injected(&self) -> &[(u64, InjectedFault)] {
+        &self.log
+    }
+
+    /// This instance's index within its plan.
+    pub fn instance(&self) -> u64 {
+        self.instance
+    }
+
+    /// Draw this frame's faults; see [`draw_frame_faults`].
+    fn draw_frame_faults(&mut self) -> bool {
+        draw_frame_faults(&self.plan, &mut self.rng, self.instance, &mut self.seen, &mut self.log)
+    }
+}
+
+/// Draw one frame's faults (always all three, in a fixed order, so the
+/// draw stream is timing-independent) and act on the first that
+/// triggers within budget. Returns `true` if the stream must truncate;
+/// panics if the panic fault fires. A free function over the fault
+/// state's parts so `infer_stream` can borrow it disjointly from the
+/// inner backend.
+fn draw_frame_faults(
+    plan: &Arc<FaultPlan>,
+    rng: &mut Pcg,
+    instance: u64,
+    seen: &mut u64,
+    log: &mut Vec<(u64, InjectedFault)>,
+) -> bool {
+    let n = *seen;
+    *seen += 1;
+    let panic_hit = rng.chance(plan.panic_chance);
+    let stall_hit = rng.chance(plan.stall_chance);
+    let truncate_hit = rng.chance(plan.truncate_chance);
+    if panic_hit && plan.claim() {
+        plan.panics.fetch_add(1, Ordering::Relaxed);
+        log.push((n, InjectedFault::Panic));
+        panic!("chaos: injected panic (instance {instance}, frame {n})");
+    }
+    if stall_hit && plan.claim() {
+        plan.stalls.fetch_add(1, Ordering::Relaxed);
+        log.push((n, InjectedFault::Stall));
+        std::thread::sleep(Duration::from_millis(plan.stall_ms));
+    }
+    if truncate_hit && plan.claim() {
+        plan.truncations.fetch_add(1, Ordering::Relaxed);
+        log.push((n, InjectedFault::Truncate));
+        return true;
+    }
+    false
+}
+
+impl Backend for ChaosBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn kind(&self) -> crate::engine::BackendKind {
+        self.inner.kind()
+    }
+
+    fn cycle_model(&self) -> CycleModel {
+        self.inner.cycle_model()
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.inner.input_shape()
+    }
+
+    fn infer(&mut self, frame: &Frame) -> Result<Inference, EngineError> {
+        if self.draw_frame_faults() {
+            return Err(EngineError::msg(format!(
+                "chaos: injected inference failure (instance {})",
+                self.instance
+            )));
+        }
+        self.inner.infer(frame)
+    }
+
+    fn infer_into(&mut self, frame: &Frame, out: &mut Inference) -> Result<(), EngineError> {
+        if self.draw_frame_faults() {
+            return Err(EngineError::msg(format!(
+                "chaos: injected inference failure (instance {})",
+                self.instance
+            )));
+        }
+        self.inner.infer_into(frame, out)
+    }
+
+    // infer_batch: the trait default routes through `infer_into`, so
+    // batched frames draw faults too.
+
+    fn infer_stream(
+        &mut self,
+        frames: &mut dyn Iterator<Item = Frame>,
+        sink: &mut dyn FnMut(Frame, Inference) -> Inference,
+    ) -> Result<(), EngineError> {
+        // Interpose on the *pull* side so the inner backend keeps its
+        // native streaming overlap: each pulled frame draws its faults
+        // before the inner backend sees it. A truncation swallows the
+        // pulled frame and ends the stream — frames still queued behind
+        // it go unanswered, which the serving layer detects as
+        // stragglers ("without sinking") and retries or fails typed.
+        struct ChaosFeed<'a> {
+            plan: &'a Arc<FaultPlan>,
+            rng: &'a mut Pcg,
+            instance: u64,
+            seen: &'a mut u64,
+            log: &'a mut Vec<(u64, InjectedFault)>,
+            inner: &'a mut dyn Iterator<Item = Frame>,
+            truncated: bool,
+        }
+        impl Iterator for ChaosFeed<'_> {
+            type Item = Frame;
+            fn next(&mut self) -> Option<Frame> {
+                if self.truncated {
+                    return None;
+                }
+                let frame = self.inner.next()?;
+                if draw_frame_faults(self.plan, self.rng, self.instance, self.seen, self.log) {
+                    self.truncated = true;
+                    return None;
+                }
+                Some(frame)
+            }
+        }
+        // Destructure so the fault state and the inner backend are
+        // disjoint mutable borrows.
+        let ChaosBackend { inner, plan, rng, instance, seen, log } = self;
+        let mut feed = ChaosFeed {
+            plan,
+            rng,
+            instance: *instance,
+            seen,
+            log,
+            inner: frames,
+            truncated: false,
+        };
+        inner.infer_stream(&mut feed, sink)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{BackendKind, EngineBuilder};
+    use crate::snn::network::testutil::random_network;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn sim_backend() -> Box<dyn Backend> {
+        let net = Arc::new(random_network(31));
+        EngineBuilder::new(net).lanes(2).build(BackendKind::Sim).unwrap()
+    }
+
+    fn frame(seed: u64) -> Frame {
+        let mut rng = Pcg::new(seed);
+        let data: Vec<u8> = (0..784).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        Frame::from_u8(28, 28, 1, data).unwrap()
+    }
+
+    #[test]
+    fn benign_plan_is_transparent() {
+        let plan = Arc::new(FaultPlan::new(1));
+        let mut bare = sim_backend();
+        let mut chaos = plan.wrap(sim_backend()).unwrap();
+        for i in 0..4 {
+            let f = frame(i);
+            let want = bare.infer(&f).unwrap();
+            let got = chaos.infer(&f).unwrap();
+            assert_eq!(got.logits, want.logits);
+            assert_eq!(got.stats, want.stats);
+        }
+        assert_eq!(chaos.name(), "sim");
+        assert_eq!(chaos.kind(), BackendKind::Sim);
+        assert_eq!(chaos.input_shape(), (28, 28, 1));
+        assert_eq!(plan.counts(), FaultCounts::default());
+        assert!(chaos.injected().is_empty());
+    }
+
+    #[test]
+    fn certain_panic_fires_once_within_budget() {
+        let plan = Arc::new(FaultPlan::new(2).panics(1.0).max_faults(1));
+        let mut chaos = plan.wrap(sim_backend()).unwrap();
+        let err = catch_unwind(AssertUnwindSafe(|| chaos.infer(&frame(0)))).unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("chaos: injected panic"), "{msg}");
+        // budget spent: the same backend now serves cleanly
+        let inf = chaos.infer(&frame(1)).unwrap();
+        assert!(!inf.logits.is_empty());
+        assert_eq!(plan.counts(), FaultCounts { panics: 1, ..Default::default() });
+        assert_eq!(chaos.injected(), &[(0, InjectedFault::Panic)]);
+    }
+
+    #[test]
+    fn truncation_ends_the_stream_early() {
+        let plan = Arc::new(FaultPlan::new(3).truncations(1.0).max_faults(1));
+        let mut chaos = plan.wrap(sim_backend()).unwrap();
+        let frames: Vec<Frame> = (0..3).map(frame).collect();
+        let mut served = 0usize;
+        chaos
+            .infer_stream(&mut frames.into_iter(), &mut |_f, inf| {
+                served += 1;
+                inf
+            })
+            .unwrap();
+        // first frame truncated the stream; nothing reached the sink
+        assert_eq!(served, 0);
+        assert_eq!(plan.counts().truncations, 1);
+    }
+
+    #[test]
+    fn build_failure_is_typed() {
+        let plan = Arc::new(FaultPlan::new(4).build_failures(1.0).max_faults(1));
+        let err = plan.wrap(sim_backend()).unwrap_err();
+        assert!(err.to_string().contains("injected build failure"), "{err}");
+        assert_eq!(plan.counts().build_failures, 1);
+        // budget spent: the next wrap succeeds
+        assert!(plan.wrap(sim_backend()).is_ok());
+    }
+
+    #[test]
+    fn same_seed_same_plan_identical_fault_sequence() {
+        // The ChaosBackend determinism contract: two identically
+        // configured plans inject the identical (frame, kind) sequence
+        // and end at identical counts (mirrors the trace-determinism
+        // doctest in `traffic`).
+        let run = || {
+            let plan = Arc::new(
+                FaultPlan::new(99).panics(0.2).stalls(0.2, 0).truncations(0.2),
+            );
+            let mut chaos = plan.wrap(sim_backend()).unwrap();
+            for i in 0..40 {
+                let _ = catch_unwind(AssertUnwindSafe(|| chaos.infer(&frame(i))));
+            }
+            (chaos.injected().to_vec(), plan.counts())
+        };
+        let (log_a, counts_a) = run();
+        let (log_b, counts_b) = run();
+        assert_eq!(log_a, log_b, "fault sequences diverged");
+        assert_eq!(counts_a, counts_b, "fault totals diverged");
+        assert!(counts_a.total() > 0, "plan injected nothing — chances too low");
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let run = |seed: u64| {
+            let plan =
+                Arc::new(FaultPlan::new(seed).panics(0.3).truncations(0.3));
+            let mut chaos = plan.wrap(sim_backend()).unwrap();
+            for i in 0..30 {
+                let _ = catch_unwind(AssertUnwindSafe(|| chaos.infer(&frame(i))));
+            }
+            chaos.injected().to_vec()
+        };
+        assert_ne!(run(5), run(6), "distinct seeds produced identical fault sequences");
+    }
+}

@@ -223,6 +223,81 @@
 //! `sacsnn serve --tenants N` (and `bench --tenants N`) exercise all of
 //! it from the CLI, with per-tenant metrics in the JSON snapshot.
 //!
+//! ## Fault tolerance
+//!
+//! The paper's architecture is self-timed — processing stalls only when
+//! there are no spikes, never because a unit died — and the serving
+//! layer holds itself to the same standard: every admitted frame gets
+//! exactly one answer in bounded time, whatever a backend does.
+//!
+//! * **Supervision** — a worker whose dispatch panics contains the
+//!   panic, drops its backend cache (releasing shared plans it no
+//!   longer needs) and *respawns in place* with exponential backoff
+//!   ([`coordinator::ServerConfig`]`::{max_worker_restarts,
+//!   restart_backoff_ms}`); the pool stays at its configured size and
+//!   `worker_restarts` counts every heal. A worker past its restart
+//!   budget stops serving and answers its dispatches with the last
+//!   fault instead of crash-looping.
+//! * **Deadlines** — [`coordinator::TenantConfig`]`::dispatch_timeout`
+//!   arms a server-wide watchdog: a dispatch that stops making progress
+//!   for longer than the budget has its in-flight frames failed (or
+//!   retried) with [`engine::EngineError::DeadlineExceeded`] and the
+//!   wedged worker is replaced by a fresh thread — a hung backend can
+//!   no longer freeze its tenant. [`coordinator::Session::recv_deadline`]
+//!   gives clients the same guarantee against unbounded blocking.
+//! * **Retry & quarantine** — frames caught in a panicked, failed or
+//!   timed-out dispatch are re-enqueued at the *front* of their
+//!   tenant's queue (so the reorder ring still delivers in feed order)
+//!   up to [`coordinator::TenantConfig`]`::max_retries`; a frame that
+//!   keeps failing is quarantined with a typed
+//!   [`engine::EngineError::PoisonFrame`]. Per-tenant `retries` /
+//!   `quarantined` counters land in the `serve --json` snapshot.
+//! * **Chaos harness** — the [`faults`] module injects deterministic,
+//!   seeded faults (panics, stalls, build failures, truncated streams)
+//!   through [`faults::FaultPlan`] / [`faults::ChaosBackend`]; the
+//!   `chaos` integration test replays a [`traffic`] trace under
+//!   injection and asserts the whole contract above, and `sacsnn bench
+//!   --replay --chaos` reports `replay_availability` (fraction of
+//!   frames answered successfully under chaos), floor-gated in CI.
+//!
+//! A respawn-after-panic round trip, end to end:
+//!
+//! ```
+//! use sacsnn::coordinator::{Server, ServerConfig, TenantConfig};
+//! use sacsnn::engine::Frame;
+//! use sacsnn::faults::FaultPlan;
+//! use sacsnn::snn::network::testutil::random_network;
+//! use std::sync::Arc;
+//!
+//! # fn main() -> sacsnn::Result<()> {
+//! let server = Server::start(ServerConfig { workers: 1, ..Default::default() })?;
+//! // The plan injects exactly one panic: the first served frame kills
+//! // the worker's backend mid-stream.
+//! let plan = Arc::new(FaultPlan::new(7).panics(1.0).max_faults(1));
+//! let tenant = server.register_tenant(
+//!     Arc::new(random_network(7)),
+//!     TenantConfig {
+//!         max_inflight: 4,
+//!         lanes: 2,
+//!         max_retries: 2,
+//!         fault_plan: Some(plan),
+//!         ..Default::default()
+//!     },
+//! )?;
+//! let mut session = server.open_session(tenant)?;
+//! session.feed(&Frame::from_u8(28, 28, 1, vec![64; 784])?)?;
+//! // The panic is contained, the worker respawns in place, and the
+//! // retried frame is served normally — the client just sees a result.
+//! let resp = session.recv().expect("one frame outstanding")?;
+//! assert!(resp.pred < 10);
+//! let snap = server.snapshot();
+//! assert_eq!(snap.service.worker_restarts, 1);
+//! assert_eq!(server.tenant_state(tenant)?.retries, 1);
+//! server.shutdown();
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! ## Traffic & tail latency
 //!
 //! Sparse activity is the paper's whole premise, and it shows up at the
@@ -311,9 +386,14 @@
 //!   `Backend::infer_stream` to any `Box<dyn Backend>` — including
 //!   heterogeneous pools, multi-core
 //!   [`sim::parallel::ShardedExecutor`] workers and self-timed
-//!   [`sim::pipeline::PipelinedExecutor`] workers — with typed failure
-//!   containment (`EngineError::WorkerPanicked`, typed `Shutdown`
-//!   drains) and global + per-tenant metrics.
+//!   [`sim::pipeline::PipelinedExecutor`] workers — with self-healing
+//!   failure containment (§Fault tolerance: supervised respawns,
+//!   watchdog deadlines, retry/quarantine, typed `Shutdown` drains) and
+//!   global + per-tenant metrics.
+//! * [`faults`] — deterministic fault injection for chaos testing
+//!   (§Fault tolerance): a seeded [`faults::FaultPlan`] wraps any
+//!   backend in a [`faults::ChaosBackend`] that injects panics, stalls,
+//!   build failures and truncated streams at reproducible points.
 //! * [`traffic`] — sparsity-adaptive ingress and tail-latency
 //!   measurement (§Traffic & tail latency): per-frame cycle-cost
 //!   estimation ([`traffic::CostModel`]) behind the injector's
@@ -338,6 +418,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod data;
 pub mod engine;
+pub mod faults;
 pub mod report;
 pub mod runtime;
 pub mod sim;

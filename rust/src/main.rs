@@ -11,10 +11,12 @@
 //! sacsnn serve      [--backend sim] [--workers 4] [--lanes 8] [--threads 1]
 //!                   [--pipeline 0|N|full] [--batch 16] [--requests 200]
 //!                   [--tenants 1] [--queue-depth 256] [--json]
+//!                   [--max-restarts 16] [--restart-backoff-ms 5]
 //! sacsnn bench      [--backend sim] [--lanes 8] [--threads 4] [--batch 64] [--n 128]
 //!                   [--pipeline 0|N|full] [--tenants 0]
 //! sacsnn bench --replay [--tenants 4] [--frames 64] [--seed 1] [--workers 4]
-//!                   [--batch 8] [--pace 0.0] [--cost-aware true] [--out BENCH_sim.json]
+//!                   [--batch 8] [--pace 0.0] [--cost-aware true] [--chaos]
+//!                   [--out BENCH_sim.json]
 //! sacsnn golden     [--backend sim] [--n 10]   backend vs AOT JAX model (PJRT)
 //! sacsnn backends                              list registered backends
 //! sacsnn table1|table2|table3|table4|table5|fig12|ablate
@@ -300,6 +302,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_size: args.get("batch", 16)?,
         cost_aware: args.get("cost-aware", true)?,
         idle_evict_dispatches: args.get("idle-evict", 1024)?,
+        max_worker_restarts: args.get("max-restarts", 16)?,
+        restart_backoff_ms: args.get("restart-backoff-ms", 5)?,
     };
     let tenants: usize = args.get("tenants", 1)?;
     let tenants = tenants.max(1);
@@ -528,12 +532,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
 /// p50/p99/p999 submit→reply latency per tenant and in aggregate, and
 /// merges the `replay_*` fields into the `--out` JSON artifact (default
 /// `BENCH_sim.json`, preserving whatever the perf bench already wrote
-/// there) so `ci/perf_gate.py` can hold the p99 ceiling.
+/// there) so `ci/perf_gate.py` can hold the p99 ceiling and the
+/// `replay_availability` floor. With `--chaos` the replay runs under
+/// seeded fault injection ([`sacsnn::faults`]) with self-healing armed,
+/// via the fault-tolerant replay that counts typed error replies
+/// instead of aborting.
 fn cmd_bench_replay(args: &Args) -> Result<()> {
     use sacsnn::coordinator::TenantConfig;
+    use sacsnn::faults::FaultPlan;
     use sacsnn::snn::network::testutil::random_network;
-    use sacsnn::traffic::{generate, replay, LatencyHistogram, TraceSpec};
+    use sacsnn::traffic::{generate, replay, replay_tolerant, LatencyHistogram, TraceSpec};
     use sacsnn::util::json::Json;
+    use std::time::Duration;
 
     let tenants: usize = args.get("tenants", 4)?.max(1);
     let frames: usize = args.get("frames", 64)?.max(1);
@@ -542,6 +552,7 @@ fn cmd_bench_replay(args: &Args) -> Result<()> {
     let batch: usize = args.get("batch", 8)?.max(1);
     let pace: f64 = args.get("pace", 0.0)?;
     let cost_aware: bool = args.get("cost-aware", true)?;
+    let chaos: bool = args.get("chaos", false)?;
 
     let spec = TraceSpec { tenants, frames_per_tenant: frames, seed, ..Default::default() };
     let trace = generate(&spec);
@@ -554,26 +565,59 @@ fn cmd_bench_replay(args: &Args) -> Result<()> {
         cost_aware,
         ..Default::default()
     })?;
+    // --chaos: the same replay under seeded fault injection (worker
+    // panics, stalls past the dispatch deadline, truncated streams) with
+    // the self-healing machinery armed — deadlines, retries, quarantine.
+    // Frames the healing cannot save answer typed errors; availability
+    // is the fraction it does save.
+    let plan = chaos.then(|| {
+        Arc::new(
+            FaultPlan::new(seed.wrapping_add(0xC0_5))
+                .panics(0.05)
+                .stalls(0.02, 20)
+                .truncations(0.03)
+                .max_faults(((tenants * frames) / 8).max(1) as u64),
+        )
+    });
     let mut sessions: Vec<Session> = Vec::with_capacity(tenants);
     for _ in 0..tenants {
-        let tenant = server.register_tenant(
-            Arc::clone(&net),
-            TenantConfig { max_inflight: 64, lanes: 2, ..Default::default() },
-        )?;
+        let mut cfg = TenantConfig { max_inflight: 64, lanes: 2, ..Default::default() };
+        if let Some(plan) = &plan {
+            cfg.dispatch_timeout = Duration::from_millis(50);
+            cfg.max_retries = 3;
+            cfg.fault_plan = Some(Arc::clone(plan));
+        }
+        let tenant = server.register_tenant(Arc::clone(&net), cfg)?;
         sessions.push(server.open_session(tenant)?);
     }
-    let report = replay(&mut sessions, &trace, pace)?;
+    let (report, availability, failed) = match &plan {
+        Some(_) => {
+            let chaos = replay_tolerant(&mut sessions, &trace, pace)?;
+            (chaos.report, chaos.availability(), chaos.failed)
+        }
+        // strict replay fails fast on any serving error, so a completed
+        // run is 100% availability by construction
+        None => (replay(&mut sessions, &trace, pace)?, 1.0, 0),
+    };
     server.shutdown();
 
     let q = |h: &LatencyHistogram| (h.quantile(0.50), h.quantile(0.99), h.quantile(0.999));
     let (p50, p99, p999) = q(&report.total);
     println!(
         "replay: {} frames / {tenants} tenants (seed {seed}, cost-aware {cost_aware}, \
-         pace {pace}) in {:.2} s → {:.0} frames/s",
+         pace {pace}{}) in {:.2} s → {:.0} frames/s",
         report.frames(),
+        if chaos { ", CHAOS" } else { "" },
         report.wall_s,
         report.frames_per_s(),
     );
+    if let Some(plan) = &plan {
+        println!(
+            "  chaos: availability {availability:.4} ({failed} frames failed typed), \
+             injected {:?}",
+            plan.counts()
+        );
+    }
     println!(
         "  all tenants: p50 {p50} µs  p99 {p99} µs  p999 {p999} µs  max {} µs",
         report.total.max()
@@ -599,6 +643,9 @@ fn cmd_bench_replay(args: &Args) -> Result<()> {
     obj.insert("replay_p99_us".into(), Json::Num(p99 as f64));
     obj.insert("replay_p999_us".into(), Json::Num(p999 as f64));
     obj.insert("replay_frames_per_s".into(), Json::Num(report.frames_per_s()));
+    obj.insert("replay_availability".into(), Json::Num(availability));
+    obj.insert("replay_failed".into(), Json::Num(failed as f64));
+    obj.insert("replay_chaos".into(), Json::Bool(chaos));
     let per_tenant: Vec<Json> = report
         .per_tenant
         .iter()

@@ -38,5 +38,5 @@ pub mod trace;
 
 pub use cost::{CostModel, FRAME_COST_UNIT};
 pub use histogram::LatencyHistogram;
-pub use replay::{replay, ReplayReport};
+pub use replay::{replay, replay_tolerant, ChaosReplay, ReplayReport};
 pub use trace::{generate, TraceEvent, TraceSpec};

@@ -122,6 +122,112 @@ fn record(hist: &mut LatencyHistogram, submits: &mut VecDeque<Instant>) {
     hist.record(fed.elapsed().as_micros() as u64);
 }
 
+/// The outcome of a fault-tolerant ([`replay_tolerant`]) replay:
+/// latency distributions over the *successfully* answered frames, plus
+/// how many frames were answered with typed errors.
+#[derive(Clone, Debug)]
+pub struct ChaosReplay {
+    /// Latencies and wall time over the `ok` frames only (error replies
+    /// record no latency — a quarantined frame's wait is not a service
+    /// measurement).
+    pub report: ReplayReport,
+    /// Frames answered with a result.
+    pub ok: u64,
+    /// Frames answered with a typed error (deadline, quarantine, fault).
+    pub failed: u64,
+}
+
+impl ChaosReplay {
+    /// Fraction of fed frames answered successfully — the
+    /// `replay_availability` figure `bench --replay --chaos` reports and
+    /// CI floor-gates. `1.0` on an empty replay.
+    pub fn availability(&self) -> f64 {
+        let total = self.ok + self.failed;
+        if total == 0 {
+            return 1.0;
+        }
+        self.ok as f64 / total as f64
+    }
+}
+
+/// [`replay`] for chaos runs: a frame answered with a typed *serving*
+/// error (injected fault, deadline, quarantine, shutdown) is counted in
+/// [`ChaosReplay::failed`] instead of aborting the replay — under fault
+/// injection, errors are data. The error reply still consumes its
+/// frame's submit slot (replies stay in feed order) but records no
+/// latency. Feed-side errors (shape mismatch, unknown tenant) still
+/// fail fast: those are client bugs, not injected faults.
+pub fn replay_tolerant(
+    sessions: &mut [Session],
+    trace: &[TraceEvent],
+    pace: f64,
+) -> Result<ChaosReplay, EngineError> {
+    let tenants = sessions.len();
+    let mut per_tenant: Vec<LatencyHistogram> =
+        (0..tenants).map(|_| LatencyHistogram::new()).collect();
+    let mut submits: Vec<VecDeque<Instant>> = (0..tenants).map(|_| VecDeque::new()).collect();
+    let mut resp = Response::default();
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    let start = Instant::now();
+
+    for ev in trace {
+        debug_assert!(ev.tenant < tenants, "trace tenant {} has no session", ev.tenant);
+        if pace > 0.0 {
+            let target = Duration::from_micros((ev.at_us as f64 * pace) as u64);
+            let elapsed = start.elapsed();
+            if elapsed < target {
+                std::thread::sleep(target - elapsed);
+            }
+        }
+        loop {
+            match sessions[ev.tenant].feed(&ev.frame) {
+                Ok(_) => {
+                    submits[ev.tenant].push_back(Instant::now());
+                    break;
+                }
+                Err(EngineError::TenantOverQuota { .. }) => {
+                    match sessions[ev.tenant].recv_into(&mut resp) {
+                        Some(Ok(())) => {
+                            record(&mut per_tenant[ev.tenant], &mut submits[ev.tenant]);
+                            ok += 1;
+                        }
+                        Some(Err(_)) => {
+                            // typed reply under chaos: count it, drop its
+                            // submit timestamp, keep replaying
+                            submits[ev.tenant].pop_front();
+                            failed += 1;
+                        }
+                        None => std::thread::yield_now(),
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    for (tenant, session) in sessions.iter_mut().enumerate() {
+        while let Some(reply) = session.recv_into(&mut resp) {
+            match reply {
+                Ok(()) => {
+                    record(&mut per_tenant[tenant], &mut submits[tenant]);
+                    ok += 1;
+                }
+                Err(_) => {
+                    submits[tenant].pop_front();
+                    failed += 1;
+                }
+            }
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+
+    let mut total = LatencyHistogram::new();
+    for h in &per_tenant {
+        total.merge(h);
+    }
+    Ok(ChaosReplay { report: ReplayReport { total, per_tenant, wall_s }, ok, failed })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +265,30 @@ mod tests {
         assert!(p999 <= report.total.max());
         assert!(report.total.min() <= p50);
         assert!(report.frames_per_s() > 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn tolerant_replay_matches_strict_on_a_clean_run() {
+        // Without faults, replay_tolerant is replay: every frame ok,
+        // availability exactly 1.0, nothing counted failed.
+        let spec = TraceSpec { tenants: 1, frames_per_tenant: 10, ..Default::default() };
+        let trace = generate(&spec);
+        let server = Server::start(ServerConfig { workers: 1, batch_size: 4, ..Default::default() })
+            .unwrap();
+        let net = Arc::new(random_network(43));
+        let id = server
+            .register_tenant(
+                Arc::clone(&net),
+                TenantConfig { max_inflight: 8, lanes: 2, ..Default::default() },
+            )
+            .unwrap();
+        let mut sessions = vec![server.open_session(id).unwrap()];
+        let chaos = replay_tolerant(&mut sessions, &trace, 0.0).unwrap();
+        assert_eq!(chaos.ok, 10);
+        assert_eq!(chaos.failed, 0);
+        assert_eq!(chaos.report.frames(), 10);
+        assert_eq!(chaos.availability(), 1.0);
         server.shutdown();
     }
 }

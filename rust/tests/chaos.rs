@@ -1,0 +1,348 @@
+//! Chaos soak: the self-healing serving contract under deterministic
+//! fault injection ([`sacsnn::faults`]).
+//!
+//! The invariants refereed here, end to end through the public API:
+//!
+//! 1. **Exactly once** — every fed frame is answered exactly once, with
+//!    a result or a typed error, whatever the backends do.
+//! 2. **Results intact** — frames that survive retries are bit-identical
+//!    to a fault-free run (healing never corrupts an answer).
+//! 3. **Bounded stalls** — a wedged dispatch is reaped close to its
+//!    tenant's `dispatch_timeout`, never after the hang resolves.
+//! 4. **The pool never shrinks** — after any heal or replacement the
+//!    server reports its configured worker count.
+
+use sacsnn::coordinator::{Server, ServerConfig, TenantConfig};
+use sacsnn::engine::EngineError;
+use sacsnn::faults::FaultPlan;
+use sacsnn::sim::{AccelConfig, Accelerator};
+use sacsnn::snn::network::testutil::random_network;
+use sacsnn::traffic::{generate, replay_tolerant, TraceSpec};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[test]
+fn chaos_soak_answers_every_frame_exactly_once_with_intact_results() {
+    let spec = TraceSpec { tenants: 1, frames_per_tenant: 60, ..Default::default() };
+    let trace = generate(&spec);
+    let net = Arc::new(random_network(42));
+
+    // Golden run: the same frames through a direct accelerator — the
+    // bit-exact reference every successful chaos reply must match.
+    let mut direct =
+        Accelerator::new(Arc::clone(&net), AccelConfig { lanes: 2, ..Default::default() });
+    let golden: Vec<Vec<i64>> =
+        trace.iter().map(|ev| direct.infer_image(ev.frame.as_u8().unwrap()).logits).collect();
+
+    // Chaos run: panics, stalls past the dispatch deadline, and
+    // truncated streams, all seeded and budget-bounded.
+    let plan = Arc::new(
+        FaultPlan::new(1234)
+            .panics(0.15)
+            .stalls(0.05, 80)
+            .truncations(0.10)
+            .max_faults(10),
+    );
+    let server = Server::start(ServerConfig {
+        workers: 2,
+        batch_size: 4,
+        restart_backoff_ms: 0,
+        ..Default::default()
+    })
+    .unwrap();
+    let tenant = server
+        .register_tenant(
+            Arc::clone(&net),
+            TenantConfig {
+                max_inflight: 8,
+                lanes: 2,
+                dispatch_timeout: Duration::from_millis(40),
+                max_retries: 3,
+                fault_plan: Some(Arc::clone(&plan)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let mut session = server.open_session(tenant).unwrap();
+    let mut replies = Vec::with_capacity(trace.len());
+    for ev in &trace {
+        session.feed_yielding(&ev.frame, &mut |reply| replies.push(reply)).unwrap();
+    }
+    replies.extend(session.finish());
+
+    // (1) exactly once: one reply per fed frame, in feed order
+    assert_eq!(replies.len(), trace.len(), "every fed frame answered exactly once");
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for (i, reply) in replies.iter().enumerate() {
+        match reply {
+            // (2) survivors are bit-identical to the fault-free run
+            Ok(resp) => {
+                assert_eq!(resp.logits, golden[i], "frame {i} result corrupted by healing");
+                ok += 1;
+            }
+            Err(
+                EngineError::WorkerPanicked { .. }
+                | EngineError::DeadlineExceeded { .. }
+                | EngineError::PoisonFrame { .. }
+                | EngineError::Backend(_)
+                | EngineError::Msg(_),
+            ) => failed += 1,
+            Err(e) => panic!("frame {i}: unexpected error kind {e}"),
+        }
+    }
+    assert_eq!(ok + failed, trace.len());
+    assert!(plan.counts().total() >= 1, "the seeded plan must actually inject");
+    let snap = server.snapshot();
+    assert!(
+        snap.service.worker_restarts >= 1,
+        "panics/stalls at these rates must trigger at least one heal: {:?}",
+        plan.counts()
+    );
+    // (4) the pool healed back to its configured size
+    assert_eq!(server.live_workers(), 2, "the pool must never shrink");
+    // retried frames are visible in the per-tenant counters
+    let row = server.tenant_state(tenant).unwrap();
+    assert_eq!(row.completed, ok as u64);
+    assert_eq!(row.failed, failed as u64);
+    server.shutdown();
+}
+
+#[test]
+fn deadline_reap_is_bounded_and_pool_recovers() {
+    // One certain 500 ms stall against a 40 ms dispatch deadline: the
+    // watchdog must fail the frame typed well before the stall resolves
+    // (bounded by deadline + watchdog period, asserted with slack), and
+    // a replacement worker must serve the next frame.
+    let net = Arc::new(random_network(51));
+    let plan = Arc::new(FaultPlan::new(7).stalls(1.0, 500).max_faults(1));
+    let server = Server::start(ServerConfig {
+        workers: 1,
+        batch_size: 1,
+        restart_backoff_ms: 0,
+        ..Default::default()
+    })
+    .unwrap();
+    let tenant = server
+        .register_tenant(
+            Arc::clone(&net),
+            TenantConfig {
+                max_inflight: 4,
+                lanes: 2,
+                dispatch_timeout: Duration::from_millis(40),
+                fault_plan: Some(plan),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let mut session = server.open_session(tenant).unwrap();
+    let f = sacsnn::engine::Frame::from_u8(28, 28, 1, vec![64; 784]).unwrap();
+    let t0 = Instant::now();
+    session.feed(&f).unwrap();
+    let err = session.recv().expect("one frame outstanding").unwrap_err();
+    let elapsed = t0.elapsed();
+    assert!(
+        matches!(err, EngineError::DeadlineExceeded { timeout_ms: 40, .. }),
+        "{err}"
+    );
+    assert!(
+        elapsed < Duration::from_millis(400),
+        "reap must not wait out the 500 ms hang (took {elapsed:?})"
+    );
+    // the stall budget is spent: the replacement serves normally
+    session.feed(&f).unwrap();
+    let resp = session.recv().expect("outstanding").unwrap();
+    assert!(resp.pred < 10);
+    assert_eq!(server.live_workers(), 1, "replacement restored the pool");
+    assert!(server.snapshot().service.worker_restarts >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn poison_frame_quarantined_after_retry_budget() {
+    // A frame that fails EVERY dispatch must not retry forever: after
+    // max_retries attempts it is quarantined with a typed PoisonFrame.
+    let net = Arc::new(random_network(52));
+    let plan = Arc::new(FaultPlan::new(9).panics(1.0));
+    let server = Server::start(ServerConfig {
+        workers: 1,
+        batch_size: 1,
+        restart_backoff_ms: 0,
+        ..Default::default()
+    })
+    .unwrap();
+    let tenant = server
+        .register_tenant(
+            Arc::clone(&net),
+            TenantConfig {
+                max_inflight: 4,
+                lanes: 2,
+                max_retries: 2,
+                fault_plan: Some(plan),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let mut session = server.open_session(tenant).unwrap();
+    let f = sacsnn::engine::Frame::from_u8(28, 28, 1, vec![64; 784]).unwrap();
+    session.feed(&f).unwrap();
+    let err = session.recv().expect("answered, not retried forever").unwrap_err();
+    assert!(matches!(err, EngineError::PoisonFrame { retries: 2, .. }), "{err}");
+    let row = server.tenant_state(tenant).unwrap();
+    assert_eq!(row.retries, 2, "both retry attempts counted");
+    assert_eq!(row.quarantined, 1);
+    assert_eq!(server.snapshot().service.worker_restarts, 3, "one heal per panic");
+    assert_eq!(server.live_workers(), 1);
+    server.shutdown();
+}
+
+#[test]
+fn restart_cap_limps_typed_instead_of_crash_looping() {
+    // Past max_worker_restarts consecutive heals the lineage stops
+    // crash-looping: dispatches are answered with the standing fault,
+    // typed, and the heal counter stops climbing.
+    let net = Arc::new(random_network(53));
+    let plan = Arc::new(FaultPlan::new(11).panics(1.0));
+    let server = Server::start(ServerConfig {
+        workers: 1,
+        batch_size: 1,
+        max_worker_restarts: 2,
+        restart_backoff_ms: 0,
+        ..Default::default()
+    })
+    .unwrap();
+    let tenant = server
+        .register_tenant(
+            Arc::clone(&net),
+            TenantConfig {
+                max_inflight: 8,
+                lanes: 2,
+                fault_plan: Some(plan),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let mut session = server.open_session(tenant).unwrap();
+    let f = sacsnn::engine::Frame::from_u8(28, 28, 1, vec![64; 784]).unwrap();
+    for _ in 0..6 {
+        session.feed(&f).unwrap();
+    }
+    server.drain();
+    let replies = session.finish();
+    assert_eq!(replies.len(), 6, "limping must still answer everything");
+    for reply in &replies {
+        let err = reply.as_ref().unwrap_err();
+        assert!(matches!(err, EngineError::WorkerPanicked { .. }), "{err}");
+    }
+}
+
+#[test]
+fn shutdown_mid_respawn_completes_with_no_orphans() {
+    // Regression: shutting down while the watchdog is replacing a reaped
+    // worker must join cleanly — the replacement observes the shutdown
+    // mode on its first injector visit instead of parking forever, and
+    // the wedged original is detached, not waited out.
+    let net = Arc::new(random_network(54));
+    let plan = Arc::new(FaultPlan::new(13).stalls(1.0, 300).max_faults(1));
+    let server = Server::start(ServerConfig {
+        workers: 1,
+        batch_size: 1,
+        restart_backoff_ms: 0,
+        ..Default::default()
+    })
+    .unwrap();
+    let tenant = server
+        .register_tenant(
+            Arc::clone(&net),
+            TenantConfig {
+                max_inflight: 4,
+                lanes: 2,
+                dispatch_timeout: Duration::from_millis(30),
+                max_retries: 1,
+                fault_plan: Some(plan),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let mut session = server.open_session(tenant).unwrap();
+    let f = sacsnn::engine::Frame::from_u8(28, 28, 1, vec![64; 784]).unwrap();
+    session.feed(&f).unwrap();
+    // let the watchdog reap the stalled dispatch and spawn a replacement
+    std::thread::sleep(Duration::from_millis(80));
+    let t0 = Instant::now();
+    server.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_millis(250),
+        "shutdown must detach the wedged thread, not wait out its 300 ms hang"
+    );
+    let replies = session.finish();
+    assert_eq!(replies.len(), 1, "the frame is answered exactly once");
+}
+
+#[test]
+fn recv_deadline_times_out_typed_without_consuming() {
+    let net = Arc::new(random_network(55));
+    let plan = Arc::new(FaultPlan::new(17).stalls(1.0, 150).max_faults(1));
+    let server = Server::start(ServerConfig {
+        workers: 1,
+        batch_size: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let tenant = server
+        .register_tenant(
+            Arc::clone(&net),
+            TenantConfig {
+                max_inflight: 4,
+                lanes: 2,
+                fault_plan: Some(plan), // stall only; no server-side deadline
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let mut session = server.open_session(tenant).unwrap();
+    // nothing outstanding → Ok(None), not a timeout
+    assert!(session.recv_deadline(Duration::from_millis(1)).unwrap().is_none());
+    let f = sacsnn::engine::Frame::from_u8(28, 28, 1, vec![64; 784]).unwrap();
+    session.feed(&f).unwrap();
+    let err = session.recv_deadline(Duration::from_millis(10)).unwrap_err();
+    assert!(matches!(err, EngineError::DeadlineExceeded { timeout_ms: 10, .. }), "{err}");
+    // the timed-out wait consumed nothing: the result still arrives
+    let resp = session.recv().expect("still outstanding").unwrap();
+    assert!(resp.pred < 10);
+    server.shutdown();
+}
+
+#[test]
+fn tolerant_replay_reports_availability_under_chaos() {
+    let spec = TraceSpec { tenants: 1, frames_per_tenant: 30, ..Default::default() };
+    let trace = generate(&spec);
+    let net = Arc::new(random_network(56));
+    let plan = Arc::new(FaultPlan::new(21).panics(0.3).max_faults(5));
+    let server = Server::start(ServerConfig {
+        workers: 1,
+        batch_size: 4,
+        restart_backoff_ms: 0,
+        ..Default::default()
+    })
+    .unwrap();
+    let tenant = server
+        .register_tenant(
+            Arc::clone(&net),
+            TenantConfig {
+                max_inflight: 8,
+                lanes: 2,
+                fault_plan: Some(plan),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let mut sessions = vec![server.open_session(tenant).unwrap()];
+    let chaos = replay_tolerant(&mut sessions, &trace, 0.0).unwrap();
+    assert_eq!(chaos.ok + chaos.failed, 30, "every frame counted exactly once");
+    assert!(chaos.failed >= 1, "certain-panic budget must cost some frames");
+    assert_eq!(chaos.report.frames(), chaos.ok, "latency recorded for successes only");
+    let availability = chaos.availability();
+    assert!(availability < 1.0 && availability > 0.0, "availability {availability}");
+    server.shutdown();
+}
