@@ -152,6 +152,33 @@ fn main() {
         images_per_sec_pipelined / images_per_sec_single
     );
 
+    // CIFAR-scale generalized datapath (§Layer zoo): the cifar-synth
+    // preset — 6 convs, mixed kernel sizes {5, 3, 1}, stride 2, both
+    // pooling kinds — through the allocation-free execute step, so the
+    // k×k generalization's throughput is tracked (and gated) alongside
+    // the paper-net numbers.
+    let cifar_net = Arc::new(sacsnn::snn::network::testutil::cifar_network(42));
+    let (ch, cw, cc) = cifar_net.input_shape();
+    let cifar_images: Vec<Vec<u8>> = {
+        let mut rng = sacsnn::util::prng::Pcg::new(11);
+        (0..if smoke { 8 } else { 24 })
+            .map(|_| (0..ch * cw * cc).map(|_| rng.below(256) as u8).collect())
+            .collect()
+    };
+    let mut cifar_accel = Accelerator::new(Arc::clone(&cifar_net), AccelConfig::default());
+    let (mean_c, _, _) = common::time_ms(warmup, iters, || {
+        for img in &cifar_images {
+            cifar_accel.infer_image_into(img, &mut out);
+        }
+    });
+    let images_per_sec_cifar = cifar_images.len() as f64 * 1e3 / mean_c;
+    println!(
+        "cifar-synth ({} frames, {} convs, max k {}): {images_per_sec_cifar:.1} images/s host",
+        cifar_images.len(),
+        cifar_net.conv.len(),
+        cifar_net.max_k()
+    );
+
     // Trace-replay tail latency (§Traffic & tail latency): a seeded
     // bursty multi-tenant trace replayed through a live server, with
     // submit→reply latency quantiles landing in BENCH_sim.json —
@@ -213,6 +240,7 @@ fn main() {
          \"scaling_efficiency\": {scaling_efficiency:.4},\n  \
          \"pipeline_depth\": {pipeline_depth},\n  \
          \"images_per_sec_pipelined\": {images_per_sec_pipelined:.3},\n  \
+         \"images_per_sec_cifar\": {images_per_sec_cifar:.3},\n  \
          \"pipeline_fill_ms\": {pipeline_fill_ms:.4},\n  \
          \"pipeline_drain_ms\": {pipeline_drain_ms:.4},\n  \
          \"sim_conv_events_per_s\": {conv_events_per_s:.3},\n  \

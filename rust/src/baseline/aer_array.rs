@@ -40,12 +40,13 @@ pub fn run(net: &Network, img: &[u8]) -> BaselineResult {
         // ASIE's AER fabric): one cycle per (event, c_out)
         let ev = result.layer_input_events[li];
         cycles += ev * co as u64;
-        useful_pe_cycles += ev * co as u64 * 9; // 9 PEs active per event
+        // k² PEs active per event (the kernel neighbourhood)
+        useful_pe_cycles += ev * co as u64 * (layer.k * layer.k) as u64;
         // threshold/bias sweep once per (c_out, t): all PEs in parallel
         // (one cycle per array row)
         cycles += (ho as u64) * co as u64 * t;
     }
-    cycles += net.fc_w.len() as u64 * t / 9;
+    cycles += net.fc_w.len() as u64 * t / (net.max_k() * net.max_k()) as u64;
     let pe_utilization =
         (useful_pe_cycles as f64 / (cycles.max(1) as f64 * n_pes as f64)).min(1.0);
     BaselineResult { result, cycles, pe_utilization, n_pes }

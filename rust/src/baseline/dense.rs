@@ -1,9 +1,9 @@
 //! Frame-based sliding-window baseline: a conventional CNN-style
-//! accelerator with a 3×3 MAC array that visits **every** output pixel of
+//! accelerator with a k×k MAC array that visits **every** output pixel of
 //! every (c_out, c_in, t) combination, regardless of spike sparsity.
 //!
-//! Cycle model: one output pixel per cycle (the 9-MAC column computes one
-//! 3×3 window per cycle, like a line-buffered convolution engine), plus
+//! Cycle model: one output pixel per cycle (the k²-MAC column computes one
+//! k×k window per cycle, like a line-buffered convolution engine), plus
 //! the per-timestep membrane/threshold pass. This is the sparsity-blind
 //! reference point: its cycle count is *independent* of the input.
 
@@ -11,13 +11,17 @@ use crate::baseline::BaselineResult;
 use crate::sim::dense_ref::DenseRef;
 use crate::snn::network::Network;
 
-/// PEs in the MAC array (same 9 as the paper's conv unit, for a fair
-/// iso-resource comparison).
-pub const N_PES: usize = 9;
+/// PEs in the MAC array: sized to the network's largest kernel (k²; the
+/// same count as the proposed conv unit's PE array, for a fair
+/// iso-resource comparison — 9 for the paper's fixed 3×3 net).
+pub fn n_pes(net: &Network) -> usize {
+    net.max_k() * net.max_k()
+}
 
 pub fn run(net: &Network, img: &[u8]) -> BaselineResult {
     let result = DenseRef::new(net).infer(img);
     let t = net.t_steps as u64;
+    let n_pes = n_pes(net);
     let mut cycles = 0u64;
     let mut useful = 0u64; // MAC cycles that added a non-zero activation
     for (li, layer) in net.conv.iter().enumerate() {
@@ -29,13 +33,13 @@ pub fn run(net: &Network, img: &[u8]) -> BaselineResult {
         // threshold/bias pass: one pixel per cycle per (cout, t)
         cycles += (ho * wo * co) as u64 * t;
         // useful work ∝ events actually present (what the event-driven
-        // design exploits): each input event touches 9 outputs once per cout
+        // design exploits): each input event touches k² outputs once per cout
         useful += result.layer_input_events[li] * co as u64;
     }
     // FC: one MAC per (input, class) per timestep
-    cycles += (net.fc_w.len() as u64) * t / N_PES as u64;
+    cycles += (net.fc_w.len() as u64) * t / n_pes as u64;
     let pe_utilization = useful as f64 / cycles.max(1) as f64;
-    BaselineResult { result, cycles, pe_utilization: pe_utilization.min(1.0), n_pes: N_PES }
+    BaselineResult { result, cycles, pe_utilization: pe_utilization.min(1.0), n_pes }
 }
 
 #[cfg(test)]

@@ -35,7 +35,8 @@ pub fn run(net: &Network, img: &[u8]) -> BaselineResult {
             let conv = (npix * ci as u64).div_ceil(ARRAY_COLS as u64)
                 + (ARRAY_ROWS + ARRAY_COLS) as u64; // fill/drain
             // each conv cycle keeps at most ARRAY_COLS MACs busy per row
-            busy_pe_cycles += npix * ci as u64 * 9 / ARRAY_ROWS as u64;
+            let taps = (layer.k * layer.k) as u64;
+            busy_pe_cycles += npix * ci as u64 * taps / ARRAY_ROWS as u64;
             // sequential V_m merge + threshold: THE bottleneck
             let merge = npix;
             cycles += (conv + merge) * t;

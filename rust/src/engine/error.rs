@@ -28,6 +28,12 @@ pub enum EngineError {
     /// The requested capability is not compiled in or not installed
     /// (e.g. the PJRT runtime without the `pjrt` cargo feature).
     Unavailable(String),
+    /// A network description failed build-time validation (shape
+    /// inference, kernel-geometry limits, pooling placement, parameter
+    /// dimensions). Produced by [`crate::snn::network::NetworkBuilder`]
+    /// and the compact topology-string parser, so malformed topologies
+    /// fail as one matchable variant before any plan is compiled.
+    InvalidTopology(String),
     /// Serving: the bounded request queue is full (backpressure).
     Busy,
     /// Serving: the coordinator has shut down.
@@ -93,6 +99,7 @@ impl EngineError {
                 EngineError::DtypeMismatch { expected: *expected, got: *got }
             }
             EngineError::Unavailable(m) => EngineError::Unavailable(m.clone()),
+            EngineError::InvalidTopology(m) => EngineError::InvalidTopology(m.clone()),
             EngineError::Busy => EngineError::Busy,
             EngineError::Closed => EngineError::Closed,
             EngineError::TenantOverQuota { tenant, max_inflight } => {
@@ -153,6 +160,7 @@ impl fmt::Display for EngineError {
                 write!(f, "frame dtype {got:?} does not match expected {expected:?}")
             }
             EngineError::Unavailable(m) => write!(f, "unavailable: {m}"),
+            EngineError::InvalidTopology(m) => write!(f, "invalid topology: {m}"),
             EngineError::Busy => write!(f, "queue full (backpressure)"),
             EngineError::Closed => write!(f, "server is shut down"),
             EngineError::TenantOverQuota { tenant, max_inflight } => write!(
@@ -294,6 +302,9 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("gpu") && s.contains("sim") && s.contains("dense-ref"));
         assert!(EngineError::Busy.to_string().contains("backpressure"));
+        let t = EngineError::InvalidTopology("pool before conv".into());
+        assert!(t.to_string().contains("invalid topology: pool before conv"));
+        assert!(matches!(t.replicate(), EngineError::InvalidTopology(_)));
     }
 
     #[test]

@@ -85,7 +85,7 @@ pub enum BackendKind {
     Sim,
     /// Frame-based integer reference (functional golden, no cycle model).
     DenseRef,
-    /// Sparsity-blind 9-MAC sliding-window baseline.
+    /// Sparsity-blind k²-MAC sliding-window baseline.
     DenseMac,
     /// SIES-like systolic-array baseline.
     Systolic,
@@ -454,7 +454,7 @@ impl Backend for BaselineBackend {
 
     fn cycle_model(&self) -> CycleModel {
         let n_pes = match self.kind {
-            BackendKind::DenseMac => baseline::dense::N_PES,
+            BackendKind::DenseMac => baseline::dense::n_pes(&self.net),
             BackendKind::Systolic => {
                 baseline::systolic::ARRAY_ROWS * baseline::systolic::ARRAY_COLS
             }

@@ -18,7 +18,7 @@
 //! |-------------|-----------------------------------|--------------------|
 //! | `sim`       | [`sim::Accelerator`] (×P lanes)   | cycle-accurate, event-driven |
 //! | `dense-ref` | [`sim::dense_ref::DenseRef`]      | functional golden  |
-//! | `dense-mac` | [`baseline::dense`]               | sparsity-blind 9-MAC |
+//! | `dense-mac` | [`baseline::dense`]               | sparsity-blind k²-MAC |
 //! | `systolic`  | [`baseline::systolic`] (SIES-like)| sequential-merge bottleneck |
 //! | `aer-array` | [`baseline::aer_array`] (ASIE-like)| event-driven, fmap-sized array |
 //! | `pjrt`      | [`runtime`] (JAX/Pallas AOT)      | functional golden (`pjrt` feature) |
@@ -60,6 +60,44 @@
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! ## Layer zoo
+//!
+//! The datapath is not hardwired to the paper's 3×3 net: every sim unit
+//! is parametric in kernel size (k ≤ [`snn::network::MAX_K`]), stride
+//! and zero padding, with first-class pooling units
+//! ([`snn::network::PoolMode`]: winner-take-all, earliest-spike,
+//! majority/average). Networks are described through the typed
+//! [`snn::network::NetworkBuilder`] / [`snn::network::LayerSpec`] API —
+//! shapes are inferred, and every invalid topology is rejected with a
+//! typed [`engine::EngineError::InvalidTopology`] before any plan
+//! compiles — or through compact topology strings
+//! ([`snn::network::spec`], also behind the CLI's `--net` flag):
+//!
+//! ```
+//! use sacsnn::engine::{Backend, BackendKind, EngineBuilder, Frame};
+//! use sacsnn::snn::network::spec;
+//! use std::sync::Arc;
+//!
+//! # fn main() -> sacsnn::Result<()> {
+//! // 12×12×3 RGB input → 5×5 "same" conv → 2×2 max-pool → 1×1 conv
+//! // → strided 3×3 conv → 4-class head. Nothing here is 3×3-shaped.
+//! let net = Arc::new(spec::build("12x12x3-8C5p2-P2-4C1-6C3s2p1-F4", 7)?);
+//! let builder = EngineBuilder::new(Arc::clone(&net));
+//! let mut sim = builder.build(BackendKind::Sim)?;
+//! let mut golden = builder.build(BackendKind::DenseRef)?;
+//!
+//! let frame = Frame::from_u8(12, 12, 3, vec![90; 12 * 12 * 3])?;
+//! let (fast, reference) = (sim.infer(&frame)?, golden.infer(&frame)?);
+//! assert_eq!(fast.logits, reference.logits); // spike-exact, still
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The paper's fixed net is the degenerate case: every layer k = 3,
+//! stride 1, no padding, 3×3 winner-take-all pooling — and it compiles
+//! to bit-identical plans and outputs through the generalized datapath
+//! (the parity, golden-check and zero-allocation suites run unmodified).
 //!
 //! ## Throughput
 //!

@@ -5,26 +5,35 @@
 //!
 //! ```text
 //! sacsnn run        [--backend sim] [--dataset mnist] [--bits 8] [--lanes 8] [--index 0]
-//!                   [--batch 1] [--threads 1] [--pipeline 0|N|full]
+//!                   [--batch 1] [--threads 1] [--pipeline 0|N|full] [--net <preset|spec>]
 //! sacsnn eval       [--backend sim] [--dataset mnist] [--bits 8] [--lanes 8] [--n 200]
-//!                   [--batch 16] [--threads 1] [--pipeline 0|N|full]
+//!                   [--batch 16] [--threads 1] [--pipeline 0|N|full] [--net <preset|spec>]
 //! sacsnn serve      [--backend sim] [--workers 4] [--lanes 8] [--threads 1]
 //!                   [--pipeline 0|N|full] [--batch 16] [--requests 200]
 //!                   [--tenants 1] [--queue-depth 256] [--json]
 //!                   [--max-restarts 16] [--restart-backoff-ms 5]
 //! sacsnn bench      [--backend sim] [--lanes 8] [--threads 4] [--batch 64] [--n 128]
-//!                   [--pipeline 0|N|full] [--tenants 0]
+//!                   [--pipeline 0|N|full] [--tenants 0] [--net <preset|spec>]
 //! sacsnn bench --replay [--tenants 4] [--frames 64] [--seed 1] [--workers 4]
 //!                   [--batch 8] [--pace 0.0] [--cost-aware true] [--chaos]
 //!                   [--out BENCH_sim.json]
 //! sacsnn golden     [--backend sim] [--n 10]   backend vs AOT JAX model (PJRT)
 //! sacsnn backends                              list registered backends
+//! sacsnn nets                                  list built-in net presets (--net)
 //! sacsnn table1|table2|table3|table4|table5|fig12|ablate
 //! sacsnn trace-neuron [--index 0]              Fig. 2-style membrane trace
 //! ```
 //!
 //! `--backend` accepts any registered [`BackendKind`]; unknown names fail
 //! with the full list of valid kinds.
+//!
+//! `--net <preset|spec>` (see `lib.rs` §Layer zoo) swaps the artifact
+//! dataset for a synthetic network built from a compact topology string
+//! (`32x32x3-64C5s1p2-P2-128C3-F10`) or a preset name (`sacsnn nets`
+//! lists them) with seeded weights and seeded input frames — no
+//! artifacts needed, any kernel size/stride/padding/pooling mix. With
+//! `--net` there are no labels, so `run`/`eval` report predictions,
+//! spikes and cycle statistics instead of accuracy.
 //!
 //! Throughput knobs (see `lib.rs` §Throughput): `--batch N` groups frames
 //! into one `infer_batch` dispatch; `--threads N` shards each sim batch
@@ -53,9 +62,9 @@
 
 use sacsnn::coordinator::{Server, ServerConfig, Session};
 use sacsnn::data::Dataset;
-use sacsnn::engine::{Backend as _, BackendKind, EngineBuilder, EngineError};
+use sacsnn::engine::{Backend as _, BackendKind, EngineBuilder, EngineError, Frame};
 use sacsnn::report;
-use sacsnn::snn::network::Network;
+use sacsnn::snn::network::{spec, Network};
 use sacsnn::Result;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -131,7 +140,46 @@ fn load_env(dataset: &str, bits: u32) -> Result<(Arc<Network>, Dataset)> {
     Ok((net, ds))
 }
 
+/// `--net` mode: resolve the preset name / topology spec into a
+/// seeded synthetic network and generate `n` seeded input frames.
+/// Self-contained — no artifacts, no dataset, no labels.
+fn net_env(args: &Args, n: usize) -> Result<(Arc<Network>, Vec<Frame>)> {
+    use sacsnn::util::prng::Pcg;
+    let seed: u64 = args.get("seed", 42)?;
+    let net = Arc::new(spec::resolve(&args.get_str("net", ""), seed)?);
+    let (h, w, c) = net.input_shape();
+    let mut rng = Pcg::new(seed.wrapping_add(7));
+    let frames = (0..n)
+        .map(|_| {
+            let data = (0..h * w * c).map(|_| rng.below(256) as u8).collect();
+            Frame::from_u8(h, w, c, data)
+        })
+        .collect::<Result<_>>()?;
+    Ok((net, frames))
+}
+
+/// Per-layer stats block shared by `run` and `run --net`.
+fn print_layer_stats(res: &sacsnn::engine::Inference) {
+    for (i, l) in res.stats.layers.iter().enumerate() {
+        println!(
+            "  layer {}: conv {} cy, thresh {} cy, events {}, stalls {}, \
+             bubbles {}, sparsity {:.1}%, PE util {:.1}%",
+            i + 1,
+            l.conv_cycles,
+            l.thresh_cycles,
+            l.events,
+            l.stalls,
+            l.bubbles,
+            l.input_sparsity * 100.0,
+            l.pe_utilization() * 100.0,
+        );
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
+    if args.has("net") {
+        return cmd_run_net(args);
+    }
     let dataset = args.get_str("dataset", "mnist");
     let bits: u32 = args.get("bits", 8)?;
     let lanes: usize = args.get("lanes", 8)?;
@@ -192,24 +240,55 @@ fn cmd_run(args: &Args) -> Result<()> {
     } else {
         println!("functional backend (no cycle model); host wall {wall:?}");
     }
-    for (i, l) in res.stats.layers.iter().enumerate() {
+    print_layer_stats(&res);
+    Ok(())
+}
+
+/// `run --net`: one seeded frame through the spec'd network.
+fn cmd_run_net(args: &Args) -> Result<()> {
+    let lanes: usize = args.get("lanes", 8)?;
+    let threads: usize = args.get("threads", 1)?;
+    let pipeline = args.pipeline()?;
+    let kind = args.backend()?;
+    let (net, frames) = net_env(args, 1)?;
+    let mut backend = EngineBuilder::new(Arc::clone(&net))
+        .lanes(lanes)
+        .threads(threads)
+        .pipeline(pipeline)
+        .build(kind)?;
+    let t0 = Instant::now();
+    let res = backend.infer(&frames[0])?;
+    let wall = t0.elapsed();
+    let cm = backend.cycle_model();
+    let (h, w, c) = net.input_shape();
+    println!(
+        "backend: {}   net: {} ({h}x{w}x{c} input, {} conv layers, {} classes)",
+        backend.name(),
+        args.get_str("net", ""),
+        net.conv.len(),
+        net.n_classes,
+    );
+    println!("prediction: {}   logits: {:?}", res.pred, res.logits);
+    if cm.cycle_accurate {
         println!(
-            "  layer {}: conv {} cy, thresh {} cy, events {}, stalls {}, \
-             bubbles {}, sparsity {:.1}%, PE util {:.1}%",
-            i + 1,
-            l.conv_cycles,
-            l.thresh_cycles,
-            l.events,
-            l.stalls,
-            l.bubbles,
-            l.input_sparsity * 100.0,
-            l.pe_utilization() * 100.0,
+            "cycles: {}   FPS@{:.0}MHz: {:.0}   latency: {:.3} ms   (host wall {:?})",
+            res.stats.total_cycles,
+            cm.clock_hz / 1e6,
+            res.stats.fps(cm.clock_hz),
+            res.stats.latency_s(cm.clock_hz) * 1e3,
+            wall,
         );
+    } else {
+        println!("functional backend (no cycle model); host wall {wall:?}");
     }
+    print_layer_stats(&res);
     Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
+    if args.has("net") {
+        return cmd_eval_net(args);
+    }
     let dataset = args.get_str("dataset", "mnist");
     let bits: u32 = args.get("bits", 8)?;
     let lanes: usize = args.get("lanes", 8)?;
@@ -254,6 +333,58 @@ fn cmd_eval(args: &Args) -> Result<()> {
         threads.max(1),
         correct,
         100.0 * correct as f64 / n as f64
+    );
+    if cm.cycle_accurate {
+        let avg = cycles as f64 / n as f64;
+        println!(
+            "avg cycles/frame {avg:.0} → {:.0} FPS @{:.0} MHz ({:.3} ms latency); host {:.1} img/s",
+            cm.clock_hz / avg,
+            cm.clock_hz / 1e6,
+            avg / cm.clock_hz * 1e3,
+            n as f64 / wall.as_secs_f64(),
+        );
+    } else {
+        println!("functional backend; host {:.1} img/s", n as f64 / wall.as_secs_f64());
+    }
+    Ok(())
+}
+
+/// `eval --net`: batched inference over seeded synthetic frames. No
+/// labels exist, so this reports spike/cycle statistics and throughput
+/// (and doubles as the artifact-free CI smoke for generalized nets).
+fn cmd_eval_net(args: &Args) -> Result<()> {
+    let lanes: usize = args.get("lanes", 8)?;
+    let batch: usize = args.get("batch", 16)?.max(1);
+    let threads: usize = args.get("threads", 1)?;
+    let pipeline = args.pipeline()?;
+    let kind = args.backend()?;
+    let n: usize = args.get("n", 32)?.max(1);
+    let (net, frames) = net_env(args, n)?;
+    let mut backend = EngineBuilder::new(Arc::clone(&net))
+        .lanes(lanes)
+        .threads(threads)
+        .pipeline(pipeline)
+        .build(kind)?;
+    let cm = backend.cycle_model();
+    let mut cycles = 0u64;
+    let mut spikes = 0u64;
+    let mut outs = Vec::new();
+    let t0 = Instant::now();
+    for chunk in frames.chunks(batch) {
+        backend.infer_batch(chunk, &mut outs)?;
+        for res in &outs {
+            cycles += res.stats.total_cycles;
+            spikes += res.stats.spike_counts.iter().flatten().sum::<u64>();
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "net {} [{}] ×{lanes} (batch {batch}, {} host threads): {n} frames, \
+         {:.0} spikes/frame",
+        args.get_str("net", ""),
+        backend.name(),
+        threads.max(1),
+        spikes as f64 / n as f64,
     );
     if cm.cycle_accurate {
         let avg = cycles as f64 / n as f64;
@@ -385,7 +516,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// efficiency. Works with no artifacts (falls back to the seeded
 /// synthetic workload, like `cargo bench --bench perf`).
 fn cmd_bench(args: &Args) -> Result<()> {
-    use sacsnn::engine::Frame;
     use sacsnn::snn::network::testutil::synthetic_workload;
 
     if args.has("replay") {
@@ -401,23 +531,29 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
     let dataset = args.get_str("dataset", "mnist");
     let bits: u32 = args.get("bits", 8)?;
-    let (net, frames, mode) = match load_env(&dataset, bits) {
-        Ok((net, ds)) => {
-            let frames: Vec<Frame> = (0..n)
-                .map(|i| report::frame_for(&net, &ds, i % ds.n_test()))
-                .collect::<Result<_>>()?;
-            (net, frames, "mnist")
-        }
-        Err(e) => {
-            println!("artifacts unavailable ({e}); using seeded synthetic workload");
-            // the same seeded workload the CI-gated perf bench measures
-            let (net, images) = synthetic_workload(n);
-            let (h, w, c) = net.input_shape();
-            let frames: Vec<Frame> = images
-                .into_iter()
-                .map(|data| Frame::from_u8(h, w, c, data))
-                .collect::<Result<_>>()?;
-            (net, frames, "synthetic")
+    let (net, frames, mode) = if args.has("net") {
+        // --net: bench the spec'd topology on seeded synthetic frames
+        let (net, frames) = net_env(args, n)?;
+        (net, frames, "net-spec")
+    } else {
+        match load_env(&dataset, bits) {
+            Ok((net, ds)) => {
+                let frames: Vec<Frame> = (0..n)
+                    .map(|i| report::frame_for(&net, &ds, i % ds.n_test()))
+                    .collect::<Result<_>>()?;
+                (net, frames, "mnist")
+            }
+            Err(e) => {
+                println!("artifacts unavailable ({e}); using seeded synthetic workload");
+                // the same seeded workload the CI-gated perf bench measures
+                let (net, images) = synthetic_workload(n);
+                let (h, w, c) = net.input_shape();
+                let frames: Vec<Frame> = images
+                    .into_iter()
+                    .map(|data| Frame::from_u8(h, w, c, data))
+                    .collect::<Result<_>>()?;
+                (net, frames, "synthetic")
+            }
         }
     };
 
@@ -681,7 +817,7 @@ fn cmd_backends() {
         let note = match kind {
             BackendKind::Sim => "cycle-level simulator of the paper's accelerator (×P lanes)",
             BackendKind::DenseRef => "frame-based integer reference (functional golden)",
-            BackendKind::DenseMac => "sparsity-blind 9-MAC sliding-window baseline",
+            BackendKind::DenseMac => "sparsity-blind k²-MAC sliding-window baseline",
             BackendKind::Systolic => "SIES-like systolic array baseline",
             BackendKind::AerArray => "ASIE-like fmap-sized AER PE array baseline",
             BackendKind::Pjrt => {
@@ -690,6 +826,17 @@ fn cmd_backends() {
             }
         };
         println!("  {:<10} {note}", kind.name());
+    }
+}
+
+fn cmd_nets() {
+    println!(
+        "built-in net presets (--net <name>, or a raw spec like \
+         32x32x3-64C5s1p2-P2-128C3-F10):"
+    );
+    for p in spec::PRESETS {
+        println!("  {:<12} {}", p.name, p.spec);
+        println!("  {:<12} {}", "", p.about);
     }
 }
 
@@ -705,7 +852,7 @@ fn main() -> Result<()> {
         Some((c, r)) => (c.as_str(), r),
         None => {
             eprintln!(
-                "usage: sacsnn <run|eval|serve|bench|golden|backends|table1..table5|fig12|ablate|trace-neuron> [--flags]"
+                "usage: sacsnn <run|eval|serve|bench|golden|backends|nets|table1..table5|fig12|ablate|trace-neuron> [--flags]"
             );
             std::process::exit(2);
         }
@@ -719,6 +866,10 @@ fn main() -> Result<()> {
         "golden" => cmd_golden(&args),
         "backends" => {
             cmd_backends();
+            Ok(())
+        }
+        "nets" => {
+            cmd_nets();
             Ok(())
         }
         "table1" => {

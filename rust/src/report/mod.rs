@@ -373,17 +373,22 @@ pub fn trace_neuron(index: usize) -> Result<String> {
     // largest final membrane
     let layer = &net.conv[0];
     let (ho, wo, _) = layer.out_shape;
-    let kernel = layer.kernel(0, 0);
+    let (k, stride, pad) = (layer.k, layer.stride, layer.padding);
     let mut vm = vec![0i64; ho * wo];
     let mut traces: Vec<Vec<i64>> = vec![Vec::new(); ho * wo];
     for f in &frames {
         for ox in 0..ho {
             for oy in 0..wo {
                 let mut acc = vm[ox * wo + oy];
-                for ky in 0..3 {
-                    for kx in 0..3 {
-                        if f[(ox + ky) * w + (oy + kx)] {
-                            acc += kernel[ky * 3 + kx] as i64;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let (x, y) = (ox * stride + ky, oy * stride + kx);
+                        if x < pad || y < pad {
+                            continue;
+                        }
+                        let (x, y) = (x - pad, y - pad);
+                        if x < h && y < w && f[x * w + y] {
+                            acc += layer.weight(0, 0, ky, kx) as i64;
                         }
                     }
                 }

@@ -31,18 +31,50 @@ pub enum ReadSlot {
     Bubble,
 }
 
-/// The per-channel address event queue.
-#[derive(Clone, Debug, Default)]
+/// The per-channel address event queue, interlaced at factor `k`
+/// (k² column queues; the paper's fixed design is the k = 3 instance).
+#[derive(Clone, Debug)]
 pub struct Aeq {
-    pub cols: [Vec<CellEvent>; COLUMNS],
+    pub cols: Vec<Vec<CellEvent>>,
+    k: usize,
+}
+
+impl Default for Aeq {
+    fn default() -> Self {
+        Self::with_k(3)
+    }
 }
 
 impl Aeq {
+    /// A paper-style 9-column (k = 3) queue.
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Write port `s` (one of 9 parallel ports).
+    /// A k-interlaced queue with k² column RAMs.
+    pub fn with_k(k: usize) -> Self {
+        Aeq { cols: (0..k * k).map(|_| Vec::new()).collect(), k }
+    }
+
+    /// Interlace factor of this queue.
+    #[inline(always)]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Re-interlace to factor `k`, keeping (and never shrinking) the
+    /// per-column allocations. Only called at plan/scratch setup and on
+    /// queue reuse across layers of different k — the queue must be
+    /// empty (events don't survive a change of address map).
+    pub fn set_k(&mut self, k: usize) {
+        debug_assert!(self.is_empty(), "set_k on a non-empty Aeq");
+        self.k = k;
+        if self.cols.len() < k * k {
+            self.cols.resize_with(k * k, Vec::new);
+        }
+    }
+
+    /// Write port `s` (one of k² parallel ports).
     #[inline]
     pub fn push(&mut self, s: usize, i: u16, j: u16) {
         self.cols[s].push(CellEvent { i, j });
@@ -70,27 +102,35 @@ impl Aeq {
         }
     }
 
+    /// The active column queues (the k² prefix — `cols` may be longer
+    /// after a `set_k` to a smaller factor, to keep allocations).
+    #[inline]
+    fn active(&self) -> &[Vec<CellEvent>] {
+        &self.cols[..self.k * self.k]
+    }
+
     /// Total number of valid address events.
     pub fn len(&self) -> usize {
-        self.cols.iter().map(Vec::len).sum()
+        self.active().iter().map(Vec::len).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.cols.iter().all(Vec::is_empty)
+        self.active().iter().all(Vec::is_empty)
     }
 
     /// Number of read cycles the queue costs: one per event plus one
     /// wasted cycle per empty column.
     pub fn read_cycles(&self) -> usize {
-        self.len() + self.cols.iter().filter(|c| c.is_empty()).count()
+        self.len() + self.active().iter().filter(|c| c.is_empty()).count()
     }
 
     /// The exact sequence the read logic produces, cycle by cycle.
     pub fn read_slots(&self) -> impl Iterator<Item = ReadSlot> + '_ {
-        self.cols.iter().enumerate().flat_map(|(s, col)| {
+        let k = self.k;
+        self.active().iter().enumerate().flat_map(move |(s, col)| {
             let bubble = if col.is_empty() { Some(ReadSlot::Bubble) } else { None };
             let events = col.iter().map(move |ev| {
-                let (x, y) = interlace::position(ev.i as usize, ev.j as usize, s);
+                let (x, y) = interlace::position_k(ev.i as usize, ev.j as usize, s, k);
                 ReadSlot::Event { x: x as u16, y: y as u16, s: s as u8 }
             });
             bubble.into_iter().chain(events)
@@ -111,7 +151,7 @@ impl Aeq {
     /// Maximum queue depth over the columns — sizes the per-column RAM in
     /// the cost model.
     pub fn max_depth(&self) -> usize {
-        self.cols.iter().map(Vec::len).max().unwrap_or(0)
+        self.active().iter().map(Vec::len).max().unwrap_or(0)
     }
 }
 
@@ -163,6 +203,35 @@ mod tests {
         assert_eq!(slots[2], ReadSlot::Bubble);
         // col 3 at cell (0,0): fmap position (0*3 + 3/3, 0*3 + 3%3) = (1, 0)
         assert!(matches!(slots[3], ReadSlot::Event { s: 3, x: 1, y: 0 }));
+    }
+
+    #[test]
+    fn parametric_k_roundtrip_and_cycles() {
+        use crate::sim::interlace::{cell_k, column_k};
+        for k in [1usize, 5, 7] {
+            let mut aeq = Aeq::with_k(k);
+            assert_eq!(aeq.k(), k);
+            // all k*k columns empty: k*k wasted cycles
+            assert_eq!(aeq.read_cycles(), k * k);
+            // write a sparse fmap through the k-interlaced map and read
+            // it back via read_slots
+            let (h, w) = (2 * k + 1, 3 * k);
+            let mut want = vec![false; h * w];
+            for (x, y) in [(0, 0), (k, k - 1), (h - 1, w - 1), (1, 2 % w)] {
+                if !want[x * w + y] {
+                    want[x * w + y] = true;
+                    let (i, j) = cell_k(x, y, k);
+                    aeq.push(column_k(x, y, k), i as u16, j as u16);
+                }
+            }
+            assert_eq!(aeq.to_frame(h, w), want, "k={k}");
+            // re-interlacing keeps capacity and resets the address map
+            aeq.clear();
+            aeq.set_k(3);
+            assert_eq!(aeq.read_cycles(), 9);
+            aeq.set_k(k);
+            assert_eq!(aeq.read_cycles(), k * k);
+        }
     }
 
     #[test]

@@ -70,6 +70,24 @@ pub fn column_kidx(s_in: usize, s: usize) -> usize {
     target_lut()[s_in][s].2 as usize
 }
 
+/// Parametric kernel-index permutation (stride-1): the raw
+/// cross-correlation weight index `kx·k + ky` that output column `s`
+/// applies to an event arriving from input column `s_in`, for a k×k
+/// kernel with `pad` zero padding. `column_kidx_k(s_in, s, 3, 0)` is
+/// exactly [`column_kidx`] (asserted in tests), which is what keeps the
+/// generalized plan compiler bit-identical on the paper's fixed net.
+#[inline]
+pub fn column_kidx_k(s_in: usize, s: usize, k: usize, pad: usize) -> usize {
+    let kx = (s_in / k + pad + k - s / k) % k;
+    let ky = (s_in % k + pad + k - s % k) % k;
+    kx * k + ky
+}
+
+/// Upper bound on the PE-array width: scratch arrays in the generalized
+/// conv path are `[_; MAX_COLS]` so the hot loop stays allocation-free
+/// for every supported kernel size.
+pub const MAX_COLS: usize = crate::snn::network::MAX_K * crate::snn::network::MAX_K;
+
 /// Hazard-handling policy (the paper's design vs ablation variants).
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum HazardMode {
@@ -464,6 +482,176 @@ impl ConvUnit {
         stats
     }
 
+    /// Generalized batched pass for one input channel of an arbitrary
+    /// [`crate::sim::plan::LayerPlan`]: parametric k×k kernel, stride and
+    /// padding, k²-interlaced queues and membrane banks. Stride-1 layers
+    /// use the precompiled `wsel_bank` permutations (the direct analogue
+    /// of the k = 3 hot path, same per-column mux hoisting); stride > 1
+    /// layers enumerate the valid kernel taps per event and address the
+    /// raw kernel directly (the permutation is no longer a pure function
+    /// of the column pair). Scratch is fixed-size `[_; MAX_COLS]` — the
+    /// pass performs no heap allocation for any k ≤ MAX_K.
+    ///
+    /// Cycle/stall/forward accounting follows the same closed form as
+    /// [`Self::process_queue_multi_pre`]: one AEQ slot per cycle, S2–S3
+    /// stall + S2–S4 forward on address overlap, `fetch + 4` drain. The
+    /// interlacing guarantees (k×k neighborhoods are bank-disjoint, and
+    /// strided taps land on distinct columns) keep the per-event scatter
+    /// single-cycle exactly as in the fixed-function design.
+    pub fn process_queue_multi_gen(
+        &self,
+        aeq: &Aeq,
+        plan: &crate::sim::plan::LayerPlan,
+        cin: usize,
+        mem: &mut crate::sim::mempot::MultiMem,
+        sat: Sat,
+    ) -> ConvPassStats {
+        let k = plan.k;
+        let cols = k * k;
+        let pad = plan.padding;
+        let stride = plan.stride;
+        let stride1 = stride == 1;
+        let (ho, wo) = (mem.h, mem.w);
+        let cells_j = mem.cells_j;
+        let nc = mem.nc;
+        debug_assert!(cols <= MAX_COLS);
+        debug_assert_eq!(mem.k(), k);
+        debug_assert_eq!(aeq.k(), k);
+        let bank = plan.wsel_bank(cin);
+        let mut stats = ConvPassStats::default();
+        let stall_only = self.hazard_mode == HazardMode::StallOnly;
+        let (vmin, vmax) = (sat.min, sat.max);
+
+        let mut p1_addr = [OOB; MAX_COLS];
+        let mut p2_addr = [OOB; MAX_COLS];
+        let mut p1_sep: u64 = u64::MAX;
+        let mut gap: u64 = 0;
+        let mut slot_idx: u64 = 0;
+        let mut last_event_fetch: u64 = 0;
+
+        for s_in in 0..cols {
+            let col = &aeq.cols[s_in];
+            if col.is_empty() {
+                slot_idx += 1;
+                stats.bubbles += 1;
+                gap += 1;
+                continue;
+            }
+            // Per-column constants (the hardware's per-column mux select):
+            // for stride 1, output offsets dx = pad − kx are fixed per
+            // (s_in, s) and the permuted weights are the precompiled bank.
+            let mut doff = [(0i16, 0i16); MAX_COLS];
+            let wsel = if stride1 {
+                for s in 0..cols {
+                    let kx = (s_in / k + pad + k - s / k) % k;
+                    let ky = (s_in % k + pad + k - s % k) % k;
+                    doff[s] = (pad as i16 - kx as i16, pad as i16 - ky as i16);
+                }
+                &bank[s_in * cols * nc..(s_in + 1) * cols * nc]
+            } else {
+                &bank[0..0]
+            };
+            for ev in col {
+                slot_idx += 1;
+                let px = ev.i as usize * k + s_in / k;
+                let py = ev.j as usize * k + s_in % k;
+                let mut addr = [OOB; MAX_COLS];
+                let mut ov1 = false;
+                let mut ov2 = false;
+                if stride1 {
+                    for s in 0..cols {
+                        let (dx, dy) = doff[s];
+                        let ox = px as i64 + dx as i64;
+                        let oy = py as i64 + dy as i64;
+                        if ox >= 0 && (ox as usize) < ho && oy >= 0 && (oy as usize) < wo {
+                            let a = ((ox as usize / k) * cells_j + oy as usize / k) as u32;
+                            addr[s] = a;
+                            ov1 |= a == p1_addr[s];
+                            ov2 |= a == p2_addr[s];
+                            let ws = &wsel[s * nc..(s + 1) * nc];
+                            let vs = mem.vm_channels_mut(s, a as usize);
+                            for c in 0..nc {
+                                vs[c] = vs[c].saturating_add(ws[c]).clamp(vmin, vmax);
+                            }
+                        }
+                    }
+                } else {
+                    // Strided taps: output o = (p + pad − k') / stride is
+                    // valid iff the numerator is non-negative and divisible.
+                    // Valid taps land on DISTINCT output columns (their
+                    // span is < k), so the scatter is still bank-disjoint.
+                    for kx in 0..k {
+                        let num_x = px as i64 + pad as i64 - kx as i64;
+                        if num_x < 0 || num_x % stride as i64 != 0 {
+                            continue;
+                        }
+                        let ox = (num_x / stride as i64) as usize;
+                        if ox >= ho {
+                            continue;
+                        }
+                        for ky in 0..k {
+                            let num_y = py as i64 + pad as i64 - ky as i64;
+                            if num_y < 0 || num_y % stride as i64 != 0 {
+                                continue;
+                            }
+                            let oy = (num_y / stride as i64) as usize;
+                            if oy >= wo {
+                                continue;
+                            }
+                            let s = (ox % k) * k + oy % k;
+                            let a = ((ox / k) * cells_j + oy / k) as u32;
+                            debug_assert_eq!(addr[s], OOB, "strided taps must be bank-disjoint");
+                            addr[s] = a;
+                            ov1 |= a == p1_addr[s];
+                            ov2 |= a == p2_addr[s];
+                            let ws = plan.raw_kernel(kx * k + ky, cin);
+                            let vs = mem.vm_channels_mut(s, a as usize);
+                            for c in 0..nc {
+                                vs[c] = vs[c].saturating_add(ws[c]).clamp(vmin, vmax);
+                            }
+                        }
+                    }
+                }
+
+                let mut sep = 1 + gap;
+                if !stall_only {
+                    if sep == 1 && ov1 {
+                        stats.stalls += 1;
+                        stats.forwards += 1;
+                        sep = 2;
+                    } else if sep == 2 && ov1 {
+                        stats.forwards += 1;
+                    } else if sep == 1 && p1_sep == 1 && ov2 {
+                        stats.forwards += 1;
+                    }
+                } else if sep == 1 && ov1 {
+                    stats.stalls += 2;
+                    sep = 3;
+                } else if sep == 2 && ov1 {
+                    stats.stalls += 1;
+                    sep = 3;
+                } else if sep == 1 && p1_sep == 1 && ov2 {
+                    stats.stalls += 1;
+                    sep = 2;
+                }
+
+                stats.events += 1;
+                stats.pe_busy += 1;
+                last_event_fetch = slot_idx + stats.stalls;
+                p2_addr[..cols].copy_from_slice(&p1_addr[..cols]);
+                p1_addr[..cols].copy_from_slice(&addr[..cols]);
+                p1_sep = sep;
+                gap = 0;
+            }
+        }
+        stats.cycles = if stats.events == 0 {
+            slot_idx + 1
+        } else {
+            (slot_idx + stats.stalls + 1).max(last_event_fetch + 4)
+        };
+        stats
+    }
+
     /// Register-by-register pipeline reference engine (see module doc).
     fn process_queue_pipelined(
         &self,
@@ -846,6 +1034,159 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn column_kidx_k_matches_legacy_lut() {
+        for s_in in 0..COLUMNS {
+            for s in 0..COLUMNS {
+                assert_eq!(
+                    column_kidx_k(s_in, s, 3, 0),
+                    column_kidx(s_in, s),
+                    "s_in={s_in} s={s}"
+                );
+            }
+        }
+    }
+
+    /// Build a k-interlaced AEQ from a dense binary frame.
+    fn aeq_k(frame: &[bool], h: usize, w: usize, k: usize) -> Aeq {
+        let mut aeq = Aeq::with_k(k);
+        for x in 0..h {
+            for y in 0..w {
+                if frame[x * w + y] {
+                    let s = interlace::column_k(x, y, k);
+                    let (i, j) = interlace::cell_k(x, y, k);
+                    aeq.push(s, i as u16, j as u16);
+                }
+            }
+        }
+        aeq
+    }
+
+    /// Layer with explicit geometry and exporter-layout weights.
+    fn gen_layer(
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        rng: &mut Pcg,
+    ) -> crate::snn::network::ConvLayerDef {
+        let ho = (h + 2 * pad - k) / stride + 1;
+        let wo = (w + 2 * pad - k) / stride + 1;
+        crate::snn::network::ConvLayerDef {
+            in_shape: (h, w, cin),
+            out_shape: (ho, wo, cout),
+            k,
+            stride,
+            padding: pad,
+            pool: None,
+            w: (0..k * k * cin * cout).map(|_| rng.range_i32(-60, 60)).collect(),
+            b: vec![0; cout],
+            vt: 1,
+        }
+    }
+
+    #[test]
+    fn gen_path_equals_legacy_on_k3() {
+        // On a paper-shaped layer (k=3, stride 1, no padding) the
+        // generalized pass must be BIT-IDENTICAL to the fixed-function
+        // hot path — membrane contents and every stat counter.
+        prop::check("gen == pre on k3", 20, |rng| {
+            let h = 5 + rng.below(20);
+            let w = 5 + rng.below(20);
+            let nc = 1 + rng.below(5);
+            let frame: Vec<bool> = (0..h * w).map(|_| rng.chance(0.3)).collect();
+            let aeq = Aeq::from_events(&frames_to_events(&frame, h, w));
+            let layer = gen_layer(h, w, 1, nc, 3, 1, 0, rng);
+            let plan = crate::sim::plan::LayerPlan::compile(&layer, 3);
+            let sat = Sat::from_bits(20);
+            for mode in [HazardMode::ForwardAndStall, HazardMode::StallOnly] {
+                let unit = ConvUnit::new(mode);
+                let mut m_pre = crate::sim::mempot::MultiMem::new(h - 2, w - 2, nc);
+                m_pre.reset_for(h - 2, w - 2, nc);
+                let mut m_gen = m_pre.clone();
+                let s_pre = unit.process_queue_multi_pre(&aeq, plan.wsel_bank(0), &mut m_pre, sat);
+                let s_gen = unit.process_queue_multi_gen(&aeq, &plan, 0, &mut m_gen, sat);
+                if s_pre != s_gen {
+                    return Err(format!("{mode:?} stats:\n pre {s_pre:?}\n gen {s_gen:?}"));
+                }
+                for c in 0..nc {
+                    if m_pre.to_dense(c) != m_gen.to_dense(c) {
+                        return Err(format!("{mode:?}: channel {c} functional mismatch"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_path_equals_dense_conv_parametric() {
+        // THE generalized correctness property: event-based k×k
+        // processing with stride and padding == dense strided
+        // cross-correlation, for k in {1,3,5,7}.
+        for (k, stride, pad) in [
+            (1usize, 1usize, 0usize),
+            (3, 1, 1),
+            (3, 2, 1),
+            (5, 1, 2),
+            (5, 2, 0),
+            (7, 1, 3),
+            (7, 3, 2),
+        ] {
+            prop::check(&format!("gen conv k={k} s={stride} p={pad}"), 15, |rng| {
+                let h = k + stride + rng.below(18);
+                let w = k + stride + rng.below(18);
+                let nc = 1 + rng.below(3);
+                let frame: Vec<bool> = (0..h * w).map(|_| rng.chance(0.3)).collect();
+                let layer = gen_layer(h, w, 1, nc, k, stride, pad, rng);
+                let (ho, wo, _) = layer.out_shape;
+                let plan = crate::sim::plan::LayerPlan::compile(&layer, k);
+                let aeq = aeq_k(&frame, h, w, k);
+                let sat = Sat::from_bits(20);
+                let (ci, cj) = interlace::cell_grid_k(ho, wo, k);
+                let mut mem = crate::sim::mempot::MultiMem::with_capacity(k * k * ci * cj * nc);
+                mem.reset_for_k(ho, wo, nc, k);
+                let stats = ConvUnit::default().process_queue_multi_gen(&aeq, &plan, 0, &mut mem, sat);
+                if stats.events != aeq.len() as u64 {
+                    return Err(format!("events {} != {}", stats.events, aeq.len()));
+                }
+                // dense reference: out[o] += w[t] for input o·s + t − p
+                for c in 0..nc {
+                    let mut want = vec![0i32; ho * wo];
+                    for ox in 0..ho {
+                        for oy in 0..wo {
+                            let mut acc = 0i32;
+                            for tr in 0..k {
+                                for tc in 0..k {
+                                    let x = ox * stride + tr;
+                                    let y = oy * stride + tc;
+                                    if x < pad || y < pad {
+                                        continue;
+                                    }
+                                    let (x, y) = (x - pad, y - pad);
+                                    if x >= h || y >= w || !frame[x * w + y] {
+                                        continue;
+                                    }
+                                    acc = sat.add(acc, layer.weight(c, 0, tr, tc));
+                                }
+                            }
+                            want[ox * wo + oy] = acc;
+                        }
+                    }
+                    if mem.to_dense(c) != want {
+                        return Err(format!(
+                            "k={k} s={stride} p={pad} ch {c} mismatch ({h}x{w})"
+                        ));
+                    }
+                }
+                Ok(())
+            });
+        }
     }
 
     #[test]

@@ -24,7 +24,6 @@ use crate::sim::mempot::MultiMem;
 use crate::sim::plan::{NetworkPlan, Scratch};
 use crate::sim::scheduler::{process_layer_planned, LayerQueues};
 use crate::sim::threshold_unit::ThresholdUnit;
-use crate::snn::encode::{encode_mttfs, frames_to_events};
 use crate::snn::network::Network;
 use crate::util::ceil_div;
 use std::sync::Arc;
@@ -87,12 +86,11 @@ impl Accelerator {
     /// compiled once and shared via `Arc`, while each worker owns its own
     /// mutable state (membrane memory, units, [`Scratch`] arenas).
     pub fn with_plan(net: Arc<Network>, plan: Arc<NetworkPlan>, cfg: AccelConfig) -> Self {
-        let (mh, mw, mc) = plan.mem_shape;
         let scratch = Scratch::for_plan(&plan);
         Accelerator {
             conv: ConvUnit::new(cfg.hazard_mode),
             thresh: ThresholdUnit,
-            mem: MultiMem::new(mh, mw, mc),
+            mem: MultiMem::with_capacity(plan.mem_slots.max(1)),
             plan,
             scratch,
             net,
@@ -112,21 +110,19 @@ impl Accelerator {
         Arc::clone(&self.plan)
     }
 
-    /// Encode an input frame (the network's H×W u8 fmap, single channel)
-    /// into freshly allocated input-layer AEQs — the off-critical-path
-    /// helper for callers that pre-encode (see
+    /// Encode an input frame (the network's H×W×C u8 fmap, channel-
+    /// interleaved) into freshly allocated input-layer AEQs — the
+    /// off-critical-path helper for callers that pre-encode (see
     /// [`Self::infer_from_queues`]). The accelerator's own hot path
     /// ([`Self::infer_image_into`]) encodes into its scratch queues
-    /// instead and never allocates.
+    /// instead and never allocates. Queues come out interlaced at the
+    /// first layer's k (their consumer's address map).
     pub fn encode_input(&self, img: &[u8]) -> LayerQueues {
-        let (h, w, _) = self.net.input_shape();
-        let frames = encode_mttfs(img, h, w, &self.net.thresholds);
-        LayerQueues {
-            q: vec![frames
-                .iter()
-                .map(|f| Aeq::from_events(&frames_to_events(f, h, w)))
-                .collect()],
-        }
+        let (h, w, c) = self.net.input_shape();
+        let k_in = self.net.conv.first().map(|l| l.k).unwrap_or(3);
+        let mut queues = LayerQueues::new(c.max(1), self.net.t_steps);
+        encode_image_into_queues(img, h, w, c.max(1), k_in, &self.net.thresholds, &mut queues);
+        queues
     }
 
     /// Run one image (row-major H·W u8 slice) through the accelerator.
@@ -145,13 +141,12 @@ impl Accelerator {
     /// mark, this performs **zero heap allocations**.
     pub fn infer_image_into(&mut self, img: &[u8], out: &mut Inference) {
         let (h, w, c) = self.net.input_shape();
-        // The m-TTFS encoder (like the pre-plan `encode_input` path)
-        // produces a single-channel queue set; fail loudly rather than
-        // leave channels 1.. silently empty.
-        assert!(c <= 1, "m-TTFS input encoding supports 1 channel, network has {c}");
-        assert_eq!(img.len(), h * w, "image length mismatch");
+        let c = c.max(1);
+        assert_eq!(img.len(), h * w * c, "image length mismatch");
+        let k_in = self.net.conv.first().map(|l| l.k).unwrap_or(3);
         let Scratch { input, bufs, events_t } = &mut self.scratch;
-        let input_events = encode_image_into_queues(img, h, w, &self.net.thresholds, input);
+        let input_events =
+            encode_image_into_queues(img, h, w, c, k_in, &self.net.thresholds, input);
         run_pipeline(
             &self.net,
             &self.plan,
@@ -190,10 +185,12 @@ impl Accelerator {
     }
 }
 
-/// m-TTFS encode of a whole image into channel 0 of (cleared) input
-/// queues, one timestep per AEQ with the thresholds applied in reversed
-/// order (step 0 uses the LARGEST threshold; bit-identical to
-/// `encode_mttfs` + `frames_to_events`). Returns the events written.
+/// m-TTFS encode of a whole H×W×C channel-interleaved image into the
+/// first `c` rows of (cleared) input queues, one timestep per AEQ with
+/// the thresholds applied in reversed order (step 0 uses the LARGEST
+/// threshold; on a single-channel image this is bit-identical to
+/// `encode_mttfs` + `frames_to_events`). Queues are (re)interlaced at
+/// `k`, the first conv layer's kernel edge. Returns the events written.
 /// THE single encode entry point, shared by the sequential execute step
 /// and the [`crate::sim::pipeline`] feed/warm paths so they cannot
 /// drift apart.
@@ -201,34 +198,48 @@ pub(crate) fn encode_image_into_queues(
     img: &[u8],
     h: usize,
     w: usize,
+    c: usize,
+    k: usize,
     thresholds: &[f32],
     queues: &mut LayerQueues,
 ) -> u64 {
     queues.clear_events();
     let t_steps = thresholds.len();
     let mut events = 0u64;
-    for (t, aeq) in queues.q[0].iter_mut().enumerate() {
-        let thr = thresholds[t_steps - 1 - t];
-        events += encode_frame_into(img, h, w, thr, aeq);
+    for (ch, row) in queues.q.iter_mut().take(c).enumerate() {
+        for (t, aeq) in row.iter_mut().enumerate() {
+            aeq.set_k(k);
+            let thr = thresholds[t_steps - 1 - t];
+            events += encode_frame_into(img, h, w, c, ch, k, thr, aeq);
+        }
     }
     events
 }
 
-/// Direct m-TTFS encode of one timestep into a scratch AEQ: cell scan
-/// order with the 9 column comparators per cell, exactly as the
-/// thresholding-unit write side would emit it (and bit-identical to
-/// `Aeq::from_events(&frames_to_events(..))` on the binarized frame).
-/// Returns the number of events written.
-fn encode_frame_into(img: &[u8], h: usize, w: usize, thr: f32, aeq: &mut Aeq) -> u64 {
-    let cells_i = ceil_div(h, 3);
-    let cells_j = ceil_div(w, 3);
+/// Direct m-TTFS encode of one channel's timestep into a scratch AEQ:
+/// cell scan order with the k² column comparators per cell, exactly as
+/// the thresholding-unit write side would emit it (and, at k = 3 and
+/// c = 1, bit-identical to `Aeq::from_events(&frames_to_events(..))` on
+/// the binarized frame). Returns the number of events written.
+fn encode_frame_into(
+    img: &[u8],
+    h: usize,
+    w: usize,
+    c: usize,
+    ch: usize,
+    k: usize,
+    thr: f32,
+    aeq: &mut Aeq,
+) -> u64 {
+    let cells_i = ceil_div(h, k);
+    let cells_j = ceil_div(w, k);
     let mut n = 0u64;
     for ci in 0..cells_i {
         for cj in 0..cells_j {
-            for s in 0..9 {
-                let x = ci * 3 + s / 3;
-                let y = cj * 3 + s % 3;
-                if x < h && y < w && (img[x * w + y] as f32 / 255.0) > thr {
+            for s in 0..k * k {
+                let x = ci * k + s / k;
+                let y = cj * k + s % k;
+                if x < h && y < w && (img[(x * w + y) * c + ch] as f32 / 255.0) > thr {
                     aeq.push(s, ci as u16, cj as u16);
                     n += 1;
                 }
@@ -381,8 +392,9 @@ impl Backend for Accelerator {
 
     fn cycle_model(&self) -> CycleModel {
         CycleModel {
-            // 9 PEs per convolution core, one core per lane.
-            n_pes: 9 * self.cfg.lanes,
+            // k² PEs per convolution core (sized for the largest kernel
+            // in the network — 9 for the paper net), one core per lane.
+            n_pes: self.net.max_k() * self.net.max_k() * self.cfg.lanes,
             clock_hz: self.cfg.clock_hz,
             event_driven: true,
             cycle_accurate: true,

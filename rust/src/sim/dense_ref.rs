@@ -6,8 +6,7 @@
 //! and served through [`crate::engine::Backend`] as the `dense-ref`
 //! backend.
 
-use crate::snn::encode::encode_mttfs;
-use crate::snn::network::Network;
+use crate::snn::network::{Network, PoolMode};
 use crate::snn::sat::Sat;
 
 /// Result of a dense reference inference (Vec-backed: one logit per
@@ -26,6 +25,9 @@ pub struct DenseResult {
 struct LayerState {
     vm: Vec<i32>, // [cout][ho*wo] flattened
     fired: Vec<bool>,
+    /// Per-pooled-window `EarliestSpike` latch `[cout][qh*qw]` (unused
+    /// for the other pool modes).
+    pool_fired: Vec<bool>,
 }
 
 /// Frame-based reference engine.
@@ -38,29 +40,36 @@ impl<'a> DenseRef<'a> {
         DenseRef { net }
     }
 
-    /// VALID 3×3 cross-correlation of one (multi-channel) binary input
-    /// into one output channel, accumulated into `vm` with saturation.
+    /// k×k cross-correlation (with stride and zero padding) of one
+    /// (multi-channel) binary input into one output channel, accumulated
+    /// into `vm` with saturation. Input dims come from the layer's own
+    /// `in_shape`.
     fn conv_accumulate(
         &self,
         input: &[Vec<bool>], // [cin][h*w]
-        _h: usize,
-        w: usize,
         layer_idx: usize,
         cout: usize,
         vm: &mut [i32],
         sat: Sat,
     ) {
         let layer = &self.net.conv[layer_idx];
+        let (h, w, _) = layer.in_shape;
         let (ho, wo, _) = layer.out_shape;
+        let (k, stride, pad) = (layer.k, layer.stride, layer.padding);
         for (cin, frame) in input.iter().enumerate() {
-            let kernel = layer.kernel(cout, cin);
             for ox in 0..ho {
                 for oy in 0..wo {
                     let mut acc = vm[ox * wo + oy];
-                    for ky in 0..3 {
-                        for kx in 0..3 {
-                            if frame[(ox + ky) * w + (oy + kx)] {
-                                acc = sat.add(acc, kernel[ky * 3 + kx]);
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let x = ox * stride + ky;
+                            let y = oy * stride + kx;
+                            if x < pad || y < pad {
+                                continue; // zero padding contributes nothing
+                            }
+                            let (x, y) = (x - pad, y - pad);
+                            if x < h && y < w && frame[x * w + y] {
+                                acc = sat.add(acc, layer.weight(cout, cin, ky, kx));
                             }
                         }
                     }
@@ -70,15 +79,16 @@ impl<'a> DenseRef<'a> {
         }
     }
 
-    /// Full inference on an input image (row-major H·W u8 slice of the
-    /// network's input fmap).
+    /// Full inference on an input image (row-major H×W×C u8 slice of the
+    /// network's input fmap, channel-interleaved).
     pub fn infer(&self, img: &[u8]) -> DenseResult {
         let net = self.net;
         let sat = net.sat;
-        let (h0, w0, _) = net.input_shape();
+        let (h0, w0, c0) = net.input_shape();
+        let c0 = c0.max(1);
+        assert_eq!(img.len(), h0 * w0 * c0, "image length mismatch");
         let n_layers = net.conv.len();
         let n_classes = net.n_classes;
-        let frames = encode_mttfs(img, h0, w0, &net.thresholds);
         let t_steps = net.t_steps;
 
         let mut states: Vec<LayerState> = net
@@ -86,16 +96,30 @@ impl<'a> DenseRef<'a> {
             .iter()
             .map(|l| {
                 let (ho, wo, co) = l.out_shape;
-                LayerState { vm: vec![0; ho * wo * co], fired: vec![false; ho * wo * co] }
+                let (qh, qw, _) = l.queue_shape();
+                LayerState {
+                    vm: vec![0; ho * wo * co],
+                    fired: vec![false; ho * wo * co],
+                    pool_fired: vec![false; qh * qw * co],
+                }
             })
             .collect();
         let mut acc = vec![0i64; n_classes];
         let mut spike_counts = Vec::with_capacity(t_steps);
         let mut layer_input_events = vec![0u64; n_layers];
 
-        for frame in frames.iter().take(t_steps) {
-            let mut input: Vec<Vec<bool>> = vec![frame.clone()];
-            let (mut h, mut w) = (h0, w0);
+        for t in 0..t_steps {
+            // m-TTFS binarization, thresholds in decreasing order (step 0
+            // uses the largest — same reversal as `encode_mttfs`), one
+            // binary frame per input channel.
+            let thr = net.thresholds[t_steps - 1 - t];
+            let mut input: Vec<Vec<bool>> = (0..c0)
+                .map(|ch| {
+                    (0..h0 * w0)
+                        .map(|p| (img[p * c0 + ch] as f32 / 255.0) > thr)
+                        .collect()
+                })
+                .collect();
             let mut counts = vec![0u64; n_layers];
 
             for (li, layer) in net.conv.iter().enumerate() {
@@ -107,7 +131,7 @@ impl<'a> DenseRef<'a> {
                 for cout in 0..co {
                     let st = &mut states[li];
                     let vm = &mut st.vm[cout * npix..(cout + 1) * npix];
-                    self.conv_accumulate(&input, h, w, li, cout, vm, sat);
+                    self.conv_accumulate(&input, li, cout, vm, sat);
                     let fired = &mut st.fired[cout * npix..(cout + 1) * npix];
                     let mut ch_spikes = vec![false; npix];
                     for p in 0..npix {
@@ -119,23 +143,41 @@ impl<'a> DenseRef<'a> {
                     }
                     spikes.push(ch_spikes);
                 }
-                // optional 3×3/3 OR max-pool
+                // optional pooling unit (w×w window, stride w)
                 let (qh, qw, _) = layer.queue_shape();
-                if layer.pool {
+                if let Some(pool) = layer.pool {
+                    let pw = pool.w;
+                    let st = &mut states[li];
                     spikes = spikes
                         .iter()
-                        .map(|ch| {
+                        .enumerate()
+                        .map(|(cout, ch)| {
+                            let latch = &mut st.pool_fired
+                                [cout * qh * qw..(cout + 1) * qh * qw];
                             let mut pooled = vec![false; qh * qw];
                             for px in 0..qh {
                                 for py in 0..qw {
-                                    'win: for dx in 0..3 {
-                                        for dy in 0..3 {
-                                            if ch[(px * 3 + dx) * wo + (py * 3 + dy)] {
-                                                pooled[px * qw + py] = true;
-                                                break 'win;
+                                    let mut count = 0usize;
+                                    for dx in 0..pw {
+                                        for dy in 0..pw {
+                                            if ch[(px * pw + dx) * wo + (py * pw + dy)] {
+                                                count += 1;
                                             }
                                         }
                                     }
+                                    pooled[px * qw + py] = match pool.mode {
+                                        PoolMode::WinnerTakeAll => count > 0,
+                                        PoolMode::Average => 2 * count >= pw * pw,
+                                        PoolMode::EarliestSpike => {
+                                            let p = px * qw + py;
+                                            if count > 0 && !latch[p] {
+                                                latch[p] = true;
+                                                true
+                                            } else {
+                                                false
+                                            }
+                                        }
+                                    };
                                 }
                             }
                             pooled
@@ -148,8 +190,6 @@ impl<'a> DenseRef<'a> {
                     .filter(|&&b| b)
                     .count() as u64;
                 input = spikes;
-                h = qh;
-                w = qw;
             }
 
             // FC classification unit: bias once per timestep + weight rows

@@ -1,15 +1,71 @@
-//! Memory interlacing (paper §VI, Fig. 6): distribute a 2D fmap over 9
-//! column RAMs so that **any** 3×3 window touches each column exactly
-//! once, enabling 9 parallel read/write ports out of single dual-port
-//! RAMs, each hard-wired to its PE.
+//! Memory interlacing (paper §VI, Fig. 6), parametric in the kernel
+//! edge k: distribute a 2D fmap over k² column RAMs so that **any**
+//! k×k window touches each column exactly once, enabling k² parallel
+//! read/write ports out of single dual-port RAMs, each hard-wired to
+//! its PE.
 //!
 //! A neuron at fmap position `(x, y)` lives in column
-//! `s = 3·(x mod 3) + (y mod 3)` at cell address `(i, j) = (x/3, y/3)`.
+//! `s = k·(x mod k) + (y mod k)` at cell address `(i, j) = (x/k, y/k)`.
+//! The fixed-function `column`/`cell`/`position`/`window_targets` are
+//! the paper's k = 3 instance (kept as the hot path of the legacy
+//! datapath); the `*_k` variants generalize to any k ≤
+//! [`crate::snn::network::MAX_K`].
 
 use crate::util::ceil_div;
 
 /// Number of interlace columns (= 3×3 kernel size = number of PEs).
 pub const COLUMNS: usize = 9;
+
+/// Column index for fmap position (x, y) under k-interlacing.
+#[inline(always)]
+pub fn column_k(x: usize, y: usize, k: usize) -> usize {
+    (x % k) * k + (y % k)
+}
+
+/// Cell address (i, j) for fmap position (x, y) under k-interlacing.
+#[inline(always)]
+pub fn cell_k(x: usize, y: usize, k: usize) -> (usize, usize) {
+    (x / k, y / k)
+}
+
+/// Inverse: fmap position of column `s` at cell `(i, j)` (k-interlaced).
+#[inline(always)]
+pub fn position_k(i: usize, j: usize, s: usize, k: usize) -> (usize, usize) {
+    (i * k + s / k, j * k + s % k)
+}
+
+/// Cell-grid dimensions for an H×W fmap under k-interlacing.
+#[inline]
+pub fn cell_grid_k(h: usize, w: usize, k: usize) -> (usize, usize) {
+    (ceil_div(h, k), ceil_div(w, k))
+}
+
+/// Parametric window→column address calculation (stride 1): fills
+/// `out[s]` for the k² columns with `(ox, oy, kidx)` — the output
+/// position in column `s` affected by an input event at `(px, py)`
+/// under a k×k cross-correlation with `pad` zero padding, and the raw
+/// weight index `kidx = kx·k + ky` to apply (`x = o + k' − pad`, so
+/// `k' = p + pad − o`). Positions may be out of bounds (negative or
+/// ≥ fmap) — the caller bounds-checks. `out` must hold ≥ k² entries.
+///
+/// The permutation depends only on `(px mod k, py mod k)`, which is
+/// what lets the plan precompile the k² weight-bank permutations.
+#[inline]
+pub fn window_targets_k(px: usize, py: usize, k: usize, pad: usize, out: &mut [(i64, i64, usize)]) {
+    debug_assert!(pad < k && out.len() >= k * k);
+    let pxm = px % k;
+    let pym = py % k;
+    for rx in 0..k {
+        // kernel row kx such that ox = px + pad − kx has ox mod k == rx
+        let kx = (pxm + pad + k - rx % k) % k;
+        let ox = (px + pad) as i64 - kx as i64;
+        for ry in 0..k {
+            let ky = (pym + pad + k - ry % k) % k;
+            let oy = (py + pad) as i64 - ky as i64;
+            out[rx * k + ry] = (ox, oy, kx * k + ky);
+        }
+    }
+}
 
 /// Column index for fmap position (x, y).
 #[inline(always)]
@@ -256,5 +312,152 @@ mod tests {
         assert_eq!(cell_grid(24, 24), (8, 8));
         assert_eq!(cell_grid(6, 6), (2, 2));
         assert_eq!(cell_grid(28, 28), (10, 10));
+    }
+
+    #[test]
+    fn k3_variants_match_legacy() {
+        for x in 0..20 {
+            for y in 0..20 {
+                assert_eq!(column_k(x, y, 3), column(x, y));
+                assert_eq!(cell_k(x, y, 3), cell(x, y));
+                let s = column(x, y);
+                let (i, j) = cell(x, y);
+                assert_eq!(position_k(i, j, s, 3), position(i, j, s));
+            }
+        }
+        assert_eq!(cell_grid_k(26, 26, 3), cell_grid(26, 26));
+        let mut buf = [(0i64, 0i64, 0usize); 9];
+        for px in 0..15 {
+            for py in 0..15 {
+                window_targets_k(px, py, 3, 0, &mut buf);
+                assert_eq!(buf, window_targets(px, py), "event ({px},{py})");
+            }
+        }
+    }
+
+    #[test]
+    fn interlaced_map_k_is_a_bijection_onto_bank_slots() {
+        // Parametric version of the bank-slot bijection: for k in
+        // {1, 3, 5, 7}, the (x, y, ch) → (s, (i, j), ch) map is injective
+        // into the k² bank-local RAMs, and a full bijection when H and W
+        // are multiples of k.
+        for k in [1usize, 3, 5, 7] {
+            prop::check(&format!("k={k} interlace bijection"), 30, |rng| {
+                let h = 1 + rng.below(40);
+                let w = 1 + rng.below(40);
+                let c = 1 + rng.below(4);
+                let (ci, cj) = cell_grid_k(h, w, k);
+                let mut seen = vec![false; k * k * ci * cj * c];
+                for ch in 0..c {
+                    for x in 0..h {
+                        for y in 0..w {
+                            let s = column_k(x, y, k);
+                            let (i, j) = cell_k(x, y, k);
+                            if s >= k * k || i >= ci || j >= cj {
+                                return Err(format!(
+                                    "k={k}: ({x},{y}) outside the {ci}x{cj} grid: s={s} i={i} j={j}"
+                                ));
+                            }
+                            if position_k(i, j, s, k) != (x, y) {
+                                return Err(format!("k={k}: roundtrip failed for ({x},{y})"));
+                            }
+                            let slot = ((s * ci + i) * cj + j) * c + ch;
+                            if seen[slot] {
+                                return Err(format!(
+                                    "k={k}: two neurons share RAM slot (s={s}, i={i}, j={j}, \
+                                     ch={ch}) in a {h}x{w}x{c} fmap"
+                                ));
+                            }
+                            seen[slot] = true;
+                        }
+                    }
+                }
+                if h % k == 0 && w % k == 0 && !seen.iter().all(|&b| b) {
+                    return Err(format!("k={k}: {h}x{w}x{c} map not surjective onto banks"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn neighborhood_k_never_maps_two_neurons_to_one_ram() {
+        // Hazard freedom for the generalized k²-PE array: the k×k
+        // neighborhood of ANY pixel (clipped at fmap borders) touches k²
+        // distinct column RAMs, so all k² PEs can read/write one window
+        // in a single cycle without a bank conflict.
+        for k in [1usize, 3, 5, 7] {
+            prop::check(&format!("k={k} neighborhood bank-disjoint"), 60, |rng| {
+                let h = 1 + rng.below(40);
+                let w = 1 + rng.below(40);
+                let x0 = rng.below(h);
+                let y0 = rng.below(w);
+                let mut seen = vec![false; k * k];
+                for dx in 0..k {
+                    for dy in 0..k {
+                        let (x, y) = (x0 + dx, y0 + dy);
+                        if x >= h || y >= w {
+                            continue;
+                        }
+                        let s = column_k(x, y, k);
+                        if seen[s] {
+                            return Err(format!(
+                                "k={k}: neighborhood of ({x0},{y0}) in {h}x{w} maps two \
+                                 neurons to RAM {s}"
+                            ));
+                        }
+                        seen[s] = true;
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn window_targets_k_match_bruteforce() {
+        // Parametric closed form vs brute-force window enumeration,
+        // including zero padding: an event at p updates outputs
+        // o = p + pad − k' for k' in 0..k, and the entry lands in
+        // column o mod k with the raw cross-correlation weight index.
+        for k in [1usize, 3, 5, 7] {
+            for pad in 0..k.min(4) {
+                prop::check(&format!("k={k} pad={pad} window targets"), 40, |rng| {
+                    let px = rng.below(30);
+                    let py = rng.below(30);
+                    let mut targets = vec![(0i64, 0i64, 0usize); k * k];
+                    window_targets_k(px, py, k, pad, &mut targets);
+                    let mut seen_k = vec![false; k * k];
+                    for kx in 0..k as i64 {
+                        for ky in 0..k as i64 {
+                            let ox = px as i64 + pad as i64 - kx;
+                            let oy = py as i64 + pad as i64 - ky;
+                            let rx = ((ox % k as i64) + k as i64) % k as i64;
+                            let ry = ((oy % k as i64) + k as i64) % k as i64;
+                            let s = (rx * k as i64 + ry) as usize;
+                            let (tx, ty, kidx) = targets[s];
+                            if (tx, ty) != (ox, oy) {
+                                return Err(format!(
+                                    "k={k} pad={pad} event ({px},{py}) col {s}: got \
+                                     ({tx},{ty}) want ({ox},{oy})"
+                                ));
+                            }
+                            let want_k = (kx * k as i64 + ky) as usize;
+                            if kidx != want_k {
+                                return Err(format!(
+                                    "k={k} pad={pad} event ({px},{py}) col {s}: kidx {kidx} \
+                                     want {want_k}"
+                                ));
+                            }
+                            if seen_k[kidx] {
+                                return Err(format!("k={k}: kidx {kidx} repeated"));
+                            }
+                            seen_k[kidx] = true;
+                        }
+                    }
+                    Ok(())
+                });
+            }
+        }
     }
 }

@@ -203,34 +203,59 @@ pub struct MultiMem {
     pub cells_i: usize,
     pub cells_j: usize,
     pub nc: usize,
+    /// Interlace factor of the current layer (k² active column RAMs).
+    k: usize,
+    /// Active columns = k².
+    cols: usize,
     cap: usize,
     vm: Vec<i32>,
     fired: Vec<bool>,
+    /// Sticky per-pooled-window latch (earliest-spike pooling): layout
+    /// `[window_flat * nc + c]`. Same capacity as a column plane so any
+    /// pooled layer fits; zeroed with the rest in `reset_for_k`.
+    pool_fired: Vec<bool>,
 }
 
 impl MultiMem {
     pub fn new(max_h: usize, max_w: usize, max_nc: usize) -> Self {
         let (ci, cj) = interlace::cell_grid(max_h, max_w);
-        let cap = ci * cj;
+        Self::with_capacity(COLUMNS * ci * cj * max_nc)
+    }
+
+    /// Allocate `slots` neuron entries outright — the k-aware sizing used
+    /// by [`crate::sim::plan::NetworkPlan::mem_slots`], where the binding
+    /// layer may have any kernel size. Geometry is set by the first
+    /// `reset_for_k`.
+    pub fn with_capacity(slots: usize) -> Self {
         MultiMem {
-            h: max_h,
-            w: max_w,
-            cells_i: ci,
-            cells_j: cj,
-            nc: max_nc,
-            cap,
-            vm: vec![0; COLUMNS * cap * max_nc],
-            fired: vec![false; COLUMNS * cap * max_nc],
+            h: 0,
+            w: 0,
+            cells_i: 0,
+            cells_j: 0,
+            nc: 0,
+            k: 3,
+            cols: COLUMNS,
+            cap: 0,
+            vm: vec![0; slots],
+            fired: vec![false; slots],
+            pool_fired: vec![false; slots],
         }
     }
 
     /// Reshape for a layer (h, w, channels) and zero (the per-channel
-    /// MemPot multiplexing reset of Algorithm 1, batched).
+    /// MemPot multiplexing reset of Algorithm 1, batched). Paper-style
+    /// k = 3 interlacing.
     pub fn reset_for(&mut self, h: usize, w: usize, nc: usize) {
-        let (ci, cj) = interlace::cell_grid(h, w);
+        self.reset_for_k(h, w, nc, 3);
+    }
+
+    /// Reshape for a layer interlaced at factor `k` (k² column RAMs).
+    pub fn reset_for_k(&mut self, h: usize, w: usize, nc: usize, k: usize) {
+        let (ci, cj) = interlace::cell_grid_k(h, w, k);
+        let cols = k * k;
         assert!(
-            COLUMNS * ci * cj * nc <= self.vm.len(),
-            "fmap {h}x{w}x{nc} exceeds MultiMem allocation"
+            cols * ci * cj * nc <= self.vm.len(),
+            "fmap {h}x{w}x{nc} (k={k}) exceeds MultiMem allocation"
         );
         self.h = h;
         self.w = w;
@@ -238,8 +263,11 @@ impl MultiMem {
         self.cells_j = cj;
         self.cap = ci * cj;
         self.nc = nc;
-        self.vm[..COLUMNS * self.cap * nc].fill(0);
-        self.fired[..COLUMNS * self.cap * nc].fill(false);
+        self.k = k;
+        self.cols = cols;
+        self.vm[..cols * self.cap * nc].fill(0);
+        self.fired[..cols * self.cap * nc].fill(false);
+        self.pool_fired[..h * w * nc].fill(false);
     }
 
     /// Base index of the channel vector at (s, flat).
@@ -288,13 +316,30 @@ impl MultiMem {
         self.fired[b] = v;
     }
 
+    /// Interlace factor currently configured (set by `reset_for_k`).
+    #[inline(always)]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Sticky earliest-spike pool latch for window `w_flat`, channel `c`.
+    #[inline(always)]
+    pub fn pool_fired_at(&self, w_flat: usize, c: usize) -> bool {
+        self.pool_fired[w_flat * self.nc + c]
+    }
+
+    #[inline(always)]
+    pub fn set_pool_fired_at(&mut self, w_flat: usize, c: usize, v: bool) {
+        self.pool_fired[w_flat * self.nc + c] = v;
+    }
+
     /// Dense dump of one channel (tests).
     pub fn to_dense(&self, c: usize) -> Vec<i32> {
         let mut out = vec![0i32; self.h * self.w];
         for x in 0..self.h {
             for y in 0..self.w {
-                let s = interlace::column(x, y);
-                let (i, j) = interlace::cell(x, y);
+                let s = interlace::column_k(x, y, self.k);
+                let (i, j) = interlace::cell_k(x, y, self.k);
                 out[x * self.w + y] = self.vm_at(s, i * self.cells_j + j, c);
             }
         }
@@ -319,6 +364,31 @@ mod tests {
         let dense = m.to_dense(1);
         assert_eq!(dense.iter().filter(|&&v| v != 0).count(), 1);
         assert!(m.to_dense(0).iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn multimem_parametric_k() {
+        // k=5 interlacing: write through column_k/cell_k addresses and
+        // read back dense; re-reset to k=3 reuses the same allocation.
+        let mut m = MultiMem::with_capacity(25 * 4 * 4 * 2);
+        m.reset_for_k(10, 10, 2, 5);
+        assert_eq!(m.k(), 5);
+        assert_eq!((m.cells_i, m.cells_j), (2, 2));
+        let (x, y) = (7, 3);
+        let s = interlace::column_k(x, y, 5);
+        let (i, j) = interlace::cell_k(x, y, 5);
+        m.set_vm_at(s, i * m.cells_j + j, 1, 42);
+        let dense = m.to_dense(1);
+        assert_eq!(dense[x * 10 + y], 42);
+        assert_eq!(dense.iter().filter(|&&v| v != 0).count(), 1);
+        // pool latch plane is independent and reset-cleared
+        m.set_pool_fired_at(3, 1, true);
+        assert!(m.pool_fired_at(3, 1));
+        assert!(!m.pool_fired_at(3, 0));
+        m.reset_for_k(12, 12, 3, 3);
+        assert_eq!(m.k(), 3);
+        assert!(!m.pool_fired_at(3, 1));
+        assert!(m.to_dense(1).iter().all(|&v| v == 0));
     }
 
     #[test]

@@ -288,15 +288,6 @@ impl PipelinedExecutor {
         cfg: AccelConfig,
         depth: usize,
     ) -> Self {
-        // The m-TTFS encoder produces a single-channel queue set; fail
-        // loudly at construction rather than leave channels 1.. silently
-        // empty in every entry point (same guard as the sequential
-        // execute step, hoisted so `warm` and the streams all inherit it).
-        assert!(
-            plan.in_shape.2 <= 1,
-            "m-TTFS input encoding supports 1 channel, network has {}",
-            plan.in_shape.2
-        );
         let n_layers = plan.layers.len();
         let depth = depth.clamp(1, n_layers.max(1));
         let qch = plan.max_queue_channels.max(1);
@@ -313,19 +304,21 @@ impl PipelinedExecutor {
             lo += len;
             // Per-stage membrane partition: sized by the largest
             // interlaced capacity among this stage's layers (the same
-            // rule NetworkPlan::mem_shape applies globally).
-            let (mh, mw, mc) = plan.layers[layers.clone()]
+            // rule NetworkPlan::mem_slots applies globally; the
+            // per-layer k changes the bank geometry, so size in slots).
+            let slots = plan.layers[layers.clone()]
                 .iter()
-                .map(|l| l.out_shape)
-                .max_by_key(|&(h, w, c)| {
-                    let (ci, cj) = interlace::cell_grid(h, w);
-                    ci * cj * c
+                .map(|l| {
+                    let (h, w, c) = l.out_shape;
+                    let (ci, cj) = interlace::cell_grid_k(h, w, l.k);
+                    l.k * l.k * ci * cj * c
                 })
-                .unwrap_or((0, 0, 0));
+                .max()
+                .unwrap_or(0);
             stages.push(Stage {
                 layers,
                 classify: k == depth - 1,
-                mem: MultiMem::new(mh, mw, mc),
+                mem: MultiMem::with_capacity(slots.max(1)),
                 conv: ConvUnit::new(cfg.hazard_mode),
                 thresh: ThresholdUnit,
                 locals: [
@@ -377,13 +370,15 @@ impl PipelinedExecutor {
         let net: &Network = &**net;
         let plan: &NetworkPlan = &**plan;
         let lanes = cfg.lanes;
-        let (h, w, _) = plan.in_shape;
+        let (h, w, c) = plan.in_shape;
+        let k_in = plan.layers.first().map(|l| l.k).unwrap_or(3);
         for _pass in 0..2 {
             for slab in free.iter_mut() {
                 reset_inference(&mut slab.out, plan.t_steps, plan.layers.len());
                 slab.seq = 0;
-                slab.events =
-                    encode_image_into_queues(img, h, w, &net.thresholds, &mut slab.queues);
+                slab.events = encode_image_into_queues(
+                    img, h, w, c.max(1), k_in, &net.thresholds, &mut slab.queues,
+                );
                 slab.out.stats.redistribution_cycles += slab.events;
                 for stage in stages.iter_mut() {
                     stage.run(net, plan, lanes, slab);
@@ -534,9 +529,11 @@ impl PipelinedExecutor {
                 // recycled result container, write the m-TTFS queues.
                 reset_inference(&mut slab.out, plan.t_steps, plan.layers.len());
                 slab.seq = fed;
-                let (h, w, _) = expected;
-                slab.events =
-                    encode_image_into_queues(img, h, w, &net.thresholds, &mut slab.queues);
+                let (h, w, c) = expected;
+                let k_in = plan.layers.first().map(|l| l.k).unwrap_or(3);
+                slab.events = encode_image_into_queues(
+                    img, h, w, c.max(1), k_in, &net.thresholds, &mut slab.queues,
+                );
                 slab.out.stats.redistribution_cycles += slab.events;
                 // Owned frames ride the slab to the sink (borrowed batch
                 // paths store None); `img`'s borrow of `f` ends at the
@@ -584,7 +581,7 @@ impl Backend for PipelinedExecutor {
 
     fn cycle_model(&self) -> CycleModel {
         CycleModel {
-            n_pes: 9 * self.cfg.lanes,
+            n_pes: self.net.max_k() * self.net.max_k() * self.cfg.lanes,
             clock_hz: self.cfg.clock_hz,
             event_driven: true,
             cycle_accurate: true,

@@ -24,10 +24,10 @@
 //! is the host-side analogue of the hardware's configuration ROMs: fixed
 //! after synthesis, read-only during operation.
 
-use crate::sim::conv_unit::column_kidx;
-use crate::sim::interlace::{self, COLUMNS};
+use crate::sim::conv_unit::column_kidx_k;
+use crate::sim::interlace;
 use crate::sim::scheduler::LayerQueues;
-use crate::snn::network::{ConvLayerDef, Network};
+use crate::snn::network::{ConvLayerDef, Network, PoolDef, PoolMode};
 
 /// Everything about one convolutional layer that is a pure function of
 /// the network definition, resolved once at compile time.
@@ -39,45 +39,89 @@ pub struct LayerPlan {
     pub out_shape: (usize, usize, usize),
     /// Shape of the fmap written to the AEQs (after optional pooling).
     pub queue_shape: (usize, usize, usize),
-    /// OR-max-pool 3×3/3 applied by this layer's thresholding unit.
-    pub pool: bool,
+    /// Kernel edge: this layer runs a k²-PE array over k²-interlaced
+    /// input queues and membrane banks.
+    pub k: usize,
+    /// Convolution stride.
+    pub stride: usize,
+    /// Zero padding on every edge.
+    pub padding: usize,
+    /// Interlace factor of the fmap this layer EMITS: the next layer's
+    /// k (its conv unit consumes the queues), or this layer's own k for
+    /// the last conv layer.
+    pub out_k: usize,
+    /// Pooling unit fused into this layer's thresholding pass.
+    pub pool: Option<PoolDef>,
+    /// True iff this layer is exactly the paper's fixed-function shape
+    /// (k = 3, stride 1, no padding, 3-interlaced output, pooling absent
+    /// or the 3×3 WTA max-pool) — dispatched to the original hot
+    /// datapath, which the golden/zero-alloc suites pin bit-exactly.
+    pub legacy: bool,
     /// Firing threshold (accumulator domain).
     pub vt: i32,
     /// Per-output-channel bias, applied once per timestep.
     pub bias: Vec<i32>,
-    /// Fully pre-permuted weight-selection banks, flattened as
-    /// `[((c_in · 9 + s_in) · 9 + s) · c_out + c]`: the weight the PE of
-    /// output column `s` applies when an event arrives from input column
-    /// `s_in`, for every (input channel, output channel) kernel.
+    /// Fully pre-permuted weight-selection banks (stride-1 layers),
+    /// flattened as `[((c_in · k² + s_in) · k² + s) · c_out + c]`: the
+    /// weight the PE of output column `s` applies when an event arrives
+    /// from input column `s_in`. Empty for stride > 1 (the permutation
+    /// is no longer a pure function of the columns; the conv unit falls
+    /// back to direct kernel addressing via `raw_w`).
     wsel: Vec<i32>,
+    /// Raw kernel weights in the exporter layout
+    /// `[(kidx · c_in + cin) · c_out + c]` — only populated for
+    /// stride > 1 layers.
+    pub raw_w: Vec<i32>,
 }
 
 impl LayerPlan {
     /// Compile one layer: resolve the kernel permutation for every
-    /// `(c_in, s_in, s, c_out)` combination.
-    pub fn compile(layer: &ConvLayerDef) -> Self {
+    /// `(c_in, s_in, s, c_out)` combination. `out_k` is the interlace
+    /// factor of the consumer of this layer's output queues.
+    pub fn compile(layer: &ConvLayerDef, out_k: usize) -> Self {
         let (_, _, cin_n) = layer.in_shape;
         let (_, _, cout_n) = layer.out_shape;
-        let mut wsel = vec![0i32; cin_n * COLUMNS * COLUMNS * cout_n];
-        for cin in 0..cin_n {
-            for s_in in 0..COLUMNS {
-                for s in 0..COLUMNS {
-                    let kidx = column_kidx(s_in, s);
-                    let base = ((cin * COLUMNS + s_in) * COLUMNS + s) * cout_n;
-                    for cout in 0..cout_n {
-                        wsel[base + cout] = layer.weight(cout, cin, kidx / 3, kidx % 3);
+        let k = layer.k;
+        let cols = k * k;
+        let (wsel, raw_w) = if layer.stride == 1 {
+            let mut wsel = vec![0i32; cin_n * cols * cols * cout_n];
+            for cin in 0..cin_n {
+                for s_in in 0..cols {
+                    for s in 0..cols {
+                        let kidx = column_kidx_k(s_in, s, k, layer.padding);
+                        let base = ((cin * cols + s_in) * cols + s) * cout_n;
+                        for cout in 0..cout_n {
+                            wsel[base + cout] = layer.weight(cout, cin, kidx / k, kidx % k);
+                        }
                     }
                 }
             }
-        }
+            (wsel, Vec::new())
+        } else {
+            (Vec::new(), layer.w.clone())
+        };
+        let legacy = k == 3
+            && layer.stride == 1
+            && layer.padding == 0
+            && out_k == 3
+            && matches!(
+                layer.pool,
+                None | Some(PoolDef { w: 3, mode: PoolMode::WinnerTakeAll })
+            );
         LayerPlan {
             in_shape: layer.in_shape,
             out_shape: layer.out_shape,
             queue_shape: layer.queue_shape(),
+            k,
+            stride: layer.stride,
+            padding: layer.padding,
+            out_k,
             pool: layer.pool,
+            legacy,
             vt: layer.vt,
             bias: layer.b.clone(),
             wsel,
+            raw_w,
         }
     }
 
@@ -93,13 +137,32 @@ impl LayerPlan {
         self.out_shape.2
     }
 
+    /// Number of interlace columns (= k² PEs / column RAMs).
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.k * self.k
+    }
+
     /// The pre-permuted weight bank for one input channel: a
-    /// `9 · 9 · c_out` slice laid out `[s_in][s][c_out]`, consumed by
-    /// [`crate::sim::conv_unit::ConvUnit::process_queue_multi_pre`].
+    /// `k² · k² · c_out` slice laid out `[s_in][s][c_out]`, consumed by
+    /// [`crate::sim::conv_unit::ConvUnit::process_queue_multi_pre`] and
+    /// its generalized counterpart. Stride-1 layers only.
     #[inline(always)]
     pub fn wsel_bank(&self, cin: usize) -> &[i32] {
-        let stride = COLUMNS * COLUMNS * self.cout();
+        if self.wsel.is_empty() {
+            return &[]; // stride > 1: direct raw_w addressing instead
+        }
+        let stride = self.cols() * self.cols() * self.cout();
         &self.wsel[cin * stride..(cin + 1) * stride]
+    }
+
+    /// The raw kernel slice `[c_out]` for (kidx, cin) — the stride > 1
+    /// direct-addressing path.
+    #[inline(always)]
+    pub fn raw_kernel(&self, kidx: usize, cin: usize) -> &[i32] {
+        let cout = self.cout();
+        let base = (kidx * self.cin() + cin) * cout;
+        &self.raw_w[base..base + cout]
     }
 }
 
@@ -115,31 +178,40 @@ pub struct NetworkPlan {
     pub t_steps: usize,
     /// Classifier outputs.
     pub n_classes: usize,
-    /// The conv output fmap (H, W, C) with the largest **interlaced
-    /// capacity** `ceil(H/3)·ceil(W/3)·C` — what actually governs
-    /// [`crate::sim::mempot::MultiMem`] storage, so `reset_for` can
+    /// Largest **interlaced capacity** `k²·ceil(H/k)·ceil(W/k)·C` over
+    /// all conv output fmaps — what actually governs
+    /// [`crate::sim::mempot::MultiMem`] storage, so `reset_for_k` can
     /// never outgrow the allocation (`h·w·c` would under-size it for
-    /// e.g. a small-but-many-channel layer behind a large shallow one).
-    pub mem_shape: (usize, usize, usize),
+    /// e.g. a small-but-many-channel layer behind a large shallow one,
+    /// and the per-layer k changes the bank geometry).
+    pub mem_slots: usize,
     /// Largest channel count any layer boundary's queues need (input
     /// channels included) — sizes the scratch queue buffers.
     pub max_queue_channels: usize,
 }
 
+/// Interlaced MultiMem slot count of one layer's output fmap.
+fn layer_slots(l: &ConvLayerDef) -> usize {
+    let (ho, wo, co) = l.out_shape;
+    let (ci, cj) = interlace::cell_grid_k(ho, wo, l.k);
+    l.k * l.k * ci * cj * co
+}
+
 impl NetworkPlan {
     /// Compile a network once; the plan is then read-only on the hot path.
     pub fn compile(net: &Network) -> Self {
-        let layers: Vec<LayerPlan> = net.conv.iter().map(LayerPlan::compile).collect();
-        let in_shape = net.input_shape();
-        let mem_shape = net
+        let n = net.conv.len();
+        let layers: Vec<LayerPlan> = net
             .conv
             .iter()
-            .map(|l| l.out_shape)
-            .max_by_key(|&(h, w, c)| {
-                let (ci, cj) = interlace::cell_grid(h, w);
-                ci * cj * c
+            .enumerate()
+            .map(|(i, l)| {
+                let out_k = if i + 1 < n { net.conv[i + 1].k } else { l.k };
+                LayerPlan::compile(l, out_k)
             })
-            .unwrap_or((0, 0, 0));
+            .collect();
+        let in_shape = net.input_shape();
+        let mem_slots = net.conv.iter().map(layer_slots).max().unwrap_or(0);
         let max_queue_channels = layers
             .iter()
             .map(|l| l.queue_shape.2)
@@ -151,7 +223,7 @@ impl NetworkPlan {
             in_shape,
             t_steps: net.t_steps,
             n_classes: net.n_classes,
-            mem_shape,
+            mem_slots,
             max_queue_channels,
         }
     }
@@ -203,20 +275,28 @@ mod tests {
         let plan = NetworkPlan::compile(&net);
         assert_eq!(plan.layers.len(), 3);
         assert_eq!(plan.in_shape, (28, 28, 1));
-        assert_eq!(plan.mem_shape, (26, 26, 32));
+        // largest interlaced fmap: 26x26x32 → 9 · 9·9 · 32
+        assert_eq!(plan.mem_slots, 9 * 9 * 9 * 32);
         assert_eq!(plan.max_queue_channels, 32);
         assert_eq!(plan.t_steps, net.t_steps);
         assert_eq!(plan.layers[1].queue_shape, (8, 8, 32));
         assert_eq!(plan.layers[2].cout(), 10);
+        // the paper net is the degenerate case: every layer legacy
+        for l in &plan.layers {
+            assert!(l.legacy);
+            assert_eq!((l.k, l.stride, l.padding, l.out_k), (3, 1, 0, 3));
+        }
     }
 
     #[test]
     fn wsel_bank_matches_kernel_permutation() {
         // The precompiled bank must hold exactly the weight the unplanned
         // path selects: kernel(cout, cin)[column_kidx(s_in, s)].
+        use crate::sim::conv_unit::column_kidx;
+        use crate::sim::interlace::COLUMNS;
         let net = random_network(32);
         for layer in &net.conv {
-            let plan = LayerPlan::compile(layer);
+            let plan = LayerPlan::compile(layer, 3);
             let (_, _, cin_n) = layer.in_shape;
             let (_, _, cout_n) = layer.out_shape;
             for cin in 0..cin_n {
@@ -238,13 +318,16 @@ mod tests {
     }
 
     #[test]
-    fn mem_shape_uses_interlaced_capacity() {
+    fn mem_slots_use_interlaced_capacity() {
         use crate::snn::sat::Sat;
         fn layer(in_shape: (usize, usize, usize), out_shape: (usize, usize, usize)) -> ConvLayerDef {
             ConvLayerDef {
                 in_shape,
                 out_shape,
-                pool: false,
+                k: 3,
+                stride: 1,
+                padding: 0,
+                pool: None,
                 w: vec![0; 9 * in_shape.2 * out_shape.2],
                 b: vec![0; out_shape.2],
                 vt: 1,
@@ -268,7 +351,49 @@ mod tests {
             bits: 8,
         };
         let plan = NetworkPlan::compile(&net);
-        assert_eq!(plan.mem_shape, (4, 4, 100));
+        assert_eq!(plan.mem_slots, 9 * 2 * 2 * 100);
+    }
+
+    #[test]
+    fn generalized_layers_compile_and_chain_out_k() {
+        use crate::snn::network::{LayerSpec, NetworkBuilder, PoolMode};
+        let net = NetworkBuilder::new(16, 16, 2)
+            .layer(LayerSpec::Conv { out_channels: 3, k: 5, stride: 1, padding: 2 })
+            .layer(LayerSpec::MaxPool { w: 2, mode: PoolMode::EarliestSpike })
+            .layer(LayerSpec::Conv { out_channels: 4, k: 3, stride: 2, padding: 1 })
+            .layer(LayerSpec::conv(2, 1))
+            .classifier(2)
+            .build()
+            .unwrap();
+        let plan = NetworkPlan::compile(&net);
+        assert_eq!(plan.layers.len(), 3);
+        // out_k chains to the consumer's k; last layer keeps its own
+        assert_eq!(plan.layers[0].k, 5);
+        assert_eq!(plan.layers[0].out_k, 3);
+        assert_eq!(plan.layers[1].out_k, 1);
+        assert_eq!(plan.layers[2].out_k, 1);
+        assert!(plan.layers.iter().all(|l| !l.legacy));
+        // stride-1 layers carry wsel (k⁴·cin·cout weights); stride-2
+        // carries the raw kernel instead
+        assert_eq!(plan.layers[0].wsel_bank(0).len(), 25 * 25 * 3);
+        assert!(plan.layers[0].raw_w.is_empty());
+        assert!(plan.layers[1].wsel_bank(0).is_empty());
+        assert_eq!(plan.layers[1].raw_w.len(), 9 * 3 * 4);
+        assert_eq!(plan.layers[1].raw_kernel(8, 2).len(), 4);
+        // k=5 wsel bank agrees with column_kidx_k against raw weights
+        let l0 = &plan.layers[0];
+        let bank = l0.wsel_bank(1);
+        for s_in in 0..25 {
+            for s in 0..25 {
+                let kidx = column_kidx_k(s_in, s, 5, 2);
+                for c in 0..3 {
+                    assert_eq!(
+                        bank[(s_in * 25 + s) * 3 + c],
+                        net.conv[0].weight(c, 1, kidx / 5, kidx % 5)
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -112,7 +112,8 @@ pub fn process_layer(
 
     // Compile-then-execute: this wrapper pays the plan build on every
     // call; `Accelerator` compiles once and calls the planned form.
-    let plan = LayerPlan::compile(layer);
+    // Standalone layers emit in their own address map (out_k = k).
+    let plan = LayerPlan::compile(layer, layer.k);
     let mut out = LayerQueues::new(cout_n, t_steps);
     let mut events_t = vec![0u64; t_steps];
     let stats = process_layer_planned(
@@ -168,14 +169,29 @@ pub fn process_layer_planned(
     let mut stats = LayerStats::default();
     out_events_t.fill(0);
 
-    // MemPot multiplexing (batched): zero all channel planes.
-    mem.reset_for(ho, wo, cout_n);
+    // MemPot multiplexing (batched): zero all channel planes at the
+    // layer's own interlace factor.
+    mem.reset_for_k(ho, wo, cout_n, plan.k);
+    // Output queues write in the CONSUMER's address map (no-op at
+    // steady state: `set_k` only grows the column table once).
+    for row in out.q.iter_mut().take(cout_n) {
+        for aeq in row.iter_mut().take(t_steps) {
+            aeq.set_k(plan.out_k);
+        }
+    }
 
     let mut per_cout_cycles = 0u64; // identical for every output channel
     for t in 0..t_steps {
         for cin in 0..cin_n {
-            let cs =
-                conv.process_queue_multi_pre(&input.q[cin][t], plan.wsel_bank(cin), mem, sat);
+            // Paper-shaped layers take the fixed-function hot path
+            // (bit-identical by construction — `plan.legacy` only holds
+            // when the generalized path degenerates to it); everything
+            // else runs the parametric k×k units.
+            let cs = if plan.legacy {
+                conv.process_queue_multi_pre(&input.q[cin][t], plan.wsel_bank(cin), mem, sat)
+            } else {
+                conv.process_queue_multi_gen(&input.q[cin][t], plan, cin, mem, sat)
+            };
             // per-channel stats: every channel's conv unit did this pass
             let n = cout_n as u64;
             stats.conv_cycles += cs.cycles * n;
@@ -186,16 +202,30 @@ pub fn process_layer_planned(
             stats.pe_busy += cs.pe_busy * n;
             per_cout_cycles += cs.cycles;
         }
-        let (windows, spikes) = thresh.process_all_channels(
-            mem,
-            cout_n,
-            &plan.bias,
-            plan.vt,
-            sat,
-            plan.pool,
-            t,
-            &mut out.q,
-        );
+        let (windows, spikes) = if plan.legacy {
+            thresh.process_all_channels(
+                mem,
+                cout_n,
+                &plan.bias,
+                plan.vt,
+                sat,
+                plan.pool.is_some(),
+                t,
+                &mut out.q,
+            )
+        } else {
+            thresh.process_all_channels_gen(
+                mem,
+                cout_n,
+                &plan.bias,
+                plan.vt,
+                sat,
+                plan.pool,
+                plan.out_k,
+                t,
+                &mut out.q,
+            )
+        };
         // cycles are deterministic and identical for every channel.
         let cycles_per_channel = windows + PIPELINE_DEPTH;
         stats.thresh_cycles += cycles_per_channel * cout_n as u64;
@@ -357,7 +387,7 @@ mod tests {
         let (want_out, want_stats) =
             process_layer(layer, &input, &mut mem_a, &conv, &ThresholdUnit, net.sat, 4);
 
-        let plan = LayerPlan::compile(layer);
+        let plan = LayerPlan::compile(layer, layer.k);
         let mut wide_in = LayerQueues::new(8, 5); // cin is 1; 7 spare rows
         wide_in.q[0] = input.q[0].clone();
         let mut out = LayerQueues::new(40, 5); // cout is 32; 8 spare rows
@@ -386,6 +416,43 @@ mod tests {
         }
         for c in 32..40 {
             assert!(out.q[c].iter().all(Aeq::is_empty), "spare row {c} touched");
+        }
+    }
+
+    #[test]
+    fn generalized_dispatch_matches_legacy_on_k3() {
+        // Compiling the paper's layer-1 with out_k = 5 forces the
+        // parametric path (conv gen + threshold gen + re-interlaced
+        // emission). Stats must be identical and the decompressed output
+        // frames must match the legacy (out_k = 3) run exactly.
+        let net = random_network(47);
+        let input = input_queues(6, &net);
+        let layer = &net.conv[0];
+        let conv = ConvUnit::default();
+        let run = |out_k: usize| {
+            let plan = LayerPlan::compile(layer, out_k);
+            assert_eq!(plan.legacy, out_k == 3);
+            let mut out = LayerQueues::new(32, 5);
+            let mut events_t = vec![0u64; 5];
+            let mut mem = MultiMem::new(26, 26, 32);
+            let stats = process_layer_planned(
+                &plan, &input, input.total_events(), &mut out, &mut events_t,
+                &mut mem, &conv, &ThresholdUnit, net.sat, 1,
+            );
+            (out, stats)
+        };
+        let (out3, st3) = run(3);
+        let (out5, st5) = run(5);
+        assert_eq!(st3, st5);
+        for c in 0..32 {
+            for t in 0..5 {
+                assert_eq!(out5.q[c][t].k(), 5);
+                assert_eq!(
+                    out3.q[c][t].to_frame(26, 26),
+                    out5.q[c][t].to_frame(26, 26),
+                    "cout={c} t={t}"
+                );
+            }
         }
     }
 
@@ -420,7 +487,7 @@ mod tests {
                     lane += cs.cycles;
                 }
                 let ts = ThresholdUnit.process(
-                    &mut mem, layer.b[cout], layer.vt, sat, layer.pool,
+                    &mut mem, layer.b[cout], layer.vt, sat, layer.pool.is_some(),
                     &mut out.q[cout][t],
                 );
                 stats.thresh_cycles += ts.cycles;

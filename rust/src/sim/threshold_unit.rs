@@ -303,6 +303,195 @@ impl ThresholdUnit {
         }
         ((cells_i * cells_j) as u64, spikes)
     }
+
+    /// Generalized fused pass for parametric-k layers: the layer zoo's
+    /// counterpart of [`Self::process_all_channels`].
+    ///
+    /// Differences from the fixed-function path:
+    ///
+    /// * the cell scan runs at the layer's own interlace factor
+    ///   `k = mem.k()` (k² comparators per window);
+    /// * spikes are emitted **re-interlaced at `out_k`** — the NEXT
+    ///   layer's kernel size — so each queue is already in its consumer's
+    ///   address map (`q[c][t]` must have been `set_k(out_k)`);
+    /// * `pool` is a typed [`PoolDef`]: window size `w` with one of
+    ///   three reduction modes. When `w == k` the window coincides with
+    ///   one interlaced cell and pooling fuses into the scan exactly
+    ///   like the paper's 9-to-1 OR gate (the k = w = 3 WTA instance IS
+    ///   the legacy path — asserted by `gen_equals_legacy_on_k3`). When
+    ///   `w != k` a second, cheap pass scans the pooled windows after
+    ///   all cells are thresholded; its `qh·qw` window visits are added
+    ///   to the returned window count so cycle accounting stays honest.
+    ///
+    /// Pool modes ([`PoolMode`]):
+    /// * `WinnerTakeAll` — OR over the window each timestep (sticky via
+    ///   the m-TTFS indicator bits), the paper's max-pool;
+    /// * `EarliestSpike` — like WTA but the pooled event is emitted only
+    ///   on the FIRST timestep the window fires (per-window latch in
+    ///   `mem.pool_fired`), preserving pure TTFS timing codes;
+    /// * `Average` — fires while at least half the window's neurons have
+    ///   fired (`2·count ≥ w²`), the event-driven surrogate of average
+    ///   pooling under monotone m-TTFS spike counts.
+    ///
+    /// Returns `(windows, total_spikes)` like the legacy pass.
+    #[allow(clippy::too_many_arguments)]
+    pub fn process_all_channels_gen(
+        &self,
+        mem: &mut crate::sim::mempot::MultiMem,
+        nc: usize,
+        biases: &[i32],
+        vt: i32,
+        sat: Sat,
+        pool: Option<crate::snn::network::PoolDef>,
+        out_k: usize,
+        t: usize,
+        q: &mut [Vec<Aeq>],
+    ) -> (u64, u64) {
+        use crate::snn::network::PoolMode;
+        let k = mem.k();
+        let (h, w) = (mem.h, mem.w);
+        let (cells_i, cells_j) = (mem.cells_i, mem.cells_j);
+        debug_assert!(nc <= mem.nc);
+        debug_assert_eq!(biases.len(), nc);
+        debug_assert!(q.len() >= nc);
+        let (vmin, vmax) = (sat.min, sat.max);
+        let mut spikes = 0u64;
+        let mut windows = (cells_i * cells_j) as u64;
+        let fused_pool = pool.filter(|p| p.w == k);
+
+        for i in 0..cells_i {
+            for j in 0..cells_j {
+                let flat = i * cells_j + j;
+                if pool.is_none() {
+                    // element-wise, re-interlaced emission
+                    for s in 0..k * k {
+                        let (x, y) = interlace::position_k(i, j, s, k);
+                        if x >= h || y >= w {
+                            continue;
+                        }
+                        let s_out = interlace::column_k(x, y, out_k);
+                        let (oi, oj) = interlace::cell_k(x, y, out_k);
+                        let (vs, fs) = mem.vm_fired_channels_mut(s, flat);
+                        for c in 0..nc {
+                            let vm = vs[c].saturating_add(biases[c]).clamp(vmin, vmax);
+                            vs[c] = vm;
+                            let spike = vm > vt || fs[c];
+                            fs[c] = spike;
+                            if spike {
+                                q[c][t].push(s_out, oi as u16, oj as u16);
+                                spikes += 1;
+                            }
+                        }
+                    }
+                } else if let Some(pdef) = fused_pool {
+                    // window == cell: pool fuses into the scan. The pooled
+                    // fmap position of cell (i, j) is (i, j) itself.
+                    let s_out = interlace::column_k(i, j, out_k);
+                    let (oi, oj) = interlace::cell_k(i, j, out_k);
+                    for (c, &bias) in biases.iter().enumerate() {
+                        let mut fired_count = 0usize;
+                        for s in 0..k * k {
+                            let (x, y) = interlace::position_k(i, j, s, k);
+                            if x >= h || y >= w {
+                                continue;
+                            }
+                            let vm = sat.add(mem.vm_at(s, flat, c), bias);
+                            mem.set_vm_at(s, flat, c, vm);
+                            let fired = mem.fired_at(s, flat, c);
+                            let spike = vm > vt || fired;
+                            if spike {
+                                if !fired {
+                                    mem.set_fired_at(s, flat, c, true);
+                                }
+                                fired_count += 1;
+                            }
+                        }
+                        if Self::pool_emit(mem, pdef.mode, fired_count, k * k, flat, c) {
+                            q[c][t].push(s_out, oi as u16, oj as u16);
+                            spikes += 1;
+                        }
+                    }
+                } else {
+                    // pool with w != k, phase 1: threshold every cell
+                    // without emitting — windows straddle cells.
+                    for s in 0..k * k {
+                        let (x, y) = interlace::position_k(i, j, s, k);
+                        if x >= h || y >= w {
+                            continue;
+                        }
+                        let (vs, fs) = mem.vm_fired_channels_mut(s, flat);
+                        for c in 0..nc {
+                            let vm = vs[c].saturating_add(biases[c]).clamp(vmin, vmax);
+                            vs[c] = vm;
+                            fs[c] = vm > vt || fs[c];
+                        }
+                    }
+                }
+            }
+        }
+
+        // phase 2 (w != k only): scan the pooled windows over the
+        // now-settled indicator bits.
+        if let Some(pdef) = pool {
+            if pdef.w != k {
+                let pw = pdef.w;
+                debug_assert!(h % pw == 0 && w % pw == 0, "pool must tile the fmap");
+                let (qh, qw) = (h / pw, w / pw);
+                windows += (qh * qw) as u64;
+                for wi in 0..qh {
+                    for wj in 0..qw {
+                        let wflat = wi * qw + wj;
+                        let s_out = interlace::column_k(wi, wj, out_k);
+                        let (oi, oj) = interlace::cell_k(wi, wj, out_k);
+                        for c in 0..nc {
+                            let mut fired_count = 0usize;
+                            for dx in 0..pw {
+                                for dy in 0..pw {
+                                    let (x, y) = (wi * pw + dx, wj * pw + dy);
+                                    let s = interlace::column_k(x, y, k);
+                                    let (ci, cj) = interlace::cell_k(x, y, k);
+                                    if mem.fired_at(s, ci * cells_j + cj, c) {
+                                        fired_count += 1;
+                                    }
+                                }
+                            }
+                            if Self::pool_emit(mem, pdef.mode, fired_count, pw * pw, wflat, c) {
+                                q[c][t].push(s_out, oi as u16, oj as u16);
+                                spikes += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (windows, spikes)
+    }
+
+    /// Shared pooled-emission decision for the fused and two-phase paths.
+    /// `wflat` indexes the per-window `EarliestSpike` latch.
+    #[inline]
+    fn pool_emit(
+        mem: &mut crate::sim::mempot::MultiMem,
+        mode: crate::snn::network::PoolMode,
+        fired_count: usize,
+        window_neurons: usize,
+        wflat: usize,
+        c: usize,
+    ) -> bool {
+        use crate::snn::network::PoolMode;
+        match mode {
+            PoolMode::WinnerTakeAll => fired_count > 0,
+            PoolMode::Average => 2 * fired_count >= window_neurons,
+            PoolMode::EarliestSpike => {
+                if fired_count > 0 && !mem.pool_fired_at(wflat, c) {
+                    mem.set_pool_fired_at(wflat, c, true);
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -505,6 +694,161 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn gen_equals_legacy_on_k3() {
+        // The generalized pass at (k=3, out_k=3, pool ∈ {None, 3×3 WTA})
+        // must be indistinguishable from the fixed-function fused path:
+        // same queues (contents AND order), counts, membranes, indicators.
+        use crate::sim::interlace;
+        use crate::sim::mempot::MultiMem;
+        use crate::snn::network::{PoolDef, PoolMode};
+        prop::check("gen threshold == legacy on k3", 30, |rng| {
+            let h = 3 + rng.below(20);
+            let w = 3 + rng.below(20);
+            let nc = 1 + rng.below(6);
+            let vt = rng.range_i32(10, 200);
+            let sat = Sat::from_bits(12);
+            let pool = rng.chance(0.5) && h % 3 == 0 && w % 3 == 0;
+            let biases: Vec<i32> = (0..nc).map(|_| rng.range_i32(-30, 30)).collect();
+            let mut a = MultiMem::new(h, w, nc);
+            a.reset_for(h, w, nc);
+            for c in 0..nc {
+                for x in 0..h {
+                    for y in 0..w {
+                        let s = interlace::column(x, y);
+                        let (i, j) = interlace::cell(x, y);
+                        let flat = i * a.cells_j + j;
+                        a.set_vm_at(s, flat, c, rng.range_i32(-300, 300));
+                        if rng.chance(0.1) {
+                            a.set_fired_at(s, flat, c, true);
+                        }
+                    }
+                }
+            }
+            let mut b = a.clone();
+            let t = 0;
+            let mk = |nc: usize| -> Vec<Vec<Aeq>> {
+                (0..nc).map(|_| vec![Aeq::new()]).collect()
+            };
+            let mut q_ref = mk(nc);
+            let (win_ref, spk_ref) = ThresholdUnit.process_all_channels(
+                &mut a, nc, &biases, vt, sat, pool, t, &mut q_ref,
+            );
+            let pdef = pool.then_some(PoolDef { w: 3, mode: PoolMode::WinnerTakeAll });
+            let mut q_gen = mk(nc);
+            let (win, spk) = ThresholdUnit.process_all_channels_gen(
+                &mut b, nc, &biases, vt, sat, pdef, 3, t, &mut q_gen,
+            );
+            if (win, spk) != (win_ref, spk_ref) {
+                return Err(format!("counts ({win},{spk}) != ({win_ref},{spk_ref})"));
+            }
+            for c in 0..nc {
+                if q_gen[c][t].cols != q_ref[c][t].cols {
+                    return Err(format!("queue mismatch c={c} pool={pool}"));
+                }
+                if a.to_dense(c) != b.to_dense(c) {
+                    return Err(format!("membrane mismatch c={c}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_reinterlaces_emission_at_out_k() {
+        // Spikes come out in the CONSUMER's address map: pushing through
+        // out_k = 5 and decompressing with the queue's own k must
+        // reproduce the spike mask exactly.
+        use crate::sim::interlace;
+        use crate::sim::mempot::MultiMem;
+        prop::check("gen out_k reinterlace", 25, |rng| {
+            let h = 3 + rng.below(16);
+            let w = 3 + rng.below(16);
+            let vt = 50;
+            let sat = Sat::from_bits(12);
+            let mut mem = MultiMem::new(h, w, 1);
+            mem.reset_for(h, w, 1);
+            let mut want = vec![false; h * w];
+            for x in 0..h {
+                for y in 0..w {
+                    let s = interlace::column(x, y);
+                    let (i, j) = interlace::cell(x, y);
+                    let flat = i * mem.cells_j + j;
+                    let vm = rng.range_i32(-100, 100);
+                    mem.set_vm_at(s, flat, 0, vm);
+                    want[x * w + y] = vm > vt;
+                }
+            }
+            for out_k in [1usize, 5, 7] {
+                let mut m = mem.clone();
+                let mut q = vec![vec![Aeq::with_k(out_k)]];
+                ThresholdUnit.process_all_channels_gen(
+                    &mut m, 1, &[0], vt, sat, None, out_k, 0, &mut q,
+                );
+                if q[0][0].to_frame(h, w) != want {
+                    return Err(format!("out_k={out_k} frame mismatch ({h}x{w})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_two_phase_pool_modes() {
+        // 6×6 fmap at k=3 pooled with w=2 (w ≠ k: the two-phase path),
+        // pooled output 3×3. Window (0,0) has 3/4 neurons above vt,
+        // window (1,1) has 1/4, the rest none.
+        use crate::sim::interlace;
+        use crate::sim::mempot::MultiMem;
+        use crate::snn::network::{PoolDef, PoolMode};
+        let (h, w) = (6, 6);
+        let sat = Sat::from_bits(12);
+        let set = |mem: &mut MultiMem, x: usize, y: usize| {
+            let s = interlace::column(x, y);
+            let (i, j) = interlace::cell(x, y);
+            let flat = i * mem.cells_j + j;
+            mem.set_vm_at(s, flat, 0, 100);
+        };
+        let run = |mode: PoolMode, passes: usize| -> Vec<Vec<bool>> {
+            let mut mem = MultiMem::new(h, w, 1);
+            mem.reset_for(h, w, 1);
+            set(&mut mem, 0, 0);
+            set(&mut mem, 0, 1);
+            set(&mut mem, 1, 0);
+            set(&mut mem, 2, 2);
+            let pdef = Some(PoolDef { w: 2, mode });
+            let mut q = vec![(0..passes).map(|_| Aeq::new()).collect::<Vec<_>>()];
+            let mut frames = Vec::new();
+            for t in 0..passes {
+                let (windows, _) = ThresholdUnit.process_all_channels_gen(
+                    &mut mem, 1, &[0], 50, sat, pdef, 3, t, &mut q,
+                );
+                // 4 cells (ceil(6/3)²) + 9 pooled windows
+                assert_eq!(windows, 4 + 9);
+                frames.push(q[0][t].to_frame(3, 3));
+            }
+            frames
+        };
+        let mask = |idx: &[usize]| -> Vec<bool> {
+            let mut f = vec![false; 9];
+            for &i in idx {
+                f[i] = true;
+            }
+            f
+        };
+        // WTA: both windows fire, every pass (sticky m-TTFS indicators)
+        let wta = run(PoolMode::WinnerTakeAll, 2);
+        assert_eq!(wta[0], mask(&[0, 4]));
+        assert_eq!(wta[1], mask(&[0, 4]));
+        // Average: only the 3/4 window reaches 2·count ≥ 4
+        let avg = run(PoolMode::Average, 1);
+        assert_eq!(avg[0], mask(&[0]));
+        // EarliestSpike: both fire at t=0, the latch silences t=1
+        let es = run(PoolMode::EarliestSpike, 2);
+        assert_eq!(es[0], mask(&[0, 4]));
+        assert_eq!(es[1], mask(&[]));
     }
 
     #[test]

@@ -1,34 +1,125 @@
-//! Network description + quantized parameters loaded from the artifacts.
+//! Network description + quantized parameters: the typed layer zoo.
 //!
-//! The paper network (§VII): `28×28-32C3-32C3-P3-10C3-F10`, valid
-//! convolutions (DESIGN.md §6):
+//! A [`Network`] is a sequence of convolutional IF layers with optional
+//! fused pooling units, followed by one FC classifier. Construction goes
+//! through **one path**: the [`NetworkBuilder`], which takes typed
+//! [`LayerSpec`]s, infers every fmap shape, and validates the topology
+//! at build time (returning [`crate::engine::EngineError::InvalidTopology`]
+//! instead of panicking deep in the datapath). Convolutions are
+//! parametric k×k (k ≤ [`MAX_K`]) with stride and padding; pooling units
+//! come in three flavours ([`PoolMode`]) and always fuse into the
+//! preceding conv layer's thresholding pass, exactly like the paper's
+//! pooling circuitry rides the threshold unit.
+//!
+//! The paper network (§VII) is the degenerate all-3×3 case,
+//! `28×28-32C3-32C3-P3-10C3-F10` with valid convolutions:
 //!
 //! ```text
 //! input  28×28×1  ── 32C3 ──▶ 26×26×32 ── 32C3 ──▶ 24×24×32 ── P3 ──▶
 //!        8×8×32  ── 10C3 ──▶ 6×6×10  ── F10 ──▶ logits
 //! ```
 //!
+//! Compact topology strings (the CLI's `--net` argument and the
+//! [`spec`] module) describe the same thing textually:
+//! `32x32x3-64C5s1p2-P2-128C3-F10` is a 5×5 conv (stride 1, padding 2),
+//! a 2×2 winner-take-all max-pool, a 3×3 conv and a 10-class classifier.
+//!
 //! Weight layout follows the Python exporter: `conv{i}_w` is
-//! `(3, 3, Cin, Cout)` row-major (ky, kx, cin, cout); convolution is
-//! cross-correlation (`out[o] = Σ x[o + k] · w[k]`), so the *event-based*
-//! datapath applies the 180°-rotated kernel (paper Fig. 4).
+//! `(k, k, Cin, Cout)` row-major (ky, kx, cin, cout); convolution is
+//! cross-correlation (`out[o] = Σ x[o·s + k − p] · w[k]`), so the
+//! *event-based* datapath applies the 180°-rotated kernel (paper Fig. 4).
 
 use crate::artifact::Archive;
 use crate::engine::error::ensure;
-use crate::engine::Context;
+use crate::engine::{Context, EngineError};
 use crate::snn::sat::Sat;
+use crate::util::prng::Pcg;
 use crate::Result;
 use std::path::Path;
+
+/// Largest supported kernel edge: a k×k conv layer uses a k²-PE array
+/// with k² interlaced memory banks, and the datapath's fixed-size
+/// per-event scratch is sized for `MAX_K² = 49` parallel bank writes.
+pub const MAX_K: usize = 7;
+
+/// Early-return with an [`EngineError::InvalidTopology`].
+macro_rules! topo {
+    ($($arg:tt)*) => {
+        return Err($crate::engine::EngineError::InvalidTopology(format!($($arg)*)))
+    };
+}
+
+/// How a pooling unit combines the spikes inside its window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolMode {
+    /// OR of the window's (sticky) spike bits: the pooled unit emits on
+    /// every timestep in which any member neuron has fired — the paper's
+    /// max-pool semantics.
+    WinnerTakeAll,
+    /// As `WinnerTakeAll`, but the pooled unit emits only on the FIRST
+    /// timestep a member fires (TTFS-style: later timesteps are
+    /// suppressed by a sticky per-window latch).
+    EarliestSpike,
+    /// Majority vote: the pooled unit emits while at least half of the
+    /// window's members have fired (`2·count ≥ w²`).
+    Average,
+}
+
+/// A pooling unit fused into the thresholding pass of a conv layer:
+/// a w×w window with stride w (non-overlapping; the window must tile
+/// the layer's output fmap exactly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolDef {
+    pub w: usize,
+    pub mode: PoolMode,
+}
+
+/// One typed layer description consumed by [`NetworkBuilder`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// k×k convolution, `out = (in + 2·padding − k) / stride + 1`
+    /// (floor). Requires `1 ≤ k ≤ MAX_K`, `stride ≥ 1`, `padding < k`.
+    Conv { out_channels: usize, k: usize, stride: usize, padding: usize },
+    /// w×w majority pooling ([`PoolMode::Average`]).
+    AvgPool { w: usize },
+    /// w×w max pooling; `mode` picks winner-take-all or earliest-spike
+    /// semantics ([`PoolMode::Average`] is rejected — use `AvgPool`).
+    MaxPool { w: usize, mode: PoolMode },
+}
+
+impl LayerSpec {
+    /// Shorthand for a stride-1, unpadded k×k convolution.
+    pub fn conv(out_channels: usize, k: usize) -> Self {
+        LayerSpec::Conv { out_channels, k, stride: 1, padding: 0 }
+    }
+}
+
+/// Explicit quantized parameters for one conv layer (weights in the
+/// exporter's `(k, k, Cin, Cout)` row-major layout, one bias per output
+/// channel, one firing threshold). When omitted, the builder draws
+/// seeded synthetic parameters.
+#[derive(Clone, Debug)]
+pub struct ConvParams {
+    pub w: Vec<i32>,
+    pub b: Vec<i32>,
+    pub vt: i32,
+}
 
 /// One convolutional IF layer (quantized integer domain).
 #[derive(Clone, Debug)]
 pub struct ConvLayerDef {
     /// Input fmap (H, W, Cin).
     pub in_shape: (usize, usize, usize),
-    /// Output fmap (Ho, Wo, Cout) = (H-2, W-2, k).
+    /// Output fmap (Ho, Wo, Cout) = ((H + 2p − k)/s + 1, …).
     pub out_shape: (usize, usize, usize),
-    /// OR-max-pool 3×3/3 applied by the thresholding unit of this layer.
-    pub pool: bool,
+    /// Kernel edge (the PE array is k², memory interlacing is k×k).
+    pub k: usize,
+    /// Convolution stride (≥ 1).
+    pub stride: usize,
+    /// Zero padding on every edge (< k).
+    pub padding: usize,
+    /// Pooling unit fused into this layer's thresholding pass, if any.
+    pub pool: Option<PoolDef>,
     /// Weights, layout `[ky][kx][cin][cout]` row-major (matches exporter).
     pub w: Vec<i32>,
     /// Bias per output channel, applied once per timestep.
@@ -43,12 +134,14 @@ impl ConvLayerDef {
     pub fn weight(&self, cout: usize, cin: usize, ky: usize, kx: usize) -> i32 {
         let (_, _, cin_n) = self.in_shape;
         let (_, _, cout_n) = self.out_shape;
-        debug_assert!(ky < 3 && kx < 3 && cin < cin_n && cout < cout_n);
-        self.w[((ky * 3 + kx) * cin_n + cin) * cout_n + cout]
+        debug_assert!(ky < self.k && kx < self.k && cin < cin_n && cout < cout_n);
+        self.w[((ky * self.k + kx) * cin_n + cin) * cout_n + cout]
     }
 
-    /// The 3×3 kernel for (cout, cin) as a flat `[ky*3+kx]` array.
+    /// The 3×3 kernel for (cout, cin) as a flat `[ky*3+kx]` array
+    /// (legacy accessor for the paper-shaped k=3 case only).
     pub fn kernel(&self, cout: usize, cin: usize) -> [i32; 9] {
+        assert_eq!(self.k, 3, "kernel() is the fixed 3x3 accessor; use weight() for k={}", self.k);
         let mut k = [0i32; 9];
         for ky in 0..3 {
             for kx in 0..3 {
@@ -61,15 +154,17 @@ impl ConvLayerDef {
     /// Shape of the fmap written to the AEQ (after optional pooling).
     pub fn queue_shape(&self) -> (usize, usize, usize) {
         let (h, w, c) = self.out_shape;
-        if self.pool {
-            (h / 3, w / 3, c)
-        } else {
-            (h, w, c)
+        match self.pool {
+            Some(p) => (h / p.w, w / p.w, c),
+            None => (h, w, c),
         }
     }
 }
 
-/// The complete network in the integer (hardware) domain.
+/// The complete network in the integer (hardware) domain. Construct via
+/// [`NetworkBuilder`] (or [`spec::build`] from a topology string) — the
+/// fields stay public for the datapath, but every construction path in
+/// the crate routes through the builder's validation.
 #[derive(Clone, Debug)]
 pub struct Network {
     pub conv: Vec<ConvLayerDef>,
@@ -87,6 +182,257 @@ pub struct Network {
     pub bits: u32,
 }
 
+/// Typed, validating network constructor: push [`LayerSpec`]s, set the
+/// classifier, `build()`. Shapes are inferred; every topology error
+/// comes back as [`EngineError::InvalidTopology`] before any plan is
+/// compiled. Conv layers without explicit [`ConvParams`] get seeded
+/// synthetic parameters (deterministic in [`NetworkBuilder::seed`]).
+///
+/// ```
+/// use sacsnn::snn::network::{LayerSpec, NetworkBuilder, PoolMode};
+/// // A non-3×3 net: 5×5 "same" conv, 2×2 max-pool, 3×3 valid conv.
+/// let net = NetworkBuilder::new(16, 16, 2)
+///     .layer(LayerSpec::Conv { out_channels: 8, k: 5, stride: 1, padding: 2 })
+///     .layer(LayerSpec::MaxPool { w: 2, mode: PoolMode::WinnerTakeAll })
+///     .layer(LayerSpec::conv(6, 3))
+///     .classifier(4)
+///     .build()?;
+/// assert_eq!(net.conv[0].out_shape, (16, 16, 8));
+/// assert_eq!(net.conv[1].in_shape, (8, 8, 8));
+/// assert_eq!(net.conv[1].out_shape, (6, 6, 6));
+/// # Ok::<(), sacsnn::engine::EngineError>(())
+/// ```
+#[derive(Clone, Debug)]
+pub struct NetworkBuilder {
+    in_shape: (usize, usize, usize),
+    layers: Vec<(LayerSpec, Option<ConvParams>)>,
+    n_classes: usize,
+    fc: Option<(Vec<i32>, Vec<i32>)>,
+    thresholds: Vec<f32>,
+    t_steps: usize,
+    acc_bits: u32,
+    bits: u32,
+    seed: u64,
+}
+
+impl NetworkBuilder {
+    /// Start a builder for `h`×`w`×`c` input frames. Defaults: the
+    /// paper's m-TTFS thresholds (5 timesteps), 20-bit saturating
+    /// accumulators, 8-bit weights, seed 42 for synthetic parameters.
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        NetworkBuilder {
+            in_shape: (h, w, c),
+            layers: Vec::new(),
+            n_classes: 0,
+            fc: None,
+            thresholds: vec![0.15, 0.30, 0.45, 0.60, 0.75],
+            t_steps: 5,
+            acc_bits: 20,
+            bits: 8,
+            seed: 42,
+        }
+    }
+
+    /// Append a layer (conv parameters, if any, drawn from the seed).
+    pub fn layer(mut self, spec: LayerSpec) -> Self {
+        self.layers.push((spec, None));
+        self
+    }
+
+    /// Append a conv layer with explicit quantized parameters.
+    pub fn conv_with(mut self, spec: LayerSpec, params: ConvParams) -> Self {
+        self.layers.push((spec, Some(params)));
+        self
+    }
+
+    /// Set the FC classifier width (seeded weights).
+    pub fn classifier(mut self, n_classes: usize) -> Self {
+        self.n_classes = n_classes;
+        self.fc = None;
+        self
+    }
+
+    /// Set the FC classifier with explicit weights (`[flat_in][n]`
+    /// row-major) and biases.
+    pub fn classifier_with(mut self, n_classes: usize, fc_w: Vec<i32>, fc_b: Vec<i32>) -> Self {
+        self.n_classes = n_classes;
+        self.fc = Some((fc_w, fc_b));
+        self
+    }
+
+    /// m-TTFS input thresholds (strictly increasing); also sets
+    /// `t_steps` to match.
+    pub fn thresholds(mut self, t: Vec<f32>) -> Self {
+        self.t_steps = t.len();
+        self.thresholds = t;
+        self
+    }
+
+    /// Number of timesteps (must equal the threshold count at build).
+    pub fn t_steps(mut self, t: usize) -> Self {
+        self.t_steps = t;
+        self
+    }
+
+    /// Saturating accumulator width in bits.
+    pub fn acc_bits(mut self, bits: u32) -> Self {
+        self.acc_bits = bits;
+        self
+    }
+
+    /// Weight bit width (metadata for the cost model).
+    pub fn weight_bits(mut self, bits: u32) -> Self {
+        self.bits = bits;
+        self
+    }
+
+    /// Seed for synthetic parameters of layers without [`ConvParams`].
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Infer shapes, validate the topology, and assemble the [`Network`].
+    pub fn build(self) -> Result<Network> {
+        let (h0, w0, c0) = self.in_shape;
+        if h0 == 0 || w0 == 0 || c0 == 0 {
+            topo!("input shape {h0}x{w0}x{c0} must be non-zero in every dimension");
+        }
+        if self.thresholds.is_empty() {
+            topo!("m-TTFS encoding needs at least one threshold");
+        }
+        if !self.thresholds.windows(2).all(|p| p[0] < p[1]) {
+            topo!("m-TTFS thresholds must be strictly increasing, got {:?}", self.thresholds);
+        }
+        if self.t_steps != self.thresholds.len() {
+            topo!(
+                "t_steps {} != thresholds.len() {} (one threshold per timestep)",
+                self.t_steps,
+                self.thresholds.len()
+            );
+        }
+        let mut rng = Pcg::new(self.seed);
+        let mut conv: Vec<ConvLayerDef> = Vec::new();
+        let mut cur = self.in_shape;
+        for (i, (spec, params)) in self.layers.into_iter().enumerate() {
+            match spec {
+                LayerSpec::Conv { out_channels, k, stride, padding } => {
+                    if out_channels == 0 {
+                        topo!("layer {i}: out_channels must be >= 1");
+                    }
+                    if k == 0 || k > MAX_K {
+                        topo!("layer {i}: kernel size {k} outside 1..={MAX_K}");
+                    }
+                    if stride == 0 {
+                        topo!("layer {i}: stride must be >= 1");
+                    }
+                    if padding >= k {
+                        topo!("layer {i}: padding {padding} must be < kernel size {k}");
+                    }
+                    let (h, w, cin) = cur;
+                    if h + 2 * padding < k || w + 2 * padding < k {
+                        topo!("layer {i}: {k}x{k} kernel larger than padded {h}x{w} input");
+                    }
+                    let ho = (h + 2 * padding - k) / stride + 1;
+                    let wo = (w + 2 * padding - k) / stride + 1;
+                    let (wv, bv, vt) = match params {
+                        Some(p) => {
+                            let want = k * k * cin * out_channels;
+                            if p.w.len() != want {
+                                topo!(
+                                    "layer {i}: weight len {} != {k}x{k}x{cin}x{out_channels} = {want}",
+                                    p.w.len()
+                                );
+                            }
+                            if p.b.len() != out_channels {
+                                topo!("layer {i}: bias len {} != {out_channels}", p.b.len());
+                            }
+                            (p.w, p.b, p.vt)
+                        }
+                        None => {
+                            let wv = (0..k * k * cin * out_channels)
+                                .map(|_| rng.range_i32(-40, 40))
+                                .collect();
+                            let bv = (0..out_channels).map(|_| rng.range_i32(-10, 10)).collect();
+                            (wv, bv, rng.range_i32(30, 120))
+                        }
+                    };
+                    conv.push(ConvLayerDef {
+                        in_shape: cur,
+                        out_shape: (ho, wo, out_channels),
+                        k,
+                        stride,
+                        padding,
+                        pool: None,
+                        w: wv,
+                        b: bv,
+                        vt,
+                    });
+                    cur = (ho, wo, out_channels);
+                }
+                LayerSpec::AvgPool { w } | LayerSpec::MaxPool { w, .. } => {
+                    if matches!(spec, LayerSpec::MaxPool { mode: PoolMode::Average, .. }) {
+                        topo!("layer {i}: MaxPool cannot use PoolMode::Average — use AvgPool");
+                    }
+                    let mode = match spec {
+                        LayerSpec::AvgPool { .. } => PoolMode::Average,
+                        LayerSpec::MaxPool { mode, .. } => mode,
+                        LayerSpec::Conv { .. } => unreachable!(),
+                    };
+                    let Some(last) = conv.last_mut() else {
+                        topo!("layer {i}: a pooling unit must directly follow a convolution layer");
+                    };
+                    if last.pool.is_some() {
+                        topo!("layer {i}: two pooling units in a row (pooling fuses into the preceding conv)");
+                    }
+                    if w == 0 {
+                        topo!("layer {i}: pool window must be >= 1");
+                    }
+                    let (ho, wo, _) = last.out_shape;
+                    if ho % w != 0 || wo % w != 0 {
+                        topo!("layer {i}: {w}x{w} pool window does not tile the {ho}x{wo} fmap");
+                    }
+                    last.pool = Some(PoolDef { w, mode });
+                    cur = last.queue_shape();
+                }
+            }
+        }
+        if conv.is_empty() {
+            topo!("network needs at least one convolution layer");
+        }
+        if self.n_classes == 0 {
+            topo!("classifier not set (call classifier(n) or classifier_with(..))");
+        }
+        let flat = cur.0 * cur.1 * cur.2;
+        let n = self.n_classes;
+        let (fc_w, fc_b) = match self.fc {
+            Some((wv, bv)) => {
+                if wv.len() != flat * n {
+                    topo!("fc_w len {} != flat_in {flat} x classes {n}", wv.len());
+                }
+                if bv.len() != n {
+                    topo!("fc_b len {} != classes {n}", bv.len());
+                }
+                (wv, bv)
+            }
+            None => (
+                (0..flat * n).map(|_| rng.range_i32(-50, 50)).collect(),
+                (0..n).map(|_| rng.range_i32(-20, 20)).collect(),
+            ),
+        };
+        Ok(Network {
+            conv,
+            fc_w,
+            fc_b,
+            n_classes: n,
+            thresholds: self.thresholds,
+            t_steps: self.t_steps,
+            sat: Sat::from_bits(self.acc_bits),
+            bits: self.bits,
+        })
+    }
+}
+
 impl Network {
     /// Load a quantized network from `artifacts/weights_q{bits}{suffix}.bin`.
     ///
@@ -99,36 +445,32 @@ impl Network {
             .with_context(|| format!("building network from {}", path.display()))
     }
 
-    /// Build from an already-parsed archive (also used by tests with
-    /// synthetic weights).
+    /// Build the paper-shaped network from an already-parsed archive
+    /// (also used by tests with synthetic weights). Routes through the
+    /// [`NetworkBuilder`] — the archive supplies the parameters, the
+    /// builder re-derives and validates every shape.
     pub fn from_archive(ar: &Archive, bits: u32, acc_bits: u32, t_steps: usize, thresholds: Vec<f32>) -> Result<Self> {
-        let shapes: [((usize, usize, usize), (usize, usize, usize), bool); 3] = [
-            ((28, 28, 1), (26, 26, 32), false),
-            ((26, 26, 32), (24, 24, 32), true),
-            ((8, 8, 32), (6, 6, 10), false),
-        ];
-        let mut conv = Vec::with_capacity(3);
-        for (i, (in_shape, out_shape, pool)) in shapes.iter().enumerate() {
+        let dims: [(usize, usize, bool); 3] = [(1, 32, false), (32, 32, true), (32, 10, false)];
+        let mut bld = NetworkBuilder::new(28, 28, 1)
+            .thresholds(thresholds)
+            .t_steps(t_steps)
+            .acc_bits(acc_bits)
+            .weight_bits(bits);
+        for (i, (cin, cout, pool)) in dims.iter().enumerate() {
             let w_t = ar.get(&format!("conv{i}_w"))?;
-            let (_, _, cin) = *in_shape;
-            let (_, _, cout) = *out_shape;
             ensure!(
-                w_t.dims == [3, 3, cin, cout],
+                w_t.dims == [3, 3, *cin, *cout],
                 "conv{i}_w dims {:?} != [3,3,{cin},{cout}]",
                 w_t.dims
             );
             let w = w_t.as_i32()?;
             let b = ar.get(&format!("conv{i}_b"))?.as_i32()?;
-            ensure!(b.len() == cout, "conv{i}_b len {} != {cout}", b.len());
+            ensure!(b.len() == *cout, "conv{i}_b len {} != {cout}", b.len());
             let vt = ar.get(&format!("conv{i}_vt"))?.as_i32()?[0];
-            conv.push(ConvLayerDef {
-                in_shape: *in_shape,
-                out_shape: *out_shape,
-                pool: *pool,
-                w,
-                b,
-                vt,
-            });
+            bld = bld.conv_with(LayerSpec::conv(*cout, 3), ConvParams { w, b, vt });
+            if *pool {
+                bld = bld.layer(LayerSpec::MaxPool { w: 3, mode: PoolMode::WinnerTakeAll });
+            }
         }
         let fc_w_t = ar.get("fc_w")?;
         ensure!(
@@ -139,22 +481,19 @@ impl Network {
         let fc_w = fc_w_t.as_i32()?;
         let fc_b = ar.get("fc_b")?.as_i32()?;
         ensure!(fc_b.len() == 10, "fc_b len {} != 10", fc_b.len());
-        Ok(Network {
-            conv,
-            fc_w,
-            fc_b,
-            n_classes: 10,
-            thresholds,
-            t_steps,
-            sat: Sat::from_bits(acc_bits),
-            bits,
-        })
+        bld.classifier_with(10, fc_w, fc_b).build()
     }
 
     /// Input fmap shape (H, W, C) of the first layer — the frame shape
     /// every [`crate::engine::Backend`] built on this network serves.
     pub fn input_shape(&self) -> (usize, usize, usize) {
         self.conv.first().map(|l| l.in_shape).unwrap_or((0, 0, 0))
+    }
+
+    /// Largest kernel edge across the layers (the PE array a simulator
+    /// instance sizes for is `max_k²`).
+    pub fn max_k(&self) -> usize {
+        self.conv.iter().map(|l| l.k).max().unwrap_or(3)
     }
 
     /// Total number of spiking neurons (membrane potentials) per channel
@@ -176,11 +515,13 @@ impl Network {
     }
 
     /// Content hash over everything that determines inference behaviour:
-    /// layer shapes, weights, biases, thresholds, encoding parameters and
-    /// arithmetic range. Two `Network`s with equal hashes compile to the
-    /// same [`crate::sim::plan::NetworkPlan`], which is what the serving
+    /// layer shapes, kernel geometry (k/stride/padding), pooling kind,
+    /// weights, biases, thresholds, encoding parameters and arithmetic
+    /// range. Two `Network`s with equal hashes compile to the same
+    /// [`crate::sim::plan::NetworkPlan`], which is what the serving
     /// layer's plan cache ([`crate::engine::PlanCache`]) keys on — so two
-    /// tenants registered with the same weights share one compiled plan.
+    /// tenants registered with the same weights share one compiled plan,
+    /// and differently-shaped nets can never alias one.
     /// (FNV-1a 64 over every parameter: accidental collision probability
     /// is ~2^-64 per pair — acceptable for a trusted-registry cache whose
     /// keys come from the operator's own model set, not from adversarial
@@ -195,7 +536,16 @@ impl Network {
             h.push_usize(l.out_shape.0);
             h.push_usize(l.out_shape.1);
             h.push_usize(l.out_shape.2);
-            h.push_u64(l.pool as u64);
+            h.push_usize(l.k);
+            h.push_usize(l.stride);
+            h.push_usize(l.padding);
+            match l.pool {
+                None => h.push_u64(0),
+                Some(p) => {
+                    h.push_u64(1 + p.mode as u64);
+                    h.push_usize(p.w);
+                }
+            }
             h.push_i32(l.vt);
             h.push_i32s(&l.w);
             h.push_i32s(&l.b);
@@ -212,6 +562,165 @@ impl Network {
         h.push_i32(self.sat.max);
         h.push_u64(self.bits as u64);
         h.finish()
+    }
+}
+
+/// Compact topology strings: parse/build networks from descriptions
+/// like `32x32x3-64C5s1p2-P2-128C3-F10`, plus the built-in presets the
+/// CLI's `nets` subcommand lists.
+///
+/// Grammar (tokens joined by `-`, case-insensitive):
+/// * `HxWxC` — input fmap (first token).
+/// * `<oc>C<k>[s<stride>][p<padding>]` — k×k conv, `oc` output channels.
+/// * `P<w>` — w×w max-pool, winner-take-all.
+/// * `E<w>` — w×w max-pool, earliest-spike.
+/// * `A<w>` — w×w average (majority) pool.
+/// * `F<n>` — n-class FC classifier (last token).
+pub mod spec {
+    use super::*;
+
+    /// A named built-in topology (weights are seeded).
+    pub struct Preset {
+        pub name: &'static str,
+        pub spec: &'static str,
+        pub about: &'static str,
+    }
+
+    /// Built-in presets, mirroring the `backends` subcommand's registry.
+    pub const PRESETS: &[Preset] = &[
+        Preset {
+            name: "paper-mnist",
+            spec: "28x28x1-32C3-32C3-P3-10C3-F10",
+            about: "the paper's fixed MNIST topology (§VII), all 3x3, one WTA max-pool",
+        },
+        Preset {
+            name: "cifar-synth",
+            spec: "32x32x3-16C5p2-P2-16C3p1-A2-32C3-16C1-16C3s2p1-10C3p1-F10",
+            about: "CIFAR-scale synthetic: 6 convs, k in {5,3,1}, stride 2, max + avg pooling",
+        },
+    ];
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Option<&'static Preset> {
+        PRESETS.iter().find(|p| p.name == name)
+    }
+
+    fn num(s: &str, whole: &str, what: &str) -> Result<usize> {
+        match s.parse::<usize>() {
+            Ok(v) => Ok(v),
+            Err(_) => topo!("net spec '{whole}': bad {what} number '{s}'"),
+        }
+    }
+
+    fn parse_input(tok: &str, whole: &str) -> Result<(usize, usize, usize)> {
+        let parts: Vec<&str> = tok.split(['x', 'X']).collect();
+        if parts.len() != 3 {
+            topo!("net spec '{whole}': input token '{tok}' must be HxWxC");
+        }
+        Ok((
+            num(parts[0], whole, "input height")?,
+            num(parts[1], whole, "input width")?,
+            num(parts[2], whole, "input channels")?,
+        ))
+    }
+
+    fn parse_layer(tok: &str, whole: &str) -> Result<LayerSpec> {
+        let t = tok.to_ascii_uppercase();
+        if let Some(rest) = t.strip_prefix('P') {
+            return Ok(LayerSpec::MaxPool {
+                w: num(rest, whole, "pool window")?,
+                mode: PoolMode::WinnerTakeAll,
+            });
+        }
+        if let Some(rest) = t.strip_prefix('E') {
+            return Ok(LayerSpec::MaxPool {
+                w: num(rest, whole, "pool window")?,
+                mode: PoolMode::EarliestSpike,
+            });
+        }
+        if let Some(rest) = t.strip_prefix('A') {
+            return Ok(LayerSpec::AvgPool { w: num(rest, whole, "pool window")? });
+        }
+        let Some(ci) = t.find('C') else {
+            topo!("net spec '{whole}': unrecognized layer token '{tok}'");
+        };
+        let out_channels = num(&t[..ci], whole, "conv channel")?;
+        let rest = &t[ci + 1..];
+        let bytes = rest.as_bytes();
+        let mut k_end = 0;
+        while k_end < bytes.len() && bytes[k_end].is_ascii_digit() {
+            k_end += 1;
+        }
+        if k_end == 0 {
+            topo!("net spec '{whole}': conv token '{tok}' needs a kernel size after C");
+        }
+        let k = num(&rest[..k_end], whole, "kernel size")?;
+        let mut stride = 1usize;
+        let mut padding = 0usize;
+        let mut r = &rest[k_end..];
+        while !r.is_empty() {
+            let (key, rem) = r.split_at(1);
+            let rb = rem.as_bytes();
+            let mut e = 0;
+            while e < rb.len() && rb[e].is_ascii_digit() {
+                e += 1;
+            }
+            if e == 0 {
+                topo!("net spec '{whole}': expected digits after '{key}' in '{tok}'");
+            }
+            let v = num(&rem[..e], whole, "conv modifier")?;
+            match key {
+                "S" => stride = v,
+                "P" => padding = v,
+                _ => topo!("net spec '{whole}': unknown conv modifier '{key}' in '{tok}'"),
+            }
+            r = &rem[e..];
+        }
+        Ok(LayerSpec::Conv { out_channels, k, stride, padding })
+    }
+
+    /// Parse a spec string into (input shape, layer specs, n_classes).
+    pub fn parse(s: &str) -> Result<((usize, usize, usize), Vec<LayerSpec>, usize)> {
+        let toks: Vec<&str> = s.split('-').collect();
+        if toks.len() < 3 {
+            topo!("net spec '{s}': need input, at least one conv, and a classifier (e.g. 28x28x1-32C3-F10)");
+        }
+        let in_shape = parse_input(toks[0], s)?;
+        let last = toks[toks.len() - 1].to_ascii_uppercase();
+        let Some(ncs) = last.strip_prefix('F') else {
+            topo!("net spec '{s}': must end with F<classes>, got '{}'", toks[toks.len() - 1]);
+        };
+        let n_classes = num(ncs, s, "classifier class")?;
+        let mut layers = Vec::with_capacity(toks.len() - 2);
+        for tok in &toks[1..toks.len() - 1] {
+            layers.push(parse_layer(tok, s)?);
+        }
+        Ok((in_shape, layers, n_classes))
+    }
+
+    /// Parse + build with seeded parameters.
+    pub fn build(s: &str, seed: u64) -> Result<Network> {
+        let (in_shape, layers, n_classes) = parse(s)?;
+        let mut b = NetworkBuilder::new(in_shape.0, in_shape.1, in_shape.2).seed(seed);
+        for l in layers {
+            b = b.layer(l);
+        }
+        b.classifier(n_classes).build()
+    }
+
+    /// Resolve a CLI `--net` argument: a preset name or a raw spec.
+    pub fn resolve(arg: &str, seed: u64) -> Result<Network> {
+        if let Some(p) = preset(arg) {
+            return build(p.spec, seed);
+        }
+        if !arg.contains('-') {
+            let names: Vec<&str> = PRESETS.iter().map(|p| p.name).collect();
+            topo!(
+                "unknown net preset '{arg}' (valid: {}; or pass a spec like 32x32x3-64C5s1p2-P2-128C3-F10)",
+                names.join(", ")
+            );
+        }
+        build(arg, seed)
     }
 }
 
@@ -256,43 +765,40 @@ impl Fnv {
 /// seeded networks without artifacts.
 pub mod testutil {
     use super::*;
-    use crate::util::prng::Pcg;
 
-    /// Random small-magnitude network for simulator<->reference tests.
+    /// Random small-magnitude paper-shaped network for
+    /// simulator<->reference tests. Parameters are drawn in the same
+    /// Pcg order as ever (bit-compatible with the pre-builder version)
+    /// and routed through the [`NetworkBuilder`] for validation.
     pub fn random_network(seed: u64) -> Network {
         let mut rng = Pcg::new(seed);
-        let shapes: [((usize, usize, usize), (usize, usize, usize), bool); 3] = [
-            ((28, 28, 1), (26, 26, 32), false),
-            ((26, 26, 32), (24, 24, 32), true),
-            ((8, 8, 32), (6, 6, 10), false),
-        ];
-        let mut conv = Vec::new();
-        for (in_shape, out_shape, pool) in shapes {
-            let (_, _, cin) = in_shape;
-            let (_, _, cout) = out_shape;
-            let w = (0..9 * cin * cout)
-                .map(|_| rng.range_i32(-40, 40))
-                .collect();
-            let b = (0..cout).map(|_| rng.range_i32(-10, 10)).collect();
-            conv.push(ConvLayerDef {
-                in_shape,
-                out_shape,
-                pool,
-                w,
-                b,
-                vt: rng.range_i32(30, 120),
-            });
+        let dims: [(usize, usize, bool); 3] = [(1, 32, false), (32, 32, true), (32, 10, false)];
+        let mut b = NetworkBuilder::new(28, 28, 1)
+            .thresholds(vec![0.15, 0.30, 0.45, 0.60, 0.75])
+            .acc_bits(20)
+            .weight_bits(8);
+        for (cin, cout, pool) in dims {
+            let w = (0..9 * cin * cout).map(|_| rng.range_i32(-40, 40)).collect();
+            let bias = (0..cout).map(|_| rng.range_i32(-10, 10)).collect();
+            let vt = rng.range_i32(30, 120);
+            b = b.conv_with(LayerSpec::conv(cout, 3), ConvParams { w, b: bias, vt });
+            if pool {
+                b = b.layer(LayerSpec::MaxPool { w: 3, mode: PoolMode::WinnerTakeAll });
+            }
         }
-        Network {
-            conv,
-            fc_w: (0..360 * 10).map(|_| rng.range_i32(-50, 50)).collect(),
-            fc_b: (0..10).map(|_| rng.range_i32(-20, 20)).collect(),
-            n_classes: 10,
-            thresholds: vec![0.15, 0.30, 0.45, 0.60, 0.75],
-            t_steps: 5,
-            sat: Sat::from_bits(20),
-            bits: 8,
-        }
+        let fc_w = (0..360 * 10).map(|_| rng.range_i32(-50, 50)).collect();
+        let fc_b = (0..10).map(|_| rng.range_i32(-20, 20)).collect();
+        b.classifier_with(10, fc_w, fc_b)
+            .build()
+            .expect("paper-shaped synthetic network is valid")
+    }
+
+    /// The CIFAR-scale synthetic topology (the `cifar-synth` preset):
+    /// 6 convs with mixed kernel sizes {5, 3, 1}, a stride-2 conv, and
+    /// both pooling kinds — the generality stress-net the parity suite
+    /// and `benches/perf.rs` push through every backend.
+    pub fn cifar_network(seed: u64) -> Network {
+        spec::resolve("cifar-synth", seed).expect("cifar-synth preset is valid")
     }
 
     /// The seeded offline workload shared by `sacsnn bench` and the
@@ -316,8 +822,8 @@ mod tests {
 
     #[test]
     fn weight_indexing_layout() {
-        // Build a tiny archive-like layer manually and check the layout
-        // formula against a hand computation.
+        // Build a tiny layer manually and check the layout formula
+        // against a hand computation.
         let cin = 2;
         let cout = 3;
         let mut w = vec![0i32; 9 * cin * cout];
@@ -327,7 +833,10 @@ mod tests {
         let layer = ConvLayerDef {
             in_shape: (8, 8, cin),
             out_shape: (6, 6, cout),
-            pool: false,
+            k: 3,
+            stride: 1,
+            padding: 0,
+            pool: None,
             w,
             b: vec![0; cout],
             vt: 1,
@@ -335,6 +844,30 @@ mod tests {
         assert_eq!(layer.weight(0, 1, 1, 2), 42);
         assert_eq!(layer.kernel(0, 1)[1 * 3 + 2], 42);
         assert_eq!(layer.weight(1, 1, 1, 2), 0);
+    }
+
+    #[test]
+    fn weight_indexing_parametric_k() {
+        // Same layout formula at k=5.
+        let cin = 2;
+        let cout = 2;
+        let mut w = vec![0i32; 25 * cin * cout];
+        // w[ky=3][kx=4][cin=0][cout=1] in (5,5,cin,cout) row-major:
+        let idx = ((3 * 5 + 4) * cin + 0) * cout + 1;
+        w[idx] = 7;
+        let layer = ConvLayerDef {
+            in_shape: (10, 10, cin),
+            out_shape: (6, 6, cout),
+            k: 5,
+            stride: 1,
+            padding: 0,
+            pool: None,
+            w,
+            b: vec![0; cout],
+            vt: 1,
+        };
+        assert_eq!(layer.weight(1, 0, 3, 4), 7);
+        assert_eq!(layer.weight(0, 0, 3, 4), 0);
     }
 
     #[test]
@@ -363,6 +896,142 @@ mod tests {
     }
 
     #[test]
+    fn builder_infers_shapes_with_stride_and_padding() {
+        let net = NetworkBuilder::new(32, 32, 3)
+            .layer(LayerSpec::Conv { out_channels: 4, k: 5, stride: 1, padding: 2 })
+            .layer(LayerSpec::MaxPool { w: 2, mode: PoolMode::WinnerTakeAll })
+            .layer(LayerSpec::Conv { out_channels: 6, k: 3, stride: 2, padding: 1 })
+            .classifier(10)
+            .build()
+            .unwrap();
+        assert_eq!(net.conv[0].out_shape, (32, 32, 4)); // "same" conv
+        assert_eq!(net.conv[0].queue_shape(), (16, 16, 4)); // pooled
+        assert_eq!(net.conv[1].in_shape, (16, 16, 4));
+        // (16 + 2 - 3)/2 + 1 = 8 (floor)
+        assert_eq!(net.conv[1].out_shape, (8, 8, 6));
+        assert_eq!(net.max_k(), 5);
+        // seeded classifier sized by the flattened last queue fmap
+        assert_eq!(net.fc_w.len(), 8 * 8 * 6 * 10);
+    }
+
+    #[test]
+    fn builder_rejects_bad_topologies() {
+        let e = |b: NetworkBuilder| -> String {
+            match b.build() {
+                Err(EngineError::InvalidTopology(m)) => m,
+                other => panic!("expected InvalidTopology, got {other:?}"),
+            }
+        };
+        // pooling before any conv
+        let m = e(NetworkBuilder::new(8, 8, 1)
+            .layer(LayerSpec::MaxPool { w: 2, mode: PoolMode::WinnerTakeAll })
+            .layer(LayerSpec::conv(4, 3))
+            .classifier(2));
+        assert!(m.contains("follow a convolution"), "{m}");
+        // two pools in a row
+        let m = e(NetworkBuilder::new(8, 8, 1)
+            .layer(LayerSpec::conv(4, 3))
+            .layer(LayerSpec::MaxPool { w: 2, mode: PoolMode::WinnerTakeAll })
+            .layer(LayerSpec::AvgPool { w: 3 })
+            .classifier(2));
+        assert!(m.contains("two pooling units"), "{m}");
+        // pool window does not tile the fmap
+        let m = e(NetworkBuilder::new(8, 8, 1)
+            .layer(LayerSpec::conv(4, 3)) // 6x6
+            .layer(LayerSpec::AvgPool { w: 4 })
+            .classifier(2));
+        assert!(m.contains("does not tile"), "{m}");
+        // kernel too big for the datapath
+        let m = e(NetworkBuilder::new(32, 32, 1)
+            .layer(LayerSpec::conv(4, MAX_K + 2))
+            .classifier(2));
+        assert!(m.contains("kernel size"), "{m}");
+        // padding >= k
+        let m = e(NetworkBuilder::new(8, 8, 1)
+            .layer(LayerSpec::Conv { out_channels: 4, k: 3, stride: 1, padding: 3 })
+            .classifier(2));
+        assert!(m.contains("padding"), "{m}");
+        // MaxPool with Average mode
+        let m = e(NetworkBuilder::new(8, 8, 1)
+            .layer(LayerSpec::conv(4, 3))
+            .layer(LayerSpec::MaxPool { w: 2, mode: PoolMode::Average })
+            .classifier(2));
+        assert!(m.contains("AvgPool"), "{m}");
+        // no classifier
+        let m = e(NetworkBuilder::new(8, 8, 1).layer(LayerSpec::conv(4, 3)));
+        assert!(m.contains("classifier"), "{m}");
+        // explicit params with the wrong length
+        let m = e(NetworkBuilder::new(8, 8, 1)
+            .conv_with(LayerSpec::conv(4, 3), ConvParams { w: vec![0; 5], b: vec![0; 4], vt: 1 })
+            .classifier(2));
+        assert!(m.contains("weight len"), "{m}");
+    }
+
+    #[test]
+    fn spec_strings_parse_and_build() {
+        let (in_shape, layers, n) = spec::parse("32x32x3-64C5s1p2-P2-128C3-F10").unwrap();
+        assert_eq!(in_shape, (32, 32, 3));
+        assert_eq!(n, 10);
+        assert_eq!(
+            layers,
+            vec![
+                LayerSpec::Conv { out_channels: 64, k: 5, stride: 1, padding: 2 },
+                LayerSpec::MaxPool { w: 2, mode: PoolMode::WinnerTakeAll },
+                LayerSpec::Conv { out_channels: 128, k: 3, stride: 1, padding: 0 },
+            ]
+        );
+        // E and A pool tokens, lowercase accepted
+        let (_, layers, _) = spec::parse("8x8x1-4c3-e2-4c1-a2-f2").unwrap();
+        assert_eq!(layers[1], LayerSpec::MaxPool { w: 2, mode: PoolMode::EarliestSpike });
+        assert_eq!(layers[3], LayerSpec::AvgPool { w: 2 });
+        // bad tokens are typed errors
+        assert!(matches!(spec::parse("junk"), Err(EngineError::InvalidTopology(_))));
+        assert!(matches!(spec::parse("8x8-4C3-F2"), Err(EngineError::InvalidTopology(_))));
+        assert!(matches!(spec::parse("8x8x1-4C3-X9-F2"), Err(EngineError::InvalidTopology(_))));
+        assert!(matches!(spec::parse("8x8x1-4C3-P2"), Err(EngineError::InvalidTopology(_))));
+        assert!(matches!(
+            spec::resolve("not-a-preset-or-spec_", 1),
+            Err(EngineError::InvalidTopology(_))
+        ));
+    }
+
+    #[test]
+    fn presets_build_and_paper_preset_matches_paper_shapes() {
+        for p in spec::PRESETS {
+            let net = spec::build(p.spec, 3).unwrap_or_else(|e| panic!("{}: {e}", p.name));
+            assert!(!net.conv.is_empty(), "{}", p.name);
+        }
+        let paper = spec::resolve("paper-mnist", 1).unwrap();
+        assert_eq!(paper.input_shape(), (28, 28, 1));
+        let shapes: Vec<_> = paper.conv.iter().map(|l| l.out_shape).collect();
+        assert_eq!(shapes, vec![(26, 26, 32), (24, 24, 32), (6, 6, 10)]);
+        assert_eq!(paper.conv[1].pool, Some(PoolDef { w: 3, mode: PoolMode::WinnerTakeAll }));
+        assert_eq!(paper.fc_w.len(), 360 * 10);
+
+        let cifar = testutil::cifar_network(9);
+        assert_eq!(cifar.input_shape(), (32, 32, 3));
+        assert_eq!(cifar.conv.len(), 6);
+        assert_eq!(cifar.max_k(), 5);
+        assert!(cifar.conv.iter().any(|l| l.stride == 2));
+        let modes: Vec<_> = cifar.conv.iter().filter_map(|l| l.pool.map(|p| p.mode)).collect();
+        assert_eq!(modes, vec![PoolMode::WinnerTakeAll, PoolMode::Average]);
+        // shape chain: 32 -C5p2-> 32 -P2-> 16 -C3p1-> 16 -A2-> 8 -C3-> 6
+        //              -C1-> 6 -C3s2p1-> 3 -C3p1-> 3
+        let qs: Vec<_> = cifar.conv.iter().map(|l| l.queue_shape()).collect();
+        assert_eq!(
+            qs,
+            vec![
+                (16, 16, 16),
+                (8, 8, 16),
+                (6, 6, 32),
+                (6, 6, 16),
+                (3, 3, 16),
+                (3, 3, 10)
+            ]
+        );
+    }
+
+    #[test]
     fn content_hash_keys_on_parameters() {
         // Same seed → identical parameters → identical hash (even across
         // distinct allocations); any parameter change must move the hash.
@@ -376,5 +1045,24 @@ mod tests {
         let mut d = testutil::random_network(4);
         d.t_steps += 1;
         assert_ne!(a.content_hash(), d.content_hash());
+    }
+
+    #[test]
+    fn content_hash_keys_on_geometry() {
+        // The new geometry fields must move the hash even with identical
+        // weights, so the PlanCache cannot alias differently-shaped nets.
+        let a = testutil::random_network(6);
+        let mut b = testutil::random_network(6);
+        b.conv[0].padding = 1;
+        assert_ne!(a.content_hash(), b.content_hash());
+        let mut c = testutil::random_network(6);
+        c.conv[0].stride = 2;
+        assert_ne!(a.content_hash(), c.content_hash());
+        let mut d = testutil::random_network(6);
+        d.conv[1].pool = Some(PoolDef { w: 3, mode: PoolMode::EarliestSpike });
+        assert_ne!(a.content_hash(), d.content_hash());
+        let mut e = testutil::random_network(6);
+        e.conv[1].pool = None;
+        assert_ne!(a.content_hash(), e.content_hash());
     }
 }

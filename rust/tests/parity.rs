@@ -286,6 +286,101 @@ fn session_stream_is_bit_identical_to_sequential_infer() {
 }
 
 #[test]
+fn cifar_scale_net_agrees_across_backends_and_serving() {
+    // The generalized-datapath parity anchor: a CIFAR-scale topology —
+    // 6 convs with mixed kernel sizes {5, 3, 1}, zero padding, a
+    // stride-2 conv, and both pooling kinds — must come out
+    // bit-identical through every local backend, every sim execution
+    // mode (plain / pipelined / sharded / replicated-pipeline pool),
+    // and a served Session.
+    use sacsnn::coordinator::{Server, ServerConfig, TenantConfig};
+    use sacsnn::snn::network::testutil::cifar_network;
+    use sacsnn::snn::network::PoolMode;
+
+    let net = Arc::new(cifar_network(31));
+    assert!(net.conv.len() >= 6, "CIFAR-scale depth");
+    assert_eq!(net.max_k(), 5, "mixed kernel sizes");
+    assert!(net.conv.iter().any(|l| l.k == 1), "1x1 conv present");
+    assert!(net.conv.iter().any(|l| l.stride > 1), "strided conv present");
+    assert!(net.conv.iter().any(|l| l.padding > 0), "padded conv present");
+    assert!(
+        net.conv
+            .iter()
+            .any(|l| matches!(l.pool, Some(p) if p.mode == PoolMode::WinnerTakeAll)),
+        "WTA pool present"
+    );
+    assert!(
+        net.conv
+            .iter()
+            .any(|l| matches!(l.pool, Some(p) if p.mode == PoolMode::Average)),
+        "average pool present"
+    );
+
+    let builder = EngineBuilder::new(Arc::clone(&net)).lanes(4);
+    let frames = frames_for(&net, &[21, 22, 23]);
+
+    // the frame-based dense reference anchors functional correctness
+    let mut dref = builder.build(BackendKind::DenseRef).unwrap();
+    let want: Vec<_> = frames.iter().map(|f| dref.infer(f).unwrap()).collect();
+    for &kind in &LOCAL_KINDS {
+        let mut b = builder.build(kind).unwrap();
+        for (i, f) in frames.iter().enumerate() {
+            let got = b.infer(f).unwrap();
+            assert_eq!(got.logits, want[i].logits, "{kind} frame={i}");
+            assert_eq!(got.pred, want[i].pred, "{kind} frame={i}");
+        }
+    }
+
+    // sim execution modes must also match the plain sim bit for bit,
+    // including the full stats block (cycle counts and all)
+    let mut plain = builder.build(BackendKind::Sim).unwrap();
+    let seq: Vec<_> = frames.iter().map(|f| plain.infer(f).unwrap()).collect();
+    for (s, w) in seq.iter().zip(&want) {
+        assert_eq!(s.stats.spike_counts, w.stats.spike_counts, "sim vs dense-ref spikes");
+    }
+    for (pipeline, threads) in [(2usize, 1usize), (usize::MAX, 1), (0, 3), (usize::MAX, 2)] {
+        let mut b = builder
+            .clone()
+            .pipeline(pipeline)
+            .threads(threads)
+            .build(BackendKind::Sim)
+            .unwrap();
+        let mut out = Vec::new();
+        b.infer_batch(&frames, &mut out).unwrap();
+        assert_eq!(out.len(), frames.len());
+        for (i, (got, want)) in out.iter().zip(&seq).enumerate() {
+            let ctx = format!("pipeline={pipeline} threads={threads} frame={i}");
+            assert_eq!(got.pred, want.pred, "{ctx}");
+            assert_eq!(got.logits, want.logits, "{ctx}");
+            assert_eq!(got.stats, want.stats, "{ctx}");
+        }
+    }
+
+    // ...and through a served Session (pipelined tenant backend)
+    let server = Server::start(ServerConfig { workers: 2, batch_size: 2, ..Default::default() })
+        .unwrap();
+    let tenant = server
+        .register_tenant(
+            Arc::clone(&net),
+            TenantConfig { max_inflight: 16, lanes: 4, pipeline: 2, ..Default::default() },
+        )
+        .unwrap();
+    let mut session = server.open_session(tenant).unwrap();
+    for f in &frames {
+        session.feed(f).unwrap();
+    }
+    for (i, want) in seq.iter().enumerate() {
+        let got = session.recv().expect("outstanding result").unwrap();
+        assert_eq!(got.id, i as u64, "feed order frame={i}");
+        assert_eq!(got.pred, want.pred, "served frame={i}");
+        assert_eq!(got.logits, want.logits, "served frame={i}");
+        assert_eq!(got.sim_cycles, want.stats.total_cycles, "served frame={i}");
+    }
+    assert!(session.recv().is_none(), "session drained");
+    server.shutdown();
+}
+
+#[test]
 fn every_backend_rejects_misshapen_frames() {
     let net = Arc::new(random_network(707));
     let builder = EngineBuilder::new(Arc::clone(&net));
