@@ -23,6 +23,9 @@ Gate rules (tolerances chosen for shared CI runners):
   * ``frames_per_s``             — fail on a drop of more than 15% vs baseline
   * ``images_per_sec_batched``   — fail on a drop of more than 15% vs baseline
   * ``images_per_sec_pipelined`` — fail on a drop of more than 15% vs baseline
+  * ``images_per_sec_cifar``     — fail on a drop of more than 15% vs baseline
+    (the CIFAR-shaped layer-zoo path; previously emitted but ungated, so a
+    regression there was invisible to CI)
   * ``replay_p99_us``            — fail on a RISE of more than 50% vs baseline
     (trace-replay p99 submit→reply latency; tail latency is noisier than
     mean throughput on shared runners, hence the wider tolerance)
@@ -55,6 +58,7 @@ THROUGHPUT_FIELDS = (
     "frames_per_s",
     "images_per_sec_batched",
     "images_per_sec_pipelined",
+    "images_per_sec_cifar",
 )
 # Tail-latency CEILINGS (lower is better): the trace-replay p99 of
 # submit→reply latency from the bench's seeded multi-tenant replay.
@@ -253,6 +257,7 @@ def selftest() -> int:
         "frames_per_s": 100.0,
         "images_per_sec_batched": 200.0,
         "images_per_sec_pipelined": 150.0,
+        "images_per_sec_cifar": 50.0,
         "replay_p99_us": 1000.0,
         "replay_availability": 1.0,
         "allocs_per_inference": 0.0,
@@ -276,6 +281,13 @@ def selftest() -> int:
 
     below = dict(base, frames_per_s=84.9)
     check("drop past 15% fails", gate_fails(below))
+
+    cifar_below = dict(base, images_per_sec_cifar=42.0)
+    check("cifar throughput drop past 15% fails", gate_fails(cifar_below))
+
+    missing_cifar = dict(base)
+    del missing_cifar["images_per_sec_cifar"]
+    check("missing cifar field fails (newly gated field)", gate_fails(missing_cifar))
 
     alloc_up = dict(base, allocs_per_inference=0.001)
     check("ANY alloc increase fails", gate_fails(alloc_up))
@@ -314,6 +326,7 @@ def selftest() -> int:
         "frames_per_s": 200.0,
         "images_per_sec_batched": 100.0,  # slower than the old 200 floor
         "images_per_sec_pipelined": 300.0,
+        "images_per_sec_cifar": 80.0,
         "replay_p99_us": 425.0,  # faster than the old 1000 µs ceiling
         "replay_availability": 1.0,
         "allocs_per_inference": 0.0,

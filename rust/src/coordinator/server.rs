@@ -16,7 +16,14 @@
 //! * **Weighted-fair draining.** The injector visits tenant queues in
 //!   weighted round-robin order (a weight-3 tenant is visited three
 //!   times per weight-1 visit), taking up to `batch_size` frames per
-//!   visit, so one chatty tenant cannot starve the rest.
+//!   visit, so one chatty tenant cannot starve the rest. With
+//!   cost-aware scheduling ([`ServerConfig::cost_aware`]) the visit
+//!   list is additionally normalized by each tenant's modeled
+//!   per-frame cycle cost ([`CostModel::nominal_cycles`]): a tenant
+//!   whose nominal frame costs 2× the cheapest tenant's gets half the
+//!   visits per weight unit, so a configured weight buys a share of
+//!   modeled device *cycles* (and, at the modeled wattage, energy) —
+//!   not a share of frames.
 //! * **Streaming dispatch.** A dispatch routes through
 //!   [`Backend::infer_stream`] end to end: the worker's frame iterator
 //!   *keeps pulling* from the tenant's queue while it is the only one
@@ -211,15 +218,67 @@ pub(crate) enum Dispatch {
     Exit,
 }
 
+/// One registered tenant's scheduling parameters, kept so the visit
+/// list can be rebuilt whenever registration changes the cost picture.
+struct RrEntry {
+    tenant: TenantId,
+    weight: u32,
+    /// Modeled absolute cycles of this tenant's nominal frame
+    /// ([`CostModel::nominal_cycles`]); `None` for tenants without a
+    /// cost model (cost-aware off, functional backends, preset pools).
+    nominal_cycles: Option<u64>,
+}
+
+/// Cap on the WRR visit slots one tenant can hold after cost
+/// normalization — bounds the visit list when tenants' modeled costs
+/// span orders of magnitude (4 × the max configured tenant weight).
+const MAX_COST_VISITS: u128 = 256;
+
 struct InjectorState {
     queues: HashMap<TenantId, VecDeque<WorkItem>>,
-    /// Weighted round-robin visit list: each tenant id appears `weight`
-    /// times, so relative visit frequency IS the fair share.
+    /// Registration-order scheduling entries; the source `rr` is
+    /// rebuilt from.
+    entries: Vec<RrEntry>,
+    /// Weighted round-robin visit list: each tenant id appears once per
+    /// visit slot, so relative visit frequency IS the fair share. Slots
+    /// per tenant = configured weight, scaled (for tenants with a cost
+    /// model) by the cheapest registered nominal frame cost over their
+    /// own — an expensive-net tenant gets proportionally fewer visits,
+    /// equalizing modeled *cycles* per weight unit across tenants.
     rr: Vec<TenantId>,
     cursor: usize,
     /// Total frames across all queues (wakeup predicate).
     queued: usize,
     mode: Mode,
+}
+
+impl InjectorState {
+    /// Recompute the visit list from the registered entries. Called
+    /// under the injector lock at every registration (cold path): a new
+    /// tenant can lower the reference cost and thereby shrink existing
+    /// tenants' visit counts. Per-tenant FIFO order is untouched — only
+    /// visit frequency changes — so served outputs stay bit-identical
+    /// regardless of the weighting (the `traffic` parity suite referees
+    /// this).
+    fn rebuild_rr(&mut self) {
+        let reference = self.entries.iter().filter_map(|e| e.nominal_cycles).min();
+        self.rr.clear();
+        for e in &self.entries {
+            let visits = match (e.nominal_cycles, reference) {
+                (Some(cost), Some(cheapest)) => {
+                    let cost = cost.max(1) as u128;
+                    // round(weight × cheapest / cost), clamped to 1..=cap
+                    let scaled =
+                        (e.weight.max(1) as u128 * cheapest as u128 + cost / 2) / cost;
+                    scaled.clamp(1, MAX_COST_VISITS) as usize
+                }
+                _ => e.weight.max(1) as usize,
+            };
+            for _ in 0..visits {
+                self.rr.push(e.tenant);
+            }
+        }
+    }
 }
 
 /// The shared work queue the persistent pool parks on.
@@ -233,6 +292,7 @@ impl Injector {
         Injector {
             state: Mutex::new(InjectorState {
                 queues: HashMap::new(),
+                entries: Vec::new(),
                 rr: Vec::new(),
                 cursor: 0,
                 queued: 0,
@@ -242,12 +302,15 @@ impl Injector {
         }
     }
 
-    fn register(&self, tenant: TenantId, weight: u32) {
+    /// Register a tenant's queue and scheduling entry. `nominal_cycles`
+    /// (from the tenant's [`CostModel`], when cost-aware scheduling
+    /// built one) makes the tenant's WRR visits cost-normalized; `None`
+    /// keeps classic visits-equal-weight behaviour.
+    fn register(&self, tenant: TenantId, weight: u32, nominal_cycles: Option<u64>) {
         let mut st = self.state.lock().expect("injector poisoned");
         st.queues.insert(tenant, VecDeque::new());
-        for _ in 0..weight.max(1) {
-            st.rr.push(tenant);
-        }
+        st.entries.push(RrEntry { tenant, weight, nominal_cycles });
+        st.rebuild_rr();
     }
 
     pub(crate) fn is_running(&self) -> bool {
@@ -925,7 +988,12 @@ fn register_state(
     // registered late on a long-lived server before it ever ran).
     state.last_active = AtomicU64::new(shared.dispatch_seq.load(Ordering::Relaxed));
     let state = Arc::new(state);
-    shared.injector.register(id, state.weight);
+    // Cost-aware scheduling: hand the injector the tenant's modeled
+    // nominal frame cost so WRR visits equalize cycles, not frames,
+    // across tenants serving different networks.
+    shared
+        .injector
+        .register(id, state.weight, state.cost.as_ref().map(|m| m.nominal_cycles()));
     shared
         .tenants
         .write()
@@ -1857,8 +1925,8 @@ mod tests {
             (28, 28, 1),
             BackendSource::Preset,
         ));
-        injector.register(heavy.id, heavy.weight);
-        injector.register(light.id, light.weight);
+        injector.register(heavy.id, heavy.weight, None);
+        injector.register(light.id, light.weight, None);
         let item = |t: &Arc<TenantState>| WorkItem {
             tenant: Arc::clone(t),
             frame: Frame::default(),
@@ -1898,6 +1966,57 @@ mod tests {
     }
 
     #[test]
+    fn cost_weighted_visits_normalize_by_nominal_cycles() {
+        // Two equal-weight tenants whose networks differ 4× in modeled
+        // nominal cycles: the cheap-net tenant gets proportionally more
+        // visits so equal weight buys equal *cycle* share, not equal
+        // frame share. Same-cost fleets keep visits == weight exactly.
+        let injector = Injector::new();
+        let cheap = Arc::new(TenantState::new(
+            TenantId(0),
+            &TenantConfig { weight: 2, ..Default::default() },
+            (28, 28, 1),
+            BackendSource::Preset,
+        ));
+        let dear = Arc::new(TenantState::new(
+            TenantId(1),
+            &TenantConfig { weight: 2, ..Default::default() },
+            (28, 28, 1),
+            BackendSource::Preset,
+        ));
+        injector.register(cheap.id, cheap.weight, Some(1_000));
+        injector.register(dear.id, dear.weight, Some(4_000));
+        let item = |t: &Arc<TenantState>| WorkItem {
+            tenant: Arc::clone(t),
+            frame: Frame::default(),
+            cost: FRAME_COST_UNIT,
+            enqueued: Instant::now(),
+            reply_to: ReplyTo::Channel { id: 0, tx: std::sync::mpsc::channel().0 },
+            retries: 0,
+        };
+        for _ in 0..8 {
+            injector.push(cheap.id, item(&cheap)).unwrap();
+            injector.push(dear.id, item(&dear)).unwrap();
+        }
+        let mut inbox = VecDeque::new();
+        let mut visits = Vec::new();
+        while injector.queue_depth(cheap.id) + injector.queue_depth(dear.id) > 0 {
+            match injector.pop_dispatch(1, &mut inbox) {
+                Dispatch::Serve { tenant, .. } => visits.push(tenant),
+                Dispatch::Exit => break,
+            }
+            inbox.clear();
+        }
+        // cheap: round(2 × 1000/1000) = 2 visits/cycle;
+        // dear: round(2 × 1000/4000) = 1 visit/cycle (clamped ≥ 1)
+        let first_dear = visits.iter().position(|t| *t == dear.id).unwrap();
+        assert_eq!(first_dear, 2, "cheap net gets 2 visits before dear's 1: {visits:?}");
+        // all frames still drain — weighting changes order, never membership
+        assert_eq!(visits.iter().filter(|t| **t == cheap.id).count(), 8);
+        assert_eq!(visits.iter().filter(|t| **t == dear.id).count(), 8);
+    }
+
+    #[test]
     fn dispatches_pack_by_cost_budget() {
         // Injector-level: a batch_size-2 visit has a 2×FRAME_COST_UNIT
         // budget. Half-unit (sparse) items pack 4 per dispatch,
@@ -1910,7 +2029,7 @@ mod tests {
             (28, 28, 1),
             BackendSource::Preset,
         ));
-        injector.register(t.id, 1);
+        injector.register(t.id, 1, None);
         let item = |cost: u64| WorkItem {
             tenant: Arc::clone(&t),
             frame: Frame::default(),
@@ -2003,8 +2122,8 @@ mod tests {
             (28, 28, 1),
             BackendSource::Preset,
         ));
-        injector.register(a.id, 1);
-        injector.register(b.id, 1);
+        injector.register(a.id, 1, None);
+        injector.register(b.id, 1, None);
         let item = |t: &Arc<TenantState>| WorkItem {
             tenant: Arc::clone(t),
             frame: Frame::default(),
@@ -2117,7 +2236,7 @@ mod tests {
             (28, 28, 1),
             BackendSource::Preset,
         ));
-        injector.register(t.id, 1);
+        injector.register(t.id, 1, None);
         let item = |id: u64| WorkItem {
             tenant: Arc::clone(&t),
             frame: Frame::default(),

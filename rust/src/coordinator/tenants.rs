@@ -39,7 +39,11 @@ pub struct TenantConfig {
     /// `1..=MAX_TENANT_WEIGHT`): under contention a weight-3 tenant's
     /// queue is visited three times for every visit a weight-1 tenant
     /// gets. Only the ratio between tenants matters; the clamp keeps
-    /// the scheduler's weighted visit list O(tenants).
+    /// the scheduler's weighted visit list O(tenants). On a cost-aware
+    /// server the scheduler additionally normalizes visits by each
+    /// tenant's modeled nominal cycles, so equal weight buys equal
+    /// *cycle* share rather than equal frame share across tenants with
+    /// different networks (see `crate::traffic::CostModel`).
     pub weight: u32,
     /// Which backend serves this tenant's network.
     pub backend: BackendKind,

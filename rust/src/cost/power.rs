@@ -63,6 +63,14 @@ impl PowerModel {
     pub fn efficiency(&self, fps: f64, utilization: f64) -> f64 {
         fps / self.watts(utilization)
     }
+
+    /// Energy in joules to run `cycles` device cycles at the given PE
+    /// utilization: watts × (cycles ÷ clock). The cycles→energy bridge
+    /// used by [`crate::traffic::CostModel`]'s energy view and the
+    /// `bench --compare` tables.
+    pub fn energy_j(&self, cycles: f64, utilization: f64) -> f64 {
+        self.watts(utilization) * cycles / self.clock_hz
+    }
 }
 
 /// Power anchors implied by paper Table I (8-bit).
@@ -114,6 +122,41 @@ mod tests {
         let m = PowerModel::new(8, 16);
         let idle = m.watts(0.0);
         assert!(idle > P_STATIC_W + 0.5 * 16.0 * P_LANE_W * IDLE_FRACTION);
+    }
+
+    #[test]
+    fn energy_is_monotone_and_static_floor_holds() {
+        let m = PowerModel::new(8, 8);
+        // more cycles → more joules, strictly
+        assert!(m.energy_j(2e6, 0.6) > m.energy_j(1e6, 0.6));
+        // higher utilization over the same cycles → more joules
+        assert!(m.energy_j(1e6, 0.9) > m.energy_j(1e6, 0.1));
+        // zero cycles cost zero energy; any cycles cost some
+        assert_eq!(m.energy_j(0.0, 0.5), 0.0);
+        assert!(m.energy_j(1.0, 0.0) > 0.0);
+        // consistency: energy == watts × seconds
+        let cycles = 333e6; // one second at the paper clock
+        let err = (m.energy_j(cycles, 0.65) - m.watts(0.65)).abs();
+        assert!(err < 1e-9, "one second of cycles must cost watts() joules");
+    }
+
+    #[test]
+    fn monotone_over_property_sweep() {
+        // Property sweep backing the resources-side monotonicity tests:
+        // watts never decreases in lanes, bits, or utilization across a
+        // grid of configurations.
+        for lanes in [1usize, 2, 4, 8, 16, 32] {
+            for bits in [4u32, 8, 12, 16, 24] {
+                for u in [0.0, 0.25, 0.5, 0.75, 1.0] {
+                    let base = PowerModel::new(bits, lanes).watts(u);
+                    assert!(PowerModel::new(bits, lanes * 2).watts(u) > base);
+                    assert!(PowerModel::new(bits + 2, lanes).watts(u) > base);
+                    if u < 1.0 {
+                        assert!(PowerModel::new(bits, lanes).watts(u + 0.25) > base);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

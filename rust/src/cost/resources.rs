@@ -66,7 +66,8 @@ impl UnitBreakdown {
     }
 }
 
-/// Structural model parameterized by bit width and ×P parallelization.
+/// Structural model parameterized by bit width, kernel size, and ×P
+/// parallelization.
 #[derive(Copy, Clone, Debug)]
 pub struct ResourceModel {
     /// Weight/bias bit width (8 or 16).
@@ -75,6 +76,10 @@ pub struct ResourceModel {
     pub acc_bits: u32,
     /// Parallelization degree ×P.
     pub lanes: usize,
+    /// Kernel edge length: every per-lane unit instantiates k² PEs /
+    /// column queues / memory columns (the paper's anchor is k = 3,
+    /// i.e. 9 PEs; the layer zoo goes up to k = 7).
+    pub k: usize,
 }
 
 // Fitted per-primitive coefficients (UltraScale+ 6-input LUTs):
@@ -91,69 +96,89 @@ const STAGE_CTRL_FF: f64 = 40.0;
 const LUTRAM_BITS_PER_LUT: f64 = 16.0;
 
 impl ResourceModel {
+    /// Paper-anchor constructor: k = 3 (9 PEs per unit, Table II).
     pub fn new(bits: u32, acc_bits: u32, lanes: usize) -> Self {
-        ResourceModel { bits, acc_bits, lanes }
+        ResourceModel { bits, acc_bits, lanes, k: 3 }
     }
 
-    /// For a loaded network (picks up acc_bits from its `Sat`).
+    /// Kernel edge length for layer-zoo nets (k² PEs per unit).
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k.max(1);
+        self
+    }
+
+    /// For a loaded network (picks up acc_bits from its `Sat` and the
+    /// PE-array size from its largest kernel).
     pub fn for_network(net: &Network, lanes: usize) -> Self {
         let acc_bits = (32 - (net.sat.max as u32).leading_zeros()) + 1;
-        ResourceModel { bits: net.bits, acc_bits, lanes }
+        ResourceModel { bits: net.bits, acc_bits, lanes, k: net.max_k().max(1) }
     }
 
-    /// One convolution unit (9 PEs, 4 pipeline stages, hazard logic).
+    /// Number of PEs per unit (k²; 9 at the paper's k = 3).
+    fn pes(&self) -> f64 {
+        (self.k * self.k) as f64
+    }
+
+    /// One convolution unit (k² PEs, 4 pipeline stages, hazard logic).
     fn conv_unit(&self) -> Resources {
+        let n = self.pes();
         let b = self.acc_bits as f64;
         let w = self.bits as f64;
-        // 9 saturating adder PEs + 4 address adders + 18 hazard
-        // comparators (9 for S3, 9 for S4) + 9 9-to-1 weight muxes +
-        // 9 2-to-1 forwarding muxes + stage control.
-        let lut = 9.0 * b * LUT_PER_ADDER_BIT
+        // k² saturating adder PEs + 4 address adders + 2k² hazard
+        // comparators (k² for S3, k² for S4) + k² k²-to-1 weight muxes +
+        // k² 2-to-1 forwarding muxes + stage control.
+        let lut = n * b * LUT_PER_ADDER_BIT
             + 4.0 * 12.0 * LUT_PER_ADDER_BIT
-            + 18.0 * 12.0 * LUT_PER_CMP_BIT
-            + 9.0 * w * LUT_PER_MUX9_BIT
-            + 9.0 * b * 0.5
+            + 2.0 * n * 12.0 * LUT_PER_CMP_BIT
+            + n * w * LUT_PER_MUX9_BIT
+            + n * b * 0.5
             + 4.0 * STAGE_CTRL_LUT;
-        // pipeline registers: 4 stages × 9 lanes × (addr 12 + data b),
-        // plus the 9 selected-kernel weight registers per data stage.
-        let ff = 4.0 * 9.0 * (12.0 + b) * FF_PER_REG_BIT * 0.38
-            + 9.0 * w * 2.0
+        // pipeline registers: 4 stages × k² lanes × (addr 12 + data b),
+        // plus the k² selected-kernel weight registers per data stage.
+        let ff = 4.0 * n * (12.0 + b) * FF_PER_REG_BIT * 0.38
+            + n * w * 2.0
             + 4.0 * STAGE_CTRL_FF;
         Resources { lut, ff, bram_mb: 0.0, dsp: 0.0 }
     }
 
-    /// One thresholding unit (9 bias adders, 9 comparators, pool logic).
+    /// One thresholding unit (k² bias adders, k² comparators, pool logic).
     fn threshold_unit(&self) -> Resources {
+        let n = self.pes();
         let b = self.acc_bits as f64;
-        let lut = 9.0 * b * LUT_PER_ADDER_BIT
-            + 9.0 * b * LUT_PER_CMP_BIT
+        let lut = n * b * LUT_PER_ADDER_BIT
+            + n * b * LUT_PER_CMP_BIT
             + 4.0 * 10.0 * LUT_PER_ADDER_BIT // Algorithm-2 counters
             + 5.0 * STAGE_CTRL_LUT;
-        let ff = 5.0 * 9.0 * (12.0 + b) * FF_PER_REG_BIT * 0.22 + 5.0 * STAGE_CTRL_FF;
+        let ff = 5.0 * n * (12.0 + b) * FF_PER_REG_BIT * 0.22 + 5.0 * STAGE_CTRL_FF;
         Resources { lut, ff, bram_mb: 0.0, dsp: 0.0 }
     }
 
-    /// One AEQ (9 column queues in BRAM + write/read counters).
+    /// One AEQ (k² column queues in BRAM + write/read counters).
     fn aeq(&self) -> Resources {
+        let n = self.pes();
         // queue entry: (i, j) address (10 bits) + valid + end-of-queue;
         // capacity 8192 entries per queue set (sized for the worst layer).
         let entry_bits = 12.0;
         let capacity = 8192.0;
         let bram_mb = entry_bits * capacity * 1.20 / 1e6; // +20% BRAM padding
-        let lut = 9.0 * 30.0 /* write counters+mux */ + 60.0 /* read logic */;
-        let ff = 10.0 * 14.0;
+        let lut = n * 30.0 /* write counters+mux */ + 60.0 /* read logic */;
+        let ff = (n + 1.0) * 14.0; // k² write counters + 1 read counter
         Resources { lut, ff, bram_mb, dsp: 0.0 }
     }
 
-    /// One MemPot (9 columns of LUT-RAM; paper Fig. 12 note: "too small
+    /// One MemPot (k² columns of LUT-RAM; paper Fig. 12 note: "too small
     /// to map efficiently to BRAM").
     fn mempot(&self) -> Resources {
-        let cells = 9.0 * 9.0; // 26×26 fmap → 9×9 cells per column
+        let n = self.pes();
+        // Interlacing tiles the worst-case fmap (26×26 for the paper
+        // net) into k² columns of ⌈26/k⌉² cells each.
+        let grid = (26.0 / self.k as f64).ceil();
+        let cells = grid * grid; // 9×9 cells per column at k = 3
         let entry_bits = self.acc_bits as f64 + 1.0; // + spike indicator
-        let bits = 9.0 * cells * entry_bits;
+        let bits = n * cells * entry_bits;
         Resources {
-            lut: bits / LUTRAM_BITS_PER_LUT + 9.0 * 12.0, // + addr decode
-            ff: 9.0 * entry_bits, // output registers
+            lut: bits / LUTRAM_BITS_PER_LUT + n * 12.0, // + addr decode
+            ff: n * entry_bits, // output registers
             bram_mb: 0.0,
             dsp: 0.0,
         }
@@ -165,8 +190,9 @@ impl ResourceModel {
         // classification unit uses DSP MACs: bits/2 per lane
         // (paper: 32 DSP @ 8-bit ×8, 64 @ 16-bit ×8).
         let dsp = w / 2.0 * self.lanes as f64;
-        // kernel ROM: all weights replicated per lane in BRAM.
-        let n_weights = 9.0 * (32.0 + 32.0 * 32.0 + 32.0 * 10.0);
+        // kernel ROM: all weights replicated per lane in BRAM
+        // (k² taps per filter; the paper net's channel plan as anchor).
+        let n_weights = self.pes() * (32.0 + 32.0 * 32.0 + 32.0 * 10.0);
         let rom_mb = n_weights * w * 1.15 / 1e6;
         Resources {
             lut: 900.0 + 45.0 * w,
@@ -273,5 +299,71 @@ mod tests {
             assert!(r.lut < lut / 2.0, "vs {name}");
             assert!(r.ff < ff / 2.0, "vs {name}");
         }
+    }
+
+    #[test]
+    fn k3_is_the_paper_anchor() {
+        // `new` must mean exactly the paper's 9-PE datapath: spelling
+        // k = 3 out explicitly changes nothing, bit for bit.
+        for bits in [8u32, 16] {
+            let base = model(bits).total();
+            let spelled = model(bits).with_k(3).total();
+            assert_eq!(base.lut, spelled.lut);
+            assert_eq!(base.ff, spelled.ff);
+            assert_eq!(base.bram_mb, spelled.bram_mb);
+            assert_eq!(base.dsp, spelled.dsp);
+        }
+    }
+
+    #[test]
+    fn monotone_in_kernel_size() {
+        // More PEs per unit (k²) can only cost more fabric.
+        let mut prev = model(8).with_k(1).total();
+        for k in 2..=7 {
+            let r = model(8).with_k(k).total();
+            assert!(r.lut > prev.lut, "LUT not monotone at k={k}");
+            assert!(r.ff > prev.ff, "FF not monotone at k={k}");
+            assert!(r.bram_mb >= prev.bram_mb, "BRAM shrank at k={k}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn monotone_in_bits_and_lanes() {
+        // Property sweep: widening any knob — weight bits, accumulator
+        // bits, parallelization — never reduces any resource column.
+        for k in [1usize, 3, 5, 7] {
+            for lanes in [1usize, 2, 4, 8, 16] {
+                for acc in [12u32, 16, 20, 24, 28] {
+                    for (lo, hi) in [(4u32, 8u32), (8, 12), (12, 16)] {
+                        let a = ResourceModel::new(lo, acc, lanes).with_k(k).total();
+                        let b = ResourceModel::new(hi, acc, lanes).with_k(k).total();
+                        assert!(b.lut > a.lut, "LUT vs bits k={k} lanes={lanes} acc={acc}");
+                        assert!(b.ff > a.ff, "FF vs bits k={k} lanes={lanes} acc={acc}");
+                        assert!(b.dsp > a.dsp, "DSP vs bits k={k} lanes={lanes} acc={acc}");
+                    }
+                    let narrow = ResourceModel::new(8, acc, lanes).with_k(k).total();
+                    let wide = ResourceModel::new(8, acc + 2, lanes).with_k(k).total();
+                    assert!(wide.lut > narrow.lut, "LUT vs acc k={k} lanes={lanes} acc={acc}");
+                    assert!(wide.ff > narrow.ff, "FF vs acc k={k} lanes={lanes} acc={acc}");
+                }
+                let one = ResourceModel::new(8, 20, lanes).with_k(k).total();
+                let two = ResourceModel::new(8, 20, lanes * 2).with_k(k).total();
+                assert!(two.lut > one.lut, "LUT vs lanes k={k} lanes={lanes}");
+                assert!(two.ff > one.ff, "FF vs lanes k={k} lanes={lanes}");
+                assert!(two.bram_mb > one.bram_mb, "BRAM vs lanes k={k} lanes={lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_network_picks_up_kernel_size() {
+        use crate::snn::network::testutil::{cifar_network, random_network};
+        let paper = random_network(7);
+        assert_eq!(ResourceModel::for_network(&paper, 8).k, 3);
+        let cifar = cifar_network(7);
+        let m = ResourceModel::for_network(&cifar, 8);
+        assert_eq!(m.k, cifar.max_k());
+        assert!(m.total().lut > ResourceModel::for_network(&paper, 8).total().lut);
     }
 }

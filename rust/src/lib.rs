@@ -383,6 +383,56 @@
 //! assert!(h.quantile(1.0) >= 969 && h.quantile(1.0) <= 1000);
 //! ```
 //!
+//! ## Cost & comparison
+//!
+//! The paper's core claim is quantitative: few fully utilized PEs beat
+//! large underutilized arrays on latency, resources, AND energy (Tables
+//! I/II). The [`cost`] module carries the analytic side of that claim,
+//! and `sacsnn bench --compare` runs the head-to-head: it sweeps input
+//! sparsity × bit width × backend (sim, dense-mac, systolic, aer-array),
+//! measures modeled cycles and PE utilization per cell, charges each
+//! architecture for the fabric its PE count implies
+//! ([`cost::ResourceModel`], k²-PE parametrized so layer-zoo kernels are
+//! costed honestly) and converts cycles to energy/frame through
+//! [`cost::PowerModel::energy_j`] — writing every cell to the
+//! machine-readable `BENCH_compare.json`. `sacsnn eval --sweep-bits`
+//! adds the Table IV axis: the same net rebuilt across accumulator
+//! widths, scored by prediction agreement against the widest width.
+//!
+//! The cost model also feeds scheduling: [`traffic::CostModel`] exposes
+//! absolute [`traffic::CostModel::nominal_cycles`] and a cycles→energy
+//! view ([`traffic::CostModel::estimate_energy_j`]), and the cost-aware
+//! server uses the nominal to weight WRR visits so equal tenant weight
+//! buys equal modeled *cycle* share, not equal frame share — with
+//! per-tenant FIFO order untouched, so results stay bit-identical (the
+//! `traffic` parity suite referees heterogeneous-net fleets too).
+//!
+//! ```
+//! use sacsnn::cost::{PowerModel, ResourceModel, CLOCK_HZ};
+//! use sacsnn::snn::network::testutil::random_network;
+//! use sacsnn::traffic::CostModel;
+//!
+//! // Structural resource model: k² PEs per unit (k = 3 is the paper's
+//! // Table II anchor); `for_network` picks up a net's largest kernel.
+//! let net = random_network(42);
+//! let paper = ResourceModel::new(8, 20, 8);
+//! assert_eq!(ResourceModel::for_network(&net, 8).k, 3);
+//! assert!(paper.with_k(5).total().lut > paper.total().lut);
+//!
+//! // Cycles → energy: the PowerModel bridge behind `bench --compare`
+//! // and the traffic cost model's energy view.
+//! let power = PowerModel::new(8, 8);
+//! let one_second = power.energy_j(CLOCK_HZ, 0.65); // J = W × s
+//! assert!((one_second - power.watts(0.65)).abs() < 1e-9);
+//!
+//! let model = CostModel::from_network(&net);
+//! assert!(model.nominal_cycles() >= 1);
+//! assert!(
+//!     model.estimate_energy_j(10_000, &power, 0.65)
+//!         > model.estimate_energy_j(0, &power, 0.65)
+//! );
+//! ```
+//!
 //! ## Module map
 //!
 //! * [`engine`] — the unified serving surface: `Backend` trait, `Frame` /
@@ -411,7 +461,11 @@
 //!   models: a dense sliding-window accelerator, a SIES-like systolic
 //!   array, and an ASIE-like fmap-sized AER PE array.
 //! * [`cost`] — the FPGA resource (LUT/FF/BRAM/DSP) and power model that
-//!   regenerates Tables I/II/V and Fig. 12.
+//!   regenerates Tables I/II/V and Fig. 12 (§Cost & comparison):
+//!   k²-PE-parametrized [`cost::ResourceModel`] (k = 3 reproduces the
+//!   Table II anchors bit-for-bit) and the cycles→energy bridge
+//!   [`cost::PowerModel::energy_j`] behind `bench --compare` and the
+//!   scheduler's energy view.
 //! * [`snn`] — network description, saturating fixed-point arithmetic,
 //!   m-TTFS input encoding and AER conversion.
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas golden
@@ -419,7 +473,9 @@
 //!   Gated behind the `pjrt` cargo feature; stubbed otherwise.
 //! * [`coordinator`] — the multi-tenant serving layer (§Serving): a
 //!   persistent [`coordinator::Server`] with per-tenant queues,
-//!   weighted-fair draining, a content-hash plan cache, and streaming
+//!   weighted-fair draining (WRR visits normalized by each tenant's
+//!   modeled nominal cycles when cost-aware — §Cost & comparison), a
+//!   content-hash plan cache, and streaming
 //!   [`coordinator::Session`]s that route through
 //!   `Backend::infer_stream` to any `Box<dyn Backend>` — including
 //!   heterogeneous pools, multi-core

@@ -17,6 +17,10 @@
 //! sacsnn bench --replay [--tenants 4] [--frames 64] [--seed 1] [--workers 4]
 //!                   [--batch 8] [--pace 0.0] [--cost-aware true] [--chaos]
 //!                   [--out BENCH_sim.json]
+//! sacsnn bench --compare [--net paper-mnist] [--bits-list 8,16] [--lanes 8]
+//!                   [--n 8] [--seed 42] [--out BENCH_compare.json]
+//! sacsnn eval --sweep-bits [--net paper-mnist] [--bits-list 6,8,10,12,16,20,31]
+//!                   [--lanes 8] [--n 16] [--seed 42]
 //! sacsnn golden     [--backend sim] [--n 10]   backend vs AOT JAX model (PJRT)
 //! sacsnn backends                              list registered backends
 //! sacsnn nets                                  list built-in net presets (--net)
@@ -59,6 +63,14 @@
 //! sessions, prints p50/p99/p999 submit→reply latency per tenant, and
 //! merges the `replay_*` fields into `BENCH_sim.json` so
 //! `ci/perf_gate.py` can hold the p99 ceiling.
+//!
+//! Cost & comparison (see `lib.rs` §Cost & comparison): `bench --compare`
+//! sweeps input sparsity × bit width × backend and prints paper-style
+//! comparison rows (modeled cycles, LUT/FF/BRAM/DSP, energy/frame, host
+//! images/s), writing machine-readable `BENCH_compare.json`;
+//! `eval --sweep-bits` reproduces the Table IV accuracy-vs-cost axis by
+//! rebuilding the same net across accumulator widths and scoring
+//! prediction agreement against the widest width in the sweep.
 
 use sacsnn::coordinator::{Server, ServerConfig, Session};
 use sacsnn::data::Dataset;
@@ -130,9 +142,29 @@ impl Args {
         }
     }
 
+    /// The `--bits` flag, validated against the accumulator range the
+    /// engine supports. `Sat::from_bits` asserts 2..=31; catching it
+    /// here turns a CLI panic into a typed error naming the range.
+    fn bits(&self) -> Result<u32> {
+        let bits: u32 = self.get("bits", 8)?;
+        validate_bits(bits)?;
+        Ok(bits)
+    }
+
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+}
+
+/// Shared `--bits` range check (also applied to each entry of
+/// `eval --sweep-bits --bits-list`).
+fn validate_bits(bits: u32) -> Result<()> {
+    if !(2..=31).contains(&bits) {
+        return Err(EngineError::msg(format!(
+            "invalid value '{bits}' for --bits (accumulator width must be in 2..=31)"
+        )));
+    }
+    Ok(())
 }
 
 fn load_env(dataset: &str, bits: u32) -> Result<(Arc<Network>, Dataset)> {
@@ -181,7 +213,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         return cmd_run_net(args);
     }
     let dataset = args.get_str("dataset", "mnist");
-    let bits: u32 = args.get("bits", 8)?;
+    let bits = args.bits()?;
     let lanes: usize = args.get("lanes", 8)?;
     let index: usize = args.get("index", 0)?;
     let batch: usize = args.get("batch", 1)?;
@@ -286,11 +318,14 @@ fn cmd_run_net(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
+    if args.has("sweep-bits") {
+        return cmd_eval_sweep_bits(args);
+    }
     if args.has("net") {
         return cmd_eval_net(args);
     }
     let dataset = args.get_str("dataset", "mnist");
-    let bits: u32 = args.get("bits", 8)?;
+    let bits = args.bits()?;
     let lanes: usize = args.get("lanes", 8)?;
     let batch: usize = args.get("batch", 16)?.max(1);
     let threads: usize = args.get("threads", 1)?;
@@ -422,7 +457,7 @@ fn feed_with_backpressure(
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let dataset = args.get_str("dataset", "mnist");
-    let bits: u32 = args.get("bits", 8)?;
+    let bits = args.bits()?;
     let cfg = ServerConfig {
         workers: args.get("workers", 4)?,
         backend: args.backend()?,
@@ -521,6 +556,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if args.has("replay") {
         return cmd_bench_replay(args);
     }
+    if args.has("compare") {
+        return cmd_bench_compare(args);
+    }
 
     let lanes: usize = args.get("lanes", 8)?;
     let threads: usize = args.get("threads", 4)?.max(1);
@@ -530,7 +568,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let kind = args.backend()?;
 
     let dataset = args.get_str("dataset", "mnist");
-    let bits: u32 = args.get("bits", 8)?;
+    let bits = args.bits()?;
     let (net, frames, mode) = if args.has("net") {
         // --net: bench the spec'd topology on seeded synthetic frames
         let (net, frames) = net_env(args, n)?;
@@ -801,6 +839,278 @@ fn cmd_bench_replay(args: &Args) -> Result<()> {
     std::fs::write(&path, format!("{}\n", Json::Obj(obj)))
         .map_err(|e| EngineError::msg(format!("cannot write {path}: {e}")))?;
     println!("  merged replay_* fields into {path}");
+    Ok(())
+}
+
+/// Resolve a `--net` argument to a raw topology spec string (preset
+/// names expand; anything else passes through to `spec::parse`).
+fn resolve_spec(arg: &str) -> String {
+    spec::preset(arg).map(|p| p.spec.to_string()).unwrap_or_else(|| arg.to_string())
+}
+
+/// Parse a `--bits-list` argument ("8,16"), validating every entry
+/// against the 2..=31 accumulator/weight range.
+fn parse_bits_list(s: &str) -> Result<Vec<u32>> {
+    let list: Vec<u32> = s
+        .split(',')
+        .map(|t| {
+            let t = t.trim();
+            t.parse::<u32>()
+                .map_err(|_| EngineError::msg(format!("invalid entry '{t}' in --bits-list")))
+        })
+        .collect::<Result<_>>()?;
+    if list.is_empty() {
+        return Err(EngineError::msg("--bits-list must name at least one width"));
+    }
+    for &b in &list {
+        validate_bits(b)?;
+    }
+    Ok(list)
+}
+
+/// Build the spec'd topology with explicit weight/accumulator widths
+/// (the bit-width axes of `bench --compare` and `eval --sweep-bits`).
+fn build_net_bits(spec_str: &str, seed: u64, weight_bits: u32, acc_bits: u32) -> Result<Network> {
+    use sacsnn::snn::network::NetworkBuilder;
+    let ((h, w, c), layers, n_classes) = spec::parse(spec_str)?;
+    let mut b = NetworkBuilder::new(h, w, c).seed(seed).acc_bits(acc_bits);
+    b = b.weight_bits(weight_bits);
+    for l in layers {
+        b = b.layer(l);
+    }
+    b.classifier(n_classes).build()
+}
+
+/// Seeded frames with a controlled fraction of zero pixels — the input
+/// activation sparsity axis of the showdown sweep.
+fn sparse_frames(
+    shape: (usize, usize, usize),
+    n: usize,
+    zero_frac: f64,
+    seed: u64,
+) -> Result<Vec<Frame>> {
+    use sacsnn::util::prng::Pcg;
+    let (h, w, c) = shape;
+    let mut rng = Pcg::new(seed ^ 0x5eed_cafe);
+    (0..n)
+        .map(|_| {
+            let data = (0..h * w * c)
+                .map(|_| if rng.chance(zero_frac) { 0 } else { 1 + rng.below(255) as u8 })
+                .collect();
+            Frame::from_u8(h, w, c, data)
+        })
+        .collect()
+}
+
+/// One backend's measurement over a frame set.
+struct CellMeasure {
+    avg_cycles: f64,
+    utilization: f64,
+    host_ips: f64,
+    n_pes: usize,
+    clock_hz: f64,
+    preds: Vec<usize>,
+}
+
+fn measure_backend(
+    net: &Arc<Network>,
+    kind: BackendKind,
+    lanes: usize,
+    frames: &[Frame],
+) -> Result<CellMeasure> {
+    let mut backend = EngineBuilder::new(Arc::clone(net)).lanes(lanes).build(kind)?;
+    let cm = backend.cycle_model();
+    let mut outs = Vec::new();
+    backend.infer_batch(&frames[..1], &mut outs)?; // warm-up
+    let mut cycles = 0u64;
+    let mut busy = 0u64;
+    let mut unit = 0u64;
+    let mut preds = Vec::with_capacity(frames.len());
+    let t0 = Instant::now();
+    for chunk in frames.chunks(16) {
+        backend.infer_batch(chunk, &mut outs)?;
+        for r in &outs {
+            cycles += r.stats.total_cycles;
+            for l in &r.stats.layers {
+                busy += l.pe_busy;
+                unit += l.conv_cycles + l.thresh_cycles;
+            }
+            preds.push(r.pred);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(CellMeasure {
+        avg_cycles: cycles as f64 / frames.len() as f64,
+        utilization: if unit == 0 { 0.0 } else { (busy as f64 / unit as f64).min(1.0) },
+        host_ips: frames.len() as f64 / wall.max(1e-9),
+        n_pes: cm.n_pes,
+        clock_hz: cm.clock_hz,
+        preds,
+    })
+}
+
+/// `bench --compare`: the cross-architecture showdown (the paper's
+/// Tables I/II head-to-head). Sweeps input sparsity ×
+/// bit width × backend (sim, dense-mac, systolic, aer-array) over the
+/// spec'd net, printing per cell: modeled cycles/frame → FPS, PE
+/// utilization, cost-model LUT/FF/BRAM/DSP and energy/frame at an
+/// equivalent-PE lane count (so a 256-PE systolic array is charged for
+/// 256 PEs of fabric), plus host images/s. Writes every cell to the
+/// machine-readable `--out` artifact (default `BENCH_compare.json`).
+fn cmd_bench_compare(args: &Args) -> Result<()> {
+    use sacsnn::cost::{PowerModel, ResourceModel, CLOCK_HZ};
+    use sacsnn::util::json::Json;
+
+    let lanes: usize = args.get("lanes", 8)?.max(1);
+    let n: usize = args.get("n", 8)?.max(1);
+    let seed: u64 = args.get("seed", 42)?;
+    let spec_str = resolve_spec(&args.get_str("net", "paper-mnist"));
+    let bits_list = parse_bits_list(&args.get_str("bits-list", "8,16"))?;
+    let backends =
+        [BackendKind::Sim, BackendKind::DenseMac, BackendKind::Systolic, BackendKind::AerArray];
+    // Input activation sparsity axis: fraction of zero pixels per frame.
+    let sparsities = [0.9, 0.5, 0.1];
+
+    println!("showdown [{spec_str}] ×{lanes} lanes, {n} frames/cell, seed {seed}");
+    let mut cells: Vec<Json> = Vec::new();
+    for &wbits in &bits_list {
+        // paper pairing: 8-bit weights / 20-bit accumulators, 16 / 24.
+        let acc_bits = match wbits {
+            8 => 20,
+            16 => 24,
+            b => (b + 12).min(31),
+        };
+        let net = Arc::new(build_net_bits(&spec_str, seed, wbits, acc_bits)?);
+        let k = net.max_k().max(1);
+        for &sparsity in &sparsities {
+            let frames = sparse_frames(net.input_shape(), n, sparsity, seed)?;
+            println!(
+                "\n{wbits}-bit weights / {acc_bits}-bit accumulators, input sparsity {:.0}%:",
+                sparsity * 100.0
+            );
+            println!(
+                "  {:<10} {:>9} {:>9} {:>6} {:>9} {:>9} {:>8} {:>6} {:>9} {:>10}",
+                "backend",
+                "cyc/frame",
+                "FPS",
+                "util%",
+                "LUT",
+                "FF",
+                "BRAM Mb",
+                "DSP",
+                "mJ/frame",
+                "host im/s"
+            );
+            for kind in backends {
+                let m = measure_backend(&net, kind, lanes, &frames)?;
+                // Charge each architecture for the fabric its PE count
+                // implies: lanes of k² PEs equivalent to its array.
+                let eq_lanes = m.n_pes.div_ceil(k * k).max(1);
+                let res = ResourceModel::for_network(&net, eq_lanes).total();
+                let energy_mj =
+                    PowerModel::new(wbits, eq_lanes).energy_j(m.avg_cycles, m.utilization) * 1e3;
+                let fps = m.clock_hz / m.avg_cycles.max(1.0);
+                println!(
+                    "  {:<10} {:>9.0} {:>9.0} {:>6.1} {:>9.0} {:>9.0} {:>8.2} {:>6.0} {:>9.3} {:>10.1}",
+                    kind.name(),
+                    m.avg_cycles,
+                    fps,
+                    m.utilization * 100.0,
+                    res.lut,
+                    res.ff,
+                    res.bram_mb,
+                    res.dsp,
+                    energy_mj,
+                    m.host_ips,
+                );
+                let mut o = BTreeMap::new();
+                o.insert("backend".into(), Json::Str(kind.name().into()));
+                o.insert("bits".into(), Json::Num(wbits as f64));
+                o.insert("acc_bits".into(), Json::Num(acc_bits as f64));
+                o.insert("sparsity".into(), Json::Num(sparsity));
+                o.insert("avg_cycles".into(), Json::Num(m.avg_cycles));
+                o.insert("fps".into(), Json::Num(fps));
+                o.insert("pe_utilization".into(), Json::Num(m.utilization));
+                o.insert("n_pes".into(), Json::Num(m.n_pes as f64));
+                o.insert("eq_lanes".into(), Json::Num(eq_lanes as f64));
+                o.insert("lut".into(), Json::Num(res.lut));
+                o.insert("ff".into(), Json::Num(res.ff));
+                o.insert("bram_mb".into(), Json::Num(res.bram_mb));
+                o.insert("dsp".into(), Json::Num(res.dsp));
+                o.insert("energy_mj_per_frame".into(), Json::Num(energy_mj));
+                o.insert("images_per_sec_host".into(), Json::Num(m.host_ips));
+                cells.push(Json::Obj(o));
+            }
+        }
+    }
+
+    let path = args.get_str("out", "BENCH_compare.json");
+    let mut obj = BTreeMap::new();
+    obj.insert("net".into(), Json::Str(spec_str));
+    obj.insert("lanes".into(), Json::Num(lanes as f64));
+    obj.insert("frames_per_cell".into(), Json::Num(n as f64));
+    obj.insert("seed".into(), Json::Num(seed as f64));
+    obj.insert("clock_mhz".into(), Json::Num(CLOCK_HZ / 1e6));
+    obj.insert("cells".into(), Json::Arr(cells));
+    std::fs::write(&path, format!("{}\n", Json::Obj(obj)))
+        .map_err(|e| EngineError::msg(format!("cannot write {path}: {e}")))?;
+    println!("\nwrote {path}");
+    Ok(())
+}
+
+/// `eval --sweep-bits`: the accuracy-vs-cost matrix of paper Table IV.
+/// Rebuilds the spec'd net at each accumulator width in `--bits-list`
+/// (same seeded weights), runs the same seeded frames through the sim
+/// backend, and reports prediction agreement against the widest width
+/// in the sweep next to the width's modeled cost (LUT, energy/frame).
+/// Artifact-free: labels are replaced by widest-width agreement, the
+/// quantization-error signal Table IV tracks.
+fn cmd_eval_sweep_bits(args: &Args) -> Result<()> {
+    use sacsnn::cost::{PowerModel, ResourceModel};
+
+    let lanes: usize = args.get("lanes", 8)?.max(1);
+    let n: usize = args.get("n", 16)?.max(1);
+    let seed: u64 = args.get("seed", 42)?;
+    let wbits = args.bits()?;
+    let spec_str = resolve_spec(&args.get_str("net", "paper-mnist"));
+    let bits_list = parse_bits_list(&args.get_str("bits-list", "6,8,10,12,16,20,31"))?;
+    let reference_bits = *bits_list.iter().max().expect("list is non-empty");
+
+    // One measurement per accumulator width, same weights + frames.
+    let mut rows = Vec::with_capacity(bits_list.len());
+    for &acc_bits in &bits_list {
+        let net = Arc::new(build_net_bits(&spec_str, seed, wbits, acc_bits)?);
+        let frames = sparse_frames(net.input_shape(), n, 0.5, seed)?;
+        let m = measure_backend(&net, BackendKind::Sim, lanes, &frames)?;
+        let res = ResourceModel::for_network(&net, lanes).total();
+        let energy_mj = PowerModel::new(wbits, lanes).energy_j(m.avg_cycles, m.utilization) * 1e3;
+        rows.push((acc_bits, m, res, energy_mj));
+    }
+    let reference: Vec<usize> = rows
+        .iter()
+        .find(|(b, ..)| *b == reference_bits)
+        .map(|(_, m, ..)| m.preds.clone())
+        .expect("reference width measured");
+
+    println!(
+        "sweep-bits [{spec_str}] {wbits}-bit weights ×{lanes} lanes, {n} frames, \
+         agreement vs {reference_bits}-bit accumulators:"
+    );
+    println!(
+        "  {:>8} {:>7} {:>9} {:>9} {:>9}",
+        "acc bits", "agree%", "cyc/frame", "LUT", "mJ/frame"
+    );
+    for (acc_bits, m, res, energy_mj) in &rows {
+        let agree = m.preds.iter().zip(&reference).filter(|(a, b)| a == b).count();
+        println!(
+            "  {:>8} {:>7.1} {:>9.0} {:>9.0} {:>9.3}",
+            acc_bits,
+            100.0 * agree as f64 / n as f64,
+            m.avg_cycles,
+            res.lut,
+            energy_mj
+        );
+    }
     Ok(())
 }
 

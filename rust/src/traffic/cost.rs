@@ -28,6 +28,7 @@
 //! a 256-entry per-byte threshold-count LUT (built once at construction)
 //! turns the event count into one table lookup per pixel.
 
+use crate::cost::PowerModel;
 use crate::engine::Frame;
 use crate::sim::RunStats;
 use crate::snn::network::Network;
@@ -147,6 +148,36 @@ impl CostModel {
         let units = cycles / self.nominal_cycles * FRAME_COST_UNIT as f64;
         (units.round() as u64).max(1)
     }
+
+    /// Absolute modeled cycles behind one nominal frame — what a cost
+    /// tag of [`FRAME_COST_UNIT`] corresponds to on the device. Tags are
+    /// *relative to each model's own nominal*, so this is the exchange
+    /// rate the scheduler needs to compare tenants serving different
+    /// networks (the injector's cost-weighted WRR visits; see
+    /// `coordinator::server`).
+    pub fn nominal_cycles(&self) -> u64 {
+        self.nominal_cycles.round().max(1.0) as u64
+    }
+
+    /// Cycles→time view: estimated device seconds for a frame producing
+    /// `events` m-TTFS input events on a `clock_hz` device.
+    pub fn estimate_seconds(&self, events: u64, clock_hz: f64) -> f64 {
+        self.estimate(events) as f64 / clock_hz.max(1.0)
+    }
+
+    /// Cycles→energy view, backed by the structural power model: joules
+    /// to serve a frame of `events` input events on the accelerator
+    /// `power` describes, at the given PE utilization. Monotone in
+    /// `events` (non-negative slope × non-negative watts).
+    pub fn estimate_energy_j(&self, events: u64, power: &PowerModel, utilization: f64) -> f64 {
+        power.energy_j(self.estimate(events) as f64, utilization)
+    }
+
+    /// [`Self::estimate_energy_j`] for a concrete frame — LUT-based
+    /// event counting, allocation-free like [`Self::frame_cost`].
+    pub fn frame_energy_j(&self, frame: &Frame, power: &PowerModel, utilization: f64) -> f64 {
+        self.estimate_energy_j(self.frame_events(frame), power, utilization)
+    }
 }
 
 #[cfg(test)]
@@ -197,6 +228,57 @@ mod tests {
         let data: Vec<u8> = (0..h * w * c).map(|_| rng.below(256) as u8).collect();
         let frame = Frame::from_u8(h, w, c, data).unwrap();
         assert_eq!(model.frame_events(&frame), frame.event_estimate(&net.thresholds));
+    }
+
+    #[test]
+    fn energy_view_ranks_sparse_below_dense_and_floors_at_base() {
+        let net = random_network(15);
+        let (h, w, c) = net.input_shape();
+        let model = CostModel::from_network(&net);
+        let power = PowerModel::new(net.bits, 8);
+        let dark = Frame::from_u8(h, w, c, vec![0; h * w * c]).unwrap();
+        let bright = Frame::from_u8(h, w, c, vec![250; h * w * c]).unwrap();
+        let (ed, eb) = (
+            model.frame_energy_j(&dark, &power, 0.65),
+            model.frame_energy_j(&bright, &power, 0.65),
+        );
+        assert!(ed < eb, "dark={ed} bright={eb}");
+        // even a zero-event frame pays the event-independent base cycles
+        assert!(model.estimate_energy_j(0, &power, 0.0) > 0.0);
+        // the views agree: energy == watts × estimated seconds
+        let events = model.frame_events(&bright);
+        let want = power.watts(0.65) * model.estimate_seconds(events, power.clock_hz);
+        assert!((eb - want).abs() < 1e-12, "{eb} vs {want}");
+        // monotone in events
+        check("energy monotone in events", 100, |rng| {
+            let a = rng.below(10_000) as u64;
+            let b = a + rng.below(10_000) as u64;
+            let (ea, eb) = (
+                model.estimate_energy_j(a, &power, 0.5),
+                model.estimate_energy_j(b, &power, 0.5),
+            );
+            if ea <= eb {
+                Ok(())
+            } else {
+                Err(format!("energy({a})={ea} > energy({b})={eb}"))
+            }
+        });
+    }
+
+    #[test]
+    fn nominal_cycles_scale_with_network_size() {
+        use crate::snn::network::testutil::cifar_network;
+        // The cross-tenant exchange rate: a deeper/wider net's nominal
+        // frame is worth more absolute cycles than the paper net's.
+        let small = CostModel::from_network(&random_network(21));
+        let large = CostModel::from_network(&cifar_network(21));
+        assert!(small.nominal_cycles() >= 1);
+        assert!(
+            large.nominal_cycles() > small.nominal_cycles(),
+            "cifar {} vs paper {}",
+            large.nominal_cycles(),
+            small.nominal_cycles()
+        );
     }
 
     #[test]

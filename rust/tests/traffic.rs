@@ -5,14 +5,18 @@
 //! dispatch changes WHEN work is grouped, never WHAT is computed: for the
 //! same trace, a cost-aware server and a frame-count server must deliver
 //! bit-identical per-tenant response sequences, both equal to a
-//! sequential `infer` loop on a fresh backend. The property tests pin the
-//! pieces the harness's numbers rest on: histogram quantiles bounded by
-//! min/max and monotone in rank, cost estimates monotone in event count,
-//! and trace generation deterministic per seed.
+//! sequential `infer` loop on a fresh backend. The same contract covers
+//! the cost-weighted WRR: with heterogeneous per-tenant networks the
+//! scheduler reweights visits by modeled nominal cycles, and results must
+//! still be bit-identical. The property tests pin the pieces the
+//! harness's numbers rest on: histogram quantiles bounded by min/max and
+//! monotone in rank, cost estimates monotone in event count, and trace
+//! generation deterministic per seed.
 
 use sacsnn::coordinator::{Server, ServerConfig, TenantConfig};
 use sacsnn::engine::{Backend, BackendKind, EngineBuilder};
 use sacsnn::snn::network::testutil::random_network;
+use sacsnn::snn::network::{spec, Network};
 use sacsnn::traffic::{generate, CostModel, LatencyHistogram, TraceEvent, TraceSpec};
 use sacsnn::util::prop;
 use std::sync::Arc;
@@ -20,16 +24,13 @@ use std::sync::Arc;
 /// `(pred, logits, sim_cycles)` of one served frame.
 type Served = (usize, Vec<i64>, u64);
 
-/// Serve `trace` through a server with the given `cost_aware` setting and
-/// return, per tenant, the `(pred, logits, sim_cycles)` sequence in feed
-/// order. Cross-tenant interleave is scheduling-dependent by design, so
-/// the per-tenant sequence is the bit-identity observable.
-fn serve_trace(
-    net: &Arc<sacsnn::snn::network::Network>,
-    trace: &[TraceEvent],
-    tenants: usize,
-    cost_aware: bool,
-) -> Vec<Vec<Served>> {
+/// Serve `trace` through a server with the given `cost_aware` setting —
+/// one tenant per entry of `nets` — and return, per tenant, the
+/// `(pred, logits, sim_cycles)` sequence in feed order. Cross-tenant
+/// interleave is scheduling-dependent by design, so the per-tenant
+/// sequence is the bit-identity observable.
+fn serve_trace(nets: &[Arc<Network>], trace: &[TraceEvent], cost_aware: bool) -> Vec<Vec<Served>> {
+    let tenants = nets.len();
     let server = Server::start(ServerConfig {
         workers: 2,
         batch_size: 4,
@@ -38,7 +39,7 @@ fn serve_trace(
     })
     .unwrap();
     let mut sessions = Vec::with_capacity(tenants);
-    for _ in 0..tenants {
+    for net in nets {
         let tenant = server
             .register_tenant(
                 Arc::clone(net),
@@ -75,8 +76,9 @@ fn cost_packed_dispatch_is_bit_identical_to_frame_count_dispatch() {
     };
     let trace = generate(&spec);
 
-    let packed = serve_trace(&net, &trace, spec.tenants, true);
-    let counted = serve_trace(&net, &trace, spec.tenants, false);
+    let nets = vec![Arc::clone(&net); spec.tenants];
+    let packed = serve_trace(&nets, &trace, true);
+    let counted = serve_trace(&nets, &trace, false);
     assert_eq!(packed, counted, "cost-aware packing changed results");
 
     // ...and both match a sequential infer loop on a fresh backend.
@@ -87,6 +89,48 @@ fn cost_packed_dispatch_is_bit_identical_to_frame_count_dispatch() {
         for (i, ev) in frames.iter().enumerate() {
             let want = seq.infer(&ev.frame).unwrap();
             let (pred, logits, cycles) = &packed[tenant][i];
+            assert_eq!(*pred, want.pred, "tenant {tenant} frame {i}");
+            assert_eq!(*logits, want.logits, "tenant {tenant} frame {i}");
+            assert_eq!(*cycles, want.stats.total_cycles, "tenant {tenant} frame {i}");
+        }
+    }
+}
+
+#[test]
+fn cost_weighted_wrr_with_heterogeneous_nets_is_bit_identical() {
+    // Two topologies with the same input shape but different modeled
+    // cost: the paper net vs a deeper/wider 28×28 net. With cost_aware
+    // on, equal-weight tenants get WRR visits normalized by nominal
+    // cycles (the cheap net is visited more often) — and the per-tenant
+    // results must STILL match both the frame-count scheduler and a
+    // sequential infer loop on each tenant's own network.
+    let light = Arc::new(random_network(2025));
+    let heavy = Arc::new(spec::build("28x28x1-16C5p2-P2-32C3-16C3-F10", 2025).unwrap());
+    assert_ne!(
+        CostModel::from_network(&light).nominal_cycles(),
+        CostModel::from_network(&heavy).nominal_cycles(),
+        "nets must differ in modeled cost for the reweighting to engage"
+    );
+    let nets = vec![Arc::clone(&light), Arc::clone(&heavy), Arc::clone(&light)];
+    let spec_t = TraceSpec {
+        tenants: nets.len(),
+        frames_per_tenant: 12,
+        shape: light.input_shape(),
+        ..Default::default()
+    };
+    let trace = generate(&spec_t);
+
+    let weighted = serve_trace(&nets, &trace, true);
+    let uniform = serve_trace(&nets, &trace, false);
+    assert_eq!(weighted, uniform, "cost-weighted WRR changed results");
+
+    for (tenant, net) in nets.iter().enumerate() {
+        let mut seq = EngineBuilder::new(Arc::clone(net)).lanes(2).build(BackendKind::Sim).unwrap();
+        let frames: Vec<_> = trace.iter().filter(|e| e.tenant == tenant).collect();
+        assert_eq!(weighted[tenant].len(), frames.len(), "tenant {tenant}: every frame served");
+        for (i, ev) in frames.iter().enumerate() {
+            let want = seq.infer(&ev.frame).unwrap();
+            let (pred, logits, cycles) = &weighted[tenant][i];
             assert_eq!(*pred, want.pred, "tenant {tenant} frame {i}");
             assert_eq!(*logits, want.logits, "tenant {tenant} frame {i}");
             assert_eq!(*cycles, want.stats.total_cycles, "tenant {tenant} frame {i}");
