@@ -203,11 +203,7 @@ def ratchet(measured: dict, base: dict) -> dict:
     Informational fields are refreshed from the measured artifact.
     Raises ValueError if a gated field is missing from the measurement.
     """
-    missing = [
-        f
-        for f in (*THROUGHPUT_FIELDS, *LATENCY_FIELDS, *AVAILABILITY_FIELDS, ALLOC_FIELD)
-        if f not in measured
-    ]
+    missing = [f for f in gated_fields() if f not in measured]
     if missing:
         raise ValueError(f"measured artifact is missing gated fields: {missing}")
     out = dict(measured)
@@ -251,8 +247,15 @@ def render(rows, failures) -> str:
     return "### Perf gate\n\n" + "\n".join(md) + f"\n\n**{verdict}**\n"
 
 
+def gated_fields() -> tuple:
+    """Every field the gate hard-enforces, in report order."""
+    return (*THROUGHPUT_FIELDS, *LATENCY_FIELDS, *AVAILABILITY_FIELDS, ALLOC_FIELD)
+
+
 def selftest() -> int:
-    """Unit-style checks of the gate and ratchet math (no files, no deps)."""
+    """Unit-style checks of the gate and ratchet math, plus a sync check
+    of the gated-field list against the committed baseline (plain
+    python3, no deps)."""
     base = {
         "frames_per_s": 100.0,
         "images_per_sec_batched": 200.0,
@@ -386,6 +389,36 @@ def selftest() -> int:
         check("ratchet rejects artifacts missing gated fields", False)
     except ValueError:
         check("ratchet rejects artifacts missing gated fields", True)
+
+    # Sync check: every gated field must exist as a key in the committed
+    # baseline. The gate already hard-fails at *run* time when a gated
+    # field is missing from either artifact, but that run only happens in
+    # the perf job — this check makes the same drift (a bench field
+    # renamed without updating BENCH_baseline.json, or a field added to
+    # the gated tuples with no committed floor/ceiling) fail the cheap
+    # tier-1 selftest too, with a message naming the missing key.
+    committed = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                             "BENCH_baseline.json")
+    try:
+        with open(committed, encoding="utf-8") as f:
+            committed_keys = set(json.load(f))
+        stale = [field for field in gated_fields() if field not in committed_keys]
+        check(
+            "committed BENCH_baseline.json carries every gated field"
+            + (f" (missing: {stale})" if stale else ""),
+            not stale,
+        )
+        # And the self-test's own fixture baseline must model the real
+        # one: a gate behavior proven here is only evidence about CI if
+        # the fixture gates the same fields.
+        fixture_stale = [field for field in gated_fields() if field not in base]
+        check(
+            "selftest fixture baseline carries every gated field"
+            + (f" (missing: {fixture_stale})" if fixture_stale else ""),
+            not fixture_stale,
+        )
+    except (OSError, ValueError) as e:
+        check(f"committed BENCH_baseline.json is readable ({e})", False)
 
     failed = [name for name, ok in checks if not ok]
     print(f"selftest: {len(checks) - len(failed)}/{len(checks)} checks passed")

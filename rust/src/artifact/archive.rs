@@ -21,10 +21,15 @@ const MAGIC: u32 = 0x5341_4354;
 /// Element type of a stored tensor.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
+    /// 16-bit signed integer.
     I16,
+    /// 8-bit signed integer.
     I8,
+    /// 8-bit unsigned integer.
     U8,
 }
 
@@ -40,6 +45,7 @@ impl DType {
         })
     }
 
+    /// Bytes per element.
     pub fn size(self) -> usize {
         match self {
             DType::F32 | DType::I32 => 4,
@@ -52,16 +58,21 @@ impl DType {
 /// One tensor: shape + raw little-endian bytes.
 #[derive(Clone, Debug)]
 pub struct Tensor {
+    /// Element type.
     pub dtype: DType,
+    /// Shape, outermost first.
     pub dims: Vec<usize>,
+    /// Raw little-endian element bytes.
     pub data: Vec<u8>,
 }
 
 impl Tensor {
+    /// Element count (product of dims).
     pub fn len(&self) -> usize {
         self.dims.iter().product()
     }
 
+    /// Whether the tensor has zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -105,15 +116,18 @@ impl Tensor {
 /// A named collection of tensors.
 #[derive(Clone, Debug, Default)]
 pub struct Archive {
+    /// Name-to-tensor map (sorted).
     pub tensors: BTreeMap<String, Tensor>,
 }
 
 impl Archive {
+    /// Read and parse an archive file.
     pub fn load(path: &Path) -> crate::Result<Self> {
         let bytes = read_file(path)?;
         Self::parse(&bytes).with_context(|| format!("parsing archive {}", path.display()))
     }
 
+    /// Parse an archive from raw bytes.
     pub fn parse(bytes: &[u8]) -> crate::Result<Self> {
         let mut r = Cursor { buf: bytes, pos: 0 };
         let magic = r.u32()?;
@@ -148,6 +162,7 @@ impl Archive {
         Ok(Archive { tensors })
     }
 
+    /// The tensor named `name`, or a typed error.
     pub fn get(&self, name: &str) -> crate::Result<&Tensor> {
         self.tensors
             .get(name)

@@ -10,32 +10,46 @@ use std::path::Path;
 /// Per-variant quantization metadata (`quant.<dataset>_q<bits>`).
 #[derive(Clone, Debug)]
 pub struct QuantMeta {
+    /// Weight/activation bit width.
     pub bits: u32,
+    /// Accumulator bit width.
     pub acc_bits: u32,
+    /// Per-layer quantization scales.
     pub scales: Vec<f64>,
+    /// FC layer quantization scale.
     pub fc_scale: f64,
+    /// Quantized firing thresholds per layer.
     pub vt_q: Vec<i32>,
+    /// Saturation clamp of the accumulator.
     pub sat_max: i32,
 }
 
 /// Build-time accuracy record for one dataset.
 #[derive(Clone, Debug, Default)]
 pub struct AccuracyMeta {
+    /// Float ANN accuracy.
     pub ann: f64,
+    /// Float SNN accuracy.
     pub snn_float: f64,
+    /// 8-bit quantized SNN accuracy.
     pub snn_q8: f64,
+    /// 16-bit quantized SNN accuracy.
     pub snn_q16: f64,
 }
 
 /// Parsed `meta.json`.
 #[derive(Clone, Debug)]
 pub struct Meta {
+    /// m-TTFS timesteps.
     pub t_steps: usize,
+    /// m-TTFS input thresholds.
     pub thresholds: Vec<f32>,
+    /// The full parsed document.
     pub raw: Json,
 }
 
 impl Meta {
+    /// Read and parse `meta.json`.
     pub fn load(path: &Path) -> Result<Self> {
         let text = read_file_text(path)?;
         let raw = Json::parse(&text).context("parsing meta.json")?;

@@ -28,6 +28,7 @@ pub fn n_pes(net: &Network) -> usize {
         .unwrap_or(784)
 }
 
+/// Run one image through the AER-array cycle model.
 pub fn run(net: &Network, img: &[u8]) -> BaselineResult {
     let result = DenseRef::new(net).infer(img);
     let t = net.t_steps as u64;

@@ -18,6 +18,7 @@ pub fn n_pes(net: &Network) -> usize {
     net.max_k() * net.max_k()
 }
 
+/// Run one image through the dense-accelerator cycle model.
 pub fn run(net: &Network, img: &[u8]) -> BaselineResult {
     let result = DenseRef::new(net).infer(img);
     let t = net.t_steps as u64;

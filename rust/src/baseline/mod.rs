@@ -24,7 +24,9 @@ use crate::sim::dense_ref::DenseResult;
 /// Common result of a baseline run: functional output + cycle estimate.
 #[derive(Clone, Debug)]
 pub struct BaselineResult {
+    /// Functional output (logits, prediction, spike counts).
     pub result: DenseResult,
+    /// Modeled cycles for the image.
     pub cycles: u64,
     /// Average fraction of PEs doing useful work.
     pub pe_utilization: f64,
@@ -33,6 +35,7 @@ pub struct BaselineResult {
 }
 
 impl BaselineResult {
+    /// Frames per second at `clock_hz`.
     pub fn fps(&self, clock_hz: f64) -> f64 {
         if self.cycles == 0 {
             return 0.0;

@@ -18,8 +18,10 @@ use crate::snn::network::Network;
 /// Systolic array geometry (SIES uses a large 2D array; 16×16 here,
 /// scaled to the small benchmark network like the original).
 pub const ARRAY_ROWS: usize = 16;
+/// Columns of the modeled systolic array.
 pub const ARRAY_COLS: usize = 16;
 
+/// Run one image through the systolic-array cycle model.
 pub fn run(net: &Network, img: &[u8]) -> BaselineResult {
     let result = DenseRef::new(net).infer(img);
     let t = net.t_steps as u64;

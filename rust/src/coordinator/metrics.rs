@@ -29,12 +29,17 @@ pub struct Metrics {
 /// A point-in-time copy of the metrics.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Requests admitted past the quota gate.
     pub submitted: u64,
+    /// Requests refused at admission (quota or shutdown).
     pub rejected: u64,
+    /// Requests answered with a result.
     pub completed: u64,
     /// Requests whose backend returned a typed error instead of a result.
     pub failed: u64,
+    /// Dispatches formed by the injector.
     pub batches: u64,
+    /// Mean frames per dispatch.
     pub mean_batch: f64,
     /// Frames pulled INTO an already-running stream dispatch (beyond its
     /// initial batch) — the observable for workers staying filled across
@@ -54,10 +59,15 @@ pub struct MetricsSnapshot {
     /// Completed requests per second of cumulative batch service time —
     /// the worker-side throughput figure (queue wait excluded).
     pub batch_images_per_sec: f64,
+    /// Mean queue wait per completed request, microseconds.
     pub mean_queue_wait_us: f64,
+    /// Mean backend service time per completed request, microseconds.
     pub mean_service_us: f64,
+    /// Mean modeled simulator cycles per completed request.
     pub mean_sim_cycles: f64,
+    /// Worst observed queue wait, microseconds.
     pub max_queue_wait_us: u64,
+    /// Worst observed service time, microseconds.
     pub max_service_us: u64,
     /// Per-worker backend caches dropped for idle tenants (the
     /// idle-tenant eviction sweep; see `ServerConfig::idle_evict_dispatches`).
@@ -68,18 +78,22 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
+    /// Count one admitted request.
     pub fn submitted(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one refused admission.
     pub fn rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one typed-error reply.
     pub fn failed(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one dispatch of `n` frames.
     pub fn batch_formed(&self, n: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
@@ -110,6 +124,7 @@ impl Metrics {
         self.worker_restarts.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one delivered result with its latency split.
     pub fn completed(&self, queue_wait_us: u64, service_us: u64, sim_cycles: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.queue_wait_us_sum.fetch_add(queue_wait_us, Ordering::Relaxed);
@@ -119,6 +134,7 @@ impl Metrics {
         self.max_service_us.fetch_max(service_us, Ordering::Relaxed);
     }
 
+    /// A point-in-time copy of every counter.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);

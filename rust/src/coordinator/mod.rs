@@ -74,6 +74,7 @@ pub struct Response {
     /// Session mode: the frame's feed-order sequence number in its
     /// session. Shim mode: a coordinator-global request id.
     pub id: u64,
+    /// Predicted class index (argmax of the logits).
     pub pred: usize,
     /// One logit per class (Vec-backed; no fixed class-count assumption).
     pub logits: Vec<i64>,
@@ -115,6 +116,7 @@ pub struct Response {
 pub struct Coordinator {
     server: Server,
     tenant: Arc<TenantState>,
+    /// Aggregate service metrics of the underlying server.
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
 }
@@ -127,7 +129,7 @@ impl Coordinator {
         let tenant_cfg = cfg.tenant_defaults();
         let server = Server::start(cfg)?;
         let tenant_id = server.register_tenant(net, tenant_cfg)?;
-        Ok(Self::wrap(server, tenant_id))
+        Self::wrap(server, tenant_id)
     }
 
     /// Start one worker per provided backend, all serving one implicit
@@ -139,15 +141,17 @@ impl Coordinator {
         cfg: ServerConfig,
     ) -> Result<Self, EngineError> {
         let (server, tenant_id) = Server::start_with_pool(backends, cfg)?;
-        Ok(Self::wrap(server, tenant_id))
+        Self::wrap(server, tenant_id)
     }
 
-    fn wrap(server: Server, tenant_id: TenantId) -> Self {
-        let tenant = server
-            .tenant_arc(tenant_id)
-            .expect("freshly registered tenant must resolve");
+    fn wrap(server: Server, tenant_id: TenantId) -> Result<Self, EngineError> {
+        // A freshly registered tenant always resolves; answer typed
+        // rather than panic if that contract is ever broken.
+        let Some(tenant) = server.tenant_arc(tenant_id) else {
+            return Err(EngineError::UnknownTenant { tenant: tenant_id.0 });
+        };
         let metrics = Arc::clone(&server.metrics);
-        Coordinator { server, tenant, metrics, next_id: AtomicU64::new(0) }
+        Ok(Coordinator { server, tenant, metrics, next_id: AtomicU64::new(0) })
     }
 
     /// Shape-check, then enqueue with a per-request reply channel. A

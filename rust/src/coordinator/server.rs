@@ -65,7 +65,8 @@ use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use crate::util::dbc::{rank, OrderedCondvar, OrderedMutex, OrderedRwLock};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -283,22 +284,26 @@ impl InjectorState {
 
 /// The shared work queue the persistent pool parks on.
 pub(crate) struct Injector {
-    state: Mutex<InjectorState>,
-    cv: Condvar,
+    state: OrderedMutex<InjectorState>,
+    cv: OrderedCondvar,
 }
 
 impl Injector {
     fn new() -> Self {
         Injector {
-            state: Mutex::new(InjectorState {
-                queues: HashMap::new(),
-                entries: Vec::new(),
-                rr: Vec::new(),
-                cursor: 0,
-                queued: 0,
-                mode: Mode::Running,
-            }),
-            cv: Condvar::new(),
+            state: OrderedMutex::new(
+                rank::INJECTOR,
+                "injector",
+                InjectorState {
+                    queues: HashMap::new(),
+                    entries: Vec::new(),
+                    rr: Vec::new(),
+                    cursor: 0,
+                    queued: 0,
+                    mode: Mode::Running,
+                },
+            ),
+            cv: OrderedCondvar::new(),
         }
     }
 
@@ -307,25 +312,25 @@ impl Injector {
     /// built one) makes the tenant's WRR visits cost-normalized; `None`
     /// keeps classic visits-equal-weight behaviour.
     fn register(&self, tenant: TenantId, weight: u32, nominal_cycles: Option<u64>) {
-        let mut st = self.state.lock().expect("injector poisoned");
+        let mut st = self.state.lock();
         st.queues.insert(tenant, VecDeque::new());
         st.entries.push(RrEntry { tenant, weight, nominal_cycles });
         st.rebuild_rr();
     }
 
     pub(crate) fn is_running(&self) -> bool {
-        self.state.lock().expect("injector poisoned").mode == Mode::Running
+        self.state.lock().mode == Mode::Running
     }
 
     fn queue_depth(&self, tenant: TenantId) -> usize {
-        let st = self.state.lock().expect("injector poisoned");
+        let st = self.state.lock();
         st.queues.get(&tenant).map_or(0, |q| q.len())
     }
 
     /// Enqueue one item for its tenant; `Err(Shutdown)` once the server
     /// is draining or stopped.
     fn push(&self, tenant: TenantId, item: WorkItem) -> Result<(), EngineError> {
-        let mut st = self.state.lock().expect("injector poisoned");
+        let mut st = self.state.lock();
         if st.mode != Mode::Running {
             return Err(EngineError::Shutdown);
         }
@@ -353,9 +358,11 @@ impl Injector {
     /// changes — only dispatch membership — so results stay
     /// bit-identical to frame-count batching (the `traffic` parity
     /// suite referees this).
+    // hot-path: alloc-free (warmed dispatch: staged items move between
+    // pre-grown VecDeques; proven by tests/zero_alloc.rs)
     fn pop_dispatch(&self, max: usize, into: &mut VecDeque<WorkItem>) -> Dispatch {
         let budget = (max.max(1) as u64).saturating_mul(FRAME_COST_UNIT);
-        let mut st = self.state.lock().expect("injector poisoned");
+        let mut st = self.state.lock();
         loop {
             if st.queued > 0 {
                 let n = st.rr.len();
@@ -363,16 +370,18 @@ impl Injector {
                     let tid = st.rr[st.cursor % n];
                     st.cursor = (st.cursor + 1) % n;
                     let take = {
-                        let q = st.queues.get_mut(&tid).expect("rr lists unknown tenant");
                         let mut take = 0usize;
                         let mut spent = 0u64;
-                        while let Some(front) = q.front() {
-                            if take > 0 && spent.saturating_add(front.cost) > budget {
-                                break;
+                        if let Some(q) = st.queues.get_mut(&tid) {
+                            while let Some(cost) = q.front().map(|f| f.cost) {
+                                if take > 0 && spent.saturating_add(cost) > budget {
+                                    break;
+                                }
+                                let Some(item) = q.pop_front() else { break };
+                                spent = spent.saturating_add(cost);
+                                into.push_back(item);
+                                take += 1;
                             }
-                            spent = spent.saturating_add(front.cost);
-                            into.push_back(q.pop_front().expect("front checked"));
-                            take += 1;
                         }
                         take
                     };
@@ -381,14 +390,21 @@ impl Injector {
                         return Dispatch::Serve { tenant: tid, batch: take };
                     }
                 }
-                unreachable!("queued > 0 but every tenant queue is empty");
+                // Counter out of sync with the queues (should be
+                // impossible): resynchronize and fall through to the
+                // park below instead of spinning hot — or crashing the
+                // worker — on a count no queue backs.
+                crate::debug_invariant!(false, "queued > 0 but every tenant queue is empty");
+                st.queued = st.queues.values().map(VecDeque::len).sum();
             }
             match st.mode {
-                Mode::Running => st = self.cv.wait(st).expect("injector poisoned"),
+                Mode::Running => st = self.cv.wait(st),
                 Mode::Draining | Mode::Stopped => return Dispatch::Exit,
             }
         }
     }
+
+    // hot-path: end
 
     /// Re-enqueue retried frames at the FRONT of their tenant's queue,
     /// preserving their relative order (the head of `items` ends up
@@ -397,7 +413,7 @@ impl Injector {
     /// (a graceful drain still serves retried frames); `Err(Shutdown)`
     /// once stopped, leaving `items` untouched for the caller to fail.
     fn requeue_front(&self, tenant: TenantId, items: &mut Vec<WorkItem>) -> Result<(), EngineError> {
-        let mut st = self.state.lock().expect("injector poisoned");
+        let mut st = self.state.lock();
         if st.mode == Mode::Stopped {
             return Err(EngineError::Shutdown);
         }
@@ -419,8 +435,9 @@ impl Injector {
     /// server is not fast-stopping. This is what keeps a pipelined
     /// worker's stages filled across batch boundaries under single-
     /// tenant load.
+    // hot-path: alloc-free (mid-stream pull of an already-pooled item)
     fn pop_streaming(&self, tenant: TenantId) -> Option<WorkItem> {
-        let mut st = self.state.lock().expect("injector poisoned");
+        let mut st = self.state.lock();
         if st.mode == Mode::Stopped {
             return None;
         }
@@ -428,21 +445,17 @@ impl Injector {
         if qlen == 0 || st.queued > qlen {
             return None;
         }
-        let item = st
-            .queues
-            .get_mut(&tenant)
-            .expect("length checked")
-            .pop_front()
-            .expect("length checked");
+        let item = st.queues.get_mut(&tenant)?.pop_front()?;
         st.queued -= 1;
         Some(item)
     }
+    // hot-path: end
 
     /// Switch modes and wake every worker. Fast stop (`graceful ==
     /// false`) flushes all queues and returns the unserved items so the
     /// caller can reply [`EngineError::Shutdown`] to each.
     fn stop(&self, graceful: bool) -> Vec<WorkItem> {
-        let mut st = self.state.lock().expect("injector poisoned");
+        let mut st = self.state.lock();
         st.mode = if graceful { Mode::Draining } else { Mode::Stopped };
         let mut flushed = Vec::new();
         if !graceful {
@@ -459,7 +472,7 @@ impl Injector {
     }
 
     fn mark_stopped(&self) {
-        self.state.lock().expect("injector poisoned").mode = Mode::Stopped;
+        self.state.lock().mode = Mode::Stopped;
     }
 }
 
@@ -500,7 +513,7 @@ struct SlotState {
 /// the pool's slot list always has one live entry per configured
 /// worker.
 struct WorkerSlot {
-    state: Mutex<SlotState>,
+    state: OrderedMutex<SlotState>,
     /// Consecutive heals of this worker lineage (in-place panic
     /// restarts + watchdog replacements); reset by a clean dispatch,
     /// carried across replacements. Past
@@ -512,20 +525,24 @@ struct WorkerSlot {
 impl WorkerSlot {
     fn new(restarts: u32) -> Self {
         WorkerSlot {
-            state: Mutex::new(SlotState {
-                meta: VecDeque::new(),
-                inbox: VecDeque::new(),
-                deadline: None,
-                timeout: None,
-                tenant: None,
-                abandoned: false,
-            }),
+            state: OrderedMutex::new(
+                rank::WORKER_SLOT,
+                "worker-slot",
+                SlotState {
+                    meta: VecDeque::new(),
+                    inbox: VecDeque::new(),
+                    deadline: None,
+                    timeout: None,
+                    tenant: None,
+                    abandoned: false,
+                },
+            ),
             restarts: AtomicU32::new(restarts),
         }
     }
 
     fn is_abandoned(&self) -> bool {
-        self.state.lock().expect("worker slot poisoned").abandoned
+        self.state.lock().abandoned
     }
 }
 
@@ -534,13 +551,13 @@ impl WorkerSlot {
 pub(crate) struct ServerShared {
     pub(crate) injector: Injector,
     pub(crate) metrics: Arc<Metrics>,
-    tenants: RwLock<HashMap<TenantId, Arc<TenantState>>>,
+    tenants: OrderedRwLock<HashMap<TenantId, Arc<TenantState>>>,
     next_tenant: AtomicU64,
     plans: PlanCache,
     /// Recycled `Frame` containers: `Session::feed` copies into one,
     /// workers hand it back after the backend returns it through the
     /// stream sink — zero allocations per frame once warm.
-    frame_pool: Mutex<Vec<Frame>>,
+    frame_pool: OrderedMutex<Vec<Frame>>,
     /// Monotone count of pool dispatches — the clock the idle-eviction
     /// sweep measures tenant staleness against (wall time would couple
     /// eviction to load; dispatch counts make it purely relative).
@@ -551,13 +568,13 @@ pub(crate) struct ServerShared {
     cost_aware: bool,
     /// Live worker slots the watchdog scans (one per configured worker;
     /// a reaped slot is swapped for its replacement's).
-    slots: Mutex<Vec<Arc<WorkerSlot>>>,
+    slots: OrderedMutex<Vec<Arc<WorkerSlot>>>,
     /// Join handles of every worker thread spawned so far (initial pool
     /// plus watchdog replacements); drained at shutdown.
-    handles: Mutex<Vec<(JoinHandle<()>, Arc<WorkerSlot>)>>,
+    handles: OrderedMutex<Vec<(JoinHandle<()>, Arc<WorkerSlot>)>>,
     /// Watchdog park/stop flag (condvar-timed ticks, prompt shutdown).
-    watchdog_stop: Mutex<bool>,
-    watchdog_cv: Condvar,
+    watchdog_stop: OrderedMutex<bool>,
+    watchdog_cv: OrderedCondvar,
     /// Copies of the supervision knobs (the watchdog spawns replacement
     /// workers, so it needs the same parameters `spawn` used).
     batch_size: usize,
@@ -567,19 +584,15 @@ pub(crate) struct ServerShared {
 
 impl ServerShared {
     fn tenant(&self, id: TenantId) -> Option<Arc<TenantState>> {
-        self.tenants.read().expect("tenant registry poisoned").get(&id).cloned()
+        self.tenants.read().get(&id).cloned()
     }
 
     fn pooled_frame(&self) -> Frame {
-        self.frame_pool
-            .lock()
-            .expect("frame pool poisoned")
-            .pop()
-            .unwrap_or_default()
+        self.frame_pool.lock().pop().unwrap_or_default()
     }
 
     fn recycle_frame(&self, frame: Frame) {
-        let mut pool = self.frame_pool.lock().expect("frame pool poisoned");
+        let mut pool = self.frame_pool.lock();
         if pool.len() < FRAME_POOL_CAP {
             pool.push(frame);
         }
@@ -588,6 +601,8 @@ impl ServerShared {
     /// Copy `frame` into a pooled container and enqueue it for `tenant`,
     /// with the reply routed into a session ring slot. The caller has
     /// already claimed the quota slot.
+    // hot-path: alloc-free (warmed feed: pooled frame container + LUT
+    // cost tag; proven by tests/zero_alloc.rs)
     pub(crate) fn enqueue_session_frame(
         &self,
         tenant: &Arc<TenantState>,
@@ -614,6 +629,7 @@ impl ServerShared {
         tenant.metrics.submitted();
         Ok(())
     }
+    // hot-path: end
 
     /// Enqueue an owned frame with a per-request reply channel (the
     /// deprecated `Coordinator` path). The caller has already claimed
@@ -709,17 +725,17 @@ impl Server {
         let shared = Arc::new(ServerShared {
             injector: Injector::new(),
             metrics: Arc::new(Metrics::default()),
-            tenants: RwLock::new(HashMap::new()),
+            tenants: OrderedRwLock::new(rank::TENANT_REGISTRY, "tenant-registry", HashMap::new()),
             next_tenant: AtomicU64::new(0),
             plans: PlanCache::new(),
-            frame_pool: Mutex::new(Vec::new()),
+            frame_pool: OrderedMutex::new(rank::FRAME_POOL, "frame-pool", Vec::new()),
             dispatch_seq: AtomicU64::new(0),
             idle_evict: cfg.idle_evict_dispatches,
             cost_aware: cfg.cost_aware,
-            slots: Mutex::new(Vec::new()),
-            handles: Mutex::new(Vec::new()),
-            watchdog_stop: Mutex::new(false),
-            watchdog_cv: Condvar::new(),
+            slots: OrderedMutex::new(rank::SLOT_REGISTRY, "slot-registry", Vec::new()),
+            handles: OrderedMutex::new(rank::HANDLE_REGISTRY, "handle-registry", Vec::new()),
+            watchdog_stop: OrderedMutex::new(rank::WATCHDOG_FLAG, "watchdog-flag", false),
+            watchdog_cv: OrderedCondvar::new(),
             batch_size: batch,
             max_restarts: cfg.max_worker_restarts,
             backoff_ms: cfg.restart_backoff_ms,
@@ -843,7 +859,7 @@ impl Server {
 
     /// Point-in-time service + per-tenant metrics.
     pub fn snapshot(&self) -> ServerSnapshot {
-        let tenants = self.shared.tenants.read().expect("tenant registry poisoned");
+        let tenants = self.shared.tenants.read();
         let mut rows: Vec<TenantSnapshot> = tenants
             .values()
             .map(|t| TenantSnapshot::collect(t, self.shared.injector.queue_depth(t.id)))
@@ -867,7 +883,7 @@ impl Server {
     /// been abandoned to a watchdog replacement. After any heal this
     /// returns to the configured pool size (the pool never shrinks).
     pub fn live_workers(&self) -> usize {
-        let slots = self.shared.slots.lock().expect("slot registry poisoned");
+        let slots = self.shared.slots.lock();
         slots.iter().filter(|s| !s.is_abandoned()).count()
     }
 
@@ -913,7 +929,7 @@ impl Server {
         // empty.
         loop {
             let batch: Vec<(JoinHandle<()>, Arc<WorkerSlot>)> = {
-                let mut handles = self.shared.handles.lock().expect("handle registry poisoned");
+                let mut handles = self.shared.handles.lock();
                 handles.drain(..).collect()
             };
             if batch.is_empty() {
@@ -925,7 +941,7 @@ impl Server {
         }
         // Stop the watchdog only after the pool is down...
         {
-            let mut stop = self.shared.watchdog_stop.lock().expect("watchdog flag poisoned");
+            let mut stop = self.shared.watchdog_stop.lock();
             *stop = true;
         }
         self.shared.watchdog_cv.notify_all();
@@ -933,7 +949,7 @@ impl Server {
         // ...and catch any replacement it spawned in its final moments
         // (such a worker exits on its first injector visit).
         let stragglers: Vec<(JoinHandle<()>, Arc<WorkerSlot>)> = {
-            let mut handles = self.shared.handles.lock().expect("handle registry poisoned");
+            let mut handles = self.shared.handles.lock();
             handles.drain(..).collect()
         };
         for (handle, slot) in stragglers {
@@ -994,11 +1010,7 @@ fn register_state(
     shared
         .injector
         .register(id, state.weight, state.cost.as_ref().map(|m| m.nominal_cycles()));
-    shared
-        .tenants
-        .write()
-        .expect("tenant registry poisoned")
-        .insert(id, state);
+    shared.tenants.write().insert(id, state);
     id
 }
 
@@ -1006,12 +1018,14 @@ fn register_state(
 /// `serve --json` snapshot.
 #[derive(Clone, Debug)]
 pub struct ServerSnapshot {
+    /// Aggregate service-level counters and latency figures.
     pub service: super::MetricsSnapshot,
     /// One row per registered tenant, ordered by tenant id.
     pub tenants: Vec<TenantSnapshot>,
 }
 
 impl ServerSnapshot {
+    /// Render the snapshot as the `serve --json` document.
     pub fn to_json(&self) -> Json {
         let mut obj = match self.service.to_json() {
             Json::Obj(m) => m,
@@ -1046,7 +1060,7 @@ impl Iterator for StreamFeed<'_> {
         // Lock ordering: the slot lock is never held across an injector
         // lock (and vice versa) — both are taken disjointly.
         let item = {
-            let mut st = self.slot.state.lock().expect("worker slot poisoned");
+            let mut st = self.slot.state.lock();
             if st.abandoned {
                 return None;
             }
@@ -1070,7 +1084,7 @@ impl Iterator for StreamFeed<'_> {
         } else {
             Frame::default()
         };
-        let mut st = self.slot.state.lock().expect("worker slot poisoned");
+        let mut st = self.slot.state.lock();
         if st.abandoned {
             // The watchdog reaped this dispatch between the pop and
             // here. Hand the item back at the queue front (it is still
@@ -1180,7 +1194,7 @@ fn spawn_worker_healing(
     backoff_steps: u32,
 ) {
     let slot = Arc::new(WorkerSlot::new(restarts));
-    shared.slots.lock().expect("slot registry poisoned").push(Arc::clone(&slot));
+    shared.slots.lock().push(Arc::clone(&slot));
     let thread_shared = Arc::clone(shared);
     let thread_slot = Arc::clone(&slot);
     let backoff_ms = shared.backoff_ms;
@@ -1190,7 +1204,7 @@ fn spawn_worker_healing(
         }
         worker_loop(thread_shared, preset, thread_slot, initial_fault)
     });
-    shared.handles.lock().expect("handle registry poisoned").push((handle, slot));
+    shared.handles.lock().push((handle, slot));
 }
 
 /// Exponential heal backoff: `base × 2^(consecutive−1)`, capped at 64×
@@ -1215,7 +1229,7 @@ fn release_worker_cache(shared: &ServerShared, backends: &mut HashMap<TenantId, 
     }
     let now = shared.dispatch_seq.load(Ordering::Relaxed);
     let threshold = shared.idle_evict;
-    let tenants = shared.tenants.read().expect("tenant registry poisoned");
+    let tenants = shared.tenants.read();
     let keys: Vec<TenantId> = backends.keys().copied().collect();
     backends.clear();
     for tid in keys {
@@ -1241,7 +1255,7 @@ fn disarm_slot(
     meta_out: &mut VecDeque<Meta>,
     inbox_out: &mut VecDeque<WorkItem>,
 ) -> bool {
-    let mut st = slot.state.lock().expect("worker slot poisoned");
+    let mut st = slot.state.lock();
     std::mem::swap(&mut st.meta, meta_out);
     std::mem::swap(&mut st.inbox, inbox_out);
     st.deadline = None;
@@ -1288,7 +1302,13 @@ fn worker_loop(
                 return;
             }
         };
-        let tstate = Arc::clone(&staging.front().expect("dispatch without items").tenant);
+        let Some(front) = staging.front() else {
+            // A Serve dispatch always stages at least one item; treat
+            // an empty one as a spurious wake-up, not a worker crash.
+            crate::debug_invariant!(false, "Serve dispatch with empty staging");
+            continue;
+        };
+        let tstate = Arc::clone(&front.tenant);
         // Past its heal budget this lineage no longer trusts itself to
         // serve: it answers dispatches with its standing fault (typed,
         // through the retry path, so frames with budget left can still
@@ -1310,7 +1330,7 @@ fn worker_loop(
         // tenant's deadline (if any) starts ticking — covering the
         // backend build too, since a build can hang like a dispatch.
         {
-            let mut st = slot.state.lock().expect("worker slot poisoned");
+            let mut st = slot.state.lock();
             std::mem::swap(&mut st.inbox, &mut staging);
             st.tenant = Some(Arc::clone(&tstate));
             if !tstate.dispatch_timeout.is_zero() {
@@ -1356,7 +1376,21 @@ fn worker_loop(
             }
             continue;
         }
-        let backend = backends.get_mut(&tid).expect("backend built above");
+        let Some(backend) = backends.get_mut(&tid) else {
+            // Unreachable by construction (built above or the dispatch
+            // already failed typed); if it ever happens, fail the
+            // dispatch typed instead of crashing the worker.
+            crate::debug_invariant!(false, "backend missing after successful build");
+            let e = EngineError::worker_panicked("backend-lookup", &"built backend missing");
+            let abandoned = disarm_slot(&slot, &mut meta_scratch, &mut staging);
+            resolve_failed(&shared, &tstate, &mut meta_scratch, &mut staging, &e);
+            last_fault = Some(e);
+            if abandoned {
+                release_worker_cache(&shared, &mut backends);
+                return;
+            }
+            continue;
+        };
         let name = backend.name();
         shared.metrics.batch_formed(initial);
         let t0 = Instant::now();
@@ -1381,7 +1415,7 @@ fn worker_loop(
             };
             backend.infer_stream(&mut feed, &mut |frame: Frame, inf: Inference| {
                 let m = {
-                    let mut st = slot.state.lock().expect("worker slot poisoned");
+                    let mut st = slot.state.lock();
                     if st.abandoned {
                         None
                     } else {
@@ -1521,14 +1555,11 @@ fn worker_loop(
 fn watchdog_loop(shared: Arc<ServerShared>) {
     loop {
         {
-            let stop = shared.watchdog_stop.lock().expect("watchdog flag poisoned");
+            let stop = shared.watchdog_stop.lock();
             if *stop {
                 return;
             }
-            let (stop, _) = shared
-                .watchdog_cv
-                .wait_timeout(stop, WATCHDOG_PERIOD)
-                .expect("watchdog flag poisoned");
+            let (stop, _timed_out) = shared.watchdog_cv.wait_timeout(stop, WATCHDOG_PERIOD);
             if *stop {
                 return;
             }
@@ -1536,11 +1567,11 @@ fn watchdog_loop(shared: Arc<ServerShared>) {
         loop {
             let overdue = {
                 let now = Instant::now();
-                let slots = shared.slots.lock().expect("slot registry poisoned");
+                let slots = shared.slots.lock();
                 slots
                     .iter()
                     .find(|slot| {
-                        let st = slot.state.lock().expect("worker slot poisoned");
+                        let st = slot.state.lock();
                         !st.abandoned && st.deadline.is_some_and(|d| now >= d)
                     })
                     .cloned()
@@ -1561,7 +1592,7 @@ fn watchdog_loop(shared: Arc<ServerShared>) {
 /// exits silently if it ever wakes).
 fn reap(shared: &Arc<ServerShared>, slot: &Arc<WorkerSlot>) {
     let (mut meta, mut inbox, tstate, timeout) = {
-        let mut st = slot.state.lock().expect("worker slot poisoned");
+        let mut st = slot.state.lock();
         let now = Instant::now();
         if st.abandoned || !st.deadline.is_some_and(|d| now >= d) {
             return; // raced with dispatch completion — nothing to reap
@@ -1588,7 +1619,7 @@ fn reap(shared: &Arc<ServerShared>, slot: &Arc<WorkerSlot>) {
     // is one short).
     let restarts = slot.restarts.load(Ordering::Relaxed).saturating_add(1);
     {
-        let mut slots = shared.slots.lock().expect("slot registry poisoned");
+        let mut slots = shared.slots.lock();
         slots.retain(|s| !Arc::ptr_eq(s, slot));
     }
     spawn_worker_healing(shared, None, restarts, e.as_ref().map(EngineError::replicate), restarts);
@@ -1614,7 +1645,7 @@ fn sweep_idle(
     now: u64,
 ) {
     let threshold = shared.idle_evict;
-    let tenants = shared.tenants.read().expect("tenant registry poisoned");
+    let tenants = shared.tenants.read();
     let stale_by = |tid: &TenantId| match tenants.get(tid) {
         Some(t) => now.saturating_sub(t.last_active.load(Ordering::Relaxed)) > threshold,
         None => true,
@@ -2272,6 +2303,115 @@ mod tests {
         let err = injector.requeue_front(t.id, &mut two).unwrap_err();
         assert!(matches!(err, EngineError::Shutdown), "{err}");
         assert_eq!(two.len(), 1, "rejected items stay with the caller");
+    }
+
+    #[test]
+    fn requeue_front_is_safe_under_concurrent_multi_tenant_dispatch() {
+        // Two workers pop dispatches from one injector while every
+        // tenant-A frame is force-retried once via `requeue_front` and
+        // tenant B drains healthily. Invariants under contention:
+        // * nothing is lost or duplicated — every A frame is dispatched
+        //   exactly twice (fresh pass + retry pass), every B frame once;
+        // * a dispatch batch is always single-tenant;
+        // * the untouched tail is never reordered: B batches and the
+        //   fresh-only part of A batches stay in feed order (requeues
+        //   prepend, they never disturb frames still queued behind).
+        // (Global cross-worker serve order is restored by the session
+        // reorder ring, not the injector — not asserted here.)
+        const N: u64 = 64;
+        let injector = Injector::new();
+        let mk_tenant = |id: u32| {
+            Arc::new(TenantState::new(
+                TenantId(id),
+                &TenantConfig::default(),
+                (28, 28, 1),
+                BackendSource::Preset,
+            ))
+        };
+        let (ta, tb) = (mk_tenant(0), mk_tenant(1));
+        injector.register(ta.id, 1, None);
+        injector.register(tb.id, 1, None);
+        let item = |t: &Arc<TenantState>, id: u64| WorkItem {
+            tenant: Arc::clone(t),
+            frame: Frame::default(),
+            cost: FRAME_COST_UNIT,
+            enqueued: Instant::now(),
+            reply_to: ReplyTo::Channel { id, tx: std::sync::mpsc::channel().0 },
+            retries: 0,
+        };
+        for id in 0..N {
+            injector.push(ta.id, item(&ta, id)).unwrap();
+            injector.push(tb.id, item(&tb, id)).unwrap();
+        }
+        let served = std::sync::atomic::AtomicU64::new(0);
+        // (tenant, ids, retries flags) per popped batch, in pop order
+        type BatchLog = Vec<(u32, Vec<(u64, u32)>)>;
+        let worker = || -> BatchLog {
+            let mut inbox = VecDeque::new();
+            let mut log: BatchLog = Vec::new();
+            loop {
+                let tid = match injector.pop_dispatch(4, &mut inbox) {
+                    Dispatch::Serve { tenant, .. } => tenant.0,
+                    Dispatch::Exit => break,
+                };
+                let ids: Vec<(u64, u32)> = inbox
+                    .iter()
+                    .map(|i| match i.reply_to {
+                        ReplyTo::Channel { id, .. } => (id, i.retries),
+                        ReplyTo::Session { .. } => unreachable!("channel items only"),
+                    })
+                    .collect();
+                log.push((tid, ids));
+                // retry every fresh tenant-A item; serve everything else
+                let mut back: Vec<WorkItem> = Vec::new();
+                for mut i in inbox.drain(..) {
+                    if tid == 0 && i.retries == 0 {
+                        i.retries = 1;
+                        back.push(i);
+                    } else {
+                        served.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+                if !back.is_empty() {
+                    injector
+                        .requeue_front(TenantId(tid), &mut back)
+                        .expect("requeue while running must succeed");
+                }
+            }
+            log
+        };
+        let (log1, log2) = std::thread::scope(|s| {
+            let h1 = s.spawn(worker);
+            let h2 = s.spawn(worker);
+            while served.load(Ordering::SeqCst) < 2 * N {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            injector.stop(false);
+            (h1.join().expect("worker 1"), h2.join().expect("worker 2"))
+        });
+        let mut a_fresh = vec![0u32; N as usize];
+        let mut a_retry = vec![0u32; N as usize];
+        let mut b_seen = vec![0u32; N as usize];
+        for (tid, batch) in log1.iter().chain(&log2) {
+            // single-tenant batches, and the untouched tail keeps order
+            let fresh: Vec<u64> =
+                batch.iter().filter(|(_, r)| *r == 0).map(|(id, _)| *id).collect();
+            assert!(
+                fresh.windows(2).all(|w| w[0] < w[1]),
+                "fresh frames of a batch must stay in feed order: {fresh:?}"
+            );
+            for &(id, retries) in batch {
+                match (*tid, retries) {
+                    (0, 0) => a_fresh[id as usize] += 1,
+                    (0, 1) => a_retry[id as usize] += 1,
+                    (1, 0) => b_seen[id as usize] += 1,
+                    other => panic!("unexpected (tenant, retries) {other:?} for id {id}"),
+                }
+            }
+        }
+        assert!(a_fresh.iter().all(|&c| c == 1), "each A frame fresh-dispatched once: {a_fresh:?}");
+        assert!(a_retry.iter().all(|&c| c == 1), "each A frame retried exactly once: {a_retry:?}");
+        assert!(b_seen.iter().all(|&c| c == 1), "each B frame dispatched once: {b_seen:?}");
     }
 
     #[test]

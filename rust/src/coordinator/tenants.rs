@@ -15,7 +15,8 @@ use crate::traffic::CostModel;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use crate::util::dbc::{rank, OrderedCondvar, OrderedMutex};
+use std::sync::Arc;
 
 /// Opaque tenant identity handed out by
 /// [`crate::coordinator::Server::register_tenant`].
@@ -147,11 +148,12 @@ pub(crate) struct TenantState {
     /// Frames currently queued or being served (admission quota state).
     /// Mutex + condvar rather than an atomic so blocking submitters
     /// (the deprecated `Coordinator::submit`) can park on it.
-    inflight: Mutex<usize>,
-    inflight_cv: Condvar,
+    inflight: OrderedMutex<usize>,
+    inflight_cv: OrderedCondvar,
 }
 
 impl TenantState {
+    /// Build the state for one registered tenant from its config.
     pub fn new(
         id: TenantId,
         cfg: &TenantConfig,
@@ -171,14 +173,14 @@ impl TenantState {
             last_active: AtomicU64::new(0),
             dispatch_timeout: cfg.dispatch_timeout,
             max_retries: cfg.max_retries,
-            inflight: Mutex::new(0),
-            inflight_cv: Condvar::new(),
+            inflight: OrderedMutex::new(rank::QUOTA, "tenant-quota", 0),
+            inflight_cv: OrderedCondvar::new(),
         }
     }
 
     /// Claim one in-flight slot if the quota allows it.
     pub fn try_acquire(&self) -> bool {
-        let mut n = self.inflight.lock().expect("quota mutex poisoned");
+        let mut n = self.inflight.lock();
         if *n >= self.max_inflight {
             false
         } else {
@@ -189,9 +191,9 @@ impl TenantState {
 
     /// Claim one in-flight slot, parking until the quota allows it.
     pub fn acquire_blocking(&self) {
-        let mut n = self.inflight.lock().expect("quota mutex poisoned");
+        let mut n = self.inflight.lock();
         while *n >= self.max_inflight {
-            n = self.inflight_cv.wait(n).expect("quota mutex poisoned");
+            n = self.inflight_cv.wait(n);
         }
         *n += 1;
     }
@@ -199,15 +201,16 @@ impl TenantState {
     /// Release one in-flight slot (called exactly once per delivered
     /// reply, success or error).
     pub fn release(&self) {
-        let mut n = self.inflight.lock().expect("quota mutex poisoned");
-        debug_assert!(*n > 0, "quota released more often than acquired");
+        let mut n = self.inflight.lock();
+        crate::debug_invariant!(*n > 0, "quota released more often than acquired");
         *n = n.saturating_sub(1);
         drop(n);
         self.inflight_cv.notify_one();
     }
 
+    /// Requests currently holding a quota slot (queued + in service).
     pub fn inflight(&self) -> usize {
-        *self.inflight.lock().expect("quota mutex poisoned")
+        *self.inflight.lock()
     }
 
     /// The typed admission error for this tenant.
@@ -247,10 +250,12 @@ pub struct TenantMetrics {
 }
 
 impl TenantMetrics {
+    /// Count one admitted frame.
     pub fn submitted(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one delivered result and its modeled cycles.
     pub fn completed(&self, sim_cycles: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.sim_cycles_sum.fetch_add(sim_cycles, Ordering::Relaxed);
@@ -262,10 +267,12 @@ impl TenantMetrics {
         self.dispatch_us_sum.fetch_add(dispatch_us, Ordering::Relaxed);
     }
 
+    /// Count one typed-error reply.
     pub fn failed(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one admission refused by the quota gate.
     pub fn quota_rejected(&self) {
         self.quota_rejected.fetch_add(1, Ordering::Relaxed);
     }

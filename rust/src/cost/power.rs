@@ -38,12 +38,16 @@ const P_ROUTING_W2: f64 = 0.0012;
 /// Power model for a configuration.
 #[derive(Copy, Clone, Debug)]
 pub struct PowerModel {
+    /// Datapath bit width.
     pub bits: u32,
+    /// Parallelization degree ×P.
     pub lanes: usize,
+    /// Clock frequency, Hz.
     pub clock_hz: f64,
 }
 
 impl PowerModel {
+    /// A model at the paper's clock.
     pub fn new(bits: u32, lanes: usize) -> Self {
         PowerModel { bits, lanes, clock_hz: CLOCK_HZ }
     }

@@ -5,13 +5,18 @@ use crate::snn::network::Network;
 /// Resource vector.
 #[derive(Copy, Clone, Debug, Default, PartialEq)]
 pub struct Resources {
+    /// Look-up tables.
     pub lut: f64,
+    /// Flip-flops.
     pub ff: f64,
+    /// Block RAM, megabits.
     pub bram_mb: f64,
+    /// DSP slices.
     pub dsp: f64,
 }
 
 impl Resources {
+    /// Accumulate `o` into this vector.
     pub fn add(&mut self, o: Resources) {
         self.lut += o.lut;
         self.ff += o.ff;
@@ -19,6 +24,7 @@ impl Resources {
         self.dsp += o.dsp;
     }
 
+    /// This vector scaled by `k`.
     pub fn scaled(self, k: f64) -> Resources {
         Resources {
             lut: self.lut * k,
@@ -33,14 +39,20 @@ impl Resources {
 /// MemPot, "others" = control + classification + bias ROM).
 #[derive(Clone, Debug, Default)]
 pub struct UnitBreakdown {
+    /// Convolution unit cost.
     pub conv_unit: Resources,
+    /// Thresholding unit cost.
     pub threshold_unit: Resources,
+    /// Address-event queue cost.
     pub aeq: Resources,
+    /// Membrane memory cost.
     pub mempot: Resources,
+    /// Control, classification and bias ROM cost.
     pub others: Resources,
 }
 
 impl UnitBreakdown {
+    /// Sum over every unit.
     pub fn total(&self) -> Resources {
         let mut t = Resources::default();
         for r in [
@@ -55,6 +67,7 @@ impl UnitBreakdown {
         t
     }
 
+    /// The five units with display names.
     pub fn named(&self) -> [(&'static str, Resources); 5] {
         [
             ("Convolution unit", self.conv_unit),
@@ -221,6 +234,7 @@ impl ResourceModel {
         }
     }
 
+    /// Sum over every unit.
     pub fn total(&self) -> Resources {
         self.breakdown().total()
     }

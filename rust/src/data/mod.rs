@@ -10,11 +10,17 @@ use std::path::Path;
 /// A 28×28 u8 image classification dataset.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Training images, flattened H×W per image.
     pub train_x: Vec<u8>,
+    /// Training labels.
     pub train_y: Vec<u8>,
+    /// Test images, flattened H×W per image.
     pub test_x: Vec<u8>,
+    /// Test labels.
     pub test_y: Vec<u8>,
+    /// Image height.
     pub h: usize,
+    /// Image width.
     pub w: usize,
 }
 
@@ -26,6 +32,7 @@ impl Dataset {
         Self::from_archive(&ar).with_context(|| format!("dataset {}", path.display()))
     }
 
+    /// Build a dataset from a tensor archive.
     pub fn from_archive(ar: &Archive) -> Result<Self> {
         let tx = ar.get("train_x")?;
         ensure!(tx.dims.len() == 3, "train_x must be (N, H, W)");
@@ -45,10 +52,12 @@ impl Dataset {
         Ok(Dataset { train_x, train_y, test_x, test_y, h, w })
     }
 
+    /// Number of training images.
     pub fn n_train(&self) -> usize {
         self.train_y.len()
     }
 
+    /// Number of test images.
     pub fn n_test(&self) -> usize {
         self.test_y.len()
     }
@@ -59,6 +68,7 @@ impl Dataset {
         &self.test_x[i * n..(i + 1) * n]
     }
 
+    /// The `i`-th training image.
     pub fn train_image(&self, i: usize) -> &[u8] {
         let n = self.h * self.w;
         &self.train_x[i * n..(i + 1) * n]

@@ -36,6 +36,7 @@ pub enum Dtype {
 }
 
 impl Dtype {
+    /// Bytes per element.
     pub fn size(self) -> usize {
         match self {
             Dtype::U8 => 1,
@@ -66,22 +67,27 @@ impl Frame {
         Ok(Frame { shape: (h, w, c), dtype: Dtype::U8, data })
     }
 
+    /// The frame's (height, width, channels).
     pub fn shape(&self) -> (usize, usize, usize) {
         self.shape
     }
 
+    /// Height in pixels.
     pub fn h(&self) -> usize {
         self.shape.0
     }
 
+    /// Width in pixels.
     pub fn w(&self) -> usize {
         self.shape.1
     }
 
+    /// Channel count.
     pub fn c(&self) -> usize {
         self.shape.2
     }
 
+    /// Element type of the payload.
     pub fn dtype(&self) -> Dtype {
         self.dtype
     }

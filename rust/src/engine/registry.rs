@@ -16,7 +16,8 @@ use crate::sim::{AccelConfig, Accelerator, LayerStats, RunStats};
 use crate::snn::network::Network;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use crate::util::dbc::{rank, OrderedMutex};
+use std::sync::Arc;
 
 /// A process-wide cache of compiled [`NetworkPlan`]s keyed by
 /// [`Network::content_hash`].
@@ -34,21 +35,30 @@ use std::sync::{Arc, Mutex};
 /// register the same network serialize, guaranteeing exactly one
 /// compile per distinct network (plan compiles are milliseconds and
 /// happen only at registration time, never on the serving hot path).
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct PlanCache {
-    plans: Arc<Mutex<HashMap<u64, Arc<NetworkPlan>>>>,
+    plans: Arc<OrderedMutex<HashMap<u64, Arc<NetworkPlan>>>>,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl PlanCache {
+    /// An empty cache (one per server; clones share it).
     pub fn new() -> Self {
-        Self::default()
+        PlanCache {
+            plans: Arc::new(OrderedMutex::new(rank::PLAN_CACHE, "plan-cache", HashMap::new())),
+        }
     }
 
     /// The shared compiled plan for `net`: compiled on first request,
     /// the cached `Arc` afterwards.
     pub fn get_or_compile(&self, net: &Network) -> Arc<NetworkPlan> {
         let key = net.content_hash();
-        let mut plans = self.plans.lock().expect("plan cache poisoned");
+        let mut plans = self.plans.lock();
         Arc::clone(
             plans
                 .entry(key)
@@ -65,14 +75,15 @@ impl PlanCache {
     /// plan's `Arc` are unaffected — eviction only frees the cache's
     /// reference.
     pub fn remove(&self, key: u64) -> bool {
-        self.plans.lock().expect("plan cache poisoned").remove(&key).is_some()
+        self.plans.lock().remove(&key).is_some()
     }
 
     /// Number of distinct compiled plans currently cached.
     pub fn len(&self) -> usize {
-        self.plans.lock().expect("plan cache poisoned").len()
+        self.plans.lock().len()
     }
 
+    /// Whether the cache holds no plans.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -179,8 +190,8 @@ pub struct EngineBuilder {
     // layer injects its server-wide cache via `plan_cache` so same-weight
     // TENANTS share one plan too.
     plans: PlanCache,
-    // Only the PJRT backend reads this; keep the builder API identical
-    // in both configurations.
+    // allow: only the PJRT backend reads this field; keep the builder
+    // API identical in both configurations.
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     artifacts: Option<PathBuf>,
     // Deterministic fault injection (chaos testing): when set, every
@@ -191,6 +202,7 @@ pub struct EngineBuilder {
 }
 
 impl EngineBuilder {
+    /// A builder for backends over `net`, with default knobs.
     pub fn new(net: Arc<Network>) -> Self {
         EngineBuilder {
             net,
@@ -318,9 +330,15 @@ impl EngineBuilder {
             )),
             BackendKind::DenseRef => Box::new(DenseRefBackend { net: Arc::clone(&self.net) }),
             BackendKind::DenseMac | BackendKind::Systolic | BackendKind::AerArray => {
+                let runner: fn(&Network, &[u8]) -> BaselineResult = match kind {
+                    BackendKind::Systolic => baseline::systolic::run,
+                    BackendKind::AerArray => baseline::aer_array::run,
+                    _ => baseline::dense::run,
+                };
                 Box::new(BaselineBackend {
                     net: Arc::clone(&self.net),
                     kind,
+                    runner,
                     clock_hz: self.clock_hz,
                 })
             }
@@ -429,17 +447,15 @@ impl Backend for DenseRefBackend {
 struct BaselineBackend {
     net: Arc<Network>,
     kind: BackendKind,
+    /// The model's runner, resolved at construction — so `run` carries
+    /// no impossible match arm for the non-baseline kinds.
+    runner: fn(&Network, &[u8]) -> BaselineResult,
     clock_hz: f64,
 }
 
 impl BaselineBackend {
     fn run(&self, img: &[u8]) -> BaselineResult {
-        match self.kind {
-            BackendKind::DenseMac => baseline::dense::run(&self.net, img),
-            BackendKind::Systolic => baseline::systolic::run(&self.net, img),
-            BackendKind::AerArray => baseline::aer_array::run(&self.net, img),
-            _ => unreachable!("BaselineBackend built for {:?}", self.kind),
-        }
+        (self.runner)(&self.net, img)
     }
 }
 

@@ -48,9 +48,13 @@ pub enum InjectedFault {
 /// Plan-wide injection totals (one counter per [`InjectedFault`] kind).
 #[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
 pub struct FaultCounts {
+    /// Injected backend panics.
     pub panics: u64,
+    /// Injected stalls (dispatch-deadline food for the watchdog).
     pub stalls: u64,
+    /// Injected truncated streams.
     pub truncations: u64,
+    /// Injected backend build failures.
     pub build_failures: u64,
 }
 

@@ -46,11 +46,17 @@ pub fn frame_for(net: &Network, ds: &Dataset, i: usize) -> Result<Frame> {
 
 /// Measured performance of one configuration over `n` test images.
 pub struct PerfPoint {
+    /// Parallelization degree ×P.
     pub lanes: usize,
+    /// Mean modeled cycles per image.
     pub avg_cycles: f64,
+    /// Modeled frames per second at the configured clock.
     pub fps: f64,
+    /// Mean fraction of PEs doing useful work.
     pub utilization: f64,
+    /// Modeled power draw, watts.
     pub watts: f64,
+    /// Frames per second per watt.
     pub eff: f64,
 }
 

@@ -28,7 +28,9 @@ use std::path::Path;
 
 /// An f32 input tensor (data + dims).
 pub struct Input<'a> {
+    /// Flat row-major element data.
     pub data: &'a [f32],
+    /// Tensor dimensions.
     pub dims: &'a [i64],
 }
 
@@ -51,6 +53,7 @@ mod pjrt_impl {
             Ok(Runtime { client })
         }
 
+        /// The runtime's platform name.
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -119,14 +122,17 @@ mod stub {
     }
 
     impl Runtime {
+        /// A CPU-backed runtime (errors when the `pjrt` feature is off).
         pub fn cpu() -> Result<Self> {
             Err(unavailable())
         }
 
+        /// The runtime's platform name.
         pub fn platform(&self) -> String {
             "unavailable".to_string()
         }
 
+        /// Load an HLO text executable.
         pub fn load_hlo(&self, _path: &Path) -> Result<Executable> {
             Err(unavailable())
         }
@@ -138,6 +144,7 @@ mod stub {
     }
 
     impl Executable {
+        /// Execute with f32 inputs, returning one Vec per output.
         pub fn run_f32(&self, _inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
             Err(unavailable())
         }

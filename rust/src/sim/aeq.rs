@@ -17,7 +17,9 @@ use crate::snn::encode::Event;
 /// A stored address event: the cell address within its column queue.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub struct CellEvent {
+    /// Cell row within the column queue.
     pub i: u16,
+    /// Cell column within the column queue.
     pub j: u16,
 }
 
@@ -35,6 +37,7 @@ pub enum ReadSlot {
 /// (k² column queues; the paper's fixed design is the k = 3 instance).
 #[derive(Clone, Debug)]
 pub struct Aeq {
+    /// One FIFO of cell events per interlace column (k² active).
     pub cols: Vec<Vec<CellEvent>>,
     k: usize,
 }
@@ -114,6 +117,7 @@ impl Aeq {
         self.active().iter().map(Vec::len).sum()
     }
 
+    /// Whether every active column queue is empty.
     pub fn is_empty(&self) -> bool {
         self.active().iter().all(Vec::is_empty)
     }

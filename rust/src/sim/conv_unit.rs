@@ -159,7 +159,9 @@ pub enum TimingModel {
 /// [`Aeq`] passed per pass (the scheduler multiplexes them, Algorithm 1).
 #[derive(Clone, Debug)]
 pub struct ConvUnit {
+    /// RAW-hazard handling policy.
     pub hazard_mode: HazardMode,
+    /// Cycle-accounting mode.
     pub timing: TimingModel,
 }
 
@@ -170,10 +172,12 @@ impl Default for ConvUnit {
 }
 
 impl ConvUnit {
+    /// A unit with the fast timing model.
     pub fn new(hazard_mode: HazardMode) -> Self {
         ConvUnit { hazard_mode, timing: TimingModel::Fast }
     }
 
+    /// A unit with an explicit timing model.
     pub fn with_timing(hazard_mode: HazardMode, timing: TimingModel) -> Self {
         ConvUnit { hazard_mode, timing }
     }

@@ -55,7 +55,9 @@ impl Default for AccelConfig {
 /// reusable across inferences (`infer_image` takes `&mut self`, and the
 /// steady-state execute step allocates nothing).
 pub struct Accelerator {
+    /// The network this accelerator executes.
     pub net: Arc<Network>,
+    /// Configuration (lanes, hazard mode, clock).
     pub cfg: AccelConfig,
     plan: Arc<NetworkPlan>,
     scratch: Scratch,
@@ -71,6 +73,7 @@ pub struct Accelerator {
 }
 
 impl Accelerator {
+    /// Compile `net` and build an accelerator (the compile step).
     pub fn new(net: Arc<Network>, cfg: AccelConfig) -> Self {
         // Compile step: resolve kernel permutation banks and derive every
         // buffer shape from the network (the membrane memory is sized for
@@ -139,6 +142,8 @@ impl Accelerator {
     /// result into `out` (whose vectors are cleared and reused). After a
     /// warm-up call has grown every scratch buffer to its high-water
     /// mark, this performs **zero heap allocations**.
+    // hot-path: alloc-free (the steady-state execute step; proven by
+    // tests/zero_alloc.rs)
     pub fn infer_image_into(&mut self, img: &[u8], out: &mut Inference) {
         let (h, w, c) = self.net.input_shape();
         let c = c.max(1);
@@ -161,6 +166,7 @@ impl Accelerator {
             out,
         );
     }
+    // hot-path: end
 
     /// Run from pre-encoded input queues (for callers that encode off
     /// the accelerator's critical path).
@@ -288,6 +294,9 @@ pub(crate) fn classify_into(
 /// the layer boundaries through the two scratch buffers, classify, and
 /// fill `out` (recycling its vectors). Performs no heap allocation once
 /// all buffers have reached their high-water marks.
+// allow: the pipeline's ports (plan, memories, units, scratch, output)
+// are threaded explicitly so the borrow checker can prove disjointness;
+// a context struct would force runtime borrows.
 #[allow(clippy::too_many_arguments)]
 fn run_pipeline(
     net: &Network,

@@ -13,7 +13,9 @@ use crate::snn::sat::Sat;
 /// class, one spike count per layer — no fixed-workload arrays).
 #[derive(Clone, Debug)]
 pub struct DenseResult {
+    /// Accumulated FC logits.
     pub logits: Vec<i64>,
+    /// Predicted class (argmax).
     pub pred: usize,
     /// Spikes per (timestep, layer) — pooled layers counted after pooling.
     pub spike_counts: Vec<Vec<u64>>,
@@ -36,6 +38,7 @@ pub struct DenseRef<'a> {
 }
 
 impl<'a> DenseRef<'a> {
+    /// A reference evaluator over `net`.
     pub fn new(net: &'a Network) -> Self {
         DenseRef { net }
     }

@@ -35,7 +35,9 @@ use crate::sim::interlace::{self, COLUMNS};
 /// (convenience view used by tests and the thresholding unit).
 #[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
 pub struct Entry {
+    /// Membrane potential.
     pub vm: i32,
+    /// Whether the cell fired this timestep.
     pub fired: bool,
 }
 
@@ -45,9 +47,11 @@ pub struct Entry {
 pub struct MemPot {
     /// fmap height/width this memory currently represents.
     pub h: usize,
+    /// fmap width this memory currently represents.
     pub w: usize,
     /// cell grid dims.
     pub cells_i: usize,
+    /// Cell grid columns (interlace j dimension).
     pub cells_j: usize,
     /// Per-column RAM capacity (stride of the flat storage).
     col_cap: usize,
@@ -105,6 +109,10 @@ impl MemPot {
     #[inline(always)]
     pub fn read_vm(&self, s: usize, flat: usize) -> i32 {
         debug_assert!(s < COLUMNS && flat < self.col_cap);
+        // SAFETY: `vm.len() == COLUMNS * col_cap` (sized once in `new`),
+        // and the address generators keep `s < COLUMNS` and
+        // `flat < col_cap` (checked by the debug_assert above), so
+        // `s * col_cap + flat < vm.len()`.
         unsafe { *self.vm.get_unchecked(s * self.col_cap + flat) }
     }
 
@@ -112,16 +120,21 @@ impl MemPot {
     #[inline(always)]
     pub fn write_vm(&mut self, s: usize, flat: usize, v: i32) {
         debug_assert!(s < COLUMNS && flat < self.col_cap);
+        // SAFETY: same bound as `read_vm` — `vm.len() == COLUMNS *
+        // col_cap` and `s < COLUMNS`, `flat < col_cap` (debug-asserted),
+        // so the index is in range.
         unsafe {
             *self.vm.get_unchecked_mut(s * self.col_cap + flat) = v;
         }
     }
 
+    /// Fired-indicator read, column `s`, flat address.
     #[inline(always)]
     pub fn read_fired(&self, s: usize, flat: usize) -> bool {
         self.fired[s * self.col_cap + flat]
     }
 
+    /// Fired-indicator write, column `s`, flat address.
     #[inline(always)]
     pub fn write_fired(&mut self, s: usize, flat: usize, v: bool) {
         self.fired[s * self.col_cap + flat] = v;
@@ -198,10 +211,15 @@ impl MemPot {
 /// layout vectorizes the 9-way scatter across channels.
 #[derive(Clone, Debug)]
 pub struct MultiMem {
+    /// fmap height this memory currently represents.
     pub h: usize,
+    /// fmap width this memory currently represents.
     pub w: usize,
+    /// Cell grid rows (interlace i dimension).
     pub cells_i: usize,
+    /// Cell grid columns (interlace j dimension).
     pub cells_j: usize,
+    /// Channel count of the current layer.
     pub nc: usize,
     /// Interlace factor of the current layer (k² active column RAMs).
     k: usize,
@@ -217,6 +235,7 @@ pub struct MultiMem {
 }
 
 impl MultiMem {
+    /// A memory sized for the largest layer (`max_h` × `max_w` × `max_nc`).
     pub fn new(max_h: usize, max_w: usize, max_nc: usize) -> Self {
         let (ci, cj) = interlace::cell_grid(max_h, max_w);
         Self::with_capacity(COLUMNS * ci * cj * max_nc)
@@ -281,6 +300,10 @@ impl MultiMem {
     pub fn vm_channels_mut(&mut self, s: usize, flat: usize) -> &mut [i32] {
         let b = self.base(s, flat);
         let nc = self.nc;
+        // SAFETY: `base` debug-asserts `s` and `flat` against the grid,
+        // and `vm` is laid out as `[column][flat][channel]` with
+        // exactly `nc` channels per (s, flat) cell — sized in `new` as
+        // `COLUMNS * col_cap * nc` — so `b + nc <= vm.len()`.
         unsafe { self.vm.get_unchecked_mut(b..b + nc) }
     }
 
@@ -294,22 +317,26 @@ impl MultiMem {
         (&mut self.vm[b..b + nc], &mut self.fired[b..b + nc])
     }
 
+    /// Membrane read at (s, flat, channel).
     #[inline(always)]
     pub fn vm_at(&self, s: usize, flat: usize, c: usize) -> i32 {
         self.vm[self.base(s, flat) + c]
     }
 
+    /// Membrane write at (s, flat, channel).
     #[inline(always)]
     pub fn set_vm_at(&mut self, s: usize, flat: usize, c: usize, v: i32) {
         let b = self.base(s, flat) + c;
         self.vm[b] = v;
     }
 
+    /// Fired-indicator read at (s, flat, channel).
     #[inline(always)]
     pub fn fired_at(&self, s: usize, flat: usize, c: usize) -> bool {
         self.fired[self.base(s, flat) + c]
     }
 
+    /// Fired-indicator write at (s, flat, channel).
     #[inline(always)]
     pub fn set_fired_at(&mut self, s: usize, flat: usize, c: usize, v: bool) {
         let b = self.base(s, flat) + c;
@@ -328,6 +355,7 @@ impl MultiMem {
         self.pool_fired[w_flat * self.nc + c]
     }
 
+    /// Pool-plane fired write at (w_flat, channel).
     #[inline(always)]
     pub fn set_pool_fired_at(&mut self, w_flat: usize, c: usize, v: bool) {
         self.pool_fired[w_flat * self.nc + c] = v;

@@ -171,6 +171,7 @@ impl LayerPlan {
 /// scratch arenas are sized from (no magic fallback shapes).
 #[derive(Clone, Debug)]
 pub struct NetworkPlan {
+    /// Per-layer compiled geometry and weight banks.
     pub layers: Vec<LayerPlan>,
     /// Input fmap shape (H, W, C) of the first layer.
     pub in_shape: (usize, usize, usize),

@@ -45,10 +45,12 @@ use crate::util::ceil_div;
 /// All AEQs of one layer boundary: `q[channel][timestep]`.
 #[derive(Clone, Debug, Default)]
 pub struct LayerQueues {
+    /// Queues indexed `[channel][timestep]`.
     pub q: Vec<Vec<Aeq>>,
 }
 
 impl LayerQueues {
+    /// Empty queues for `channels` × `t_steps`.
     pub fn new(channels: usize, t_steps: usize) -> Self {
         LayerQueues {
             q: (0..channels)
@@ -57,10 +59,12 @@ impl LayerQueues {
         }
     }
 
+    /// Channel count.
     pub fn channels(&self) -> usize {
         self.q.len()
     }
 
+    /// Timestep count.
     pub fn t_steps(&self) -> usize {
         self.q.first().map(Vec::len).unwrap_or(0)
     }
@@ -146,6 +150,8 @@ pub fn process_layer(
 ///   `t` (zeroed here); its length defines the timestep count.
 ///
 /// Performs no heap allocation.
+// allow: explicit port list for the same disjoint-borrow reason as
+// `run_pipeline` (see sim/core.rs).
 #[allow(clippy::too_many_arguments)]
 pub fn process_layer_planned(
     plan: &LayerPlan,

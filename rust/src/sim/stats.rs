@@ -42,6 +42,7 @@ impl LayerStats {
 /// Counters for a full single-image inference.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct RunStats {
+    /// Per-layer counters, input to output.
     pub layers: Vec<LayerStats>,
     /// Classification-unit (FC) cycles.
     pub classifier_cycles: u64,

@@ -54,6 +54,7 @@ pub struct PoolAddrGen {
 }
 
 impl PoolAddrGen {
+    /// An address generator over a `cells_j`-wide cell grid.
     pub fn new(cells_j: usize) -> Self {
         PoolAddrGen { cells_j, s_i: 0, s_j: 0, i_out: 0, j_out: 0, j_pos: 0 }
     }
@@ -226,6 +227,9 @@ impl ThresholdUnit {
     /// `q` is the per-channel queue table (`q[c][t]` is written);
     /// returns `(windows, total_spikes)` — per-channel cycles are
     /// deterministic, so the caller expands them.
+    // allow: the arguments mirror the hardware unit's port list
+    // (membrane banks, queues, pooling state); grouping them would
+    // obscure the RTL correspondence.
     #[allow(clippy::too_many_arguments)]
     pub fn process_all_channels(
         &self,
@@ -334,6 +338,7 @@ impl ThresholdUnit {
     ///   pooling under monotone m-TTFS spike counts.
     ///
     /// Returns `(windows, total_spikes)` like the legacy pass.
+    // allow: same port-list correspondence as the legacy pass above.
     #[allow(clippy::too_many_arguments)]
     pub fn process_all_channels_gen(
         &self,

@@ -29,7 +29,9 @@ pub fn encode_mttfs(img: &[u8], h: usize, w: usize, thresholds: &[f32]) -> Vec<V
 /// Address event in fmap coordinates plus its interlace column.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub struct Event {
+    /// Event x (column) in fmap coordinates.
     pub x: u16,
+    /// Event y (row) in fmap coordinates.
     pub y: u16,
 }
 

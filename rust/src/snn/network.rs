@@ -70,7 +70,9 @@ pub enum PoolMode {
 /// the layer's output fmap exactly).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PoolDef {
+    /// Pooling window width (w×w).
     pub w: usize,
+    /// Pooling operator.
     pub mode: PoolMode,
 }
 
@@ -100,8 +102,11 @@ impl LayerSpec {
 /// seeded synthetic parameters.
 #[derive(Clone, Debug)]
 pub struct ConvParams {
+    /// Quantized kernel weights.
     pub w: Vec<i32>,
+    /// Per-output-channel biases.
     pub b: Vec<i32>,
+    /// Firing threshold.
     pub vt: i32,
 }
 
@@ -167,14 +172,18 @@ impl ConvLayerDef {
 /// the crate routes through the builder's validation.
 #[derive(Clone, Debug)]
 pub struct Network {
+    /// Conv layer definitions, input to output.
     pub conv: Vec<ConvLayerDef>,
     /// FC weights, layout `[flat_in][n_out]` row-major; flat_in indexes the
     /// (x, y, c) row-major flattening of the last conv layer's queue fmap.
     pub fc_w: Vec<i32>,
+    /// FC biases, one per class.
     pub fc_b: Vec<i32>,
+    /// Output class count.
     pub n_classes: usize,
     /// m-TTFS input thresholds (strictly increasing, float image domain).
     pub thresholds: Vec<f32>,
+    /// m-TTFS timesteps per inference.
     pub t_steps: usize,
     /// Saturating accumulator range of every membrane datapath.
     pub sat: Sat,
@@ -581,8 +590,11 @@ pub mod spec {
 
     /// A named built-in topology (weights are seeded).
     pub struct Preset {
+        /// Preset identifier (the CLI `--net` value).
         pub name: &'static str,
+        /// Topology spec string.
         pub spec: &'static str,
+        /// One-line description.
         pub about: &'static str,
     }
 

@@ -11,7 +11,9 @@
 /// Saturating accumulator range (inclusive), e.g. 20-bit: ±(2^19 − 1).
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub struct Sat {
+    /// Inclusive lower clamp.
     pub min: i32,
+    /// Inclusive upper clamp.
     pub max: i32,
 }
 

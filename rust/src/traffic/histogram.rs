@@ -59,6 +59,7 @@ fn bucket_lower(idx: usize) -> u64 {
 }
 
 impl LatencyHistogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         LatencyHistogram { counts: vec![0; BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
     }
@@ -72,10 +73,12 @@ impl LatencyHistogram {
         self.max = self.max.max(v);
     }
 
+    /// Total recorded values.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Whether nothing has been recorded.
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }

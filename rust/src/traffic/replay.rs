@@ -118,7 +118,12 @@ pub fn replay(
 
 /// Pair the just-received in-order reply with its feed timestamp.
 fn record(hist: &mut LatencyHistogram, submits: &mut VecDeque<Instant>) {
-    let fed = submits.pop_front().expect("a reply implies a recorded feed");
+    // A reply implies a recorded feed; an unmatched one (impossible by
+    // the session's ordered-ring contract) records no latency.
+    let Some(fed) = submits.pop_front() else {
+        crate::debug_invariant!(false, "reply without a recorded feed");
+        return;
+    };
     hist.record(fed.elapsed().as_micros() as u64);
 }
 

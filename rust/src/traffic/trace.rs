@@ -59,6 +59,7 @@ pub struct TraceEvent {
     pub tenant: usize,
     /// Per-tenant submission sequence number.
     pub seq: u64,
+    /// The frame payload to feed.
     pub frame: Frame,
 }
 
@@ -83,7 +84,10 @@ fn gen_frame(rng: &mut Pcg, spec: &TraceSpec, dense: bool) -> Frame {
             }
         })
         .collect();
-    Frame::from_u8(h, w, c, data).expect("trace frame shape is self-consistent")
+    // The shape is self-consistent by construction (data.len() == h*w*c),
+    // so from_u8 cannot fail; the empty-frame fallback keeps the
+    // serving path panic-free regardless.
+    Frame::from_u8(h, w, c, data).unwrap_or_default()
 }
 
 /// Generate the full trace for `spec`: every tenant's on/off Poisson

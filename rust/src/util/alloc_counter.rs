@@ -30,20 +30,30 @@ pub fn alloc_count() -> u64 {
 /// The counting allocator; delegates all real work to [`System`].
 pub struct CountingAllocator;
 
+// SAFETY: pure pass-through to `System` plus a relaxed atomic counter —
+// every `GlobalAlloc` contract obligation (layout validity, pointer
+// provenance, no unwinding) is exactly `System`'s, which upholds them.
 unsafe impl GlobalAlloc for CountingAllocator {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: the caller upholds `alloc`'s contract (non-zero-sized
+        // `layout`); we forward it unchanged to the system allocator.
+        unsafe { System.alloc(layout) }
     }
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: `ptr` was returned by `self` — i.e. by `System` — with
+        // this same `layout`, as `dealloc`'s contract requires.
+        unsafe { System.dealloc(ptr, layout) }
     }
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: `ptr`/`layout` come from a prior `self` allocation and
+        // the caller guarantees `new_size` is valid; forwarded unchanged.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
+        // SAFETY: same contract as `alloc` above, forwarded unchanged.
+        unsafe { System.alloc_zeroed(layout) }
     }
 }

@@ -1,0 +1,428 @@
+//! Design-by-contract instrumentation: a lock-order shadow detector and
+//! debug-only invariant checks.
+//!
+//! The coordinator's serving path takes several locks, sometimes nested
+//! (the watchdog scans worker slots while holding the slot registry; a
+//! snapshot walks the tenant registry while sampling each injector and
+//! quota). A deadlock needs two threads to nest those locks in opposite
+//! orders — a bug that no unit test reliably provokes. Instead of
+//! arguing the order in comments, every lock in the coordinator is
+//! wrapped in an [`OrderedMutex`] / [`OrderedRwLock`] carrying a rank
+//! from the declared partial order in [`rank`]. In debug builds each
+//! thread records its held ranks and panics the moment any acquisition
+//! is not *strictly above* everything already held — catching both
+//! order inversions and same-lock re-entrancy the first time a test
+//! walks the path, long before the interleaving that would deadlock.
+//! The existing chaos / traffic / parity suites thereby double as a
+//! deadlock-order fuzzer.
+//!
+//! In release builds the shadow state compiles out entirely: `lock()`
+//! is a plain `std::sync` acquisition plus a poison check, the guard
+//! token is a zero-sized type with no `Drop`, and the zero-alloc suite
+//! verifies the warmed serving path still performs zero heap
+//! allocations with this instrumentation in place.
+//!
+//! Registering a new lock:
+//! 1. add a rank constant to [`rank`] (pick a value that is strictly
+//!    greater than every lock that may be held when acquiring yours,
+//!    and strictly less than every lock acquired while yours is held);
+//! 2. construct the lock with `OrderedMutex::new(rank::YOURS, "name", v)`;
+//! 3. `rust/tests/static_analysis.rs` cross-checks that every rank used
+//!    in the coordinator exists in this table, and that the coordinator
+//!    uses no raw `std::sync` lock types.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// The declared lock partial order, as `u16` ranks. A thread may only
+/// acquire a lock whose rank is **strictly greater** than every rank it
+/// already holds. Gaps are deliberate — future locks slot in between
+/// without renumbering.
+pub mod rank {
+    /// `ServerShared::tenants` — the tenant registry (`RwLock`). Held
+    /// (read) while sampling injector depth, quotas and the plan cache.
+    pub const TENANT_REGISTRY: u16 = 10;
+    /// `ServerShared::slots` — the worker-slot registry. The watchdog
+    /// holds it while inspecting individual slot states.
+    pub const SLOT_REGISTRY: u16 = 20;
+    /// `WorkerSlot::state` — one dispatch mailbox (per worker).
+    pub const WORKER_SLOT: u16 = 30;
+    /// `ServerShared::handles` — join handles of live worker threads.
+    pub const HANDLE_REGISTRY: u16 = 35;
+    /// `Injector::state` — the weighted-fair dispatch queues.
+    pub const INJECTOR: u16 = 40;
+    /// `TenantState::inflight` — the per-tenant admission quota.
+    pub const QUOTA: u16 = 45;
+    /// `SessionShared::ring` — a streaming session's response ring.
+    pub const SESSION_RING: u16 = 50;
+    /// `ServerShared::frame_pool` — recycled frame containers.
+    pub const FRAME_POOL: u16 = 60;
+    /// `PlanCache::plans` — compiled plans, content-hash keyed.
+    pub const PLAN_CACHE: u16 = 70;
+    /// Reserved for future lock-based metrics (currently atomics-only).
+    pub const METRICS: u16 = 80;
+    /// `ServerShared::watchdog_stop` — the watchdog shutdown flag.
+    /// Highest rank: nothing may be acquired while it is held (the
+    /// watchdog drops it before scanning the slot registry).
+    pub const WATCHDOG_FLAG: u16 = 90;
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Ranks (and names) of locks this thread currently holds. The
+    /// strictly-greater acquisition rule keeps it sorted ascending, so
+    /// checking the new rank against the last entry suffices.
+    static HELD: std::cell::RefCell<Vec<(u16, &'static str)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+#[cfg(debug_assertions)]
+fn shadow_acquire(rank: u16, name: &'static str) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(&(top, top_name)) = held.last() {
+            assert!(
+                rank > top,
+                "lock-order violation: acquiring `{name}` (rank {rank}) while \
+                 holding `{top_name}` (rank {top}); see util::dbc::rank"
+            );
+        }
+        held.push((rank, name));
+    });
+}
+
+#[cfg(debug_assertions)]
+fn shadow_release(rank: u16) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        // Guards may be dropped out of acquisition order; remove this
+        // rank wherever it sits (ranks are unique within the stack
+        // because acquisition is strictly increasing).
+        if let Some(i) = held.iter().rposition(|&(r, _)| r == rank) {
+            held.remove(i);
+        }
+    });
+}
+
+/// Debug-only shadow record of one held lock. Zero-sized (and `Drop`-
+/// free) in release builds; in debug builds its `Drop` pops the
+/// thread's held-rank stack.
+pub struct HeldToken {
+    #[cfg(debug_assertions)]
+    rank: u16,
+}
+
+impl HeldToken {
+    fn acquire(rank: u16, name: &'static str) -> Self {
+        #[cfg(debug_assertions)]
+        shadow_acquire(rank, name);
+        #[cfg(not(debug_assertions))]
+        let _ = (rank, name);
+        HeldToken {
+            #[cfg(debug_assertions)]
+            rank,
+        }
+    }
+}
+
+#[cfg(debug_assertions)]
+impl Drop for HeldToken {
+    fn drop(&mut self) {
+        shadow_release(self.rank);
+    }
+}
+
+/// A [`std::sync::Mutex`] that participates in the declared lock order.
+///
+/// `lock()` panics (debug builds only) if this lock's rank is not
+/// strictly greater than every rank the calling thread already holds,
+/// and panics in all builds if the lock is poisoned — the coordinator
+/// treats poisoning as fatal, exactly as the previous
+/// `.lock().expect(...)` call sites did.
+pub struct OrderedMutex<T> {
+    name: &'static str,
+    rank: u16,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    /// Wrap `value` in a mutex registered at `rank` (see [`rank`]).
+    pub fn new(rank: u16, name: &'static str, value: T) -> Self {
+        OrderedMutex { name, rank, inner: Mutex::new(value) }
+    }
+
+    /// Acquire, enforcing the lock order in debug builds.
+    pub fn lock(&self) -> OrderedGuard<'_, T> {
+        let token = HeldToken::acquire(self.rank, self.name);
+        match self.inner.lock() {
+            Ok(guard) => OrderedGuard { guard, token },
+            Err(_) => panic!("lock `{}` poisoned", self.name),
+        }
+    }
+}
+
+/// Guard returned by [`OrderedMutex::lock`]. Dereferences to the data;
+/// dropping it releases the mutex and (debug builds) pops the shadow
+/// stack.
+pub struct OrderedGuard<'a, T> {
+    guard: MutexGuard<'a, T>,
+    token: HeldToken,
+}
+
+impl<T> std::ops::Deref for OrderedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> std::ops::DerefMut for OrderedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+/// A [`std::sync::Condvar`] paired with [`OrderedMutex`]: waiting keeps
+/// the lock's shadow rank held (the blocked thread cannot acquire
+/// anything), and reacquisition on wake-up does not re-check the order
+/// — the rank never left the stack, so the stack stays consistent.
+pub struct OrderedCondvar {
+    inner: Condvar,
+}
+
+impl Default for OrderedCondvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OrderedCondvar {
+    /// A new condition variable.
+    pub fn new() -> Self {
+        OrderedCondvar { inner: Condvar::new() }
+    }
+
+    /// Block until notified. Panics if the mutex is poisoned while
+    /// parked (same fatal-poison policy as [`OrderedMutex::lock`]).
+    pub fn wait<'a, T>(&self, g: OrderedGuard<'a, T>) -> OrderedGuard<'a, T> {
+        let OrderedGuard { guard, token } = g;
+        match self.inner.wait(guard) {
+            Ok(guard) => OrderedGuard { guard, token },
+            Err(_) => panic!("lock poisoned during condvar wait"),
+        }
+    }
+
+    /// Block until notified or `dur` elapses; returns the guard and
+    /// whether the wait timed out.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        g: OrderedGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> (OrderedGuard<'a, T>, bool) {
+        let OrderedGuard { guard, token } = g;
+        match self.inner.wait_timeout(guard, dur) {
+            Ok((guard, timed_out)) => (OrderedGuard { guard, token }, timed_out.timed_out()),
+            Err(_) => panic!("lock poisoned during condvar wait"),
+        }
+    }
+
+    /// Wake one waiter.
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    /// Wake all waiters.
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+/// A [`std::sync::RwLock`] that participates in the declared lock
+/// order. Both `read()` and `write()` enforce the strictly-greater
+/// rule — which also forbids recursive `read()` on the same lock from
+/// one thread (std makes no reentrancy guarantee; a writer arriving
+/// between the two reads can deadlock some platforms' implementations).
+pub struct OrderedRwLock<T> {
+    name: &'static str,
+    rank: u16,
+    inner: RwLock<T>,
+}
+
+impl<T> OrderedRwLock<T> {
+    /// Wrap `value` in an rwlock registered at `rank` (see [`rank`]).
+    pub fn new(rank: u16, name: &'static str, value: T) -> Self {
+        OrderedRwLock { name, rank, inner: RwLock::new(value) }
+    }
+
+    /// Acquire shared, enforcing the lock order in debug builds.
+    pub fn read(&self) -> OrderedReadGuard<'_, T> {
+        let token = HeldToken::acquire(self.rank, self.name);
+        match self.inner.read() {
+            Ok(guard) => OrderedReadGuard { guard, _token: token },
+            Err(_) => panic!("lock `{}` poisoned", self.name),
+        }
+    }
+
+    /// Acquire exclusive, enforcing the lock order in debug builds.
+    pub fn write(&self) -> OrderedWriteGuard<'_, T> {
+        let token = HeldToken::acquire(self.rank, self.name);
+        match self.inner.write() {
+            Ok(guard) => OrderedWriteGuard { guard, _token: token },
+            Err(_) => panic!("lock `{}` poisoned", self.name),
+        }
+    }
+}
+
+/// Shared guard returned by [`OrderedRwLock::read`].
+pub struct OrderedReadGuard<'a, T> {
+    guard: RwLockReadGuard<'a, T>,
+    _token: HeldToken,
+}
+
+impl<T> std::ops::Deref for OrderedReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+/// Exclusive guard returned by [`OrderedRwLock::write`].
+pub struct OrderedWriteGuard<'a, T> {
+    guard: RwLockWriteGuard<'a, T>,
+    _token: HeldToken,
+}
+
+impl<T> std::ops::Deref for OrderedWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> std::ops::DerefMut for OrderedWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+/// Acquire an [`OrderedMutex`] — the canonical, lint-anchored
+/// acquisition form inside the coordinator. Expands to a plain
+/// `.lock()` call; exists so lock acquisitions are textually uniform
+/// and greppable by `rust/tests/static_analysis.rs`.
+#[macro_export]
+macro_rules! ordered_lock {
+    ($m:expr) => {
+        $m.lock()
+    };
+}
+
+/// Check a runtime invariant in debug builds only; compiles to nothing
+/// in release builds (the condition is dead-code-eliminated). Use on
+/// serving-path invariants that are too hot for an always-on assert —
+/// the message should state the invariant, not the symptom.
+#[macro_export]
+macro_rules! debug_invariant {
+    ($cond:expr $(,)?) => {
+        if cfg!(debug_assertions) && !$cond {
+            panic!(concat!("invariant violated: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if cfg!(debug_assertions) && !$cond {
+            panic!("invariant violated: {}", format_args!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn ordered_acquisition_and_out_of_order_drop() {
+        let a = OrderedMutex::new(10, "a", 1);
+        let b = OrderedMutex::new(20, "b", 2);
+        let ga = crate::ordered_lock!(a);
+        let gb = b.lock();
+        drop(ga); // dropping the lower rank first must be fine
+        assert_eq!(*gb, 2);
+        drop(gb);
+        // And the stack is clean: a fresh low-rank acquisition works.
+        let _ = a.lock();
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn inversion_panics_in_debug() {
+        let r = std::panic::catch_unwind(|| {
+            let a = OrderedMutex::new(10, "low", 1);
+            let b = OrderedMutex::new(20, "high", 2);
+            let _gb = b.lock();
+            let _ga = a.lock(); // 10 while holding 20: inversion
+        });
+        assert!(r.is_err(), "lock-order inversion must panic in debug builds");
+        // The panicking thread's stack entries were popped by the
+        // unwound guards; this thread can still lock normally.
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn reentrancy_panics_in_debug() {
+        let a = Arc::new(OrderedMutex::new(10, "reent", 1));
+        let a2 = Arc::clone(&a);
+        let r = std::panic::catch_unwind(move || {
+            let _g1 = a2.lock();
+            let _g2 = a2.lock(); // same rank: re-entrancy
+        });
+        assert!(r.is_err(), "re-entrant acquisition must panic in debug builds");
+        drop(a);
+    }
+
+    #[test]
+    fn condvar_roundtrip_keeps_rank() {
+        let m = Arc::new(OrderedMutex::new(40, "cv", false));
+        let cv = Arc::new(OrderedCondvar::new());
+        let (m2, cv2) = (Arc::clone(&m), Arc::clone(&cv));
+        let t = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            *g = true;
+            cv2.notify_one();
+        });
+        let mut g = m.lock();
+        while !*g {
+            g = cv.wait(g);
+        }
+        assert!(*g);
+        drop(g);
+        t.join().unwrap();
+        // wait_timeout path too: rank survives the park and release.
+        let g = m.lock();
+        let (g, timed_out) = cv.wait_timeout(g, Duration::from_millis(1));
+        assert!(timed_out);
+        drop(g);
+        let _ = m.lock();
+    }
+
+    #[test]
+    fn rwlock_read_then_higher_write() {
+        let lo = OrderedRwLock::new(10, "lo", 5usize);
+        let hi = OrderedMutex::new(70, "hi", 6usize);
+        let r = lo.read();
+        let w = hi.lock();
+        assert_eq!(*r + *w, 11);
+    }
+
+    #[test]
+    fn debug_invariant_passes_and_release_is_free() {
+        debug_invariant!(1 + 1 == 2);
+        debug_invariant!(true, "with message {}", 42);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn debug_invariant_fires_in_debug() {
+        let r = std::panic::catch_unwind(|| debug_invariant!(1 > 2, "math broke"));
+        assert!(r.is_err());
+    }
+}

@@ -10,15 +10,22 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// A boolean.
     Bool(bool),
+    /// A number (f64-backed).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a JSON document.
     pub fn parse(src: &str) -> Result<Json, JsonError> {
         let mut p = Parser { src: src.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -30,6 +37,7 @@ impl Json {
         Ok(v)
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -37,10 +45,12 @@ impl Json {
         }
     }
 
+    /// The value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -48,6 +58,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -55,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The key-to-value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -127,7 +139,9 @@ impl fmt::Display for Json {
 /// Parse error with byte offset.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset of the error.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

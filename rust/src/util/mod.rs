@@ -3,6 +3,7 @@
 //! here and tested in place).
 
 pub mod alloc_counter;
+pub mod dbc;
 pub mod json;
 pub mod prng;
 pub mod prop;

@@ -9,6 +9,7 @@ pub struct Pcg {
 }
 
 impl Pcg {
+    /// A generator seeded with `seed` (splitmix64-scrambled).
     pub fn new(seed: u64) -> Self {
         // splitmix64 scramble so that small seeds diverge immediately.
         let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -17,6 +18,7 @@ impl Pcg {
         Self { state: (z ^ (z >> 31)) | 1 }
     }
 
+    /// Next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;

@@ -1,0 +1,608 @@
+//! Source-level static analysis of `rust/src` — a lint pass that runs
+//! as an ordinary tier-1 test, std-only (no syn, no regex crate).
+//!
+//! Enforced rules (each demonstrably fails on a seeded violation — see
+//! the `fixtures` module at the bottom):
+//!
+//! 1. **SAFETY-audited unsafe** — every `unsafe` block or `unsafe impl`
+//!    must carry a `// SAFETY:` comment in its directly adjacent
+//!    comment block (`unsafe fn` *declarations* are exempt: their
+//!    obligation sits on callers, matching
+//!    `clippy::undocumented_unsafe_blocks`).
+//! 2. **Serving-path panic ban** — no `.unwrap()` / `.expect(` /
+//!    `panic!(` / `unreachable!(` / `todo!(` / `unimplemented!(` in
+//!    `coordinator/`, `traffic/`, or `engine/` outside `#[cfg(test)]`
+//!    regions. The serving layer answers with typed [`EngineError`]s;
+//!    a panic in a worker is a fault, never a control-flow tool.
+//! 3. **Hot-path allocation fences** — inside a
+//!    `// hot-path: alloc-free` … `// hot-path: end` region, no
+//!    heap-allocating calls (`Vec::new`, `vec![`, `Box::new(`,
+//!    `format!(`, `.clone()`, `.to_vec()`, `.to_string()`,
+//!    `String::new`, `with_capacity(`, `.collect()`). The fences mark
+//!    the regions `tests/zero_alloc.rs` proves allocation-free at
+//!    runtime; this pass keeps casual edits from silently reopening
+//!    them. Unbalanced fences are themselves violations.
+//! 4. **Lock-order discipline** — the lock-order-audited files
+//!    (`coordinator/server.rs`, `session.rs`, `tenants.rs`) must not
+//!    name a raw `std::sync` `Mutex` / `RwLock` / `Condvar`; every
+//!    primitive there goes through `util::dbc::Ordered*` so the
+//!    debug-build shadow detector sees every acquisition.
+//! 5. **Justified allows** — every `#[allow(...)]` (incl. `cfg_attr`
+//!    forms) outside tests carries an adjacent `// allow:` comment
+//!    saying *why* the lint is wrong here.
+//! 6. **Rank table closure** — every `rank::NAME` mentioned anywhere in
+//!    the tree must exist as a `pub const NAME: u16` in the
+//!    `util/dbc.rs` rank table, and the declared ranks must be unique
+//!    (two locks sharing a rank could deadlock without the detector
+//!    firing).
+//!
+//! `EngineError` is [`sacsnn::engine::EngineError`].
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------
+// Source model: per-line code (strings blanked, comments removed),
+// comment text, and whether the line sits in a `#[cfg(test)]` region.
+// ---------------------------------------------------------------------
+
+struct FileModel {
+    /// Raw source lines.
+    raw: Vec<String>,
+    /// Code with string/char literal contents blanked and `//` comments
+    /// removed — token scans run against this.
+    code: Vec<String>,
+    /// The `//...` comment tail of each line (empty if none).
+    comment: Vec<String>,
+    /// Whether the line is inside a `#[cfg(test)]`-gated item.
+    in_test: Vec<bool>,
+}
+
+/// Split one line into (code-with-literals-blanked, comment-text).
+/// Handles string escapes and `'x'` / `'\x'` char literals; lifetimes
+/// pass through untouched.
+fn strip_line(line: &str) -> (String, String) {
+    let chars: Vec<char> = line.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(n);
+    let mut comment = String::new();
+    let mut i = 0;
+    while i < n {
+        let ch = chars[i];
+        if ch == '"' {
+            out.push('"');
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' {
+                    out.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    out.push('"');
+                    i += 1;
+                    break;
+                }
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        if ch == '\'' {
+            // char literal with escape: '\x' ... find the closing quote
+            if i + 2 < n && chars[i + 1] == '\\' {
+                if let Some(j) = (i + 2..n).find(|&j| chars[j] == '\'') {
+                    out.push('\'');
+                    for _ in i + 1..j {
+                        out.push(' ');
+                    }
+                    out.push('\'');
+                    i = j + 1;
+                    continue;
+                }
+            }
+            // plain char literal 'x'
+            if i + 2 < n && chars[i + 2] == '\'' {
+                out.push_str("'  '");
+                i += 3;
+                continue;
+            }
+            // otherwise a lifetime tick
+            out.push('\'');
+            i += 1;
+            continue;
+        }
+        if ch == '/' && i + 1 < n && chars[i + 1] == '/' {
+            comment = chars[i..].iter().collect();
+            break;
+        }
+        out.push(ch);
+        i += 1;
+    }
+    (out, comment)
+}
+
+/// Build the [`FileModel`]: strip every line and track `#[cfg(test)]`
+/// regions by brace depth (the attribute arms the tracker; the region
+/// lasts until depth returns to the attribute's level).
+fn analyze(src: &str) -> FileModel {
+    let mut raw = Vec::new();
+    let mut code = Vec::new();
+    let mut comment = Vec::new();
+    let mut in_test = Vec::new();
+    let mut depth: i64 = 0;
+    let mut armed = false;
+    let mut armed_depth: i64 = 0;
+    let mut test_depth: Option<i64> = None;
+    for line in src.lines() {
+        let (c, com) = strip_line(line);
+        if c.contains("#[cfg(test)]") {
+            armed = true;
+            armed_depth = depth;
+        }
+        in_test.push(test_depth.is_some() || armed);
+        depth += c.matches('{').count() as i64 - c.matches('}').count() as i64;
+        if armed && depth > armed_depth {
+            test_depth = Some(armed_depth);
+            armed = false;
+        }
+        if let Some(d) = test_depth {
+            if depth <= d {
+                test_depth = None;
+            }
+        }
+        raw.push(line.to_string());
+        code.push(c);
+        comment.push(com);
+    }
+    FileModel { raw, code, comment, in_test }
+}
+
+/// Byte offsets of `word` in `code` at identifier boundaries (so
+/// `unsafe` does not match `unsafe_op_in_unsafe_fn`, `Mutex` does not
+/// match `OrderedMutex`).
+fn word_hits(code: &str, word: &str) -> Vec<usize> {
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+    let mut hits = Vec::new();
+    let mut start = 0;
+    while let Some(k) = code[start..].find(word) {
+        let at = start + k;
+        let pre_ok = code[..at].chars().next_back().map_or(true, |c| !is_ident(c));
+        let post_ok = code[at + word.len()..].chars().next().map_or(true, |c| !is_ident(c));
+        if pre_ok && post_ok {
+            hits.push(at);
+        }
+        start = at + word.len();
+    }
+    hits
+}
+
+/// Walk the comment/attribute block directly above line `i` looking for
+/// a comment containing `needle`. Stops at the first code line or blank
+/// non-comment line.
+fn adjacent_comment_contains(m: &FileModel, i: usize, needle: &str) -> bool {
+    if m.comment[i].contains(needle) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if m.comment[j].contains(needle) {
+            return true;
+        }
+        let cj = m.code[j].trim();
+        if m.comment[j].is_empty() && cj.is_empty() {
+            return false; // blank line ends the block
+        }
+        if !cj.is_empty() && !cj.starts_with("#[") {
+            return false; // real code ends the block
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// The rules
+// ---------------------------------------------------------------------
+
+const BANNED_PANICS: [&str; 6] =
+    [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+const ALLOC_TOKENS: [&str; 10] = [
+    "Vec::new",
+    "vec![",
+    "Box::new(",
+    ".to_vec()",
+    "format!(",
+    ".clone()",
+    "String::new",
+    ".to_string()",
+    "with_capacity(",
+    ".collect()",
+];
+
+const SERVING_DIRS: [&str; 3] = ["coordinator/", "traffic/", "engine/"];
+
+const LOCK_ORDER_FILES: [&str; 3] =
+    ["coordinator/server.rs", "coordinator/session.rs", "coordinator/tenants.rs"];
+
+/// Rule 1: `unsafe` blocks / impls need an adjacent `// SAFETY:`.
+fn check_unsafe_safety(rel: &str, m: &FileModel, out: &mut Vec<String>) {
+    for (i, c) in m.code.iter().enumerate() {
+        for k in word_hits(c, "unsafe") {
+            let after = c[k + "unsafe".len()..].trim_start();
+            if after.starts_with("fn ") {
+                continue; // declaration: the obligation is the caller's
+            }
+            if !adjacent_comment_contains(m, i, "SAFETY:") {
+                out.push(format!(
+                    "{rel}:{}: `unsafe` without an adjacent `// SAFETY:` comment",
+                    i + 1
+                ));
+            }
+        }
+    }
+}
+
+/// Rule 2: serving-path code must not contain panic tokens.
+fn check_banned_panics(rel: &str, m: &FileModel, out: &mut Vec<String>) {
+    if !SERVING_DIRS.iter().any(|d| rel.starts_with(d)) {
+        return;
+    }
+    for (i, c) in m.code.iter().enumerate() {
+        if m.in_test[i] {
+            continue;
+        }
+        for t in BANNED_PANICS {
+            if c.contains(t) {
+                out.push(format!(
+                    "{rel}:{}: `{t}` in serving-path code (answer with a typed EngineError)",
+                    i + 1
+                ));
+            }
+        }
+    }
+}
+
+/// Rule 3: no heap allocation between hot-path fences; fences balance.
+fn check_hot_path_fences(rel: &str, m: &FileModel, out: &mut Vec<String>) {
+    let mut open: Option<usize> = None;
+    for i in 0..m.raw.len() {
+        let com = &m.comment[i];
+        if com.contains("// hot-path: alloc-free") {
+            if let Some(o) = open {
+                out.push(format!(
+                    "{rel}:{}: nested hot-path fence (previous opened at line {})",
+                    i + 1,
+                    o + 1
+                ));
+            }
+            open = Some(i);
+            continue;
+        }
+        if com.contains("// hot-path: end") {
+            if open.is_none() {
+                out.push(format!("{rel}:{}: `// hot-path: end` without an open fence", i + 1));
+            }
+            open = None;
+            continue;
+        }
+        if let Some(o) = open {
+            for t in ALLOC_TOKENS {
+                if m.code[i].contains(t) {
+                    out.push(format!(
+                        "{rel}:{}: heap-allocating `{t}` inside hot-path fence opened at line {}",
+                        i + 1,
+                        o + 1
+                    ));
+                }
+            }
+        }
+    }
+    if let Some(o) = open {
+        out.push(format!("{rel}:{}: unclosed `// hot-path: alloc-free` fence", o + 1));
+    }
+}
+
+/// Rule 4: lock-order-audited files must not name raw sync primitives.
+fn check_raw_sync(rel: &str, m: &FileModel, out: &mut Vec<String>) {
+    if !LOCK_ORDER_FILES.contains(&rel) {
+        return;
+    }
+    for (i, c) in m.code.iter().enumerate() {
+        if m.in_test[i] {
+            continue;
+        }
+        for prim in ["Mutex", "RwLock", "Condvar"] {
+            if !word_hits(c, prim).is_empty() {
+                out.push(format!(
+                    "{rel}:{}: raw `std::sync::{prim}` in a lock-order-audited file \
+                     (use `util::dbc::Ordered{prim}` so acquisitions are rank-checked)",
+                    i + 1
+                ));
+            }
+        }
+    }
+}
+
+/// Rule 5: `#[allow]` outside tests needs an adjacent `// allow:`.
+fn check_allow_justified(rel: &str, m: &FileModel, out: &mut Vec<String>) {
+    for (i, c) in m.code.iter().enumerate() {
+        if m.in_test[i] {
+            continue;
+        }
+        let s = c.trim();
+        let is_allow = s.starts_with("#[allow(")
+            || s.starts_with("#![allow(")
+            || (s.starts_with("#[cfg_attr(") && s.contains("allow("));
+        if is_allow && !adjacent_comment_contains(m, i, "allow:") {
+            out.push(format!(
+                "{rel}:{}: `#[allow]` without an adjacent `// allow:` justification",
+                i + 1
+            ));
+        }
+    }
+}
+
+/// Rule 6a: every `rank::NAME` usage resolves in the dbc rank table.
+fn check_rank_usages(rel: &str, m: &FileModel, ranks: &[(String, u16)], out: &mut Vec<String>) {
+    for (i, c) in m.code.iter().enumerate() {
+        let mut rest = c.as_str();
+        while let Some(k) = rest.find("rank::") {
+            rest = &rest[k + "rank::".len()..];
+            let name: String = rest
+                .chars()
+                .take_while(|ch| ch.is_ascii_uppercase() || ch.is_ascii_digit() || *ch == '_')
+                .collect();
+            if !name.is_empty()
+                && name.chars().next().is_some_and(|ch| ch.is_ascii_uppercase())
+                && !ranks.iter().any(|(n, _)| *n == name)
+            {
+                out.push(format!(
+                    "{rel}:{}: `rank::{name}` is not declared in the util/dbc.rs rank table",
+                    i + 1
+                ));
+            }
+        }
+    }
+}
+
+/// Parse `pub const NAME: u16 = N;` declarations out of `util/dbc.rs`.
+fn parse_rank_table(dbc_src: &str) -> Vec<(String, u16)> {
+    let mut ranks = Vec::new();
+    for line in dbc_src.lines() {
+        let s = line.trim();
+        let Some(rest) = s.strip_prefix("pub const ") else { continue };
+        let Some((name, tail)) = rest.split_once(": u16 = ") else { continue };
+        let Some(val) = tail.trim_end_matches(';').trim().parse::<u16>().ok() else { continue };
+        ranks.push((name.to_string(), val));
+    }
+    ranks
+}
+
+/// Run every rule over one file.
+fn lint_source(rel: &str, src: &str, ranks: &[(String, u16)]) -> Vec<String> {
+    let m = analyze(src);
+    let mut out = Vec::new();
+    check_unsafe_safety(rel, &m, &mut out);
+    check_banned_panics(rel, &m, &mut out);
+    check_hot_path_fences(rel, &m, &mut out);
+    check_raw_sync(rel, &m, &mut out);
+    check_allow_justified(rel, &m, &mut out);
+    check_rank_usages(rel, &m, ranks, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------
+// Tree walk
+// ---------------------------------------------------------------------
+
+fn src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src")
+}
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = fs::read_dir(dir).unwrap_or_else(|e| panic!("read_dir {dir:?}: {e}"));
+    for entry in entries {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    out.sort();
+}
+
+/// The tier-1 gate: the real source tree is clean under every rule.
+#[test]
+fn source_tree_is_clean() {
+    let root = src_root();
+    let dbc = fs::read_to_string(root.join("util/dbc.rs")).expect("util/dbc.rs");
+    let ranks = parse_rank_table(&dbc);
+    assert!(
+        ranks.len() >= 8,
+        "rank table parse broke: found only {} consts in util/dbc.rs",
+        ranks.len()
+    );
+    // Rule 6b: declared ranks must be unique.
+    let mut violations: Vec<String> = Vec::new();
+    for (i, (na, va)) in ranks.iter().enumerate() {
+        for (nb, vb) in &ranks[i + 1..] {
+            if va == vb {
+                violations
+                    .push(format!("util/dbc.rs: rank::{na} and rank::{nb} share rank {va}"));
+            }
+        }
+    }
+    let mut files = Vec::new();
+    rust_files(&root, &mut files);
+    assert!(files.len() > 30, "expected a full tree walk, found {} files", files.len());
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .expect("under src root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path:?}: {e}"));
+        violations.extend(lint_source(&rel, &src, &ranks));
+    }
+    assert!(
+        violations.is_empty(),
+        "static analysis found {} violation(s):\n{}",
+        violations.len(),
+        violations.join("\n")
+    );
+}
+
+// ---------------------------------------------------------------------
+// Self-test fixtures: each rule must fire on a seeded violation and
+// stay quiet on the corrected twin.
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod fixtures {
+    use super::*;
+
+    fn ranks() -> Vec<(String, u16)> {
+        vec![("INJECTOR".to_string(), 40), ("QUOTA".to_string(), 45)]
+    }
+
+    fn lint(rel: &str, src: &str) -> Vec<String> {
+        lint_source(rel, src, &ranks())
+    }
+
+    #[test]
+    fn unsafe_without_safety_fires() {
+        let bad = "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let v = lint("sim/fixture.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("SAFETY"), "{v:?}");
+
+        let good = "pub fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is \
+                    valid for reads.\n    unsafe { *p }\n}\n";
+        assert!(lint("sim/fixture.rs", good).is_empty());
+        // unsafe fn declarations are exempt — obligation is on callers
+        let decl = "pub unsafe fn f(p: *const u8) -> u8 {\n    // SAFETY: p valid.\n    \
+                    unsafe { *p }\n}\n";
+        assert!(lint("sim/fixture.rs", decl).is_empty());
+    }
+
+    #[test]
+    fn safety_in_string_literal_does_not_count() {
+        let sneaky = "pub fn f(p: *const u8) -> u8 {\n    let _m = \"// SAFETY: lies\";\n    \
+                      let _x = 1;\n    unsafe { *p }\n}\n";
+        let v = lint("sim/fixture.rs", sneaky);
+        assert_eq!(v.len(), 1, "string-literal SAFETY must not satisfy the rule: {v:?}");
+    }
+
+    #[test]
+    fn serving_path_panic_tokens_fire() {
+        for (tok, src) in [
+            ("unwrap", "fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n"),
+            ("expect", "fn f(x: Option<u8>) -> u8 {\n    x.expect(\"boom\")\n}\n"),
+            ("panic!", "fn f() {\n    panic!(\"boom\")\n}\n"),
+            ("unreachable!", "fn f() {\n    unreachable!()\n}\n"),
+        ] {
+            let v = lint("coordinator/fixture.rs", src);
+            assert_eq!(v.len(), 1, "token {tok}: {v:?}");
+            // the same code is fine outside the serving dirs
+            assert!(lint("sim/fixture.rs", src).is_empty(), "token {tok}");
+        }
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt_from_panic_ban() {
+        let src = "pub fn ok() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+                   Some(1).unwrap();\n        panic!(\"fine in tests\");\n    }\n}\n";
+        assert!(lint("coordinator/fixture.rs", src).is_empty());
+        // ...but code after the test module is covered again
+        let trailing = format!("{src}\npub fn bad(x: Option<u8>) -> u8 {{\n    x.unwrap()\n}}\n");
+        assert_eq!(lint("coordinator/fixture.rs", &trailing).len(), 1);
+    }
+
+    #[test]
+    fn panic_token_in_string_or_comment_is_ignored() {
+        let src = "fn f() -> &'static str {\n    // a panic!(...) here is just prose\n    \
+                   \"worker panic!(simulated)\"\n}\n";
+        assert!(lint("coordinator/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_path_alloc_tokens_fire() {
+        let bad = "// hot-path: alloc-free (fixture)\nfn f() -> Vec<u8> {\n    Vec::new()\n}\n\
+                   // hot-path: end\n";
+        let v = lint("sim/fixture.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("Vec::new"), "{v:?}");
+
+        let good = "// hot-path: alloc-free (fixture)\nfn f(buf: &mut Vec<u8>) {\n    \
+                    buf.push(1);\n}\n// hot-path: end\nfn warmup() -> Vec<u8> {\n    \
+                    Vec::new()\n}\n";
+        assert!(lint("sim/fixture.rs", good).is_empty());
+    }
+
+    #[test]
+    fn unbalanced_fences_fire() {
+        let unclosed = "// hot-path: alloc-free (fixture)\nfn f() {}\n";
+        let v = lint("sim/fixture.rs", unclosed);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("unclosed"), "{v:?}");
+
+        let stray = "fn f() {}\n// hot-path: end\n";
+        let v = lint("sim/fixture.rs", stray);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("without an open fence"), "{v:?}");
+    }
+
+    #[test]
+    fn raw_sync_primitives_fire_in_lock_order_files() {
+        let bad = "use std::sync::Mutex;\nstruct S {\n    m: Mutex<u32>,\n}\n";
+        let v = lint("coordinator/server.rs", bad);
+        assert_eq!(v.len(), 2, "one per mention: {v:?}");
+        // Ordered wrappers never match — word-boundary scan
+        let good = "use crate::util::dbc::{OrderedCondvar, OrderedMutex, OrderedRwLock};\n\
+                    struct S {\n    m: OrderedMutex<u32>,\n    r: OrderedRwLock<u32>,\n    \
+                    c: OrderedCondvar,\n}\n";
+        assert!(lint("coordinator/server.rs", good).is_empty());
+        // other files may use raw primitives (dbc itself wraps them)
+        assert!(lint("util/fixture.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn unjustified_allow_fires() {
+        let bad = "#[allow(clippy::too_many_arguments)]\nfn f() {}\n";
+        let v = lint("sim/fixture.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("allow"), "{v:?}");
+
+        let good = "// allow: fixture reason spelled out here.\n\
+                    #[allow(clippy::too_many_arguments)]\nfn f() {}\n";
+        assert!(lint("sim/fixture.rs", good).is_empty());
+
+        let cfg_attr = "#[cfg_attr(not(feature = \"x\"), allow(dead_code))]\nfn f() {}\n";
+        assert_eq!(lint("sim/fixture.rs", cfg_attr).len(), 1);
+    }
+
+    #[test]
+    fn unknown_rank_fires_and_known_rank_passes() {
+        let bad = "fn f() -> u16 {\n    rank::NOT_A_REAL_RANK\n}\n";
+        let v = lint("coordinator/fixture.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("NOT_A_REAL_RANK"), "{v:?}");
+
+        let good = "fn f() -> u16 {\n    rank::INJECTOR + rank::QUOTA\n}\n";
+        assert!(lint("coordinator/fixture.rs", good).is_empty());
+    }
+
+    #[test]
+    fn rank_table_parser_reads_real_declarations() {
+        let snippet = "/// Tenant registry.\npub const TENANT_REGISTRY: u16 = 10;\n\
+                       pub const INJECTOR: u16 = 40;\nconst PRIVATE: u16 = 1;\n";
+        let ranks = parse_rank_table(snippet);
+        assert_eq!(
+            ranks,
+            vec![("TENANT_REGISTRY".to_string(), 10), ("INJECTOR".to_string(), 40)]
+        );
+    }
+}

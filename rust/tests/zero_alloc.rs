@@ -281,4 +281,40 @@ fn steady_state_inference_is_allocation_free() {
     assert_eq!(resp.logits, bright_want.logits, "session result must stay bit-exact");
     assert_eq!(resp.sim_cycles, bright_want.stats.total_cycles);
     server.shutdown();
+
+    // ---- dbc lock-order shadow detector: zero release-build cost ----
+    // Every serving lock above already went through `util::dbc`, so the
+    // marginal-cost proofs cover it implicitly; this section pins the
+    // instrumentation itself. In release builds the rank bookkeeping
+    // compiles to nothing (`HeldToken` is a ZST with no Drop), so a
+    // lock/invariant/condvar cycle must not touch the allocator at all.
+    // Debug builds keep the per-thread rank stack on the heap; after the
+    // warm-up push has grown it, the loop stays within capacity.
+    use sacsnn::util::dbc::{rank, OrderedCondvar, OrderedMutex};
+    let probe = OrderedMutex::new(rank::METRICS, "dbc-probe", 0u64);
+    let probe_cv = OrderedCondvar::new();
+    {
+        // warm-up: first acquisition grows the debug rank stack
+        let mut g = sacsnn::ordered_lock!(probe);
+        *g += 1;
+        let (g, _timed_out) = probe_cv.wait_timeout(g, std::time::Duration::from_micros(100));
+        drop(g);
+    }
+    let before = allocs();
+    for i in 0..1000u64 {
+        let mut g = sacsnn::ordered_lock!(probe);
+        *g = g.wrapping_add(i);
+        sacsnn::debug_invariant!(*g >= i, "probe counter went backwards");
+    }
+    for _ in 0..20 {
+        let g = sacsnn::ordered_lock!(probe);
+        let (g, _timed_out) = probe_cv.wait_timeout(g, std::time::Duration::from_micros(100));
+        drop(g);
+    }
+    let dbc_grew = allocs() - before;
+    if cfg!(debug_assertions) {
+        assert!(dbc_grew <= 8, "debug dbc bookkeeping allocated {dbc_grew} times after warm-up");
+    } else {
+        assert_eq!(dbc_grew, 0, "release-build dbc instrumentation allocated {dbc_grew} times");
+    }
 }
